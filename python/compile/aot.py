@@ -1,0 +1,143 @@
+"""AOT pipeline: lower the L2 work_chunk graph to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The HLO text
+parser on the Rust side reassigns ids, so text round-trips cleanly.
+(See /opt/xla-example/README.md.)
+
+Outputs, one per depth class:
+
+    artifacts/work_d{depth}.hlo.txt   -- the executable the Rust runtime loads
+    artifacts/manifest.txt            -- shapes, depth classes, tolerances
+                                         (key=value lines; the Rust side is
+                                         offline/serde-free, see DESIGN.md)
+    artifacts/golden.txt              -- deterministic input/output vectors the
+                                         Rust integration tests check numerics
+                                         against (first/last elements + checksum)
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the only 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_depth(depth: int) -> str:
+    """Lower work_chunk at a fixed depth class to HLO text."""
+    specs = model.chunk_arg_specs()
+
+    def fn(x, w, b):
+        # 1-tuple output: the Rust side unwraps with to_tuple1().
+        return (model.work_chunk(x, w, b, depth=depth),)
+
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def golden_record(depth: int) -> dict:
+    """Deterministic expected outputs for the Rust numerics check."""
+    x, w, b = model.make_inputs(seed=42)
+    out = np.asarray(model.work_chunk(x, w, b, depth=depth))
+    return {
+        "depth": depth,
+        "seed": 42,
+        "first8": [float(v) for v in out.reshape(-1)[:8]],
+        "last8": [float(v) for v in out.reshape(-1)[-8:]],
+        "sum": float(out.sum()),
+        "abs_sum": float(np.abs(out).sum()),
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts",
+                        help="artifact output directory")
+    parser.add_argument("--out", default=None,
+                        help="(compat) single-artifact path; writes depth=1 "
+                             "there and the full set alongside it")
+    parser.add_argument("--depths", type=int, nargs="*",
+                        default=list(model.DEPTH_CLASSES))
+    args = parser.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    out_dir = out_dir or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    goldens = []
+    for depth in args.depths:
+        text = lower_depth(depth)
+        path = os.path.join(out_dir, f"work_d{depth}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        goldens.append(golden_record(depth))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if args.out:
+        # Makefile stamp target: the depth-1 module under the legacy name.
+        with open(args.out, "w") as f:
+            f.write(lower_depth(1))
+        print(f"wrote {args.out}")
+
+    # Deterministic golden inputs: regenerate exactly what make_inputs(42)
+    # produces so Rust does not need jax.random.
+    x, w, b = model.make_inputs(seed=42)
+
+    def fmt_floats(a) -> str:
+        return " ".join(repr(float(v)) for v in np.asarray(a).reshape(-1))
+
+    manifest_lines = [
+        "# AOT artifact manifest (key=value; parsed by rust/src/runtime)",
+        f"chunk_rows={model.CHUNK_ROWS}",
+        f"feature_dim={model.FEATURE_DIM}",
+        "depth_classes=" + ",".join(str(d) for d in args.depths),
+        "artifact_pattern=work_d{depth}.hlo.txt",
+        "rtol=1e-5",
+        "atol=1e-5",
+    ]
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+
+    golden_lines = [
+        "# deterministic inputs (seed=42) + expected outputs per depth",
+        "seed=42",
+        f"x={fmt_floats(x)}",
+        f"w={fmt_floats(w)}",
+        f"b={fmt_floats(b)}",
+        "depths=" + ",".join(str(g['depth']) for g in goldens),
+    ]
+    for g in goldens:
+        d = g["depth"]
+        golden_lines.append(f"d{d}.sum={g['sum']!r}")
+        golden_lines.append(f"d{d}.abs_sum={g['abs_sum']!r}")
+        golden_lines.append(f"d{d}.first8=" + " ".join(repr(v) for v in g["first8"]))
+        golden_lines.append(f"d{d}.last8=" + " ".join(repr(v) for v in g["last8"]))
+    with open(os.path.join(out_dir, "golden.txt"), "w") as f:
+        f.write("\n".join(golden_lines) + "\n")
+
+    # JSON copies for human inspection / other tooling.
+    with open(os.path.join(out_dir, "manifest.json.bak"), "w") as f:
+        json.dump({"lines": manifest_lines}, f, indent=2)
+    print(f"wrote {out_dir}/manifest.txt and golden.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the paper's compute hot-spot."""
+
+from compile.kernels.dense_tanh import TILE_M, dense_tanh, vmem_bytes
+from compile.kernels.ref import dense_tanh_ref, work_chunk_ref
+
+__all__ = [
+    "TILE_M",
+    "dense_tanh",
+    "dense_tanh_ref",
+    "vmem_bytes",
+    "work_chunk_ref",
+]

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: fused dense + bias + tanh block.
+
+This is the compute hot-spot of the workload whose chunks the L3 UDS
+coordinator schedules.  One application computes
+
+    out = tanh(x @ W + b)            x: (M, D), W: (D, D), b: (D,)
+
+The kernel is row-tiled: the grid iterates over tiles of TILE_M rows of
+``x`` so that each grid step's working set --
+
+    (TILE_M, D) x-tile  +  (D, D) weight  +  (D,) bias  +  (TILE_M, D) out
+
+-- fits comfortably in VMEM and the matmul shape (TILE_M, D) @ (D, D) maps
+directly onto the MXU systolic array.  With the default TILE_M=128 and
+D=256 the footprint is ~0.5 MiB, far under the ~16 MiB VMEM budget (see
+DESIGN.md section 7).
+
+``interpret=True`` is mandatory in this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.  The interpret path
+lowers to plain HLO, which is exactly what the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile size.  128 is the MXU-native sublane multiple for f32 on TPU;
+# on the interpret path it only affects the grid decomposition.
+TILE_M = 128
+
+
+def _dense_tanh_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One grid step: o_tile = tanh(x_tile @ W + b)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    # Accumulate the matmul in f32 regardless of input dtype (MXU idiom).
+    acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.tanh(acc + b.astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
+def dense_tanh(x: jax.Array, w: jax.Array, b: jax.Array,
+               *, tile_m: int = TILE_M, interpret: bool = True) -> jax.Array:
+    """Fused tanh(x @ w + b) as a row-tiled Pallas call.
+
+    Args:
+      x: (M, D) activations; M must be positive (padded to tile_m internally).
+      w: (D, D) weight matrix.
+      b: (D,) bias vector.
+      tile_m: row-tile size (grid = ceil(M / tile_m)).
+      interpret: run the kernel in interpret mode (required on CPU PJRT).
+
+    Returns:
+      (M, D) array, same dtype as x.
+    """
+    m, d = x.shape
+    if w.shape != (d, d):
+        raise ValueError(f"w must be ({d},{d}), got {w.shape}")
+    if b.shape != (d,):
+        raise ValueError(f"b must be ({d},), got {b.shape}")
+
+    # Pad rows up to a tile multiple so the BlockSpec evenly covers M.
+    tile_m = min(tile_m, max(m, 1))
+    padded_m = ((m + tile_m - 1) // tile_m) * tile_m
+    x_p = jnp.pad(x, ((0, padded_m - m), (0, 0))) if padded_m != m else x
+
+    grid = (padded_m // tile_m,)
+    out = pl.pallas_call(
+        _dense_tanh_kernel,
+        grid=grid,
+        in_specs=[
+            # x: stream one row-tile per grid step.
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+            # W, b: resident across all grid steps (block index constant).
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_m, d), x.dtype),
+        interpret=interpret,
+    )(x_p, w, b)
+    return out[:m]
+
+
+def vmem_bytes(tile_m: int = TILE_M, d: int = 256, itemsize: int = 4) -> int:
+    """Estimated per-grid-step VMEM footprint (see DESIGN.md section 7)."""
+    return itemsize * (tile_m * d + d * d + d + tile_m * d)

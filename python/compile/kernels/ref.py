@@ -1,0 +1,26 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth for pytest: every kernel in this package must
+match its oracle to float tolerance across the hypothesis shape/dtype
+sweep in python/tests/test_kernel.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_tanh_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference for kernels.dense_tanh: tanh(x @ w + b)."""
+    acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return jnp.tanh(acc + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def work_chunk_ref(x: jax.Array, w: jax.Array, b: jax.Array,
+                   depth: int) -> jax.Array:
+    """Reference for model.work_chunk: depth-fold composition of dense_tanh."""
+    for _ in range(depth):
+        x = dense_tanh_ref(x, w, b)
+    return x

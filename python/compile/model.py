@@ -1,0 +1,76 @@
+"""L2: the JAX compute graph whose chunks the L3 UDS coordinator schedules.
+
+The schedulable unit of work is ``work_chunk(x, w, b, depth)``: a chunk of
+``CHUNK_ROWS`` loop iterations, where each iteration is one row of ``x``
+and the per-iteration *cost* is controlled by ``depth`` -- the number of
+times the L1 ``dense_tanh`` Pallas kernel is applied.  The UDS runtime
+models irregular loops by mapping each loop iteration to a depth class and
+dispatching the chunk to the matching AOT-compiled executable
+(artifacts/work_d{depth}.hlo.txt).
+
+The depth loop uses ``lax.fori_loop`` so the lowered HLO contains a single
+while-loop around one fused matmul+bias+tanh body instead of ``depth``
+unrolled copies (see DESIGN.md section 7, L2 target).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import dense_tanh
+
+# Canonical chunk geometry for the AOT artifacts.  One executable instance
+# processes CHUNK_ROWS loop iterations of dimension FEATURE_DIM each.
+CHUNK_ROWS = 128
+FEATURE_DIM = 64
+
+# Depth classes lowered by aot.py; the Rust workload maps iteration cost to
+# the nearest class.
+DEPTH_CLASSES = (1, 2, 4, 8)
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "interpret"))
+def work_chunk(x: jax.Array, w: jax.Array, b: jax.Array,
+               *, depth: int, interpret: bool = True) -> jax.Array:
+    """Apply the dense_tanh kernel ``depth`` times to a chunk of rows.
+
+    Args:
+      x: (CHUNK_ROWS, FEATURE_DIM) chunk of loop-iteration states.
+      w: (FEATURE_DIM, FEATURE_DIM) shared weights.
+      b: (FEATURE_DIM,) shared bias.
+      depth: number of kernel applications (the iteration-cost knob).
+      interpret: Pallas interpret mode (required for CPU PJRT).
+
+    Returns:
+      (CHUNK_ROWS, FEATURE_DIM) updated chunk.
+    """
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+
+    def body(_, acc):
+        return dense_tanh(acc, w, b, interpret=interpret)
+
+    return lax.fori_loop(0, depth, body, x)
+
+
+def chunk_arg_specs(rows: int = CHUNK_ROWS, dim: int = FEATURE_DIM):
+    """ShapeDtypeStructs for (x, w, b) used by AOT lowering and tests."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((rows, dim), f32),
+        jax.ShapeDtypeStruct((dim, dim), f32),
+        jax.ShapeDtypeStruct((dim,), f32),
+    )
+
+
+def make_inputs(rows: int = CHUNK_ROWS, dim: int = FEATURE_DIM, seed: int = 0):
+    """Deterministic concrete inputs for tests and golden generation."""
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (rows, dim), jnp.float32)
+    w = jax.random.normal(kw, (dim, dim), jnp.float32) * (1.0 / jnp.sqrt(dim))
+    b = jax.random.normal(kb, (dim,), jnp.float32) * 0.1
+    return x, w, b

@@ -1,0 +1,139 @@
+"""pytest: L1 Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes/dtypes/tile sizes; every case asserts allclose
+against compile.kernels.ref.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import TILE_M, dense_tanh, dense_tanh_ref, vmem_bytes
+
+jax.config.update("jax_enable_x64", False)
+
+_SETTINGS = settings(
+    max_examples=40,
+    deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+
+
+def _mk(m, d, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, d)).astype(dtype)
+    w = (rng.standard_normal((d, d)) / np.sqrt(d)).astype(dtype)
+    b = (rng.standard_normal(d) * 0.1).astype(dtype)
+    return jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == np.float16 else dict(
+        rtol=1e-5, atol=1e-5)
+
+
+class TestDenseTanhBasic:
+    def test_canonical_shape(self):
+        x, w, b = _mk(128, 64, np.float32, 0)
+        np.testing.assert_allclose(
+            dense_tanh(x, w, b), dense_tanh_ref(x, w, b), rtol=1e-5, atol=1e-5)
+
+    def test_single_row(self):
+        x, w, b = _mk(1, 16, np.float32, 1)
+        np.testing.assert_allclose(
+            dense_tanh(x, w, b), dense_tanh_ref(x, w, b), rtol=1e-5, atol=1e-5)
+
+    def test_non_tile_multiple_rows(self):
+        # 130 rows with TILE_M=128 forces the padding path.
+        x, w, b = _mk(130, 32, np.float32, 2)
+        np.testing.assert_allclose(
+            dense_tanh(x, w, b), dense_tanh_ref(x, w, b), rtol=1e-5, atol=1e-5)
+
+    def test_rows_smaller_than_tile(self):
+        x, w, b = _mk(7, 8, np.float32, 3)
+        np.testing.assert_allclose(
+            dense_tanh(x, w, b), dense_tanh_ref(x, w, b), rtol=1e-5, atol=1e-5)
+
+    def test_output_dtype_matches_input(self):
+        x, w, b = _mk(16, 8, np.float32, 4)
+        assert dense_tanh(x, w, b).dtype == x.dtype
+
+    def test_output_bounded_by_tanh(self):
+        x, w, b = _mk(64, 16, np.float32, 5)
+        out = np.asarray(dense_tanh(x, w, b))
+        assert np.all(np.abs(out) <= 1.0)
+
+    def test_zero_input_gives_tanh_bias(self):
+        d = 16
+        x = jnp.zeros((8, d), jnp.float32)
+        w = jnp.eye(d, dtype=jnp.float32)
+        b = jnp.full((d,), 0.5, jnp.float32)
+        np.testing.assert_allclose(
+            dense_tanh(x, w, b), np.full((8, d), np.tanh(0.5), np.float32),
+            rtol=1e-6, atol=1e-6)
+
+    def test_shape_validation(self):
+        x, w, b = _mk(8, 16, np.float32, 6)
+        with pytest.raises(ValueError):
+            dense_tanh(x, w[:8, :8], b)
+        with pytest.raises(ValueError):
+            dense_tanh(x, w, b[:8])
+
+    def test_deterministic(self):
+        x, w, b = _mk(32, 16, np.float32, 7)
+        a = np.asarray(dense_tanh(x, w, b))
+        c = np.asarray(dense_tanh(x, w, b))
+        np.testing.assert_array_equal(a, c)
+
+
+class TestDenseTanhHypothesis:
+    @_SETTINGS
+    @given(
+        m=st.integers(min_value=1, max_value=300),
+        d=st.sampled_from([4, 8, 16, 32, 64]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_f32(self, m, d, seed):
+        x, w, b = _mk(m, d, np.float32, seed)
+        np.testing.assert_allclose(
+            dense_tanh(x, w, b), dense_tanh_ref(x, w, b), rtol=1e-5, atol=1e-5)
+
+    @_SETTINGS
+    @given(
+        m=st.integers(min_value=1, max_value=128),
+        d=st.sampled_from([8, 16, 32]),
+        tile=st.sampled_from([4, 16, 32, 128]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_tile_size_invariance(self, m, d, tile, seed):
+        """Result must not depend on the BlockSpec tiling."""
+        x, w, b = _mk(m, d, np.float32, seed)
+        a = np.asarray(dense_tanh(x, w, b, tile_m=tile))
+        r = np.asarray(dense_tanh_ref(x, w, b))
+        np.testing.assert_allclose(a, r, rtol=1e-5, atol=1e-5)
+
+    @_SETTINGS
+    @given(
+        m=st.integers(min_value=1, max_value=64),
+        d=st.sampled_from([8, 16]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_f16(self, m, d, seed):
+        x, w, b = _mk(m, d, np.float16, seed)
+        np.testing.assert_allclose(
+            np.asarray(dense_tanh(x, w, b), np.float32),
+            np.asarray(dense_tanh_ref(x, w, b), np.float32),
+            **_tol(np.float16))
+
+
+class TestVmemEstimate:
+    def test_default_fits_vmem(self):
+        # DESIGN.md section 7: default geometry must sit far below 16 MiB.
+        assert vmem_bytes() < 16 * 1024 * 1024 // 4
+
+    def test_scales_with_tile(self):
+        assert vmem_bytes(tile_m=256) > vmem_bytes(tile_m=64)

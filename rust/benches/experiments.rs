@@ -1,0 +1,48 @@
+//! Benches regenerating the evaluation experiments E1–E7 on the
+//! deterministic simulator (one bench per table/figure; E8's real PJRT
+//! run lives in examples/xla_pipeline.rs and `uds eval e8`).
+//!
+//! These wrap the same `eval::eN` functions the CLI uses: running `cargo
+//! bench --bench experiments` both times the harness and prints + saves
+//! the tables recorded in EXPERIMENTS.md.
+
+use uds::eval::{self, EvalConfig};
+use uds::util::Bench;
+
+fn cfg() -> EvalConfig {
+    EvalConfig { n: 50_000, p: 8, mean_ns: 1_000.0, h_ns: 250, seed: 42 }
+}
+
+fn print_and_save_tables() {
+    let c = cfg();
+    for tables in [
+        eval::e1(&c),
+        eval::e2(&c),
+        eval::e3(&c),
+        eval::e4(&c),
+        eval::e5(&c),
+        eval::e6(&c),
+        eval::e7(&c),
+    ] {
+        for t in tables {
+            println!("{}", t.markdown());
+            let _ = t.save_csv(std::path::Path::new("results"));
+        }
+    }
+}
+
+fn main() {
+    print_and_save_tables();
+
+    let conf = cfg();
+    let mut g = Bench::group("experiments");
+    g.budget = std::time::Duration::from_millis(1500);
+    g.samples = 5;
+    g.bench("e1_chunk_evolution", || eval::e1(&conf).len());
+    g.bench("e2_e3_schedule_matrix", || eval::e2(&conf).len());
+    g.bench("e4_chunk_sweep", || eval::e4(&conf).len());
+    g.bench("e5_noise_adaptivity", || eval::e5(&conf).len());
+    g.bench("e6_uds_equivalence", || eval::e6(&conf).len());
+    g.bench("e7_heterogeneous", || eval::e7(&conf).len());
+    let _ = g.save_csv();
+}

@@ -1,0 +1,89 @@
+//! E6's performance half: what do the two proposed UDS frontends cost
+//! relative to the native implementation of the same strategy?
+//!
+//! The paper argues (§4.3) that the lambda-style getters/setters are
+//! free after inlining, while the declare style pays positional-argument
+//! marshalling.  In this library the analogue is: native = direct trait
+//! impl; lambda = closure dispatch + DequeueSink; declare = positional
+//! out-params + logical-bound normalization.  EXPERIMENTS.md §Perf
+//! records the measured ratios.
+
+use uds::coordinator::declare::Registry;
+use uds::coordinator::{LoopRecord, LoopSpec, ScheduleFactory, TeamSpec};
+use uds::schedules::{uds_port, ScheduleSpec};
+use uds::util::Bench;
+
+fn drain(factory: &dyn ScheduleFactory, n: u64, p: usize) -> u64 {
+    let mut s = factory.build();
+    let loop_spec = LoopSpec::upto(n);
+    let team = TeamSpec::uniform(p);
+    let mut rec = LoopRecord::default();
+    s.start(&loop_spec, &team, &mut rec);
+    let mut count = 0u64;
+    let mut live = vec![true; p];
+    while live.iter().any(|&l| l) {
+        for (tid, alive) in live.iter_mut().enumerate() {
+            if *alive {
+                match s.next(tid, None) {
+                    Some(c) => count += c.len,
+                    None => *alive = false,
+                }
+            }
+        }
+    }
+    s.finish(&team, &mut rec);
+    count
+}
+
+struct ArcFactory(std::sync::Arc<uds::coordinator::lambda::LambdaFactory>);
+
+impl ScheduleFactory for ArcFactory {
+    fn name(&self) -> String {
+        ScheduleFactory::name(&*self.0)
+    }
+    fn build(&self) -> Box<dyn uds::coordinator::Scheduler> {
+        self.0.build()
+    }
+}
+
+fn main() {
+    const N: u64 = 65_536;
+    const P: usize = 8;
+    let mut g = Bench::group("frontend_overhead_drain");
+    let reg = Registry::new();
+
+    // dynamic,16: the cheapest native dequeue (fetch_add) — worst case
+    // for relative frontend overhead.
+    let native = ScheduleSpec::Dynamic { chunk: 16 }.factory();
+    g.bench("dynamic16/native", || drain(&*native, N, P));
+    let lambda = ArcFactory(uds_port::lambda_dynamic(16));
+    g.bench("dynamic16/lambda", || drain(&lambda, N, P));
+    let declare = uds_port::declare_dynamic(&reg, 16);
+    g.bench("dynamic16/declare", || drain(&declare, N, P));
+
+    // guided: CAS-loop native.
+    let native = ScheduleSpec::Guided { min_chunk: 1 }.factory();
+    g.bench("guided/native", || drain(&*native, N, P));
+    let lambda = ArcFactory(uds_port::lambda_gss(1));
+    g.bench("guided/lambda", || drain(&lambda, N, P));
+    let declare = uds_port::declare_gss(&reg);
+    g.bench("guided/declare", || drain(&declare, N, P));
+
+    // static,16: per-thread counters, zero sharing.
+    let native = ScheduleSpec::Static { chunk: Some(16) }.factory();
+    g.bench("static16/native", || drain(&*native, N, P));
+    let lambda = ArcFactory(uds_port::lambda_static(16));
+    g.bench("static16/lambda", || drain(&lambda, N, P));
+    let declare = uds_port::declare_static(&reg, 16);
+    g.bench("static16/declare", || drain(&declare, N, P));
+
+    // fac2: compiled native vs the universal wrap_native adapter.
+    let native = ScheduleSpec::Fac2.factory();
+    g.bench("fac2/native", || drain(&*native, N, P));
+    let wrapped = ArcFactory(uds_port::wrap_native("fac2", |_, _| {
+        uds::schedules::fac2()
+    }));
+    g.bench("fac2/wrap_native", || drain(&wrapped, N, P));
+
+    let _ = g.save_csv();
+}

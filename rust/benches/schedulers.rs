@@ -1,0 +1,139 @@
+//! Micro-benchmarks: per-dequeue cost of every strategy.
+//!
+//! This is the L3 hot path the paper's interface must not bloat: a
+//! `next()` call on the contended todo list.  Results feed EXPERIMENTS.md
+//! §Perf (native dequeue cost) and pair with `overhead.rs` (UDS frontend
+//! cost on the same strategies).
+
+use uds::coordinator::{parallel_for, ExecOptions, HistoryArena, LoopRecord, LoopSpec, TeamSpec};
+use uds::schedules::ScheduleSpec;
+use uds::util::Bench;
+
+/// Drain an entire loop through `next` single-threaded: measures the
+/// amortized dequeue cost without body or contention noise.
+fn drain_cost(spec: &ScheduleSpec, n: u64, p: usize) -> u64 {
+    let mut s = spec.build();
+    let loop_spec = LoopSpec::upto(n);
+    let team = TeamSpec::uniform(p);
+    let mut rec = LoopRecord::default();
+    s.start(&loop_spec, &team, &mut rec);
+    let mut chunks = 0u64;
+    let mut live = vec![true; p];
+    while live.iter().any(|&l| l) {
+        for (tid, alive) in live.iter_mut().enumerate() {
+            if *alive {
+                match s.next(tid, None) {
+                    Some(_) => chunks += 1,
+                    None => *alive = false,
+                }
+            }
+        }
+    }
+    s.finish(&team, &mut rec);
+    chunks
+}
+
+fn bench_dequeue_drain() {
+    let mut g = Bench::group("dequeue_drain_n65536_p8");
+    for spec in ScheduleSpec::roster() {
+        g.bench(&spec.label(), || drain_cost(&spec, 65_536, 8));
+    }
+    // §Perf ablation: the compiled-boundary GSS variant that was tried
+    // and reverted (slower at GSS's low dequeue counts; see gss.rs doc).
+    g.bench("guided(compiled,ablation)", || {
+        use uds::coordinator::Scheduler as _;
+        let mut s = uds::schedules::GssCompiled::new(1);
+        let loop_spec = LoopSpec::upto(65_536);
+        let team = TeamSpec::uniform(8);
+        let mut rec = LoopRecord::default();
+        s.start(&loop_spec, &team, &mut rec);
+        let mut chunks = 0u64;
+        let mut live = vec![true; 8];
+        while live.iter().any(|&l| l) {
+            for (tid, alive) in live.iter_mut().enumerate() {
+                if *alive {
+                    match s.next(tid, None) {
+                        Some(_) => chunks += 1,
+                        None => *alive = false,
+                    }
+                }
+            }
+        }
+        chunks
+    });
+    let _ = g.save_csv();
+}
+
+fn bench_start_cost() {
+    // `start` builds the todo list: compiled schedules (TSS/FAC2) pay
+    // their boundary precomputation here.
+    let mut g = Bench::group("start_n1M_p8");
+    let loop_spec = LoopSpec::upto(1_000_000);
+    let team = TeamSpec::uniform(8);
+    for spec in [
+        ScheduleSpec::Static { chunk: None },
+        ScheduleSpec::Dynamic { chunk: 16 },
+        ScheduleSpec::Guided { min_chunk: 1 },
+        ScheduleSpec::Tss { params: None },
+        ScheduleSpec::Fac2,
+    ] {
+        g.bench(&spec.label(), || {
+            let mut s = spec.build();
+            let mut rec = LoopRecord::default();
+            s.start(&loop_spec, &team, &mut rec);
+            s.next(0, None)
+        });
+    }
+    let _ = g.save_csv();
+}
+
+fn bench_contended() {
+    // True multithreaded contention on the shared cursor: the fetch_add
+    // hot path under P threads with an empty body.
+    let mut g = Bench::group("contended_empty_body_n262144");
+    for p in [2usize, 4, 8] {
+        for spec in [
+            ScheduleSpec::Dynamic { chunk: 1 },
+            ScheduleSpec::Dynamic { chunk: 64 },
+            ScheduleSpec::Guided { min_chunk: 1 },
+            ScheduleSpec::Fac2,
+            ScheduleSpec::Static { chunk: None },
+            ScheduleSpec::StaticSteal { own_chunk: 64 },
+        ] {
+            let loop_spec = LoopSpec::upto(262_144);
+            let team = TeamSpec::uniform(p);
+            let history = HistoryArena::new();
+            let factory = spec.factory();
+            g.bench(&format!("{}_p{p}", spec.label()), || {
+                parallel_for(
+                    &loop_spec,
+                    &team,
+                    &*factory,
+                    &history,
+                    &ExecOptions::default(),
+                    |_, _| {},
+                )
+                .chunks
+            });
+        }
+    }
+    let _ = g.save_csv();
+}
+
+fn main() {
+    // `cargo bench -- <filter>` style: run groups matching any arg.
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let want = |name: &str| {
+        args.iter().all(|a| a.starts_with('-'))
+            || args.iter().any(|a| name.contains(a.as_str()))
+    };
+    if want("dequeue") {
+        bench_dequeue_drain();
+    }
+    if want("start") {
+        bench_start_cost();
+    }
+    if want("contended") {
+        bench_contended();
+    }
+}

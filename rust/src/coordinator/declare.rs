@@ -1,0 +1,451 @@
+//! Declare-directive UDS specification — the paper's §4.2 interface.
+//!
+//! Modeled on OpenMP user-defined reductions (UDR), the proposal reads:
+//!
+//! ```c
+//! #pragma omp declare schedule(mystatic) arguments(2) \
+//!   init(my_init(omp_lb, omp_ub, omp_inc, omp_arg0, omp_arg1)) \
+//!   next(my_next(omp_lb_chunk, omp_ub_chunk, omp_arg0, omp_arg1)) \
+//!   fini(my_fini(omp_arg1))
+//! #pragma omp parallel for schedule(mystatic(&lr))
+//! ```
+//!
+//! The reserved markers `omp_lb/omp_ub/omp_inc` tell the compiler which
+//! loop parameters to marshal into the user functions; `omp_lb_chunk` /
+//! `omp_ub_chunk` are the out-parameters of `next`, whose return value is
+//! non-zero while unprocessed chunks remain.  User arguments follow the
+//! OpenMP-defined ones positionally.
+//!
+//! Here: [`Registry::declare`] registers the three functions under a
+//! name with a declared arity; [`Registry::schedule`] instantiates a
+//! factory binding concrete arguments (the `&lr` of the use-site).  The
+//! user functions receive logical loop bounds exactly as in the proposal
+//! and keep their state inside the user arguments (interior mutability),
+//! mirroring the C idiom of passing a `loop_record_t *`.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use std::sync::RwLock;
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::{ScheduleFactory, Scheduler};
+
+/// A positional user-argument pack (`omp_arg0..omp_argN`).
+#[derive(Clone, Default)]
+pub struct Args(Vec<Arc<dyn Any + Send + Sync>>);
+
+impl Args {
+    pub fn new() -> Self {
+        Self(Vec::new())
+    }
+
+    pub fn with<T: Any + Send + Sync>(mut self, v: T) -> Self {
+        self.0.push(Arc::new(v));
+        self
+    }
+
+    pub fn push_arc(mut self, v: Arc<dyn Any + Send + Sync>) -> Self {
+        self.0.push(v);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Typed access to `omp_arg<i>`; panics with a UDR-style diagnostic on
+    /// type mismatch (the compiler "may then match the types ... to
+    /// generate error messages").
+    pub fn arg<T: Any + Send + Sync>(&self, i: usize) -> &T {
+        self.0
+            .get(i)
+            .unwrap_or_else(|| panic!("schedule argument omp_arg{i} missing"))
+            .downcast_ref::<T>()
+            .unwrap_or_else(|| {
+                panic!(
+                    "schedule argument omp_arg{i} has mismatched type (expected {})",
+                    std::any::type_name::<T>()
+                )
+            })
+    }
+}
+
+/// `init(my_init(omp_lb, omp_ub, omp_inc, omp_chunksz, omp_arg...))`.
+pub type DeclInit = dyn Fn(i64, i64, i64, u64, usize, &Args) + Send + Sync;
+/// `next(my_next(omp_lb_chunk, omp_ub_chunk, omp_chunk_incr, omp_arg...))`
+/// — returns `true` (non-zero) while unprocessed chunks remain.  `tid` is
+/// the calling thread (`omp_get_thread_num()` in the C rendition).
+pub type DeclNext =
+    dyn Fn(&mut i64, &mut i64, &mut i64, usize, Option<&ChunkFeedback>, &Args) -> bool
+        + Send
+        + Sync;
+/// `fini(my_fini(omp_arg...))`.
+pub type DeclFini = dyn Fn(&Args) + Send + Sync;
+
+/// One `#pragma omp declare schedule(...)` definition.
+#[derive(Clone)]
+pub struct Declaration {
+    pub name: String,
+    /// The `arguments(N)` sub-clause.
+    pub arity: usize,
+    init: Option<Arc<DeclInit>>,
+    next: Arc<DeclNext>,
+    fini: Option<Arc<DeclFini>>,
+}
+
+/// Builder mirroring the directive's sub-clauses.
+pub struct DeclarationBuilder {
+    name: String,
+    arity: usize,
+    init: Option<Arc<DeclInit>>,
+    next: Option<Arc<DeclNext>>,
+    fini: Option<Arc<DeclFini>>,
+}
+
+impl DeclarationBuilder {
+    pub fn schedule(name: impl Into<String>) -> Self {
+        Self { name: name.into(), arity: 0, init: None, next: None, fini: None }
+    }
+
+    /// `arguments(N)`.
+    pub fn arguments(mut self, n: usize) -> Self {
+        self.arity = n;
+        self
+    }
+
+    pub fn init<F>(mut self, f: F) -> Self
+    where
+        F: Fn(i64, i64, i64, u64, usize, &Args) + Send + Sync + 'static,
+    {
+        self.init = Some(Arc::new(f));
+        self
+    }
+
+    pub fn next<F>(mut self, f: F) -> Self
+    where
+        F: Fn(&mut i64, &mut i64, &mut i64, usize, Option<&ChunkFeedback>, &Args) -> bool
+            + Send
+            + Sync
+            + 'static,
+    {
+        self.next = Some(Arc::new(f));
+        self
+    }
+
+    pub fn fini<F>(mut self, f: F) -> Self
+    where
+        F: Fn(&Args) + Send + Sync + 'static,
+    {
+        self.fini = Some(Arc::new(f));
+        self
+    }
+
+    pub fn build(self) -> Declaration {
+        Declaration {
+            name: self.name,
+            arity: self.arity,
+            init: self.init,
+            next: self.next.expect("declare schedule requires a next() function"),
+            fini: self.fini,
+        }
+    }
+}
+
+/// The schedule-name registry: the set of visible
+/// `declare schedule` directives.
+#[derive(Default, Clone)]
+pub struct Registry {
+    decls: Arc<RwLock<HashMap<String, Declaration>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a declaration; re-declaring a name is an error, as in
+    /// OpenMP ("a UDR must not be redeclared").
+    pub fn declare(&self, decl: Declaration) -> Result<(), String> {
+        let mut map = self.decls.write().unwrap();
+        if map.contains_key(&decl.name) {
+            return Err(format!("schedule '{}' already declared", decl.name));
+        }
+        map.insert(decl.name.clone(), decl);
+        Ok(())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.decls.read().unwrap().contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.decls.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// The use-site: `schedule(mystatic(&lr))` — bind concrete arguments
+    /// to a declared schedule, producing a factory.
+    pub fn schedule(&self, name: &str, args: Args) -> Result<DeclaredFactory, String> {
+        let decl = self
+            .decls
+            .read().unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| format!("schedule '{name}' not declared"))?;
+        if args.len() != decl.arity {
+            return Err(format!(
+                "schedule '{}' declared with arguments({}) but called with {}",
+                name,
+                decl.arity,
+                args.len()
+            ));
+        }
+        Ok(DeclaredFactory { decl, args })
+    }
+}
+
+/// A declared schedule bound to use-site arguments.
+#[derive(Clone)]
+pub struct DeclaredFactory {
+    decl: Declaration,
+    args: Args,
+}
+
+impl ScheduleFactory for DeclaredFactory {
+    fn name(&self) -> String {
+        format!("declare:{}", self.decl.name)
+    }
+
+    fn build(&self) -> Box<dyn Scheduler> {
+        Box::new(DeclaredScheduler {
+            decl: self.decl.clone(),
+            args: self.args.clone(),
+            spec: LoopSpec::upto(0),
+        })
+    }
+}
+
+/// Live instance driving the user's positional functions.
+pub struct DeclaredScheduler {
+    decl: Declaration,
+    args: Args,
+    spec: LoopSpec,
+}
+
+impl Scheduler for DeclaredScheduler {
+    fn name(&self) -> String {
+        format!("declare:{}", self.decl.name)
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, _record: &mut LoopRecord) {
+        self.spec = *loop_;
+        if let Some(init) = &self.decl.init {
+            // Marshal omp_lb, omp_ub, omp_inc (+ nthreads as the chunk
+            // parameter channel of the loop transform).
+            init(loop_.lb, loop_.ub, loop_.incr, 0, team.nthreads, &self.args);
+        }
+    }
+
+    fn next(&self, tid: usize, fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        let mut lb_chunk = 0i64;
+        let mut ub_chunk = 0i64;
+        let mut incr = self.spec.incr;
+        let has_work = (self.decl.next)(
+            &mut lb_chunk,
+            &mut ub_chunk,
+            &mut incr,
+            tid,
+            fb,
+            &self.args,
+        );
+        if !has_work {
+            return None;
+        }
+        let first = self.spec.normalize(lb_chunk);
+        let end = self.spec.normalize(ub_chunk);
+        (end > first).then(|| Chunk::new(first, end - first))
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {
+        if let Some(fini) = &self.decl.fini {
+            fini(&self.args);
+        }
+    }
+
+    fn is_adaptive(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+    use std::sync::Mutex;
+
+    /// The paper's Fig. 2 right side: mystatic via declare directives.
+    /// `loop_record_t` becomes a Mutex-protected struct in omp_arg0.
+    #[derive(Default)]
+    struct LoopRecordT {
+        lb: i64,
+        ub: i64,
+        incr: i64,
+        chunksz: i64,
+        next_lb: Vec<i64>,
+    }
+
+    fn declare_mystatic(reg: &Registry, chunksz: i64) {
+        let _ = chunksz;
+        reg.declare(
+            DeclarationBuilder::schedule("mystatic")
+                .arguments(2) // omp_arg0 = loop_record_t, omp_arg1 = chunksz
+                .init(|lb, ub, incr, _chunk, nthreads, args| {
+                    let lr = args.arg::<Mutex<LoopRecordT>>(0);
+                    let chunksz = *args.arg::<i64>(1);
+                    let mut lr = lr.lock().unwrap();
+                    lr.lb = lb;
+                    lr.ub = ub;
+                    lr.incr = incr;
+                    lr.chunksz = chunksz;
+                    lr.next_lb =
+                        (0..nthreads as i64).map(|t| lb + t * chunksz * incr).collect();
+                })
+                .next(|lower, upper, incr, tid, _fb, args| {
+                    let lr = args.arg::<Mutex<LoopRecordT>>(0);
+                    let mut lr = lr.lock().unwrap();
+                    if lr.next_lb[tid] >= lr.ub {
+                        return false; // zero: loop completed
+                    }
+                    *lower = lr.next_lb[tid];
+                    let step = lr.chunksz * lr.incr;
+                    *upper = (lr.next_lb[tid] + step).min(lr.ub);
+                    *incr = lr.incr;
+                    let p = lr.next_lb.len() as i64;
+                    lr.next_lb[tid] += p * step;
+                    true
+                })
+                .fini(|args| {
+                    let lr = args.arg::<Mutex<LoopRecordT>>(0);
+                    lr.lock().unwrap().next_lb.clear(); // the paper's free()
+                })
+                .build(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn mystatic_covers_space() {
+        let reg = Registry::new();
+        declare_mystatic(&reg, 16);
+        let f = reg
+            .schedule(
+                "mystatic",
+                Args::new().with(Mutex::new(LoopRecordT::default())).with(16i64),
+            )
+            .unwrap();
+        let mut s = f.build();
+        let chunks = drain_chunks(
+            &mut *s,
+            &LoopSpec::upto(1000),
+            &TeamSpec::uniform(4),
+            &mut LoopRecord::default(),
+        );
+        verify_cover(&chunks, 1000).unwrap();
+    }
+
+    #[test]
+    fn mystatic_equals_native_static() {
+        use crate::schedules::static_block::StaticBlock;
+        let reg = Registry::new();
+        declare_mystatic(&reg, 8);
+        let f = reg
+            .schedule(
+                "mystatic",
+                Args::new().with(Mutex::new(LoopRecordT::default())).with(8i64),
+            )
+            .unwrap();
+        let spec = LoopSpec::upto(333);
+        let team = TeamSpec::uniform(3);
+        let mut s = f.build();
+        let declared =
+            drain_chunks(&mut *s, &spec, &team, &mut LoopRecord::default());
+        let mut native = StaticBlock::new(Some(8));
+        let native_chunks =
+            drain_chunks(&mut native, &spec, &team, &mut LoopRecord::default());
+        assert_eq!(declared, native_chunks);
+    }
+
+    #[test]
+    fn arity_checked_at_use_site() {
+        let reg = Registry::new();
+        declare_mystatic(&reg, 4);
+        let err = match reg.schedule("mystatic", Args::new()) {
+            Err(e) => e,
+            Ok(_) => panic!("arity mismatch accepted"),
+        };
+        assert!(err.contains("arguments(2)"));
+    }
+
+    #[test]
+    fn unknown_schedule_rejected() {
+        let reg = Registry::new();
+        assert!(reg.schedule("nope", Args::new()).is_err());
+    }
+
+    #[test]
+    fn redeclaration_rejected() {
+        let reg = Registry::new();
+        declare_mystatic(&reg, 4);
+        let again = DeclarationBuilder::schedule("mystatic")
+            .next(|_, _, _, _, _, _| false)
+            .build();
+        assert!(reg.declare(again).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched type")]
+    fn type_mismatch_diagnosed() {
+        let args = Args::new().with(42i64);
+        let _: &String = args.arg::<String>(0);
+    }
+
+    #[test]
+    fn registry_lists_names() {
+        let reg = Registry::new();
+        declare_mystatic(&reg, 4);
+        assert_eq!(reg.names(), vec!["mystatic".to_string()]);
+        assert!(reg.contains("mystatic"));
+    }
+
+    #[test]
+    fn strided_and_negative_loops() {
+        // The declared schedule works in logical space; verify a strided
+        // loop maps correctly through normalize().
+        let reg = Registry::new();
+        declare_mystatic(&reg, 2);
+        let f = reg
+            .schedule(
+                "mystatic",
+                Args::new().with(Mutex::new(LoopRecordT::default())).with(2i64),
+            )
+            .unwrap();
+        let spec = LoopSpec::new(0, 20, 4).unwrap(); // 0,4,8,12,16
+        let mut s = f.build();
+        let chunks = drain_chunks(
+            &mut *s,
+            &spec,
+            &TeamSpec::uniform(2),
+            &mut LoopRecord::default(),
+        );
+        verify_cover(&chunks, 5).unwrap();
+    }
+}

@@ -1,0 +1,245 @@
+//! The worksharing executor: the paper's §4 "compiler loop transform".
+//!
+//! The paper observes that Intel, LLVM and GNU RTLs all lower
+//! `#pragma omp parallel for` to the same pattern — a setup call, a while
+//! loop around a dequeue function, and a tail cleanup:
+//!
+//! ```c
+//! X_init(...);
+//! while (X_dequeue(&lo, &hi)) { for (i = lo; i < hi; ++i) BODY(i); }
+//! X_fini(...);
+//! ```
+//!
+//! [`parallel_for`] is that transform as a library: it spawns a thread team,
+//! drives an arbitrary [`Scheduler`] (built-in or user-defined) through the
+//! three merged UDS operations, measures chunk bodies (the merged
+//! begin/end-loop-body operations), and folds the invocation into the
+//! cross-invocation history record.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use std::sync::Mutex;
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::HistoryArena;
+use crate::coordinator::loop_spec::{LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::{ScheduleFactory, Scheduler};
+use crate::metrics::{ChunkLog, RunStats};
+
+/// Execution options for [`parallel_for`].
+#[derive(Clone, Debug)]
+pub struct ExecOptions {
+    /// Record a full chunk trace into `RunStats::trace`.
+    pub trace: bool,
+    /// History call-site key; `None` runs without persistent history.
+    pub call_site: Option<String>,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        Self { trace: false, call_site: None }
+    }
+}
+
+/// Execute `body(logical_index, tid)` for every iteration of `spec`,
+/// scheduled by a fresh scheduler from `factory` onto `team.nthreads`
+/// OS threads.
+///
+/// This is the real-time twin of [`crate::sim::SimExecutor`]; both drive
+/// the identical [`Scheduler`] trait, so a strategy validated under the
+/// simulator runs unchanged on real threads.
+pub fn parallel_for<F>(
+    spec: &LoopSpec,
+    team: &TeamSpec,
+    factory: &dyn ScheduleFactory,
+    history: &HistoryArena,
+    opts: &ExecOptions,
+    body: F,
+) -> RunStats
+where
+    F: Fn(i64, usize) + Sync,
+{
+    let mut sched = factory.build();
+    let record = opts
+        .call_site
+        .as_ref()
+        .map(|k| history.record(k))
+        .unwrap_or_default();
+
+    {
+        let mut rec = record.lock().unwrap();
+        rec.ensure_team(team.nthreads);
+        sched.start(spec, team, &mut rec);
+    }
+
+    let n = spec.iter_count();
+    let p = team.nthreads;
+    let sched_ref: &dyn Scheduler = &*sched;
+
+    let busy: Vec<AtomicU64> = (0..p).map(|_| AtomicU64::new(0)).collect();
+    let finish: Vec<AtomicU64> = (0..p).map(|_| AtomicU64::new(0)).collect();
+    let iters: Vec<AtomicU64> = (0..p).map(|_| AtomicU64::new(0)).collect();
+    let dequeues: Vec<AtomicU64> = (0..p).map(|_| AtomicU64::new(0)).collect();
+    let chunks = AtomicU64::new(0);
+    let trace: Mutex<Vec<ChunkLog>> = Mutex::new(Vec::new());
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for tid in 0..p {
+            let body = &body;
+            let busy = &busy;
+            let finish = &finish;
+            let iters = &iters;
+            let dequeues = &dequeues;
+            let chunks = &chunks;
+            let trace = &trace;
+            let opts = &*opts;
+            scope.spawn(move || {
+                let mut fb: Option<ChunkFeedback> = None;
+                loop {
+                    dequeues[tid].fetch_add(1, Ordering::Relaxed);
+                    let Some(chunk) = sched_ref.next(tid, fb.as_ref()) else {
+                        break;
+                    };
+                    if chunk.len == 0 {
+                        fb = None;
+                        continue;
+                    }
+                    chunks.fetch_add(1, Ordering::Relaxed);
+                    let c0 = Instant::now();
+                    let start_ns = (c0 - t0).as_nanos() as u64;
+                    for k in chunk.indices() {
+                        body(spec.logical(k), tid);
+                    }
+                    let elapsed_ns = c0.elapsed().as_nanos() as u64;
+                    busy[tid].fetch_add(elapsed_ns, Ordering::Relaxed);
+                    iters[tid].fetch_add(chunk.len, Ordering::Relaxed);
+                    finish[tid]
+                        .store(start_ns + elapsed_ns, Ordering::Relaxed);
+                    if opts.trace {
+                        trace.lock().unwrap().push(ChunkLog {
+                            tid,
+                            chunk,
+                            start_ns,
+                            elapsed_ns,
+                        });
+                    }
+                    fb = Some(ChunkFeedback { chunk, tid, elapsed_ns });
+                }
+            });
+        }
+    });
+    let makespan_ns = t0.elapsed().as_nanos() as u64;
+
+    let busy_v: Vec<u64> = busy.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+    let iters_v: Vec<u64> = iters.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+
+    {
+        let mut rec = record.lock().unwrap();
+        sched.finish(team, &mut rec);
+        let busy_f: Vec<f64> = busy_v.iter().map(|&b| b as f64).collect();
+        rec.record_invocation(&busy_f, &iters_v, makespan_ns);
+    }
+
+    let mut trace = trace.into_inner().unwrap();
+    trace.sort_by_key(|c| c.start_ns);
+    RunStats {
+        schedule: sched.name(),
+        nthreads: p,
+        iterations: n,
+        makespan_ns,
+        busy_ns: busy_v,
+        finish_ns: finish.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+        iters: iters_v,
+        dequeues: dequeues.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+        chunks: chunks.load(Ordering::Relaxed),
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::FnFactory;
+    use crate::schedules;
+    use std::sync::atomic::AtomicU32;
+
+    fn count_body_runs(spec: LoopSpec, team: TeamSpec, f: &dyn ScheduleFactory) -> u64 {
+        let hits = AtomicU32::new(0);
+        let arena = HistoryArena::new();
+        let stats = parallel_for(&spec, &team, f, &arena, &ExecOptions::default(), |_, _| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(stats.iters.iter().sum::<u64>(), spec.iter_count());
+        hits.load(Ordering::Relaxed) as u64
+    }
+
+    #[test]
+    fn executes_every_iteration_exactly_once() {
+        let spec = LoopSpec::upto(1000);
+        let team = TeamSpec::uniform(4);
+        let f = FnFactory::new("dynamic", || schedules::dynamic_chunk(8));
+        assert_eq!(count_body_runs(spec, team, &f), 1000);
+    }
+
+    #[test]
+    fn strided_loop_sees_logical_indices() {
+        let spec = LoopSpec::new(10, 30, 5).unwrap(); // 10,15,20,25
+        let team = TeamSpec::uniform(2);
+        let f = FnFactory::new("static", || schedules::static_block(None));
+        let seen = Mutex::new(Vec::new());
+        let arena = HistoryArena::new();
+        parallel_for(&spec, &team, &f, &arena, &ExecOptions::default(), |i, _| {
+            seen.lock().unwrap().push(i);
+        });
+        let mut v = seen.into_inner().unwrap();
+        v.sort();
+        assert_eq!(v, vec![10, 15, 20, 25]);
+    }
+
+    #[test]
+    fn empty_loop_runs_nothing() {
+        let spec = LoopSpec::new(5, 5, 1).unwrap();
+        let team = TeamSpec::uniform(3);
+        let f = FnFactory::new("gss", || schedules::gss(1));
+        assert_eq!(count_body_runs(spec, team, &f), 0);
+    }
+
+    #[test]
+    fn history_accumulates_across_invocations() {
+        let spec = LoopSpec::upto(64);
+        let team = TeamSpec::uniform(2);
+        let f = FnFactory::new("static", || schedules::static_block(None));
+        let arena = HistoryArena::new();
+        let opts = ExecOptions { call_site: Some("t.rs:1".into()), ..Default::default() };
+        for _ in 0..3 {
+            parallel_for(&spec, &team, &f, &arena, &opts, |_, _| {});
+        }
+        let rec = arena.record("t.rs:1");
+        let g = rec.lock().unwrap();
+        assert_eq!(g.invocations, 3);
+        assert_eq!(g.thread_iters.iter().sum::<u64>(), 192);
+    }
+
+    #[test]
+    fn trace_is_recorded_and_ordered() {
+        let spec = LoopSpec::upto(100);
+        let team = TeamSpec::uniform(4);
+        let f = FnFactory::new("dynamic", || schedules::dynamic_chunk(10));
+        let arena = HistoryArena::new();
+        let opts = ExecOptions { trace: true, ..Default::default() };
+        let stats = parallel_for(&spec, &team, &f, &arena, &opts, |_, _| {});
+        assert_eq!(stats.trace.len(), 10);
+        assert!(stats.trace.windows(2).all(|w| w[0].start_ns <= w[1].start_ns));
+        assert_eq!(stats.chunks, 10);
+    }
+
+    #[test]
+    fn single_thread_team_works() {
+        let spec = LoopSpec::upto(50);
+        let team = TeamSpec::uniform(1);
+        let f = FnFactory::new("guided", || schedules::gss(1));
+        assert_eq!(count_body_runs(spec, team, &f), 50);
+    }
+}

@@ -1,0 +1,130 @@
+//! Chunk-execution feedback: the paper's merged measurement operation.
+//!
+//! Section 4 of the paper reduces the six principal operations to three by
+//! merging `end-loop-body` + `dequeue` + `begin-loop-body` into a single
+//! `next` call: the timing of the *previous* chunk arrives together with the
+//! request for the next one.  [`ChunkFeedback`] is that payload.
+
+use crate::coordinator::loop_spec::Chunk;
+
+/// Measurement of one completed chunk, handed to [`Scheduler::next`]
+/// (crate::coordinator::scheduler::Scheduler::next) on the following request.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkFeedback {
+    /// The chunk that was just executed.
+    pub chunk: Chunk,
+    /// The thread that executed it.
+    pub tid: usize,
+    /// Wall (or virtual, under the simulator) execution time of the chunk
+    /// body, excluding the dequeue itself.
+    pub elapsed_ns: u64,
+}
+
+impl ChunkFeedback {
+    /// Mean per-iteration time of the measured chunk.
+    #[inline]
+    pub fn per_iter_ns(&self) -> f64 {
+        if self.chunk.len == 0 {
+            0.0
+        } else {
+            self.elapsed_ns as f64 / self.chunk.len as f64
+        }
+    }
+}
+
+/// Numerically stable online mean/variance (Welford).  Used by the adaptive
+/// schedulers (AF, AWF) and the history arena to estimate per-thread and
+/// per-loop iteration-time statistics across chunks and invocations.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    pub n: u64,
+    pub mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Push a chunk-level observation: `len` iterations took `total`.
+    /// Each iteration is counted as one sample at the chunk's mean rate,
+    /// which is the estimator AF uses (it only observes chunk timings).
+    pub fn push_chunk(&mut self, total_ns: f64, len: u64) {
+        if len == 0 {
+            return;
+        }
+        let per = total_ns / len as f64;
+        for _ in 0..len.min(64) {
+            // Cap the weight so one huge chunk cannot lock the estimate.
+            self.push(per);
+        }
+    }
+
+    /// Sample variance; 0 until two samples exist.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Coefficient of variation sigma/mu (0 if mean is 0).
+    pub fn cov(&self) -> f64 {
+        if self.mean.abs() < f64::EPSILON {
+            0.0
+        } else {
+            self.stddev() / self.mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_iter_ns() {
+        let fb = ChunkFeedback { chunk: Chunk::new(0, 4), tid: 0, elapsed_ns: 400 };
+        assert!((fb.per_iter_ns() - 100.0).abs() < 1e-9);
+        let fb0 = ChunkFeedback { chunk: Chunk::new(0, 0), tid: 0, elapsed_ns: 400 };
+        assert_eq!(fb0.per_iter_ns(), 0.0);
+    }
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean - 5.0).abs() < 1e-12);
+        // Sample variance of that set is 32/7.
+        assert!((w.variance() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_constant_has_zero_cov() {
+        let mut w = Welford::default();
+        for _ in 0..100 {
+            w.push(3.5);
+        }
+        assert!(w.cov() < 1e-12);
+    }
+
+    #[test]
+    fn welford_chunk_weight_capped() {
+        let mut w = Welford::default();
+        w.push_chunk(1_000_000.0, 1_000_000);
+        assert!(w.n <= 64);
+        assert!((w.mean - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,322 @@
+//! Cross-invocation history: the paper's `loop_record_t` / `uds_data`.
+//!
+//! Section 3: "UDS must provide a mechanism to store and access the history
+//! of loop timings or other statistics across multiple loop iterations
+//! and/or invocations in an application program, e.g., across simulation
+//! time-steps of a numerical simulation."
+//!
+//! [`LoopRecord`] is that per-call-site record; [`HistoryArena`] owns one
+//! record per schedule call site (keyed by a user-chosen id, typically
+//! `file:line` or a loop name) and hands it to the scheduler's `start` /
+//! `finish` operations.  Adaptive strategies (AWF, AF, auto-selection,
+//! chunk tuning) read and update it; non-adaptive strategies ignore it.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use std::sync::Mutex;
+
+use crate::coordinator::feedback::Welford;
+
+/// Persistent statistics for one schedule call site.
+#[derive(Debug, Default)]
+pub struct LoopRecord {
+    /// Number of completed invocations of this loop.
+    pub invocations: u64,
+    /// Cumulative busy time per thread over all invocations (AWF input).
+    pub thread_busy_ns: Vec<f64>,
+    /// Cumulative iterations executed per thread over all invocations.
+    pub thread_iters: Vec<u64>,
+    /// Adaptive per-thread weights carried between invocations (AWF output;
+    /// normalized to sum to nthreads).
+    pub weights: Vec<f64>,
+    /// Per-thread iteration-time statistics (AF input: mu_t, sigma_t).
+    pub thread_stats: Vec<Welford>,
+    /// Whole-loop iteration-time statistics (FAC / auto-selection input).
+    pub loop_stats: Welford,
+    /// Makespan of the most recent invocation.
+    pub last_makespan_ns: u64,
+    /// Makespan history (most recent last), bounded to 64 entries.
+    pub makespans_ns: Vec<u64>,
+    /// Chunk parameter chosen by history-driven tuners for the next
+    /// invocation (see `schedules::tuned`).
+    pub tuned_chunk: Option<u64>,
+    /// Name of the schedule an auto-selector resolved to.
+    pub selected: Option<String>,
+    /// Arbitrary user payload — the paper's `uds_data(void*)`.
+    pub user: Option<Box<dyn Any + Send>>,
+}
+
+impl LoopRecord {
+    /// Ensure the per-thread vectors cover `nthreads` entries.
+    pub fn ensure_team(&mut self, nthreads: usize) {
+        if self.thread_busy_ns.len() < nthreads {
+            self.thread_busy_ns.resize(nthreads, 0.0);
+            self.thread_iters.resize(nthreads, 0);
+            self.thread_stats.resize(nthreads, Welford::default());
+        }
+        if self.weights.len() < nthreads {
+            self.weights.resize(nthreads, 1.0);
+        }
+    }
+
+    /// Fold one invocation's outcome into the record.
+    pub fn record_invocation(
+        &mut self,
+        busy_ns: &[f64],
+        iters: &[u64],
+        makespan_ns: u64,
+    ) {
+        self.ensure_team(busy_ns.len());
+        for (t, (&b, &i)) in busy_ns.iter().zip(iters).enumerate() {
+            self.thread_busy_ns[t] += b;
+            self.thread_iters[t] += i;
+        }
+        self.last_makespan_ns = makespan_ns;
+        self.makespans_ns.push(makespan_ns);
+        if self.makespans_ns.len() > 64 {
+            self.makespans_ns.remove(0);
+        }
+        self.invocations += 1;
+    }
+
+    /// Measured per-thread execution *rate* (ns per iteration); `None` for
+    /// threads that have not executed anything yet.
+    pub fn thread_rate_ns(&self, tid: usize) -> Option<f64> {
+        let iters = *self.thread_iters.get(tid)?;
+        if iters == 0 {
+            return None;
+        }
+        Some(self.thread_busy_ns[tid] / iters as f64)
+    }
+}
+
+/// Owns the [`LoopRecord`]s for every schedule call site in the program.
+///
+/// Cloning the arena is cheap (it is an `Arc`); all clones share the same
+/// records, so a record written by one loop invocation is visible to the
+/// next, which is exactly the persistence the paper requires.
+#[derive(Clone, Default)]
+pub struct HistoryArena {
+    inner: Arc<Mutex<HashMap<String, Arc<Mutex<LoopRecord>>>>>,
+}
+
+impl HistoryArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch (creating if absent) the record for a call site.
+    pub fn record(&self, call_site: &str) -> Arc<Mutex<LoopRecord>> {
+        let mut map = self.inner.lock().unwrap();
+        map.entry(call_site.to_string())
+            .or_insert_with(|| Arc::new(Mutex::new(LoopRecord::default())))
+            .clone()
+    }
+
+    /// Number of tracked call sites.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop a call site's history (e.g., when its loop geometry changes).
+    pub fn reset(&self, call_site: &str) {
+        self.inner.lock().unwrap().remove(call_site);
+    }
+
+    /// Persist the arena to a `key=value` text file so adaptive state
+    /// (AWF weights, per-thread rates, tuned chunk sizes) survives
+    /// *process restarts* — the paper's "across invocations in an
+    /// application program" taken to its logical end for time-stepped
+    /// jobs that checkpoint.  `user` payloads (opaque `Any`) are not
+    /// serialized.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::fmt::Write as _;
+        let map = self.inner.lock().unwrap();
+        let mut out = String::from("# uds history arena v1\n");
+        for (site, rec) in map.iter() {
+            let r = rec.lock().unwrap();
+            let fmt_f = |v: &[f64]| {
+                v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+            };
+            let fmt_u = |v: &[u64]| {
+                v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+            };
+            let _ = writeln!(out, "[{site}]");
+            let _ = writeln!(out, "invocations={}", r.invocations);
+            let _ = writeln!(out, "thread_busy_ns={}", fmt_f(&r.thread_busy_ns));
+            let _ = writeln!(out, "thread_iters={}", fmt_u(&r.thread_iters));
+            let _ = writeln!(out, "weights={}", fmt_f(&r.weights));
+            let _ = writeln!(out, "last_makespan_ns={}", r.last_makespan_ns);
+            let _ = writeln!(out, "makespans_ns={}", fmt_u(&r.makespans_ns));
+            if let Some(k) = r.tuned_chunk {
+                let _ = writeln!(out, "tuned_chunk={k}");
+            }
+            if let Some(sel) = &r.selected {
+                let _ = writeln!(out, "selected={sel}");
+            }
+        }
+        std::fs::write(path, out)
+    }
+
+    /// Load an arena previously written by [`HistoryArena::save`],
+    /// merging into this one (existing records are replaced).
+    pub fn load(&self, path: &std::path::Path) -> Result<(), String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let mut site: Option<String> = None;
+        let parse_f = |v: &str| -> Vec<f64> {
+            v.split(',').filter(|s| !s.is_empty()).filter_map(|s| s.parse().ok()).collect()
+        };
+        let parse_u = |v: &str| -> Vec<u64> {
+            v.split(',').filter(|s| !s.is_empty()).filter_map(|s| s.parse().ok()).collect()
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                site = Some(name.to_string());
+                // Reset the record for this site.
+                *self.record(name).lock().unwrap() = LoopRecord::default();
+                continue;
+            }
+            let Some(site) = &site else {
+                return Err(format!("field before any [site]: '{line}'"));
+            };
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got '{line}'"))?;
+            let rec = self.record(site);
+            let mut r = rec.lock().unwrap();
+            match k {
+                "invocations" => r.invocations = v.parse().map_err(|e| format!("{e}"))?,
+                "thread_busy_ns" => r.thread_busy_ns = parse_f(v),
+                "thread_iters" => r.thread_iters = parse_u(v),
+                "weights" => r.weights = parse_f(v),
+                "last_makespan_ns" => {
+                    r.last_makespan_ns = v.parse().map_err(|e| format!("{e}"))?
+                }
+                "makespans_ns" => r.makespans_ns = parse_u(v),
+                "tuned_chunk" => r.tuned_chunk = v.parse().ok(),
+                "selected" => r.selected = Some(v.to_string()),
+                other => return Err(format!("unknown history field '{other}'")),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_persists_across_lookups() {
+        let arena = HistoryArena::new();
+        {
+            let rec = arena.record("solver.rs:42");
+            rec.lock().unwrap().record_invocation(&[10.0, 20.0], &[5, 5], 25);
+        }
+        let rec = arena.record("solver.rs:42");
+        let g = rec.lock().unwrap();
+        assert_eq!(g.invocations, 1);
+        assert_eq!(g.thread_iters, vec![5, 5]);
+        assert_eq!(g.last_makespan_ns, 25);
+    }
+
+    #[test]
+    fn arena_clones_share_state() {
+        let a = HistoryArena::new();
+        let b = a.clone();
+        a.record("x").lock().unwrap().invocations = 7;
+        assert_eq!(b.record("x").lock().unwrap().invocations, 7);
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn record_rates() {
+        let mut r = LoopRecord::default();
+        r.record_invocation(&[100.0, 400.0], &[10, 10], 400);
+        assert!((r.thread_rate_ns(0).unwrap() - 10.0).abs() < 1e-9);
+        assert!((r.thread_rate_ns(1).unwrap() - 40.0).abs() < 1e-9);
+        assert!(r.thread_rate_ns(2).is_none());
+    }
+
+    #[test]
+    fn zero_iters_has_no_rate() {
+        let mut r = LoopRecord::default();
+        r.record_invocation(&[0.0], &[0], 0);
+        assert!(r.thread_rate_ns(0).is_none());
+    }
+
+    #[test]
+    fn makespan_history_bounded() {
+        let mut r = LoopRecord::default();
+        for i in 0..100 {
+            r.record_invocation(&[1.0], &[1], i);
+        }
+        assert_eq!(r.makespans_ns.len(), 64);
+        assert_eq!(*r.makespans_ns.last().unwrap(), 99);
+    }
+
+    #[test]
+    fn reset_drops_record() {
+        let arena = HistoryArena::new();
+        arena.record("a").lock().unwrap().invocations = 3;
+        arena.reset("a");
+        assert_eq!(arena.record("a").lock().unwrap().invocations, 0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let arena = HistoryArena::new();
+        {
+            let rec = arena.record("solver:main");
+            let mut r = rec.lock().unwrap();
+            r.record_invocation(&[100.0, 400.0], &[10, 30], 500);
+            r.weights = vec![0.5, 1.5];
+            r.tuned_chunk = Some(64);
+            r.selected = Some("fac2".into());
+        }
+        arena.record("other:loop").lock().unwrap().invocations = 3;
+
+        let path = std::env::temp_dir().join("uds_history_test.txt");
+        arena.save(&path).unwrap();
+
+        let fresh = HistoryArena::new();
+        fresh.load(&path).unwrap();
+        let rec = fresh.record("solver:main");
+        let r = rec.lock().unwrap();
+        assert_eq!(r.invocations, 1);
+        assert_eq!(r.thread_iters, vec![10, 30]);
+        assert_eq!(r.weights, vec![0.5, 1.5]);
+        assert_eq!(r.tuned_chunk, Some(64));
+        assert_eq!(r.selected.as_deref(), Some("fac2"));
+        assert!((r.thread_rate_ns(1).unwrap() - 400.0 / 30.0).abs() < 1e-9);
+        assert_eq!(fresh.record("other:loop").lock().unwrap().invocations, 3);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let arena = HistoryArena::new();
+        let path = std::env::temp_dir().join("uds_history_garbage.txt");
+        std::fs::write(&path, "invocations=1\n").unwrap(); // field before [site]
+        assert!(arena.load(&path).is_err());
+        std::fs::write(&path, "[a]\nnot_a_kv_line\n").unwrap();
+        assert!(arena.load(&path).is_err());
+    }
+
+    #[test]
+    fn user_payload_roundtrip() {
+        let mut r = LoopRecord::default();
+        r.user = Some(Box::new(vec![1u32, 2, 3]));
+        let v = r.user.as_ref().unwrap().downcast_ref::<Vec<u32>>().unwrap();
+        assert_eq!(v.len(), 3);
+    }
+}

@@ -1,0 +1,461 @@
+//! Lambda-style UDS specification — the paper's §4.1 interface.
+//!
+//! In the proposal, a C++ programmer writes
+//!
+//! ```c
+//! #pragma omp parallel for schedule(UDS:chunk) \
+//!     init(INIT_LAMBDA) dequeue(DEQUEUE_LAMBDA) finalize(FINISH_LAMBDA) \
+//!     uds_data(void*)
+//! ```
+//!
+//! and the compiler mixes the lambda bodies into the loop transform, with
+//! `OMP_UDS_*` getter/setter functions giving access to the critical loop
+//! parameters (lower bound, upper bound, stride, chunk size, user data).
+//!
+//! Here the same surface is a builder over closures: [`UdsContext`] plays
+//! the role of the compiler-generated getters (`loop_start`, `loop_end`,
+//! `loop_step`, `chunk_size`, `user_ptr`, `num_threads`, `thread_num`),
+//! and the dequeue closure reports its result through [`DequeueSink`] —
+//! the setter functions (`OMP_UDS_loop_chunk_start/end/step`,
+//! `OMP_UDS_loop_dequeue_done`).  The `schedule_template` directive of the
+//! paper corresponds to registering the resulting factory under a name
+//! (see [`crate::coordinator::declare::Registry`]).
+
+use std::any::Any;
+use std::sync::Arc;
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::{ScheduleFactory, Scheduler};
+
+/// The compiler-generated getter set of §4.1: everything a UDS lambda may
+/// ask about the loop being scheduled.
+#[derive(Clone)]
+pub struct UdsContext {
+    spec: LoopSpec,
+    nthreads: usize,
+    weights: Vec<f64>,
+    chunk_size: u64,
+    user: Option<Arc<dyn Any + Send + Sync>>,
+}
+
+impl UdsContext {
+    /// `OMP_UDS_loop_start()` — logical lower bound.
+    pub fn loop_start(&self) -> i64 {
+        self.spec.lb
+    }
+
+    /// `OMP_UDS_loop_end()` — logical upper bound (exclusive).
+    pub fn loop_end(&self) -> i64 {
+        self.spec.ub
+    }
+
+    /// `OMP_UDS_loop_step()` — loop increment.
+    pub fn loop_step(&self) -> i64 {
+        self.spec.incr
+    }
+
+    /// Normalized iteration count (`0..n` space the chunks live in).
+    pub fn iter_count(&self) -> u64 {
+        self.spec.iter_count()
+    }
+
+    /// `OMP_UDS_chunksize()` — the optimization parameter from the
+    /// schedule clause (not the OpenMP chunksize; see §4 of the paper).
+    pub fn chunk_size(&self) -> u64 {
+        self.chunk_size
+    }
+
+    /// `omp_get_num_threads()` analogue.
+    pub fn num_threads(&self) -> usize {
+        self.nthreads
+    }
+
+    /// Per-thread capability weights (for WF-style lambdas).
+    pub fn weight(&self, tid: usize) -> f64 {
+        self.weights.get(tid).copied().unwrap_or(1.0)
+    }
+
+    /// `OMP_UDS_user_ptr()` — the `uds_data(void*)` payload, downcast.
+    pub fn user_ptr<T: 'static>(&self) -> Option<&T> {
+        self.user.as_deref().and_then(|u| u.downcast_ref::<T>())
+    }
+
+    /// The full loop spec, for lambdas that want it whole.
+    pub fn spec(&self) -> &LoopSpec {
+        &self.spec
+    }
+}
+
+/// The setter half of §4.1: how a dequeue lambda reports its chunk.
+/// Mirrors `OMP_UDS_loop_chunk_start/_end/_step` + `_dequeue_done`.
+#[derive(Default)]
+pub struct DequeueSink {
+    start: Option<i64>,
+    end: Option<i64>,
+    done: bool,
+}
+
+impl DequeueSink {
+    /// `OMP_UDS_loop_chunk_start(i)` — logical first iteration.
+    pub fn chunk_start(&mut self, start_iteration: i64) {
+        self.start = Some(start_iteration);
+    }
+
+    /// `OMP_UDS_loop_chunk_end(i)` — logical one-past-last iteration.
+    pub fn chunk_end(&mut self, end_iteration: i64) {
+        self.end = Some(end_iteration);
+    }
+
+    /// `OMP_UDS_loop_dequeue_done()` — no more work for this thread.
+    pub fn dequeue_done(&mut self) {
+        self.done = true;
+    }
+
+    fn into_chunk(self, spec: &LoopSpec) -> Option<Chunk> {
+        if self.done {
+            return None;
+        }
+        let (s, e) = (self.start?, self.end?);
+        let first = spec.normalize(s);
+        let end = spec.normalize(e);
+        (end > first).then(|| Chunk::new(first, end - first))
+    }
+}
+
+/// Type of the `init` lambda: build the shared todo-list state.
+pub type InitFn =
+    dyn Fn(&UdsContext) -> Box<dyn Any + Send + Sync> + Send + Sync;
+/// Type of the `dequeue` lambda.
+pub type DequeueFn = dyn Fn(&UdsContext, &(dyn Any + Send + Sync), usize, Option<&ChunkFeedback>, &mut DequeueSink)
+    + Send
+    + Sync;
+/// Type of the `finalize` lambda.
+pub type FinalizeFn =
+    dyn Fn(&UdsContext, &(dyn Any + Send + Sync)) + Send + Sync;
+
+/// Builder for a lambda-style UDS — `#pragma omp declare schedule_template`.
+pub struct UdsBuilder {
+    name: String,
+    chunk_size: u64,
+    init: Option<Arc<InitFn>>,
+    dequeue: Option<Arc<DequeueFn>>,
+    finalize: Option<Arc<FinalizeFn>>,
+    user: Option<Arc<dyn Any + Send + Sync>>,
+}
+
+impl UdsBuilder {
+    pub fn named(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            chunk_size: 1,
+            init: None,
+            dequeue: None,
+            finalize: None,
+            user: None,
+        }
+    }
+
+    /// `schedule(UDS:chunkSize, ...)` — the optimization parameter.
+    pub fn chunk_size(mut self, k: u64) -> Self {
+        self.chunk_size = k.max(1);
+        self
+    }
+
+    /// `init(@@INIT_LAMBDA@@)` (optional in the proposal).
+    pub fn init<F>(mut self, f: F) -> Self
+    where
+        F: Fn(&UdsContext) -> Box<dyn Any + Send + Sync> + Send + Sync + 'static,
+    {
+        self.init = Some(Arc::new(f));
+        self
+    }
+
+    /// `dequeue(@@DEQUEUE_LAMBDA@@)` (the only mandatory operation).
+    pub fn dequeue<F>(mut self, f: F) -> Self
+    where
+        F: Fn(&UdsContext, &(dyn Any + Send + Sync), usize, Option<&ChunkFeedback>, &mut DequeueSink)
+            + Send
+            + Sync
+            + 'static,
+    {
+        self.dequeue = Some(Arc::new(f));
+        self
+    }
+
+    /// `finalize(@@FINISH_LAMBDA@@)` (optional).
+    pub fn finalize<F>(mut self, f: F) -> Self
+    where
+        F: Fn(&UdsContext, &(dyn Any + Send + Sync)) + Send + Sync + 'static,
+    {
+        self.finalize = Some(Arc::new(f));
+        self
+    }
+
+    /// `uds_data(void*)` — arbitrary user payload exposed via `user_ptr`.
+    pub fn uds_data<T: Any + Send + Sync>(mut self, data: T) -> Self {
+        self.user = Some(Arc::new(data));
+        self
+    }
+
+    /// Finish the template: yields a factory usable anywhere a built-in
+    /// schedule is.
+    pub fn build(self) -> Arc<LambdaFactory> {
+        Arc::new(LambdaFactory {
+            name: self.name,
+            chunk_size: self.chunk_size,
+            init: self.init,
+            dequeue: self
+                .dequeue
+                .expect("a UDS must define the dequeue operation"),
+            finalize: self.finalize,
+            user: self.user,
+        })
+    }
+}
+
+/// A reusable lambda-style schedule template (§4.1's
+/// `declare schedule_template`).
+pub struct LambdaFactory {
+    name: String,
+    chunk_size: u64,
+    init: Option<Arc<InitFn>>,
+    dequeue: Arc<DequeueFn>,
+    finalize: Option<Arc<FinalizeFn>>,
+    user: Option<Arc<dyn Any + Send + Sync>>,
+}
+
+impl ScheduleFactory for LambdaFactory {
+    fn name(&self) -> String {
+        format!("uds:{}", self.name)
+    }
+
+    fn build(&self) -> Box<dyn Scheduler> {
+        Box::new(LambdaScheduler {
+            name: self.name.clone(),
+            chunk_size: self.chunk_size,
+            init: self.init.clone(),
+            dequeue: self.dequeue.clone(),
+            finalize: self.finalize.clone(),
+            user: self.user.clone(),
+            ctx: None,
+            state: None,
+        })
+    }
+}
+
+/// One live instance of a lambda-style UDS.
+pub struct LambdaScheduler {
+    name: String,
+    chunk_size: u64,
+    init: Option<Arc<InitFn>>,
+    dequeue: Arc<DequeueFn>,
+    finalize: Option<Arc<FinalizeFn>>,
+    user: Option<Arc<dyn Any + Send + Sync>>,
+    ctx: Option<UdsContext>,
+    state: Option<Box<dyn Any + Send + Sync>>,
+}
+
+impl Scheduler for LambdaScheduler {
+    fn name(&self) -> String {
+        format!("uds:{}", self.name)
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, _record: &mut LoopRecord) {
+        let ctx = UdsContext {
+            spec: *loop_,
+            nthreads: team.nthreads,
+            weights: team.weights.clone(),
+            chunk_size: self.chunk_size,
+            user: self.user.clone(),
+        };
+        self.state = Some(match &self.init {
+            Some(init) => init(&ctx),
+            None => Box::new(()),
+        });
+        self.ctx = Some(ctx);
+    }
+
+    fn next(&self, tid: usize, fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        let ctx = self.ctx.as_ref()?;
+        let state = self.state.as_deref()?;
+        let mut sink = DequeueSink::default();
+        (self.dequeue)(ctx, state, tid, fb, &mut sink);
+        sink.into_chunk(&ctx.spec)
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {
+        if let (Some(fini), Some(ctx), Some(state)) =
+            (&self.finalize, &self.ctx, self.state.as_deref())
+        {
+            fini(ctx, state);
+        }
+        self.state = None;
+    }
+
+    fn is_adaptive(&self) -> bool {
+        true // conservatively: lambdas may consume feedback
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+    use std::sync::atomic::{AtomicI64, Ordering};
+
+    /// The paper's Fig. 2 mystatic (lambda style): static block-cyclic
+    /// dequeue from a per-thread counter, chunk size from the clause.
+    fn mystatic(chunk: u64) -> Arc<LambdaFactory> {
+        UdsBuilder::named("mystatic")
+            .chunk_size(chunk)
+            .init(|ctx| {
+                // next_lb[tid] = lb + tid * chunksz (Fig. 2 left).
+                let next: Vec<AtomicI64> = (0..ctx.num_threads())
+                    .map(|t| {
+                        AtomicI64::new(
+                            ctx.loop_start()
+                                + (t as i64)
+                                    * ctx.chunk_size() as i64
+                                    * ctx.loop_step(),
+                        )
+                    })
+                    .collect();
+                Box::new(next)
+            })
+            .dequeue(|ctx, state, tid, _fb, sink| {
+                let next = state.downcast_ref::<Vec<AtomicI64>>().unwrap();
+                let stride =
+                    ctx.num_threads() as i64 * ctx.chunk_size() as i64 * ctx.loop_step();
+                let lb = next[tid].fetch_add(stride, Ordering::Relaxed);
+                if lb >= ctx.loop_end() {
+                    sink.dequeue_done();
+                    return;
+                }
+                let ub = (lb + ctx.chunk_size() as i64 * ctx.loop_step())
+                    .min(ctx.loop_end());
+                sink.chunk_start(lb);
+                sink.chunk_end(ub);
+            })
+            .build()
+    }
+
+    #[test]
+    fn mystatic_covers_space() {
+        let f = mystatic(4);
+        let mut s = f.build();
+        let chunks = drain_chunks(
+            &mut *s,
+            &LoopSpec::upto(100),
+            &TeamSpec::uniform(4),
+            &mut LoopRecord::default(),
+        );
+        verify_cover(&chunks, 100).unwrap();
+    }
+
+    #[test]
+    fn mystatic_matches_native_static_chunks() {
+        use crate::schedules::static_block::StaticBlock;
+        let spec = LoopSpec::upto(1000);
+        let team = TeamSpec::uniform(4);
+
+        let f = mystatic(16);
+        let mut uds = f.build();
+        let mut rec = LoopRecord::default();
+        let uds_chunks = drain_chunks(&mut *uds, &spec, &team, &mut rec);
+
+        let mut native = StaticBlock::new(Some(16));
+        let native_chunks =
+            drain_chunks(&mut native, &spec, &team, &mut LoopRecord::default());
+
+        assert_eq!(uds_chunks, native_chunks);
+    }
+
+    #[test]
+    fn finalize_lambda_runs() {
+        use std::sync::atomic::AtomicBool;
+        static RAN: AtomicBool = AtomicBool::new(false);
+        let f = UdsBuilder::named("fin")
+            .dequeue(|_, _, _, _, sink| sink.dequeue_done())
+            .finalize(|_, _| {
+                RAN.store(true, Ordering::SeqCst);
+            })
+            .build();
+        let mut s = f.build();
+        let mut rec = LoopRecord::default();
+        let team = TeamSpec::uniform(1);
+        s.start(&LoopSpec::upto(4), &team, &mut rec);
+        assert!(s.next(0, None).is_none());
+        s.finish(&team, &mut rec);
+        assert!(RAN.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn uds_data_visible_through_user_ptr() {
+        let f = UdsBuilder::named("ud")
+            .uds_data(vec![7u64, 8, 9])
+            .dequeue(|ctx, _, _, _, sink| {
+                let v = ctx.user_ptr::<Vec<u64>>().unwrap();
+                assert_eq!(v[0], 7);
+                sink.dequeue_done();
+            })
+            .build();
+        let mut s = f.build();
+        let mut rec = LoopRecord::default();
+        s.start(&LoopSpec::upto(1), &TeamSpec::uniform(1), &mut rec);
+        assert!(s.next(0, None).is_none());
+    }
+
+    #[test]
+    fn strided_loop_logical_bounds() {
+        // A UDS working in logical space on a strided loop.
+        let f = UdsBuilder::named("serial")
+            .init(|_| Box::new(AtomicI64::new(0)))
+            .dequeue(|ctx, state, _, _, sink| {
+                let cur = state.downcast_ref::<AtomicI64>().unwrap();
+                let k = cur.fetch_add(1, Ordering::Relaxed);
+                let lb = ctx.loop_start() + k * ctx.loop_step();
+                if (ctx.loop_step() > 0 && lb >= ctx.loop_end())
+                    || (ctx.loop_step() < 0 && lb <= ctx.loop_end())
+                {
+                    sink.dequeue_done();
+                    return;
+                }
+                sink.chunk_start(lb);
+                sink.chunk_end(lb + ctx.loop_step());
+            })
+            .build();
+        let mut s = f.build();
+        let spec = LoopSpec::new(10, 30, 5).unwrap(); // 10,15,20,25
+        let chunks = drain_chunks(
+            &mut *s,
+            &spec,
+            &TeamSpec::uniform(2),
+            &mut LoopRecord::default(),
+        );
+        verify_cover(&chunks, 4).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "dequeue")]
+    fn missing_dequeue_panics() {
+        let _ = UdsBuilder::named("broken").build();
+    }
+
+    #[test]
+    fn empty_chunk_report_treated_as_none_progress() {
+        // A dequeue that reports start == end produces no chunk; the
+        // executor's while loop would retry -> we emulate exhaustion here.
+        let f = UdsBuilder::named("empty")
+            .dequeue(|ctx, _, _, _, sink| {
+                sink.chunk_start(ctx.loop_start());
+                sink.chunk_end(ctx.loop_start());
+            })
+            .build();
+        let mut s = f.build();
+        let mut rec = LoopRecord::default();
+        s.start(&LoopSpec::upto(10), &TeamSpec::uniform(1), &mut rec);
+        assert!(s.next(0, None).is_none());
+    }
+}

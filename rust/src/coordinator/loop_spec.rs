@@ -1,0 +1,209 @@
+//! Loop geometry: the iteration space a scheduler carves into chunks.
+//!
+//! Schedulers operate on a *normalized* iteration space `0..n` (this is how
+//! every OpenMP RTL implements it); the logical `(lb, ub, incr)` triple the
+//! paper's UDS functions receive (`omp_lb`, `omp_ub`, `omp_incr`) is mapped
+//! at the frontend edges by [`LoopSpec::logical`] / [`LoopSpec::normalize`].
+
+
+/// A `for (i = lb; i < ub; i += incr)` loop, half-open `[lb, ub)`.
+///
+/// `incr` may be negative (downward loops); `incr == 0` is rejected by
+/// [`LoopSpec::new`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoopSpec {
+    pub lb: i64,
+    pub ub: i64,
+    pub incr: i64,
+}
+
+impl LoopSpec {
+    /// Build a loop spec; returns `None` for `incr == 0`.
+    pub fn new(lb: i64, ub: i64, incr: i64) -> Option<Self> {
+        if incr == 0 {
+            return None;
+        }
+        Some(Self { lb, ub, incr })
+    }
+
+    /// The canonical unit-stride upward loop `0..n`.
+    pub fn upto(n: u64) -> Self {
+        Self { lb: 0, ub: n as i64, incr: 1 }
+    }
+
+    /// Number of iterations executed by this loop.
+    pub fn iter_count(&self) -> u64 {
+        if self.incr > 0 {
+            if self.ub <= self.lb {
+                0
+            } else {
+                ((self.ub - self.lb) as u64).div_ceil(self.incr as u64)
+            }
+        } else if self.lb <= self.ub {
+            0
+        } else {
+            ((self.lb - self.ub) as u64).div_ceil(self.incr.unsigned_abs())
+        }
+    }
+
+    /// Map a normalized index `k in 0..iter_count()` to the logical index.
+    #[inline]
+    pub fn logical(&self, k: u64) -> i64 {
+        self.lb + (k as i64) * self.incr
+    }
+
+    /// Map a logical loop index back to its normalized position.
+    #[inline]
+    pub fn normalize(&self, i: i64) -> u64 {
+        debug_assert!((i - self.lb) % self.incr == 0);
+        ((i - self.lb) / self.incr) as u64
+    }
+}
+
+/// A chunk of consecutive *normalized* iterations `[first, first + len)`.
+///
+/// This is the unit the paper's `dequeue`/`next` operation returns; the
+/// declare-style frontend converts it to `(omp_lb_chunk, omp_ub_chunk)`
+/// logical bounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Chunk {
+    pub first: u64,
+    pub len: u64,
+}
+
+impl Chunk {
+    pub fn new(first: u64, len: u64) -> Self {
+        Self { first, len }
+    }
+
+    /// One-past-the-end normalized index.
+    #[inline]
+    pub fn end(&self) -> u64 {
+        self.first + self.len
+    }
+
+    /// Iterate the normalized indices in this chunk.
+    pub fn indices(&self) -> impl Iterator<Item = u64> {
+        self.first..self.end()
+    }
+
+    /// Logical `(lb_chunk, ub_chunk_exclusive, incr)` for a given loop.
+    pub fn logical_bounds(&self, spec: &LoopSpec) -> (i64, i64, i64) {
+        (
+            spec.logical(self.first),
+            spec.logical(self.end()),
+            spec.incr,
+        )
+    }
+}
+
+/// The team of execution units a loop is scheduled onto.
+///
+/// `weights` is the relative processing capability per thread (the paper's
+/// WF/WF2 "workload balancing information specified by the user, such as the
+/// capabilities of a heterogeneous hardware configuration"); uniform teams
+/// use all-1.0.
+#[derive(Clone, Debug)]
+pub struct TeamSpec {
+    pub nthreads: usize,
+    pub weights: Vec<f64>,
+}
+
+impl TeamSpec {
+    /// Homogeneous team of `nthreads` equal-capability threads.
+    pub fn uniform(nthreads: usize) -> Self {
+        assert!(nthreads > 0, "team must have at least one thread");
+        Self { nthreads, weights: vec![1.0; nthreads] }
+    }
+
+    /// Heterogeneous team; weights are normalized so they sum to `nthreads`.
+    pub fn weighted(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "team must have at least one thread");
+        assert!(weights.iter().all(|&w| w > 0.0), "weights must be positive");
+        let sum: f64 = weights.iter().sum();
+        let n = weights.len();
+        Self {
+            nthreads: n,
+            weights: weights.iter().map(|w| w * n as f64 / sum).collect(),
+        }
+    }
+
+    /// Weight of thread `tid` relative to an average thread.
+    #[inline]
+    pub fn weight(&self, tid: usize) -> f64 {
+        self.weights[tid]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iter_count_basic() {
+        assert_eq!(LoopSpec::upto(10).iter_count(), 10);
+        assert_eq!(LoopSpec::new(0, 10, 3).unwrap().iter_count(), 4); // 0,3,6,9
+        assert_eq!(LoopSpec::new(5, 5, 1).unwrap().iter_count(), 0);
+        assert_eq!(LoopSpec::new(10, 0, 1).unwrap().iter_count(), 0);
+    }
+
+    #[test]
+    fn iter_count_negative_stride() {
+        let s = LoopSpec::new(10, 0, -1).unwrap();
+        assert_eq!(s.iter_count(), 10);
+        assert_eq!(s.logical(0), 10);
+        assert_eq!(s.logical(9), 1);
+        let s = LoopSpec::new(10, 0, -3).unwrap(); // 10,7,4,1
+        assert_eq!(s.iter_count(), 4);
+        assert_eq!(s.logical(3), 1);
+    }
+
+    #[test]
+    fn zero_incr_rejected() {
+        assert!(LoopSpec::new(0, 10, 0).is_none());
+    }
+
+    #[test]
+    fn logical_normalize_roundtrip() {
+        let s = LoopSpec::new(-7, 20, 3).unwrap();
+        for k in 0..s.iter_count() {
+            assert_eq!(s.normalize(s.logical(k)), k);
+        }
+    }
+
+    #[test]
+    fn chunk_logical_bounds() {
+        let s = LoopSpec::new(100, 200, 2).unwrap();
+        let c = Chunk::new(5, 10);
+        let (lo, hi, incr) = c.logical_bounds(&s);
+        assert_eq!((lo, hi, incr), (110, 130, 2));
+    }
+
+    #[test]
+    fn chunk_indices() {
+        let c = Chunk::new(3, 4);
+        assert_eq!(c.indices().collect::<Vec<_>>(), vec![3, 4, 5, 6]);
+        assert_eq!(c.end(), 7);
+    }
+
+    #[test]
+    fn team_uniform() {
+        let t = TeamSpec::uniform(4);
+        assert_eq!(t.nthreads, 4);
+        assert!(t.weights.iter().all(|&w| (w - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn team_weighted_normalizes() {
+        let t = TeamSpec::weighted(&[1.0, 1.0, 2.0, 4.0]);
+        let sum: f64 = t.weights.iter().sum();
+        assert!((sum - 4.0).abs() < 1e-9);
+        assert!(t.weight(3) > t.weight(0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn team_zero_threads_panics() {
+        TeamSpec::uniform(0);
+    }
+}

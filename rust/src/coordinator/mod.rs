@@ -1,0 +1,27 @@
+//! L3 coordinator: the paper's UDS interface and the worksharing runtime
+//! that drives it.
+//!
+//! * [`scheduler`] — the three merged UDS operations (`start`/`next`/
+//!   `finish`), the paper's §3–§4 core.
+//! * [`executor`] — the §4 loop transform over a real thread team.
+//! * [`lambda`] — the §4.1 lambda-style surface syntax.
+//! * [`declare`] — the §4.2 declare-directive (UDR-style) surface syntax.
+//! * [`history`] — the cross-invocation `loop_record_t` persistence.
+//! * [`feedback`] — the merged begin/end-loop-body measurement payload.
+//! * [`loop_spec`] — iteration-space geometry shared by all of the above.
+
+pub mod declare;
+pub mod executor;
+pub mod feedback;
+pub mod history;
+pub mod lambda;
+pub mod loop_spec;
+pub mod scheduler;
+pub mod team;
+
+pub use executor::{parallel_for, ExecOptions};
+pub use feedback::{ChunkFeedback, Welford};
+pub use history::{HistoryArena, LoopRecord};
+pub use loop_spec::{Chunk, LoopSpec, TeamSpec};
+pub use scheduler::{drain_chunks, verify_cover, FnFactory, ScheduleFactory, Scheduler};
+pub use team::PersistentTeam;

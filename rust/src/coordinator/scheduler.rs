@@ -1,0 +1,216 @@
+//! The UDS scheduler interface — the paper's core contribution, §3–§4.
+//!
+//! The paper identifies six principal operations (`init`, `enqueue`,
+//! `dequeue`, `finalize`, `begin-loop-body`, `end-loop-body`) and reduces
+//! them, under OpenMP's fixed-iteration-space rule, to **three merged
+//! operations** that every user-defined schedule must provide:
+//!
+//! * [`Scheduler::start`]  — init + enqueue: the iteration space is fixed,
+//!   so the conceptual *todo list* is built here (in practice: counters).
+//! * [`Scheduler::next`]   — end-body + dequeue + begin-body: feedback about
+//!   the previous chunk arrives with the request for the next one.
+//! * [`Scheduler::finish`] — finalize: tear down, fold statistics into the
+//!   cross-invocation [`LoopRecord`].
+//!
+//! The executor (the "compiler loop transform" of §4) drives exactly this
+//! trait; both surface syntaxes the paper proposes — the lambda style
+//! (§4.1, [`crate::coordinator::lambda`]) and the declare-directive style
+//! (§4.2, [`crate::coordinator::declare`]) — lower onto it.
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+
+/// A loop-scheduling strategy instance, live for one loop invocation.
+///
+/// `next` takes `&self` because every thread in the team calls it
+/// concurrently; implementations manage their own todo-list synchronization
+/// (atomics, locks, per-thread deques) — exactly as the paper states:
+/// *"any synchronization mechanisms to maintain parallel safety of the used
+/// data structures [are] solely an aspect of the dequeue operation."*
+pub trait Scheduler: Send + Sync {
+    /// Display name of the strategy (for tables, traces, the registry).
+    fn name(&self) -> String;
+
+    /// init + enqueue (§3 ops (a)+(b)): fix the iteration space and build
+    /// the todo list.  Called once, by the master thread, before workers
+    /// start; `record` carries history from previous invocations.
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, record: &mut LoopRecord);
+
+    /// end-body + dequeue + begin-body (§4's merged get-chunk).
+    ///
+    /// `feedback` is the timing of the chunk `tid` just finished (or `None`
+    /// on a thread's first request).  Returns `None` when the todo list is
+    /// exhausted *for this thread*; after that it must keep returning
+    /// `None` for the same `tid`.
+    fn next(&self, tid: usize, feedback: Option<&ChunkFeedback>) -> Option<Chunk>;
+
+    /// finalize (§3 op (d)): release resources and persist what the next
+    /// invocation needs into `record`.  Called once after all workers join.
+    fn finish(&mut self, team: &TeamSpec, record: &mut LoopRecord);
+
+    /// Whether the strategy consumes chunk feedback (type-(3) adaptive in
+    /// the paper's taxonomy).  Executors may skip timing when `false`.
+    fn is_adaptive(&self) -> bool {
+        false
+    }
+}
+
+/// Builds a fresh [`Scheduler`] instance per loop invocation.
+///
+/// Factories are what a `schedule(...)` clause names: cheap to clone, safe
+/// to share, and able to stamp out one scheduler per encountered loop.
+pub trait ScheduleFactory: Send + Sync {
+    fn name(&self) -> String;
+    fn build(&self) -> Box<dyn Scheduler>;
+}
+
+/// Blanket factory from a closure.
+pub struct FnFactory<F: Fn() -> Box<dyn Scheduler> + Send + Sync> {
+    name: String,
+    f: F,
+}
+
+impl<F: Fn() -> Box<dyn Scheduler> + Send + Sync> FnFactory<F> {
+    pub fn new(name: impl Into<String>, f: F) -> Self {
+        Self { name: name.into(), f }
+    }
+}
+
+impl<F: Fn() -> Box<dyn Scheduler> + Send + Sync> ScheduleFactory for FnFactory<F> {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn build(&self) -> Box<dyn Scheduler> {
+        (self.f)()
+    }
+}
+
+/// Drain every chunk a scheduler would hand out under a given dequeue
+/// interleaving, single-threaded.  Round-robins over threads (each thread
+/// keeps requesting until its first `None`).  This is the reference way to
+/// extract a *chunk sequence* for tests and for the E1 chunk-size-evolution
+/// experiment.
+pub fn drain_chunks(
+    sched: &mut dyn Scheduler,
+    spec: &LoopSpec,
+    team: &TeamSpec,
+    record: &mut LoopRecord,
+) -> Vec<(usize, Chunk)> {
+    sched.start(spec, team, record);
+    let mut out = Vec::new();
+    let mut live: Vec<bool> = vec![true; team.nthreads];
+    let mut fb: Vec<Option<ChunkFeedback>> = vec![None; team.nthreads];
+    while live.iter().any(|&l| l) {
+        for tid in 0..team.nthreads {
+            if !live[tid] {
+                continue;
+            }
+            match sched.next(tid, fb[tid].as_ref()) {
+                Some(c) => {
+                    // Synthetic unit-cost feedback keeps adaptive schedulers
+                    // well-defined under drain.
+                    fb[tid] = Some(ChunkFeedback {
+                        chunk: c,
+                        tid,
+                        elapsed_ns: c.len.max(1),
+                    });
+                    out.push((tid, c));
+                }
+                None => live[tid] = false,
+            }
+        }
+    }
+    sched.finish(team, record);
+    out
+}
+
+/// Verify a chunk sequence covers `0..n` exactly once (no gap, no overlap).
+/// Returns `Err` with a human-readable description on the first violation.
+pub fn verify_cover(chunks: &[(usize, Chunk)], n: u64) -> Result<(), String> {
+    let mut seen = vec![false; n as usize];
+    for (tid, c) in chunks {
+        if c.len == 0 {
+            return Err(format!("thread {tid} produced an empty chunk {c:?}"));
+        }
+        if c.end() > n {
+            return Err(format!("chunk {c:?} exceeds iteration space {n}"));
+        }
+        for i in c.indices() {
+            if seen[i as usize] {
+                return Err(format!("iteration {i} scheduled twice (chunk {c:?})"));
+            }
+            seen[i as usize] = true;
+        }
+    }
+    if let Some(miss) = seen.iter().position(|&s| !s) {
+        return Err(format!("iteration {miss} never scheduled"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Minimal trivial scheduler: one shared counter, chunk size 1.
+    struct Trivial {
+        n: u64,
+        cur: AtomicU64,
+    }
+
+    impl Scheduler for Trivial {
+        fn name(&self) -> String {
+            "trivial".into()
+        }
+        fn start(&mut self, l: &LoopSpec, _t: &TeamSpec, _r: &mut LoopRecord) {
+            self.n = l.iter_count();
+            self.cur = AtomicU64::new(0);
+        }
+        fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+            let i = self.cur.fetch_add(1, Ordering::Relaxed);
+            (i < self.n).then(|| Chunk::new(i, 1))
+        }
+        fn finish(&mut self, _t: &TeamSpec, _r: &mut LoopRecord) {}
+    }
+
+    #[test]
+    fn drain_covers_space() {
+        let mut s = Trivial { n: 0, cur: AtomicU64::new(0) };
+        let spec = LoopSpec::upto(17);
+        let team = TeamSpec::uniform(3);
+        let mut rec = LoopRecord::default();
+        let chunks = drain_chunks(&mut s, &spec, &team, &mut rec);
+        assert_eq!(chunks.len(), 17);
+        verify_cover(&chunks, 17).unwrap();
+    }
+
+    #[test]
+    fn verify_cover_detects_gap() {
+        let chunks = vec![(0, Chunk::new(0, 3)), (1, Chunk::new(4, 6))];
+        assert!(verify_cover(&chunks, 10).unwrap_err().contains("never scheduled"));
+    }
+
+    #[test]
+    fn verify_cover_detects_overlap() {
+        let chunks = vec![(0, Chunk::new(0, 5)), (1, Chunk::new(4, 6))];
+        assert!(verify_cover(&chunks, 10).unwrap_err().contains("twice"));
+    }
+
+    #[test]
+    fn verify_cover_detects_overflow() {
+        let chunks = vec![(0, Chunk::new(0, 11))];
+        assert!(verify_cover(&chunks, 10).unwrap_err().contains("exceeds"));
+    }
+
+    #[test]
+    fn fn_factory_builds() {
+        let f = FnFactory::new("trivial", || {
+            Box::new(Trivial { n: 0, cur: AtomicU64::new(0) }) as Box<dyn Scheduler>
+        });
+        assert_eq!(f.name(), "trivial");
+        assert_eq!(f.build().name(), "trivial");
+    }
+}

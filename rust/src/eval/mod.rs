@@ -1,0 +1,12 @@
+//! Experiment harness: regenerates every evaluation table/figure
+//! (DESIGN.md §4, EXPERIMENTS.md).
+//!
+//! Each `eN` function is pure over its [`EvalConfig`] and returns
+//! [`Table`]s; the CLI (`uds eval <exp>`) prints them as markdown and
+//! saves CSVs under `results/`.
+
+pub mod experiments;
+pub mod table;
+
+pub use experiments::{e1, e2, e3, e4, e5, e6, e7, e8, EvalConfig};
+pub use table::{fmt_ns, Table};

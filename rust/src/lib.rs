@@ -1,0 +1,57 @@
+//! # uds — User-Defined Loop Scheduling
+//!
+//! A reproduction of **"Toward a Standard Interface for User-Defined
+//! Scheduling in OpenMP"** (Kale, Iwainsky, Klemm, Müller Korndörfer,
+//! Ciorba; iWOMP 2019) as a three-layer Rust + JAX/Pallas system.
+//!
+//! The crate is an OpenMP-like worksharing runtime whose scheduling layer
+//! is fully user-definable through the paper's proposed interface:
+//!
+//! * [`coordinator`] — the UDS `start`/`next`/`finish` operations, the
+//!   worksharing executor, both proposed surface syntaxes (§4.1 lambda
+//!   style, §4.2 declare style) and cross-invocation history.
+//! * [`schedules`] — every strategy the paper cites, implemented natively
+//!   and re-expressed through the UDS frontends.
+//! * [`workload`] — per-iteration cost models (the evaluation's workload
+//!   classes).
+//! * [`sim`] — a deterministic virtual-time executor plus system-noise /
+//!   heterogeneity models (the testbed substitute).
+//! * [`runtime`] — PJRT-backed execution of AOT-compiled JAX/Pallas
+//!   compute artifacts on the request path (Python never runs here).
+//! * [`eval`] — the E1–E8 experiment harness regenerating the evaluation
+//!   tables/figures (see DESIGN.md §4, EXPERIMENTS.md).
+//! * [`metrics`] — makespan / imbalance / overhead statistics.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use uds::coordinator::{parallel_for, ExecOptions, HistoryArena, LoopSpec, TeamSpec};
+//! use uds::schedules::ScheduleSpec;
+//!
+//! let spec = LoopSpec::upto(1_000);
+//! let team = TeamSpec::uniform(4);
+//! let sched = ScheduleSpec::parse("fac2").unwrap();
+//! let history = HistoryArena::new();
+//! let sum = std::sync::atomic::AtomicU64::new(0);
+//! let stats = parallel_for(&spec, &team, &*sched.factory(), &history,
+//!     &ExecOptions::default(),
+//!     |i, _tid| { sum.fetch_add(i as u64, std::sync::atomic::Ordering::Relaxed); });
+//! assert_eq!(sum.into_inner(), 499_500);
+//! assert_eq!(stats.iterations, 1_000);
+//! ```
+
+pub mod coordinator;
+pub mod eval;
+pub mod metrics;
+pub mod runtime;
+pub mod schedules;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use coordinator::{
+    parallel_for, Chunk, ChunkFeedback, ExecOptions, HistoryArena, LoopRecord,
+    LoopSpec, ScheduleFactory, Scheduler, TeamSpec,
+};
+pub use metrics::RunStats;
+pub use schedules::ScheduleSpec;

@@ -1,0 +1,271 @@
+//! `uds` — CLI launcher for the User-Defined Scheduling runtime.
+//!
+//! Subcommands:
+//! * `run`            — execute one scheduled loop (simulated or real threads)
+//! * `eval`           — regenerate the E1–E8 evaluation tables (DESIGN.md §4)
+//! * `list-schedules` — the built-in strategy roster
+//! * `calibrate`      — measure this host's dequeue overhead `h`
+//! * `serve`          — JSON-lines-style scheduling service over TCP
+//!
+//! Argument parsing is a small std-only implementation (offline clap
+//! substitution, see DESIGN.md).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use uds::coordinator::{
+    parallel_for, ExecOptions, HistoryArena, LoopRecord, LoopSpec, TeamSpec,
+};
+use uds::eval::{self, EvalConfig};
+use uds::schedules::ScheduleSpec;
+use uds::sim::{simulate, NoVariability, SimConfig};
+use uds::workload::{CostModel, WorkloadClass};
+
+mod service;
+
+const USAGE: &str = "\
+uds — user-defined loop scheduling runtime
+
+USAGE:
+  uds run   [--schedule S] [--n N] [--threads P] [--workload W]
+            [--mean-ns X] [--h-ns H] [--seed S] [--invocations K] [--real]
+  uds eval  [EXP] [--n N] [--threads P] [--mean-ns X] [--h-ns H]
+            [--seed S] [--out DIR] [--artifacts DIR]
+            EXP: e1..e8 | all (default all)
+  uds list-schedules
+  uds calibrate [--n N] [--threads P]
+  uds serve [--addr HOST:PORT]
+
+SCHEDULES (--schedule): static[,k] dynamic[,k] guided[,min] tss[,f,l]
+  fsc[,h[,sigma]] fac[,mu,sigma] fac2 wf2 rand[,lo,hi] static_steal[,k]
+  awf-b|c|d|e af[,min] hybrid[,f,k] auto tuned[,k0]
+WORKLOADS (--workload): uniform increasing decreasing gaussian
+  exponential lognormal bimodal sawtooth";
+
+/// Minimal flag parser: positional args + `--key value` pairs.
+struct Flags {
+    positional: Vec<String>,
+    named: HashMap<String, String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self, String> {
+        let mut positional = Vec::new();
+        let mut named = HashMap::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key == "real" {
+                    named.insert(key.to_string(), "true".to_string());
+                    continue;
+                }
+                let val = it
+                    .next()
+                    .ok_or_else(|| format!("flag --{key} needs a value"))?;
+                named.insert(key.to_string(), val.clone());
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Self { positional, named })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.named.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.named
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.named.contains_key(key)
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "-h" {
+        println!("{USAGE}");
+        return;
+    }
+    let cmd = args[0].clone();
+    let rest = args[1..].to_vec();
+    let result = match cmd.as_str() {
+        "run" => cmd_run(&rest),
+        "eval" => cmd_eval(&rest),
+        "list-schedules" => {
+            for spec in ScheduleSpec::roster() {
+                println!("{}", spec.label());
+            }
+            Ok(())
+        }
+        "calibrate" => cmd_calibrate(&rest),
+        "serve" => {
+            let flags = Flags::parse(&rest).unwrap_or_else(die);
+            service::serve(&flags.get_str("addr", "127.0.0.1:7311"))
+                .map_err(|e| e.to_string())
+        }
+        other => Err(format!("unknown command '{other}'\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn die<T>(e: String) -> T {
+    eprintln!("error: {e}");
+    std::process::exit(2);
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let flags = Flags::parse(args)?;
+    let schedule = flags.get_str("schedule", "fac2");
+    let n: u64 = flags.get("n", 100_000)?;
+    let threads: usize = flags.get("threads", 8)?;
+    let workload = flags.get_str("workload", "lognormal");
+    let mean_ns: f64 = flags.get("mean-ns", 1000.0)?;
+    let h_ns: u64 = flags.get("h-ns", 250)?;
+    let seed: u64 = flags.get("seed", 42)?;
+    let invocations: u32 = flags.get("invocations", 1)?;
+    let real = flags.has("real");
+
+    let spec = ScheduleSpec::parse(&schedule)?;
+    let class = WorkloadClass::parse(&workload)
+        .ok_or_else(|| format!("unknown workload '{workload}'"))?;
+    let costs = class.model(n, mean_ns, seed);
+    let loop_spec = LoopSpec::upto(n);
+    let team = TeamSpec::uniform(threads);
+    let mut rec = LoopRecord::default();
+    let history = HistoryArena::new();
+    for inv in 0..invocations {
+        let stats = if real {
+            parallel_for(
+                &loop_spec,
+                &team,
+                &*spec.factory(),
+                &history,
+                &ExecOptions { call_site: Some("cli".into()), ..Default::default() },
+                |i, _tid| spin_ns(costs.cost_ns(i as u64)),
+            )
+        } else {
+            simulate(
+                &loop_spec,
+                &team,
+                &*spec.factory(),
+                &costs,
+                &NoVariability,
+                &mut rec,
+                &SimConfig { dequeue_overhead_ns: h_ns, trace: false },
+            )
+        };
+        println!(
+            "[inv {inv}] schedule={} makespan={} chunks={} dequeues={} imbalance={:.2}% efficiency={:.3}",
+            stats.schedule,
+            eval::fmt_ns(stats.makespan_ns),
+            stats.chunks,
+            stats.total_dequeues(),
+            stats.percent_imbalance(),
+            stats.efficiency(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<(), String> {
+    let flags = Flags::parse(args)?;
+    let exp = flags
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let cfg = EvalConfig {
+        n: flags.get("n", 100_000)?,
+        p: flags.get("threads", 8)?,
+        mean_ns: flags.get("mean-ns", 1000.0)?,
+        h_ns: flags.get("h-ns", 250)?,
+        seed: flags.get("seed", 42)?,
+    };
+    let out = PathBuf::from(flags.get_str("out", "results"));
+    let artifacts = PathBuf::from(flags.get_str("artifacts", "artifacts"));
+
+    let run = |name: &str| -> Vec<eval::Table> {
+        match name {
+            "e1" => eval::e1(&cfg),
+            "e2" => eval::e2(&cfg),
+            "e3" => eval::e3(&cfg),
+            "e4" => eval::e4(&cfg),
+            "e5" => eval::e5(&cfg),
+            "e6" => eval::e6(&cfg),
+            "e7" => eval::e7(&cfg),
+            "e8" => eval::e8(&cfg, &artifacts),
+            other => {
+                eprintln!("unknown experiment '{other}'");
+                Vec::new()
+            }
+        }
+    };
+    let exps: Vec<&str> = if exp == "all" {
+        vec!["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8"]
+    } else {
+        vec![exp.as_str()]
+    };
+    for name in exps {
+        for table in run(name) {
+            println!("{}", table.markdown());
+            let path = table.save_csv(&out).map_err(|e| e.to_string())?;
+            println!("saved {}\n", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &[String]) -> Result<(), String> {
+    let flags = Flags::parse(args)?;
+    let n: u64 = flags.get("n", 1_000_000)?;
+    let threads: usize = flags.get("threads", 8)?;
+    println!("calibrating per-dequeue overhead, N={n}, P={threads} (empty body)");
+    let loop_spec = LoopSpec::upto(n);
+    let team = TeamSpec::uniform(threads);
+    for spec in ScheduleSpec::roster() {
+        let history = HistoryArena::new();
+        let stats = parallel_for(
+            &loop_spec,
+            &team,
+            &*spec.factory(),
+            &history,
+            &ExecOptions::default(),
+            |_, _| {},
+        );
+        let per_dequeue =
+            stats.makespan_ns as f64 * threads as f64 / stats.total_dequeues() as f64;
+        println!(
+            "{:<20} dequeues={:<9} makespan={:<10} ~h={:.0}ns/dequeue",
+            spec.label(),
+            stats.total_dequeues(),
+            eval::fmt_ns(stats.makespan_ns),
+            per_dequeue
+        );
+    }
+    Ok(())
+}
+
+/// Busy-spin for approximately `ns` nanoseconds (the real-executor
+/// synthetic workload).
+#[inline]
+fn spin_ns(ns: u64) {
+    let t0 = std::time::Instant::now();
+    while (t0.elapsed().as_nanos() as u64) < ns {
+        std::hint::spin_loop();
+    }
+}

@@ -1,0 +1,166 @@
+//! Run statistics and load-balance metrics for loop executions.
+//!
+//! These are the quantities the evaluation harness reports: makespan,
+//! per-thread busy/finish times, percent load imbalance, coefficient of
+//! variation of thread finish times, dequeue counts (scheduling-overhead
+//! proxy) and optional chunk traces (E1 chunk-size evolution).
+
+
+use crate::coordinator::loop_spec::Chunk;
+
+/// One dequeued chunk, as logged when tracing is enabled.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkLog {
+    pub tid: usize,
+    pub chunk: Chunk,
+    /// Virtual/wall time at which the chunk body started.
+    pub start_ns: u64,
+    /// Body execution time.
+    pub elapsed_ns: u64,
+}
+
+/// Outcome of executing one scheduled loop invocation.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub schedule: String,
+    pub nthreads: usize,
+    pub iterations: u64,
+    /// Wall/virtual time from loop start to the last thread finishing.
+    pub makespan_ns: u64,
+    /// Per-thread time spent executing chunk bodies.
+    pub busy_ns: Vec<u64>,
+    /// Per-thread time of last completed work (finish time).
+    pub finish_ns: Vec<u64>,
+    /// Per-thread executed iteration counts.
+    pub iters: Vec<u64>,
+    /// Per-thread dequeue (`next`) call counts, including the final `None`.
+    pub dequeues: Vec<u64>,
+    /// Number of non-empty chunks dispatched.
+    pub chunks: u64,
+    /// Chunk trace; populated only when tracing is requested.
+    pub trace: Vec<ChunkLog>,
+}
+
+impl RunStats {
+    /// Percent load imbalance `(max/mean - 1) * 100` over thread finish
+    /// times — the classic metric in the factoring literature.
+    pub fn percent_imbalance(&self) -> f64 {
+        ratio_imbalance(&self.finish_ns) * 100.0
+    }
+
+    /// Coefficient of variation of per-thread busy times.
+    pub fn busy_cov(&self) -> f64 {
+        cov(&self.busy_ns)
+    }
+
+    /// Mean chunk size actually dispatched.
+    pub fn mean_chunk_size(&self) -> f64 {
+        if self.chunks == 0 {
+            0.0
+        } else {
+            self.iterations as f64 / self.chunks as f64
+        }
+    }
+
+    /// Total dequeue operations across the team.
+    pub fn total_dequeues(&self) -> u64 {
+        self.dequeues.iter().sum()
+    }
+
+    /// Parallel efficiency vs. an ideal `sum(busy)/P` makespan.
+    pub fn efficiency(&self) -> f64 {
+        if self.makespan_ns == 0 {
+            return 1.0;
+        }
+        let total: u64 = self.busy_ns.iter().sum();
+        total as f64 / (self.nthreads as f64 * self.makespan_ns as f64)
+    }
+}
+
+/// `(max/mean) - 1` of a sample; 0 for empty/all-zero samples.
+pub fn ratio_imbalance(xs: &[u64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let max = *xs.iter().max().unwrap() as f64;
+    let mean = xs.iter().sum::<u64>() as f64 / xs.len() as f64;
+    if mean <= 0.0 {
+        0.0
+    } else {
+        max / mean - 1.0
+    }
+}
+
+/// Coefficient of variation (population) of a sample.
+pub fn cov(xs: &[u64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<u64>() as f64 / n;
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(finish: Vec<u64>, busy: Vec<u64>) -> RunStats {
+        RunStats {
+            schedule: "t".into(),
+            nthreads: finish.len(),
+            iterations: 100,
+            makespan_ns: *finish.iter().max().unwrap_or(&0),
+            finish_ns: finish,
+            busy_ns: busy,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn perfectly_balanced_has_zero_imbalance() {
+        let s = stats(vec![100, 100, 100, 100], vec![100, 100, 100, 100]);
+        assert!(s.percent_imbalance().abs() < 1e-12);
+        assert!((s.efficiency() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_formula() {
+        // finish = [200,100,100,100], mean=125, max=200 -> 60%
+        let s = stats(vec![200, 100, 100, 100], vec![0; 4]);
+        assert!((s.percent_imbalance() - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cov_zero_for_constant() {
+        assert!(cov(&[5, 5, 5]).abs() < 1e-12);
+        assert!(cov(&[]).abs() < 1e-12);
+        assert!(cov(&[0, 0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cov_known_value() {
+        // [2,4]: mean 3, pop var 1, cov = 1/3
+        assert!((cov(&[2, 4]) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_chunk_size() {
+        let mut s = stats(vec![10], vec![10]);
+        s.chunks = 4;
+        assert!((s.mean_chunk_size() - 25.0).abs() < 1e-12);
+        s.chunks = 0;
+        assert_eq!(s.mean_chunk_size(), 0.0);
+    }
+
+    #[test]
+    fn efficiency_half() {
+        // 2 threads, busy 100+0, makespan 100 -> efficiency 0.5
+        let s = stats(vec![100, 0], vec![100, 0]);
+        assert!((s.efficiency() - 0.5).abs() < 1e-12);
+    }
+}

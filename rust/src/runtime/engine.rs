@@ -1,0 +1,200 @@
+//! The PJRT execution engine: HLO text -> compiled executable -> run.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::runtime::manifest::Manifest;
+
+/// A thread-bound PJRT runtime holding one compiled executable per depth
+/// class of the work kernel.
+pub struct WorkRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<u32, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    dim: usize,
+    rows: usize,
+}
+
+impl WorkRuntime {
+    /// Load the manifest and compile every depth-class artifact found in
+    /// `dir` on a fresh PJRT CPU client.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        let mut exes = HashMap::new();
+        for &depth in &manifest.depth_classes {
+            let path = manifest.artifact_path(dir, depth);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling depth {depth}: {e:?}"))?;
+            exes.insert(depth, exe);
+        }
+        let (rows, dim) = (manifest.chunk_rows, manifest.feature_dim);
+        Ok(Self { client, exes, manifest, dim, rows })
+    }
+
+    /// Available depth classes, ascending.
+    pub fn depths(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.exes.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one work chunk: `x` is `(chunk_rows, feature_dim)` row-major,
+    /// `w` is `(feature_dim, feature_dim)`, `b` is `(feature_dim,)`.
+    /// `depth` must be a compiled class (see [`Manifest::nearest_depth`]).
+    pub fn run_chunk(
+        &self,
+        depth: u32,
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let exe = self
+            .exes
+            .get(&depth)
+            .ok_or_else(|| anyhow!("depth {depth} not compiled"))?;
+        if x.len() != self.rows * self.dim {
+            return Err(anyhow!("x has {} elems, want {}", x.len(), self.rows * self.dim));
+        }
+        if w.len() != self.dim * self.dim || b.len() != self.dim {
+            return Err(anyhow!("w/b shape mismatch"));
+        }
+        let xs = xla::Literal::vec1(x)
+            .reshape(&[self.rows as i64, self.dim as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let ws = xla::Literal::vec1(w)
+            .reshape(&[self.dim as i64, self.dim as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let bs = xla::Literal::vec1(b)
+            .reshape(&[self.dim as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[xs, ws, bs])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+thread_local! {
+    static TL_RUNTIME: RefCell<Option<(PathBuf, WorkRuntime)>> =
+        const { RefCell::new(None) };
+}
+
+/// Run `f` with this thread's [`WorkRuntime`] for `dir`, creating (and
+/// compiling) it on first use.  This is how `parallel_for` bodies reach
+/// PJRT: the client is not `Send`, so each worker owns one.
+pub fn with_runtime<R>(
+    dir: &Path,
+    f: impl FnOnce(&WorkRuntime) -> anyhow::Result<R>,
+) -> anyhow::Result<R> {
+    TL_RUNTIME.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let needs_load = match slot.as_ref() {
+            Some((d, _)) => d != dir,
+            None => true,
+        };
+        if needs_load {
+            let rt = WorkRuntime::load(dir)?;
+            *slot = Some((dir.to_path_buf(), rt));
+        }
+        f(&slot.as_ref().unwrap().1)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_and_run_golden() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = WorkRuntime::load(&dir).unwrap();
+        assert_eq!(rt.depths(), vec![1, 2, 4, 8]);
+
+        let golden = crate::runtime::Golden::load(&dir).unwrap();
+        for rec in &golden.outputs {
+            let out = rt
+                .run_chunk(rec.depth, &golden.inputs.x, &golden.inputs.w, &golden.inputs.b)
+                .unwrap();
+            assert_eq!(out.len(), rt.manifest.chunk_elems());
+            for (i, (&got, &want)) in out.iter().zip(&rec.first8).enumerate() {
+                assert!(
+                    (got - want).abs() < 1e-4,
+                    "depth {} elem {i}: {got} vs {want}",
+                    rec.depth
+                );
+            }
+            let tail = &out[out.len() - 8..];
+            for (&got, &want) in tail.iter().zip(&rec.last8) {
+                assert!((got - want).abs() < 1e-4, "depth {} tail", rec.depth);
+            }
+            let sum: f64 = out.iter().map(|&v| v as f64).sum();
+            assert!(
+                (sum - rec.sum).abs() < 1e-2 * rec.abs_sum.max(1.0),
+                "depth {}: sum {sum} vs {}",
+                rec.depth,
+                rec.sum
+            );
+        }
+    }
+
+    #[test]
+    fn depth_composition_matches() {
+        // Running depth-1 twice == running depth-2 once (L2 invariant,
+        // checked end-to-end through PJRT).
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = WorkRuntime::load(&dir).unwrap();
+        let golden = crate::runtime::Golden::load(&dir).unwrap();
+        let once = rt
+            .run_chunk(1, &golden.inputs.x, &golden.inputs.w, &golden.inputs.b)
+            .unwrap();
+        let twice = rt
+            .run_chunk(1, &once, &golden.inputs.w, &golden.inputs.b)
+            .unwrap();
+        let direct = rt
+            .run_chunk(2, &golden.inputs.x, &golden.inputs.w, &golden.inputs.b)
+            .unwrap();
+        for (a, b) in twice.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = WorkRuntime::load(&dir).unwrap();
+        let n = rt.manifest.chunk_elems();
+        let d = rt.manifest.feature_dim;
+        assert!(rt.run_chunk(1, &vec![0.0; 3], &vec![0.0; d * d], &vec![0.0; d]).is_err());
+        assert!(rt.run_chunk(99, &vec![0.0; n], &vec![0.0; d * d], &vec![0.0; d]).is_err());
+    }
+}

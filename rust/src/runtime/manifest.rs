@@ -1,0 +1,202 @@
+//! Artifact manifest and golden records emitted by `python/compile/aot.py`.
+//!
+//! Format is the std-only `key=value` text of [`crate::util::kv`] (offline
+//! serde substitution): `manifest.txt` carries the kernel geometry,
+//! `golden.txt` carries deterministic inputs plus per-depth expected
+//! outputs for the Rust-side numerics check.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::util::kv::Kv;
+
+/// `artifacts/manifest.txt`: geometry of the AOT-compiled work kernels.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub chunk_rows: usize,
+    pub feature_dim: usize,
+    pub depth_classes: Vec<u32>,
+    pub artifact_pattern: String,
+    pub rtol: f64,
+    pub atol: f64,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let kv = Kv::parse(&text).map_err(|e| anyhow!(e))?;
+        Ok(Self {
+            chunk_rows: kv.get_parsed("chunk_rows").map_err(|e| anyhow!(e))?,
+            feature_dim: kv.get_parsed("feature_dim").map_err(|e| anyhow!(e))?,
+            depth_classes: kv.get_list("depth_classes").map_err(|e| anyhow!(e))?,
+            artifact_pattern: kv.require("artifact_pattern").map_err(|e| anyhow!(e))?.to_string(),
+            rtol: kv.get_or("rtol", 1e-5),
+            atol: kv.get_or("atol", 1e-5),
+        })
+    }
+
+    /// Artifact path for a depth class.
+    pub fn artifact_path(&self, dir: &Path, depth: u32) -> std::path::PathBuf {
+        dir.join(self.artifact_pattern.replace("{depth}", &depth.to_string()))
+    }
+
+    /// Snap an arbitrary requested depth to the nearest compiled class.
+    pub fn nearest_depth(&self, requested: u32) -> u32 {
+        *self
+            .depth_classes
+            .iter()
+            .min_by_key(|&&d| (d as i64 - requested as i64).unsigned_abs())
+            .expect("manifest has at least one depth class")
+    }
+
+    /// Elements in one chunk input/output tensor.
+    pub fn chunk_elems(&self) -> usize {
+        self.chunk_rows * self.feature_dim
+    }
+}
+
+/// One expected-output record from `artifacts/golden.txt`.
+#[derive(Clone, Debug)]
+pub struct GoldenRecord {
+    pub depth: u32,
+    pub first8: Vec<f32>,
+    pub last8: Vec<f32>,
+    pub sum: f64,
+    pub abs_sum: f64,
+}
+
+/// `artifacts/golden.txt`: deterministic inputs + expected outputs.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub inputs: GoldenInputs,
+    pub outputs: Vec<GoldenRecord>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GoldenInputs {
+    pub x: Vec<f32>,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+fn parse_floats(s: &str) -> Result<Vec<f32>, String> {
+    s.split_whitespace()
+        .map(|t| t.parse::<f32>().map_err(|e| format!("float '{t}': {e}")))
+        .collect()
+}
+
+impl Golden {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("golden.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let kv = Kv::parse(&text).map_err(|e| anyhow!(e))?;
+        let inputs = GoldenInputs {
+            x: parse_floats(kv.require("x").map_err(|e| anyhow!(e))?)
+                .map_err(|e| anyhow!(e))?,
+            w: parse_floats(kv.require("w").map_err(|e| anyhow!(e))?)
+                .map_err(|e| anyhow!(e))?,
+            b: parse_floats(kv.require("b").map_err(|e| anyhow!(e))?)
+                .map_err(|e| anyhow!(e))?,
+        };
+        let depths: Vec<u32> = kv.get_list("depths").map_err(|e| anyhow!(e))?;
+        let mut outputs = Vec::new();
+        for d in depths {
+            let g = |suffix: &str| -> anyhow::Result<&str> {
+                kv.require(&format!("d{d}.{suffix}")).map_err(|e| anyhow!(e))
+            };
+            outputs.push(GoldenRecord {
+                depth: d,
+                first8: parse_floats(g("first8")?).map_err(|e| anyhow!(e))?,
+                last8: parse_floats(g("last8")?).map_err(|e| anyhow!(e))?,
+                sum: g("sum")?.parse()?,
+                abs_sum: g("abs_sum")?.parse()?,
+            });
+        }
+        Ok(Self { inputs, outputs })
+    }
+
+    pub fn record(&self, depth: u32) -> Option<&GoldenRecord> {
+        self.outputs.iter().find(|r| r.depth == depth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest {
+            chunk_rows: 128,
+            feature_dim: 64,
+            depth_classes: vec![1, 2, 4, 8],
+            artifact_pattern: "work_d{depth}.hlo.txt".into(),
+            rtol: 1e-5,
+            atol: 1e-5,
+        }
+    }
+
+    #[test]
+    fn nearest_depth_snaps() {
+        let m = manifest();
+        assert_eq!(m.nearest_depth(1), 1);
+        assert_eq!(m.nearest_depth(3), 2); // tie 2/4 -> first (2)
+        assert_eq!(m.nearest_depth(5), 4);
+        assert_eq!(m.nearest_depth(100), 8);
+        assert_eq!(m.nearest_depth(0), 1);
+    }
+
+    #[test]
+    fn artifact_path_substitutes() {
+        let m = manifest();
+        let p = m.artifact_path(Path::new("/a"), 4);
+        assert_eq!(p, Path::new("/a/work_d4.hlo.txt"));
+    }
+
+    #[test]
+    fn chunk_elems() {
+        assert_eq!(manifest().chunk_elems(), 8192);
+    }
+
+    #[test]
+    fn manifest_text_roundtrip() {
+        let dir = std::env::temp_dir().join("uds_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "chunk_rows=128\nfeature_dim=64\ndepth_classes=1,2,4,8\n\
+             artifact_pattern=work_d{depth}.hlo.txt\nrtol=1e-5\natol=1e-5\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.chunk_rows, 128);
+        assert_eq!(m.depth_classes, vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn golden_text_roundtrip() {
+        let dir = std::env::temp_dir().join("uds_golden_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("golden.txt"),
+            "x=1.0 2.0\nw=0.5 0.5 0.5 0.5\nb=0.1 0.1\ndepths=1\n\
+             d1.sum=3.5\nd1.abs_sum=3.5\nd1.first8=1 2 3 4 5 6 7 8\n\
+             d1.last8=8 7 6 5 4 3 2 1\n",
+        )
+        .unwrap();
+        let g = Golden::load(&dir).unwrap();
+        assert_eq!(g.inputs.x, vec![1.0, 2.0]);
+        assert_eq!(g.outputs.len(), 1);
+        assert_eq!(g.record(1).unwrap().sum, 3.5);
+        assert!(g.record(2).is_none());
+    }
+
+    #[test]
+    fn parse_floats_rejects_garbage() {
+        assert!(parse_floats("1.0 nope").is_err());
+        assert_eq!(parse_floats("").unwrap(), Vec::<f32>::new());
+    }
+}

@@ -1,0 +1,211 @@
+//! AF — Adaptive Factoring, Banicescu & Liu 2000 [5].
+//!
+//! Factoring where both the mean *and variance* of iteration times are
+//! estimated **per thread, online**, and each thread's chunk is sized from
+//! the current estimates.  For remaining `R` and per-thread estimates
+//! `(mu_t, sigma_t)`:
+//!
+//! ```text
+//! D = sum_t (sigma_t^2 / mu_t)
+//! T = 1 / sum_t (1 / mu_t)
+//! k_t = ( D + 2 T R - sqrt(D^2 + 4 D T R) ) / (2 mu_t)
+//! ```
+//!
+//! When no measurements exist yet (first chunks), AF bootstraps with the
+//! FAC2 rule `ceil(R / 2P)`.  This is the paper's canonical example of a
+//! strategy that "simply cannot be efficiently implemented in OpenMP RTLs"
+//! without a UDS interface, because it needs the begin/end-loop-body
+//! measurement hooks and cross-dequeue state.
+
+use std::sync::RwLock;
+
+use crate::coordinator::feedback::{ChunkFeedback, Welford};
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::common::{ceil_div, TakenCounter};
+
+pub struct Af {
+    p: u64,
+    /// Minimum chunk size (avoids degenerate 1-iteration tails thrashing).
+    pub min_chunk: u64,
+    todo: TakenCounter,
+    stats: RwLock<Vec<Welford>>,
+}
+
+impl Af {
+    pub fn new(min_chunk: u64) -> Self {
+        Self {
+            p: 1,
+            min_chunk: min_chunk.max(1),
+            todo: TakenCounter::default(),
+            stats: RwLock::new(Vec::new()),
+        }
+    }
+
+    /// The Banicescu-Liu chunk size for thread `t` given remaining `r`.
+    /// Returns `None` if the estimates are not yet usable.
+    fn af_size(stats: &[Welford], tid: usize, r: u64) -> Option<u64> {
+        if stats.iter().any(|w| w.n == 0 || w.mean <= 0.0) {
+            return None;
+        }
+        let d: f64 = stats.iter().map(|w| w.variance() / w.mean).sum();
+        let t_inv: f64 = stats.iter().map(|w| 1.0 / w.mean).sum();
+        let t = 1.0 / t_inv;
+        let r_f = r as f64;
+        let term = d + 2.0 * t * r_f;
+        let k = (term - (d * d + 4.0 * d * t * r_f).sqrt()) / (2.0 * stats[tid].mean);
+        if !k.is_finite() || k < 1.0 {
+            Some(1)
+        } else {
+            Some(k.floor() as u64)
+        }
+    }
+}
+
+impl Scheduler for Af {
+    fn name(&self) -> String {
+        "af".into()
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, record: &mut LoopRecord) {
+        self.p = team.nthreads as u64;
+        self.todo.reset(loop_.iter_count());
+        record.ensure_team(team.nthreads);
+        // Seed with cross-invocation per-thread stats when available —
+        // AF converges faster on time-stepped applications.
+        let seeded: Vec<Welford> = (0..team.nthreads)
+            .map(|t| record.thread_stats.get(t).copied().unwrap_or_default())
+            .collect();
+        *self.stats.write().unwrap() = seeded;
+    }
+
+    fn next(&self, tid: usize, fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        if let Some(fb) = fb {
+            if fb.chunk.len > 0 {
+                self.stats.write().unwrap()[tid].push_chunk(fb.elapsed_ns as f64, fb.chunk.len);
+            }
+        }
+        let p = self.p;
+        let min = self.min_chunk;
+        let stats = self.stats.read().unwrap();
+        self.todo.take_sized(|r| {
+            let k = Af::af_size(&stats, tid, r).unwrap_or_else(|| ceil_div(r, 2 * p));
+            k.max(min)
+        })
+    }
+
+    fn finish(&mut self, team: &TeamSpec, record: &mut LoopRecord) {
+        // Persist per-thread estimates for the next invocation.
+        record.ensure_team(team.nthreads);
+        record.thread_stats = self.stats.read().unwrap().clone();
+    }
+
+    fn is_adaptive(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    #[test]
+    fn covers_space() {
+        for (n, p) in [(10_000u64, 8usize), (100, 4), (7, 3), (1, 1)] {
+            let mut s = Af::new(1);
+            let chunks = drain_chunks(
+                &mut s,
+                &LoopSpec::upto(n),
+                &TeamSpec::uniform(p),
+                &mut LoopRecord::default(),
+            );
+            verify_cover(&chunks, n).unwrap();
+        }
+    }
+
+    #[test]
+    fn bootstrap_uses_fac2_rule() {
+        let mut s = Af::new(1);
+        let mut rec = LoopRecord::default();
+        s.start(&LoopSpec::upto(1600), &TeamSpec::uniform(4), &mut rec);
+        assert_eq!(s.next(0, None).unwrap().len, 200); // ceil(1600/8)
+    }
+
+    #[test]
+    fn af_size_uniform_threads() {
+        // All threads identical (mu=100, sigma=0): D=0, T=mu/P,
+        // k = 2*T*R/(2*mu) = R/P.
+        let mut w = Welford::default();
+        for _ in 0..10 {
+            w.push(100.0);
+        }
+        let stats = vec![w; 4];
+        let k = Af::af_size(&stats, 0, 1000).unwrap();
+        assert_eq!(k, 250);
+    }
+
+    #[test]
+    fn faster_thread_gets_larger_chunk() {
+        let mut fast = Welford::default();
+        let mut slow = Welford::default();
+        for _ in 0..20 {
+            fast.push(50.0);
+            slow.push(200.0);
+        }
+        let stats = vec![slow, fast];
+        let k_slow = Af::af_size(&stats, 0, 10_000).unwrap();
+        let k_fast = Af::af_size(&stats, 1, 10_000).unwrap();
+        assert!((k_fast as f64 / k_slow as f64 - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn high_variance_shrinks_chunks() {
+        let mut calm = Welford::default();
+        let mut noisy = Welford::default();
+        for i in 0..50 {
+            calm.push(100.0);
+            noisy.push(if i % 2 == 0 { 10.0 } else { 190.0 });
+        }
+        let k_calm = Af::af_size(&vec![calm; 4], 0, 10_000).unwrap();
+        let k_noisy = Af::af_size(&vec![noisy; 4], 0, 10_000).unwrap();
+        assert!(k_noisy < k_calm, "{k_noisy} !< {k_calm}");
+    }
+
+    #[test]
+    fn no_stats_returns_none() {
+        let stats = vec![Welford::default(); 2];
+        assert!(Af::af_size(&stats, 0, 100).is_none());
+    }
+
+    #[test]
+    fn stats_persist_to_history() {
+        let mut rec = LoopRecord::default();
+        let mut s = Af::new(1);
+        let chunks = drain_chunks(
+            &mut s,
+            &LoopSpec::upto(1000),
+            &TeamSpec::uniform(2),
+            &mut rec,
+        );
+        verify_cover(&chunks, 1000).unwrap();
+        assert_eq!(rec.thread_stats.len(), 2);
+        assert!(rec.thread_stats.iter().all(|w| w.n > 0));
+    }
+
+    #[test]
+    fn min_chunk_respected() {
+        let mut s = Af::new(16);
+        let chunks = drain_chunks(
+            &mut s,
+            &LoopSpec::upto(1000),
+            &TeamSpec::uniform(4),
+            &mut LoopRecord::default(),
+        );
+        verify_cover(&chunks, 1000).unwrap();
+        for (_, c) in &chunks[..chunks.len() - 1] {
+            assert!(c.len >= 16 || c.end() == 1000);
+        }
+    }
+}

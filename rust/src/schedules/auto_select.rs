@@ -1,0 +1,182 @@
+//! `schedule(auto)`-style runtime selection — Thoman et al. [30],
+//! Zhang & Voss [33].
+//!
+//! A *meta*-scheduler: the first invocation runs an exploration schedule
+//! (FAC2) while recording whole-loop iteration-time statistics into the
+//! history record; subsequent invocations pick a schedule from the
+//! measured coefficient of variation:
+//!
+//! * `cov < LOW`     -> static block (regular loop, overhead dominates)
+//! * `cov < HIGH`    -> GSS          (moderate irregularity)
+//! * otherwise       -> FAC2         (high irregularity)
+//!
+//! The paper's §4.3 argues such automatic selection is *insufficient*
+//! because it admits no domain knowledge — which is exactly why it is
+//! implemented here as just another strategy expressible through the UDS
+//! interface (E2/E5 quantify where it loses to informed choices).
+
+use std::sync::Mutex;
+
+use crate::coordinator::feedback::{ChunkFeedback, Welford};
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::{fac2::Fac2, gss::Gss, static_block::StaticBlock};
+
+pub const COV_LOW: f64 = 0.10;
+pub const COV_HIGH: f64 = 0.40;
+
+pub struct AutoSelect {
+    inner: Box<dyn Scheduler>,
+    /// Within-invocation measurements folded into history at `finish`.
+    observed: Mutex<Welford>,
+    selected: String,
+}
+
+impl AutoSelect {
+    pub fn new() -> Self {
+        Self {
+            inner: Box::new(Fac2::new()),
+            observed: Mutex::new(Welford::default()),
+            selected: "fac2(explore)".into(),
+        }
+    }
+
+    /// The selection rule (public for tests and E-experiments).
+    pub fn pick(cov: f64) -> &'static str {
+        if cov < COV_LOW {
+            "static"
+        } else if cov < COV_HIGH {
+            "gss"
+        } else {
+            "fac2"
+        }
+    }
+}
+
+impl Default for AutoSelect {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for AutoSelect {
+    fn name(&self) -> String {
+        format!("auto[{}]", self.selected)
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, record: &mut LoopRecord) {
+        if record.invocations == 0 || record.loop_stats.n < 2 {
+            self.inner = Box::new(Fac2::new());
+            self.selected = "fac2(explore)".into();
+        } else {
+            let cov = record.loop_stats.cov();
+            self.selected = Self::pick(cov).to_string();
+            self.inner = match self.selected.as_str() {
+                "static" => Box::new(StaticBlock::new(None)),
+                "gss" => Box::new(Gss::new(1)),
+                _ => Box::new(Fac2::new()),
+            };
+        }
+        record.selected = Some(self.selected.clone());
+        *self.observed.lock().unwrap() = Welford::default();
+        self.inner.start(loop_, team, record);
+    }
+
+    fn next(&self, tid: usize, fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        if let Some(fb) = fb {
+            if fb.chunk.len > 0 {
+                self.observed.lock().unwrap().push_chunk(fb.elapsed_ns as f64, fb.chunk.len);
+            }
+        }
+        self.inner.next(tid, fb)
+    }
+
+    fn finish(&mut self, team: &TeamSpec, record: &mut LoopRecord) {
+        self.inner.finish(team, record);
+        // Fold this invocation's observations into persistent stats.
+        let obs = self.observed.lock().unwrap();
+        if obs.n > 0 {
+            record.loop_stats.push(obs.mean);
+            // Preserve dispersion information: push mean +- stddev samples.
+            record.loop_stats.push(obs.mean + obs.stddev());
+            record.loop_stats.push((obs.mean - obs.stddev()).max(0.0));
+        }
+    }
+
+    fn is_adaptive(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    #[test]
+    fn covers_space() {
+        let mut s = AutoSelect::new();
+        let chunks = drain_chunks(
+            &mut s,
+            &LoopSpec::upto(4000),
+            &TeamSpec::uniform(4),
+            &mut LoopRecord::default(),
+        );
+        verify_cover(&chunks, 4000).unwrap();
+    }
+
+    #[test]
+    fn first_invocation_explores_with_fac2() {
+        let mut s = AutoSelect::new();
+        let mut rec = LoopRecord::default();
+        s.start(&LoopSpec::upto(100), &TeamSpec::uniform(2), &mut rec);
+        assert_eq!(rec.selected.as_deref(), Some("fac2(explore)"));
+    }
+
+    #[test]
+    fn selection_rule_bands() {
+        assert_eq!(AutoSelect::pick(0.0), "static");
+        assert_eq!(AutoSelect::pick(0.05), "static");
+        assert_eq!(AutoSelect::pick(0.2), "gss");
+        assert_eq!(AutoSelect::pick(1.5), "fac2");
+    }
+
+    #[test]
+    fn regular_loop_converges_to_static() {
+        let mut rec = LoopRecord::default();
+        rec.invocations = 1;
+        for _ in 0..10 {
+            rec.loop_stats.push(100.0); // zero variance
+        }
+        let mut s = AutoSelect::new();
+        s.start(&LoopSpec::upto(100), &TeamSpec::uniform(2), &mut rec);
+        assert_eq!(rec.selected.as_deref(), Some("static"));
+    }
+
+    #[test]
+    fn irregular_loop_converges_to_fac2() {
+        let mut rec = LoopRecord::default();
+        rec.invocations = 1;
+        for i in 0..10 {
+            rec.loop_stats.push(if i % 2 == 0 { 10.0 } else { 500.0 });
+        }
+        let mut s = AutoSelect::new();
+        s.start(&LoopSpec::upto(100), &TeamSpec::uniform(2), &mut rec);
+        assert_eq!(rec.selected.as_deref(), Some("fac2"));
+    }
+
+    #[test]
+    fn observations_accumulate_across_invocations() {
+        let mut rec = LoopRecord::default();
+        let team = TeamSpec::uniform(2);
+        for _ in 0..2 {
+            let mut s = AutoSelect::new();
+            let chunks =
+                drain_chunks(&mut s, &LoopSpec::upto(500), &team, &mut rec);
+            verify_cover(&chunks, 500).unwrap();
+            rec.invocations += 1;
+        }
+        assert!(rec.loop_stats.n > 0);
+    }
+}

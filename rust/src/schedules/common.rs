@@ -1,0 +1,224 @@
+//! Shared building blocks for schedule implementations.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::loop_spec::Chunk;
+
+/// The central *todo list* of the paper, in the form every production RTL
+/// uses: a single atomic cursor over the normalized iteration space.
+///
+/// `take_fixed` is the wait-free fast path (fetch_add) for strategies whose
+/// chunk size does not depend on the remaining count; `take_sized` is the
+/// CAS loop for self-scheduling strategies whose next chunk size is a
+/// function of the remaining iterations (GSS, FAC-family, AF, RAND).
+#[derive(Debug, Default)]
+pub struct TakenCounter {
+    n: AtomicU64,
+    taken: AtomicU64,
+}
+
+impl TakenCounter {
+    pub fn reset(&self, n: u64) {
+        self.n.store(n, Ordering::Relaxed);
+        self.taken.store(0, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn total(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    /// Remaining iterations (racy snapshot; exact under the CAS loop).
+    #[inline]
+    pub fn remaining(&self) -> u64 {
+        let n = self.n.load(Ordering::Relaxed);
+        let t = self.taken.load(Ordering::Relaxed);
+        n.saturating_sub(t)
+    }
+
+    /// Wait-free fixed-size take.
+    #[inline]
+    pub fn take_fixed(&self, k: u64) -> Option<Chunk> {
+        debug_assert!(k > 0);
+        let n = self.n.load(Ordering::Relaxed);
+        let first = self.taken.fetch_add(k, Ordering::Relaxed);
+        if first >= n {
+            return None;
+        }
+        Some(Chunk::new(first, k.min(n - first)))
+    }
+
+    /// CAS take where the chunk size is computed from the remaining count.
+    /// `size(remaining)` must return a value in `1..=remaining`; it is
+    /// clamped defensively anyway.
+    #[inline]
+    pub fn take_sized<F: Fn(u64) -> u64>(&self, size: F) -> Option<Chunk> {
+        let n = self.n.load(Ordering::Relaxed);
+        let mut cur = self.taken.load(Ordering::Relaxed);
+        loop {
+            if cur >= n {
+                return None;
+            }
+            let remaining = n - cur;
+            let k = size(remaining).clamp(1, remaining);
+            match self.taken.compare_exchange_weak(
+                cur,
+                cur + k,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(Chunk::new(cur, k)),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// A precomputed chunk-boundary list consumed by an atomic index — the
+/// "compiled schedule" representation for strategies whose chunk sequence
+/// is deterministic regardless of which thread dequeues (TSS, FAC2, and
+/// the optimized forms of GSS; see EXPERIMENTS.md §Perf).
+#[derive(Debug, Default)]
+pub struct CompiledChunks {
+    bounds: Vec<Chunk>,
+    idx: AtomicU64,
+}
+
+impl CompiledChunks {
+    /// Build from a chunk-size sequence; sizes are clamped so they cover
+    /// exactly `n` iterations (the tail chunk shrinks, surplus is dropped).
+    pub fn from_sizes(n: u64, sizes: impl IntoIterator<Item = u64>) -> Self {
+        let mut bounds = Vec::new();
+        let mut first = 0u64;
+        for s in sizes {
+            if first >= n {
+                break;
+            }
+            let len = s.clamp(1, n - first);
+            bounds.push(Chunk::new(first, len));
+            first += len;
+        }
+        debug_assert!(n == 0 || first == n, "sizes must cover the space");
+        Self { bounds, idx: AtomicU64::new(0) }
+    }
+
+    pub fn reset(&self) {
+        self.idx.store(0, Ordering::Relaxed);
+    }
+
+    pub fn len(&self) -> usize {
+        self.bounds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bounds.is_empty()
+    }
+
+    /// Chunk sizes, in dispatch order (for E1 traces and tests).
+    pub fn sizes(&self) -> Vec<u64> {
+        self.bounds.iter().map(|c| c.len).collect()
+    }
+
+    #[inline]
+    pub fn take(&self) -> Option<Chunk> {
+        let i = self.idx.fetch_add(1, Ordering::Relaxed) as usize;
+        self.bounds.get(i).copied()
+    }
+}
+
+/// Integer ceil division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_fixed_covers_exactly() {
+        let c = TakenCounter::default();
+        c.reset(10);
+        let mut got = Vec::new();
+        while let Some(ch) = c.take_fixed(3) {
+            got.push(ch);
+        }
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[3], Chunk::new(9, 1));
+        assert_eq!(got.iter().map(|c| c.len).sum::<u64>(), 10);
+        assert!(c.take_fixed(3).is_none());
+    }
+
+    #[test]
+    fn take_sized_clamps() {
+        let c = TakenCounter::default();
+        c.reset(7);
+        // Pathological size fn returning too much.
+        let ch = c.take_sized(|_| 100).unwrap();
+        assert_eq!(ch, Chunk::new(0, 7));
+        assert!(c.take_sized(|_| 100).is_none());
+    }
+
+    #[test]
+    fn take_sized_zero_promoted_to_one() {
+        let c = TakenCounter::default();
+        c.reset(3);
+        let mut total = 0;
+        while let Some(ch) = c.take_sized(|_| 0) {
+            total += ch.len;
+        }
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn compiled_chunks_cover() {
+        let cc = CompiledChunks::from_sizes(10, [4, 4, 4, 4]);
+        assert_eq!(cc.sizes(), vec![4, 4, 2]);
+        let mut total = 0;
+        while let Some(ch) = cc.take() {
+            total += ch.len;
+        }
+        assert_eq!(total, 10);
+        assert!(cc.take().is_none());
+        cc.reset();
+        assert!(cc.take().is_some());
+    }
+
+    #[test]
+    fn compiled_chunks_empty_space() {
+        let cc = CompiledChunks::from_sizes(0, [4, 4]);
+        assert!(cc.is_empty());
+        assert!(cc.take().is_none());
+    }
+
+    #[test]
+    fn concurrent_take_fixed_no_overlap() {
+        use std::sync::Arc;
+        let c = Arc::new(TakenCounter::default());
+        c.reset(100_000);
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(ch) = c.take_fixed(7) {
+                    got.push(ch);
+                }
+                got
+            }));
+        }
+        let mut all: Vec<Chunk> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_by_key(|c| c.first);
+        let mut expect = 0;
+        for ch in &all {
+            assert_eq!(ch.first, expect);
+            expect = ch.end();
+        }
+        assert_eq!(expect, 100_000);
+    }
+}

@@ -1,0 +1,100 @@
+//! `schedule(dynamic[,k])` — dynamic block scheduling / pure
+//! self-scheduling [29].
+//!
+//! A single shared cursor over the iteration space; whenever a thread is
+//! idle it grabs the next `k` iterations (`k = 1` is PSS/SS, the easiest
+//! self-scheduling scheme: best load balance, maximal scheduling
+//! overhead).  The dequeue is one wait-free `fetch_add` — this is the hot
+//! path the E4 overhead experiment measures.
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::common::TakenCounter;
+
+pub struct DynamicChunk {
+    k: u64,
+    todo: TakenCounter,
+}
+
+impl DynamicChunk {
+    pub fn new(k: u64) -> Self {
+        assert!(k > 0, "dynamic chunk must be positive");
+        Self { k, todo: TakenCounter::default() }
+    }
+}
+
+impl Scheduler for DynamicChunk {
+    fn name(&self) -> String {
+        if self.k == 1 {
+            "dynamic,1(SS)".into()
+        } else {
+            format!("dynamic,{}", self.k)
+        }
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, _team: &TeamSpec, _record: &mut LoopRecord) {
+        self.todo.reset(loop_.iter_count());
+    }
+
+    #[inline]
+    fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        self.todo.take_fixed(self.k)
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    fn drain(n: u64, p: usize, k: u64) -> Vec<(usize, Chunk)> {
+        let mut s = DynamicChunk::new(k);
+        drain_chunks(
+            &mut s,
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &mut LoopRecord::default(),
+        )
+    }
+
+    #[test]
+    fn covers_space() {
+        for (n, p, k) in [(100, 4, 1), (100, 4, 7), (5, 8, 3), (1, 1, 1)] {
+            let chunks = drain(n, p, k);
+            verify_cover(&chunks, n).unwrap();
+        }
+    }
+
+    #[test]
+    fn ss_one_iteration_per_chunk() {
+        let chunks = drain(50, 4, 1);
+        assert_eq!(chunks.len(), 50);
+        assert!(chunks.iter().all(|(_, c)| c.len == 1));
+    }
+
+    #[test]
+    fn chunk_count_matches_ceiling() {
+        let chunks = drain(100, 4, 7);
+        assert_eq!(chunks.len(), 15); // ceil(100/7)
+        assert_eq!(chunks.last().unwrap().1.len, 2);
+    }
+
+    #[test]
+    fn chunks_issued_in_order() {
+        let chunks = drain(64, 3, 8);
+        let mut expect = 0;
+        for (_, c) in &chunks {
+            assert_eq!(c.first, expect);
+            expect = c.end();
+        }
+    }
+
+    #[test]
+    fn empty_loop_gives_nothing() {
+        assert!(drain(0, 4, 16).is_empty());
+    }
+}

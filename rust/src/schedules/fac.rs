@@ -1,0 +1,189 @@
+//! Factoring — Flynn Hummel, Schonberg & Flynn 1992 [15].
+//!
+//! Iterations are scheduled in *batches*: each batch hands every one of the
+//! `P` threads an equal chunk, and the batch's chunk size is chosen from a
+//! probabilistic model of the iteration times (mean `mu`, stddev `sigma`)
+//! so that the batch finishes in balanced time with high probability:
+//!
+//! ```text
+//! b_j  = (P / (2 * sqrt(R_j))) * sigma / mu
+//! x_j  = 1 + b_j^2 + b_j * sqrt(b_j^2 + 2)          (j >= 1)
+//! x_0  = 1 + b_0^2 + b_0 * sqrt(b_0^2 + 4)          (first batch)
+//! k_j  = ceil(R_j / (x_j * P))
+//! ```
+//!
+//! `mu`/`sigma` may be supplied (the paper's "known profile" case) or read
+//! from the loop's history record.  The practical parameter-free variant
+//! that fixes `x = 2` is [`crate::schedules::fac2`].
+
+use std::sync::Mutex;
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::common::ceil_div;
+
+struct FacState {
+    /// Next unscheduled iteration.
+    cursor: u64,
+    n: u64,
+    /// Chunks still to be issued from the current batch.
+    batch_left: u64,
+    /// Chunk size of the current batch.
+    batch_size: u64,
+    /// Batch ordinal (0 = first, which uses the sqrt(b^2+4) factor).
+    batch_no: u64,
+}
+
+pub struct Fac {
+    /// Known iteration-time profile; `None` = use history.
+    pub mu_sigma: Option<(f64, f64)>,
+    p: u64,
+    /// Effective sigma/mu ratio resolved in `start`.
+    cv: f64,
+    state: Mutex<FacState>,
+}
+
+impl Fac {
+    pub fn new(mu_sigma: Option<(f64, f64)>) -> Self {
+        Self {
+            mu_sigma,
+            p: 1,
+            cv: 0.0,
+            state: Mutex::new(FacState {
+                cursor: 0,
+                n: 0,
+                batch_left: 0,
+                batch_size: 0,
+                batch_no: 0,
+            }),
+        }
+    }
+
+    /// The factoring ratio `x_j` for remaining `r`, team `p`, cv `sigma/mu`.
+    pub fn factor(r: u64, p: u64, cv: f64, first_batch: bool) -> f64 {
+        if r == 0 {
+            return 2.0;
+        }
+        let b = (p as f64 / (2.0 * (r as f64).sqrt())) * cv;
+        let disc = if first_batch { 4.0 } else { 2.0 };
+        1.0 + b * b + b * (b * b + disc).sqrt()
+    }
+}
+
+impl Scheduler for Fac {
+    fn name(&self) -> String {
+        "fac".into()
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, record: &mut LoopRecord) {
+        self.p = team.nthreads as u64;
+        self.cv = match self.mu_sigma {
+            Some((mu, sigma)) if mu > 0.0 => sigma / mu,
+            // Unknown profile: use measured history; 0 cv degenerates to
+            // x ~= 1 + eps i.e. near block scheduling in one batch wave.
+            _ => record.loop_stats.cov(),
+        };
+        let mut st = self.state.lock().unwrap();
+        *st = FacState {
+            cursor: 0,
+            n: loop_.iter_count(),
+            batch_left: 0,
+            batch_size: 0,
+            batch_no: 0,
+        };
+    }
+
+    fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        let mut st = self.state.lock().unwrap();
+        if st.cursor >= st.n {
+            return None;
+        }
+        if st.batch_left == 0 {
+            let r = st.n - st.cursor;
+            let x = Self::factor(r, self.p, self.cv, st.batch_no == 0);
+            st.batch_size = ceil_div(r, (x * self.p as f64).ceil() as u64).max(1);
+            st.batch_left = self.p;
+            st.batch_no += 1;
+        }
+        let len = st.batch_size.min(st.n - st.cursor);
+        let first = st.cursor;
+        st.cursor += len;
+        st.batch_left -= 1;
+        Some(Chunk::new(first, len))
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    fn drain(n: u64, p: usize, ms: Option<(f64, f64)>) -> Vec<(usize, Chunk)> {
+        let mut s = Fac::new(ms);
+        drain_chunks(
+            &mut s,
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &mut LoopRecord::default(),
+        )
+    }
+
+    #[test]
+    fn covers_space() {
+        for cv in [0.0, 0.3, 1.0, 3.0] {
+            let chunks = drain(10_000, 8, Some((100.0, 100.0 * cv)));
+            verify_cover(&chunks, 10_000).unwrap();
+        }
+    }
+
+    #[test]
+    fn batches_of_p_equal_chunks() {
+        let chunks = drain(10_000, 4, Some((100.0, 50.0)));
+        // First 4 chunks (one batch) all equal.
+        let first_batch: Vec<u64> = chunks[..4].iter().map(|(_, c)| c.len).collect();
+        assert!(first_batch.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn zero_cv_factor_is_one() {
+        // cv=0 -> b=0 -> x=1: first batch takes everything in P chunks.
+        let x = Fac::factor(1000, 4, 0.0, false);
+        assert!((x - 1.0).abs() < 1e-12);
+        let chunks = drain(1000, 4, Some((100.0, 0.0)));
+        assert_eq!(chunks.len(), 4);
+        assert!(chunks.iter().all(|(_, c)| c.len == 250));
+    }
+
+    #[test]
+    fn higher_cv_smaller_first_chunks() {
+        let calm = drain(10_000, 8, Some((100.0, 10.0)));
+        let noisy = drain(10_000, 8, Some((100.0, 300.0)));
+        assert!(noisy[0].1.len < calm[0].1.len);
+        assert!(noisy.len() > calm.len());
+    }
+
+    #[test]
+    fn first_batch_factor_larger() {
+        let x0 = Fac::factor(1000, 8, 1.0, true);
+        let x1 = Fac::factor(1000, 8, 1.0, false);
+        assert!(x0 > x1);
+    }
+
+    #[test]
+    fn chunk_sizes_nonincreasing_across_batches() {
+        let chunks = drain(100_000, 8, Some((100.0, 100.0)));
+        let lens: Vec<u64> = chunks.iter().map(|(_, c)| c.len).collect();
+        // Compare batch heads (every P-th chunk).
+        let heads: Vec<u64> = lens.chunks(8).map(|b| b[0]).collect();
+        assert!(heads.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn empty_loop() {
+        assert!(drain(0, 4, Some((1.0, 1.0))).is_empty());
+    }
+}

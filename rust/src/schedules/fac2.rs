@@ -1,0 +1,130 @@
+//! FAC2 — practical factoring with a fixed ratio `x = 2` [15],[8].
+//!
+//! Each batch schedules half of the remaining iterations in `P` equal
+//! chunks: `k_j = ceil(R_j / 2P)`.  This drops the `mu`/`sigma` requirement
+//! of full factoring while keeping its batch structure, and is the variant
+//! implemented in LaPeSD libGOMP and (recently) the LLVM OpenMP RTL [22].
+//!
+//! The chunk sequence is deterministic and dequeue-order independent, so —
+//! like TSS — it compiles to a boundary list consumed by one `fetch_add`.
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::common::{ceil_div, CompiledChunks};
+
+pub struct Fac2 {
+    compiled: CompiledChunks,
+}
+
+impl Fac2 {
+    pub fn new() -> Self {
+        Self { compiled: CompiledChunks::default() }
+    }
+
+    /// The FAC2 chunk-size sequence for `n` iterations on `p` threads.
+    pub fn sequence(n: u64, p: u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut r = n;
+        while r > 0 {
+            let k = ceil_div(r, 2 * p).max(1);
+            for _ in 0..p {
+                if r == 0 {
+                    break;
+                }
+                let take = k.min(r);
+                out.push(take);
+                r -= take;
+            }
+        }
+        out
+    }
+}
+
+impl Default for Fac2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for Fac2 {
+    fn name(&self) -> String {
+        "fac2".into()
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, _record: &mut LoopRecord) {
+        let n = loop_.iter_count();
+        self.compiled =
+            CompiledChunks::from_sizes(n, Self::sequence(n, team.nthreads as u64));
+    }
+
+    #[inline]
+    fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        self.compiled.take()
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    #[test]
+    fn covers_space() {
+        for (n, p) in [(1000u64, 4usize), (17, 3), (1, 8), (100_000, 16)] {
+            let mut s = Fac2::new();
+            let chunks = drain_chunks(
+                &mut s,
+                &LoopSpec::upto(n),
+                &TeamSpec::uniform(p),
+                &mut LoopRecord::default(),
+            );
+            verify_cover(&chunks, n).unwrap();
+        }
+    }
+
+    #[test]
+    fn halving_batches() {
+        // N=1600, P=4: k_0 = 1600/8 = 200 (4 chunks), R=800, k_1 = 100, ...
+        let seq = Fac2::sequence(1600, 4);
+        assert_eq!(&seq[..4], &[200, 200, 200, 200]);
+        assert_eq!(&seq[4..8], &[100, 100, 100, 100]);
+        assert_eq!(&seq[8..12], &[50, 50, 50, 50]);
+        assert_eq!(seq.iter().sum::<u64>(), 1600);
+    }
+
+    #[test]
+    fn batch_heads_halve() {
+        let seq = Fac2::sequence(100_000, 8);
+        let heads: Vec<u64> = seq.chunks(8).map(|b| b[0]).collect();
+        for w in heads.windows(2) {
+            assert!(w[1] <= w[0]);
+            // Roughly halving until the tail.
+            if w[0] > 4 {
+                assert!(w[1] * 2 >= w[0] - 1, "batch heads {w:?} not ~halving");
+            }
+        }
+    }
+
+    #[test]
+    fn tail_is_single_iterations() {
+        let seq = Fac2::sequence(1000, 4);
+        assert_eq!(*seq.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn sequence_sum_invariant() {
+        for n in [1u64, 2, 7, 63, 64, 65, 9999] {
+            for p in [1u64, 2, 5, 16] {
+                assert_eq!(
+                    Fac2::sequence(n, p).iter().sum::<u64>(),
+                    n,
+                    "n={n} p={p}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Fixed-Size Chunking — Kruskal & Weiss 1985 [24].
+//!
+//! Like `dynamic,k` but with the chunk size *derived*: FSC chooses the
+//! single fixed chunk size that minimizes expected makespan given the
+//! scheduling overhead `h` and the iteration-time variability `sigma`:
+//!
+//! ```text
+//! k_opt = ( sqrt(2) * N * h / (sigma * P * sqrt(ln P)) )^(2/3)
+//! ```
+//!
+//! This is the scheme the paper cites as Intel's "static stealing /
+//! fixed-size chunking" ancestor.  When `h`/`sigma` are not supplied they
+//! are taken from the loop's history record (measured mean/stddev), which
+//! makes FSC the simplest *history-using* schedule in the suite.
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::common::TakenCounter;
+
+pub struct Fsc {
+    /// Scheduling overhead per dequeue, ns (the `h` of the formula).
+    pub overhead_ns: f64,
+    /// Iteration-time stddev, ns; `None` = read from history.
+    pub sigma_ns: Option<f64>,
+    k: u64,
+    todo: TakenCounter,
+}
+
+impl Fsc {
+    pub fn new(overhead_ns: f64, sigma_ns: Option<f64>) -> Self {
+        Self { overhead_ns, sigma_ns, k: 1, todo: TakenCounter::default() }
+    }
+
+    /// Kruskal-Weiss optimal fixed chunk size.
+    pub fn k_opt(n: u64, p: u64, h_ns: f64, sigma_ns: f64) -> u64 {
+        if sigma_ns <= 0.0 || n == 0 {
+            // No variability: a single block per thread is optimal.
+            return (n as f64 / p as f64).ceil().max(1.0) as u64;
+        }
+        let p_f = (p.max(2)) as f64;
+        let num = std::f64::consts::SQRT_2 * n as f64 * h_ns;
+        let den = sigma_ns * p_f * p_f.ln().sqrt();
+        ((num / den).powf(2.0 / 3.0).round() as u64).clamp(1, n.max(1))
+    }
+}
+
+impl Scheduler for Fsc {
+    fn name(&self) -> String {
+        "fsc".into()
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, record: &mut LoopRecord) {
+        let n = loop_.iter_count();
+        let sigma = self
+            .sigma_ns
+            .unwrap_or_else(|| record.loop_stats.stddev())
+            .max(0.0);
+        self.k = Self::k_opt(n, team.nthreads as u64, self.overhead_ns, sigma);
+        self.todo.reset(n);
+    }
+
+    #[inline]
+    fn next(&self, _tid: usize, fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        let _ = fb;
+        self.todo.take_fixed(self.k)
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {}
+
+    fn is_adaptive(&self) -> bool {
+        // Uses history (previous-invocation sigma) but not per-chunk
+        // feedback within an invocation.
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    #[test]
+    fn covers_space() {
+        let mut s = Fsc::new(1000.0, Some(50.0));
+        let chunks = drain_chunks(
+            &mut s,
+            &LoopSpec::upto(1000),
+            &TeamSpec::uniform(4),
+            &mut LoopRecord::default(),
+        );
+        verify_cover(&chunks, 1000).unwrap();
+    }
+
+    #[test]
+    fn zero_sigma_gives_blocks() {
+        assert_eq!(Fsc::k_opt(1000, 4, 100.0, 0.0), 250);
+    }
+
+    #[test]
+    fn higher_overhead_bigger_chunks() {
+        let lo = Fsc::k_opt(100_000, 8, 100.0, 1000.0);
+        let hi = Fsc::k_opt(100_000, 8, 10_000.0, 1000.0);
+        assert!(hi > lo, "{hi} !> {lo}");
+    }
+
+    #[test]
+    fn higher_variance_smaller_chunks() {
+        let calm = Fsc::k_opt(100_000, 8, 1000.0, 100.0);
+        let noisy = Fsc::k_opt(100_000, 8, 1000.0, 10_000.0);
+        assert!(noisy < calm, "{noisy} !< {calm}");
+    }
+
+    #[test]
+    fn k_clamped_to_space() {
+        assert!(Fsc::k_opt(10, 2, 1e12, 1.0) <= 10);
+        assert!(Fsc::k_opt(10, 2, 1e-9, 1e12) >= 1);
+    }
+
+    #[test]
+    fn sigma_from_history() {
+        let mut rec = LoopRecord::default();
+        for x in [100.0, 200.0, 300.0, 150.0] {
+            rec.loop_stats.push(x);
+        }
+        let mut s = Fsc::new(500.0, None);
+        let chunks = drain_chunks(
+            &mut s,
+            &LoopSpec::upto(5000),
+            &TeamSpec::uniform(4),
+            &mut rec,
+        );
+        verify_cover(&chunks, 5000).unwrap();
+        // With history sigma > 0, chunks must not be the degenerate
+        // one-block-per-thread partition.
+        assert!(chunks.len() > 4);
+    }
+}

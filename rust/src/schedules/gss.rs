@@ -1,0 +1,192 @@
+//! `schedule(guided[,min])` — Guided Self-Scheduling, Polychronopoulos &
+//! Kuck 1987 [26].
+//!
+//! Each dequeue takes `ceil(R/P)` of the `R` remaining iterations (at least
+//! `min`): exponentially decreasing chunks that front-load big blocks (low
+//! overhead) and keep a tail of small chunks for balancing — the earliest
+//! self-scheduling scheme to trade off imbalance vs. overhead.
+//!
+//! Because the chunk size depends on the remaining count, the dequeue is
+//! a CAS loop on the shared cursor.  §Perf note (EXPERIMENTS.md): a
+//! compiled-boundary variant ([`GssCompiled`]) was tried and MEASURED
+//! SLOWER per drain (GSS issues only ~P*ln(N/P) chunks, so `start`'s
+//! boundary allocation outweighs the cheaper dequeues); the CAS loop is
+//! the shipping implementation and the compiled variant is kept for the
+//! ablation bench.
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::common::{ceil_div, CompiledChunks, TakenCounter};
+
+pub struct Gss {
+    min_chunk: u64,
+    p: u64,
+    todo: TakenCounter,
+}
+
+impl Gss {
+    pub fn new(min_chunk: u64) -> Self {
+        assert!(min_chunk > 0, "guided min chunk must be positive");
+        Self { min_chunk, p: 1, todo: TakenCounter::default() }
+    }
+
+    /// The chunk-size sequence GSS produces for `n` iterations on `p`
+    /// threads under serial dequeue order (deterministic; used by tests
+    /// and the compiled-schedule optimization).
+    pub fn sequence(n: u64, p: u64, min_chunk: u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut r = n;
+        while r > 0 {
+            let k = ceil_div(r, p).max(min_chunk).min(r);
+            out.push(k);
+            r -= k;
+        }
+        out
+    }
+}
+
+impl Scheduler for Gss {
+    fn name(&self) -> String {
+        if self.min_chunk == 1 {
+            "guided(GSS)".into()
+        } else {
+            format!("guided,{}", self.min_chunk)
+        }
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, _record: &mut LoopRecord) {
+        self.p = team.nthreads as u64;
+        self.todo.reset(loop_.iter_count());
+    }
+
+    #[inline]
+    fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        let p = self.p;
+        let min = self.min_chunk;
+        self.todo.take_sized(|r| ceil_div(r, p).max(min))
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {}
+}
+
+/// The compiled-boundary GSS tried in the §Perf pass: `start` builds the
+/// full chunk list, `next` is one `fetch_add`.  Measured SLOWER than the
+/// CAS loop at realistic dequeue counts (see module doc); kept for the
+/// ablation bench and as the pattern reference for schedules where it
+/// DOES win (TSS/FAC2, which reuse [`CompiledChunks`]).
+pub struct GssCompiled {
+    min_chunk: u64,
+    compiled: CompiledChunks,
+}
+
+impl GssCompiled {
+    pub fn new(min_chunk: u64) -> Self {
+        assert!(min_chunk > 0);
+        Self { min_chunk, compiled: CompiledChunks::default() }
+    }
+}
+
+impl Scheduler for GssCompiled {
+    fn name(&self) -> String {
+        "guided(compiled)".into()
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, _record: &mut LoopRecord) {
+        let n = loop_.iter_count();
+        let seq = Gss::sequence(n, team.nthreads as u64, self.min_chunk);
+        self.compiled = CompiledChunks::from_sizes(n, seq);
+    }
+
+    #[inline]
+    fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        self.compiled.take()
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    fn drain(n: u64, p: usize, min: u64) -> Vec<(usize, Chunk)> {
+        let mut s = Gss::new(min);
+        drain_chunks(
+            &mut s,
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &mut LoopRecord::default(),
+        )
+    }
+
+    #[test]
+    fn covers_space() {
+        for (n, p) in [(1000u64, 4usize), (17, 3), (1, 8), (7, 7)] {
+            verify_cover(&drain(n, p, 1), n).unwrap();
+        }
+    }
+
+    #[test]
+    fn classic_sequence_n100_p4() {
+        // ceil(100/4)=25, ceil(75/4)=19, ceil(56/4)=14, ...
+        let seq = Gss::sequence(100, 4, 1);
+        assert_eq!(&seq[..4], &[25, 19, 14, 11]);
+        assert_eq!(seq.iter().sum::<u64>(), 100);
+    }
+
+    #[test]
+    fn chunk_sizes_nonincreasing() {
+        let seq = Gss::sequence(10_000, 8, 1);
+        assert!(seq.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn min_chunk_respected() {
+        let seq = Gss::sequence(1000, 4, 16);
+        // All chunks except possibly the last are >= 16.
+        for &k in &seq[..seq.len() - 1] {
+            assert!(k >= 16);
+        }
+        assert_eq!(seq.iter().sum::<u64>(), 1000);
+    }
+
+    #[test]
+    fn serial_drain_matches_sequence() {
+        // With one thread draining, dequeue order is serial, so the live
+        // scheduler must reproduce the closed-form sequence exactly.
+        let chunks = drain(500, 4, 1);
+        let lens: Vec<u64> = chunks.iter().map(|(_, c)| c.len).collect();
+        // drain_chunks with P=4 round-robins but GSS is thread-agnostic:
+        // sizes only depend on dequeue order.
+        assert_eq!(lens, Gss::sequence(500, 4, 1));
+    }
+
+    #[test]
+    fn single_thread_takes_everything_first() {
+        let seq = Gss::sequence(64, 1, 1);
+        assert_eq!(seq, vec![64]);
+    }
+
+    #[test]
+    fn empty_loop() {
+        assert!(drain(0, 4, 1).is_empty());
+    }
+
+    #[test]
+    fn compiled_equals_online() {
+        // The perf-pass variant must produce the identical schedule.
+        for (n, p) in [(1000u64, 4usize), (65_536, 8), (17, 3)] {
+            let mut a = Gss::new(1);
+            let mut b = GssCompiled::new(1);
+            let spec = LoopSpec::upto(n);
+            let team = TeamSpec::uniform(p);
+            let ca = drain_chunks(&mut a, &spec, &team, &mut LoopRecord::default());
+            let cb: Vec<_> =
+                drain_chunks(&mut b, &spec, &team, &mut LoopRecord::default());
+            assert_eq!(ca, cb, "n={n} p={p}");
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Hybrid static/dynamic scheduling — Donfack, Grigori, Gropp & Kale
+//! 2012 [10], Kale et al. [18],[20].
+//!
+//! A fraction `f_static` of the iteration space is block-partitioned
+//! statically (locality, zero overhead); the remaining `1 - f_static` is
+//! self-scheduled from a shared queue (balance).  The paper cites this as
+//! a strategy that "mix[es] static and dynamic scheduling to maintain a
+//! balance between data locality and load balance", with the dynamic
+//! iterations still executing "in consecutive order on a thread to the
+//! extent possible" — achieved here by having each thread drain its own
+//! static block before touching the shared tail.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::common::{ceil_div, TakenCounter};
+
+pub struct Hybrid {
+    /// Fraction of the space scheduled statically, in `[0, 1]`.
+    pub f_static: f64,
+    /// Chunk size for the dynamic tail.
+    pub dyn_chunk: u64,
+    /// Per-thread static ranges `(next, end)`.
+    static_next: Vec<AtomicU64>,
+    static_end: Vec<u64>,
+    /// Chunk each thread takes from its static block per dequeue.
+    static_chunk: u64,
+    /// Shared dynamic tail over `[n_static, n)`.
+    tail: TakenCounter,
+    tail_base: u64,
+}
+
+impl Hybrid {
+    pub fn new(f_static: f64, dyn_chunk: u64) -> Self {
+        assert!((0.0..=1.0).contains(&f_static), "f_static must be in [0,1]");
+        assert!(dyn_chunk > 0);
+        Self {
+            f_static,
+            dyn_chunk,
+            static_next: Vec::new(),
+            static_end: Vec::new(),
+            static_chunk: 1,
+            tail: TakenCounter::default(),
+            tail_base: 0,
+        }
+    }
+}
+
+impl Scheduler for Hybrid {
+    fn name(&self) -> String {
+        format!("hybrid,{:.2},{}", self.f_static, self.dyn_chunk)
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, _record: &mut LoopRecord) {
+        let n = loop_.iter_count();
+        let p = team.nthreads as u64;
+        let n_static = ((n as f64 * self.f_static).floor() as u64).min(n);
+        // Block-partition [0, n_static) over P threads.
+        let base = n_static / p;
+        let rem = n_static % p;
+        let mut lo = 0u64;
+        self.static_next = Vec::with_capacity(p as usize);
+        self.static_end = Vec::with_capacity(p as usize);
+        for t in 0..p {
+            let len = base + u64::from(t < rem);
+            self.static_next.push(AtomicU64::new(lo));
+            self.static_end.push(lo + len);
+            lo += len;
+        }
+        // Static blocks are consumed in sub-chunks so feedback/measurement
+        // still happens at reasonable granularity.
+        self.static_chunk = ceil_div(base.max(1), 4).max(1);
+        self.tail_base = n_static;
+        self.tail.reset(n - n_static);
+    }
+
+    fn next(&self, tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        // 1. Own static block first (consecutive order, locality).
+        let end = self.static_end[tid];
+        let cur = self.static_next[tid].fetch_add(self.static_chunk, Ordering::Relaxed);
+        if cur < end {
+            return Some(Chunk::new(cur, self.static_chunk.min(end - cur)));
+        }
+        // 2. Shared dynamic tail.
+        self.tail
+            .take_fixed(self.dyn_chunk)
+            .map(|c| Chunk::new(self.tail_base + c.first, c.len))
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    fn drain(n: u64, p: usize, f: f64, k: u64) -> Vec<(usize, Chunk)> {
+        let mut s = Hybrid::new(f, k);
+        drain_chunks(
+            &mut s,
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &mut LoopRecord::default(),
+        )
+    }
+
+    #[test]
+    fn covers_space_various_fractions() {
+        for f in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            verify_cover(&drain(10_000, 8, f, 16), 10_000).unwrap();
+        }
+    }
+
+    #[test]
+    fn fully_dynamic_at_zero() {
+        let chunks = drain(100, 4, 0.0, 10);
+        // All chunks come from the shared tail: issued in order.
+        let mut expect = 0;
+        for (_, c) in &chunks {
+            assert_eq!(c.first, expect);
+            expect = c.end();
+        }
+    }
+
+    #[test]
+    fn fully_static_at_one() {
+        let chunks = drain(100, 4, 1.0, 10);
+        verify_cover(&chunks, 100).unwrap();
+        // Each thread only touches its own quarter.
+        for (tid, c) in &chunks {
+            let lo = *tid as u64 * 25;
+            assert!(c.first >= lo && c.end() <= lo + 25);
+        }
+    }
+
+    #[test]
+    fn static_part_is_thread_local() {
+        let chunks = drain(1000, 4, 0.5, 8);
+        verify_cover(&chunks, 1000).unwrap();
+        // Iterations < 500 must be executed by their block owner.
+        for (tid, c) in &chunks {
+            if c.end() <= 500 {
+                let lo = *tid as u64 * 125;
+                assert!(
+                    c.first >= lo && c.end() <= lo + 125,
+                    "static chunk {c:?} on wrong thread {tid}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_spaces() {
+        verify_cover(&drain(1, 4, 0.5, 4), 1).unwrap();
+        verify_cover(&drain(3, 8, 0.9, 2), 3).unwrap();
+        assert!(drain(0, 4, 0.5, 4).is_empty());
+    }
+}

@@ -1,0 +1,394 @@
+//! The schedule strategy library: every strategy the paper cites,
+//! implemented natively against the UDS [`Scheduler`] trait.
+//!
+//! See DESIGN.md §3 for the strategy-to-citation table.  The UDS
+//! re-expressions of these strategies (through the §4.1 lambda and §4.2
+//! declare frontends) live in [`uds_port`]; E6 verifies native and UDS
+//! forms produce identical chunk sequences.
+
+pub mod af;
+pub mod auto_select;
+pub mod awf;
+pub mod common;
+pub mod dynamic_chunk;
+pub mod fac;
+pub mod fac2;
+pub mod fsc;
+pub mod gss;
+pub mod hybrid;
+pub mod rand_sched;
+pub mod static_block;
+pub mod static_steal;
+pub mod tss;
+pub mod tuned;
+pub mod uds_port;
+pub mod wf2;
+
+use crate::coordinator::scheduler::{ScheduleFactory, Scheduler};
+
+pub use af::Af;
+pub use auto_select::AutoSelect;
+pub use awf::{Awf, AwfVariant};
+pub use dynamic_chunk::DynamicChunk;
+pub use fac::Fac;
+pub use fac2::Fac2;
+pub use fsc::Fsc;
+pub use gss::{Gss, GssCompiled};
+pub use hybrid::Hybrid;
+pub use rand_sched::RandSched;
+pub use static_block::StaticBlock;
+pub use static_steal::StaticSteal;
+pub use tss::Tss;
+pub use tuned::TunedDynamic;
+pub use wf2::Wf2;
+
+// ---- convenience constructors -------------------------------------------
+
+pub fn static_block(chunk: Option<u64>) -> Box<dyn Scheduler> {
+    Box::new(StaticBlock::new(chunk))
+}
+
+/// `schedule(static,1)` — static cyclic scheduling.
+pub fn static_cyclic() -> Box<dyn Scheduler> {
+    Box::new(StaticBlock::new(Some(1)))
+}
+
+pub fn dynamic_chunk(k: u64) -> Box<dyn Scheduler> {
+    Box::new(DynamicChunk::new(k))
+}
+
+/// `schedule(dynamic,1)` — pure self-scheduling (PSS/SS).
+pub fn self_sched() -> Box<dyn Scheduler> {
+    Box::new(DynamicChunk::new(1))
+}
+
+pub fn gss(min_chunk: u64) -> Box<dyn Scheduler> {
+    Box::new(Gss::new(min_chunk))
+}
+
+pub fn tss(params: Option<(u64, u64)>) -> Box<dyn Scheduler> {
+    Box::new(Tss::new(params))
+}
+
+pub fn fsc(overhead_ns: f64, sigma_ns: Option<f64>) -> Box<dyn Scheduler> {
+    Box::new(Fsc::new(overhead_ns, sigma_ns))
+}
+
+pub fn fac(mu_sigma: Option<(f64, f64)>) -> Box<dyn Scheduler> {
+    Box::new(Fac::new(mu_sigma))
+}
+
+pub fn fac2() -> Box<dyn Scheduler> {
+    Box::new(Fac2::new())
+}
+
+pub fn wf2() -> Box<dyn Scheduler> {
+    Box::new(Wf2::new())
+}
+
+pub fn rand_sched(bounds: Option<(u64, u64)>, seed: u64) -> Box<dyn Scheduler> {
+    Box::new(RandSched::new(bounds, seed))
+}
+
+pub fn static_steal(own_chunk: u64) -> Box<dyn Scheduler> {
+    Box::new(StaticSteal::new(own_chunk))
+}
+
+pub fn awf(variant: AwfVariant) -> Box<dyn Scheduler> {
+    Box::new(Awf::new(variant))
+}
+
+pub fn af(min_chunk: u64) -> Box<dyn Scheduler> {
+    Box::new(Af::new(min_chunk))
+}
+
+pub fn hybrid(f_static: f64, dyn_chunk: u64) -> Box<dyn Scheduler> {
+    Box::new(Hybrid::new(f_static, dyn_chunk))
+}
+
+pub fn auto_select() -> Box<dyn Scheduler> {
+    Box::new(AutoSelect::new())
+}
+
+pub fn tuned_dynamic(k0: u64) -> Box<dyn Scheduler> {
+    Box::new(TunedDynamic::new(k0))
+}
+
+// ---- named schedule specs (CLI / config / eval sweeps) -------------------
+
+/// A parseable, serializable schedule description — what a
+/// `schedule(...)` clause names.  `ScheduleSpec::factory()` turns it into
+/// a [`ScheduleFactory`] for the executors.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScheduleSpec {
+    Static { chunk: Option<u64> },
+    Dynamic { chunk: u64 },
+    Guided { min_chunk: u64 },
+    Tss { params: Option<(u64, u64)> },
+    Fsc { overhead_ns: f64, sigma_ns: Option<f64> },
+    Fac { mu_sigma: Option<(f64, f64)> },
+    Fac2,
+    Wf2,
+    Rand { bounds: Option<(u64, u64)>, seed: u64 },
+    StaticSteal { own_chunk: u64 },
+    Awf { variant: String },
+    Af { min_chunk: u64 },
+    Hybrid { f_static: f64, dyn_chunk: u64 },
+    Auto,
+    Tuned { k0: u64 },
+}
+
+impl ScheduleSpec {
+    /// Parse CLI syntax: `static`, `static,16`, `dynamic,4`, `guided`,
+    /// `tss`, `tss,100,4`, `fsc,1000`, `fac`, `fac2`, `wf2`, `rand,7`,
+    /// `static_steal,2`, `awf-b|c|d|e`, `af`, `hybrid,0.5,8`, `auto`,
+    /// `tuned,8`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+        let head = parts[0].to_ascii_lowercase();
+        let num = |i: usize| -> Result<u64, String> {
+            parts
+                .get(i)
+                .ok_or_else(|| format!("'{s}': missing parameter {i}"))?
+                .parse::<u64>()
+                .map_err(|e| format!("'{s}': {e}"))
+        };
+        let fnum = |i: usize| -> Result<f64, String> {
+            parts
+                .get(i)
+                .ok_or_else(|| format!("'{s}': missing parameter {i}"))?
+                .parse::<f64>()
+                .map_err(|e| format!("'{s}': {e}"))
+        };
+        Ok(match head.as_str() {
+            "static" => ScheduleSpec::Static {
+                chunk: if parts.len() > 1 { Some(num(1)?) } else { None },
+            },
+            "cyclic" | "static_cyclic" => ScheduleSpec::Static { chunk: Some(1) },
+            "dynamic" | "ss" | "pss" => ScheduleSpec::Dynamic {
+                chunk: if parts.len() > 1 { num(1)? } else { 1 },
+            },
+            "guided" | "gss" => ScheduleSpec::Guided {
+                min_chunk: if parts.len() > 1 { num(1)? } else { 1 },
+            },
+            "tss" | "trapezoid" => ScheduleSpec::Tss {
+                params: if parts.len() > 2 {
+                    Some((num(1)?, num(2)?))
+                } else {
+                    None
+                },
+            },
+            "fsc" => ScheduleSpec::Fsc {
+                overhead_ns: if parts.len() > 1 { fnum(1)? } else { 1000.0 },
+                sigma_ns: if parts.len() > 2 { Some(fnum(2)?) } else { None },
+            },
+            "fac" => ScheduleSpec::Fac {
+                mu_sigma: if parts.len() > 2 {
+                    Some((fnum(1)?, fnum(2)?))
+                } else {
+                    None
+                },
+            },
+            "fac2" => ScheduleSpec::Fac2,
+            "wf" | "wf2" => ScheduleSpec::Wf2,
+            "rand" | "random" => ScheduleSpec::Rand {
+                bounds: if parts.len() > 2 {
+                    Some((num(1)?, num(2)?))
+                } else {
+                    None
+                },
+                seed: if parts.len() == 2 { num(1)? } else { 0x5EED },
+            },
+            "static_steal" | "steal" => ScheduleSpec::StaticSteal {
+                own_chunk: if parts.len() > 1 { num(1)? } else { 1 },
+            },
+            "awf" | "awf-b" => ScheduleSpec::Awf { variant: "b".into() },
+            "awf-c" => ScheduleSpec::Awf { variant: "c".into() },
+            "awf-d" => ScheduleSpec::Awf { variant: "d".into() },
+            "awf-e" => ScheduleSpec::Awf { variant: "e".into() },
+            "af" => ScheduleSpec::Af {
+                min_chunk: if parts.len() > 1 { num(1)? } else { 1 },
+            },
+            "hybrid" => ScheduleSpec::Hybrid {
+                f_static: if parts.len() > 1 { fnum(1)? } else { 0.5 },
+                dyn_chunk: if parts.len() > 2 { num(2)? } else { 8 },
+            },
+            "auto" => ScheduleSpec::Auto,
+            "tuned" | "tuned_dynamic" => ScheduleSpec::Tuned {
+                k0: if parts.len() > 1 { num(1)? } else { 8 },
+            },
+            _ => return Err(format!("unknown schedule '{s}'")),
+        })
+    }
+
+    /// Canonical display name.
+    pub fn label(&self) -> String {
+        match self {
+            ScheduleSpec::Static { chunk: None } => "static".into(),
+            ScheduleSpec::Static { chunk: Some(1) } => "static,1".into(),
+            ScheduleSpec::Static { chunk: Some(k) } => format!("static,{k}"),
+            ScheduleSpec::Dynamic { chunk } => format!("dynamic,{chunk}"),
+            ScheduleSpec::Guided { min_chunk: 1 } => "guided".into(),
+            ScheduleSpec::Guided { min_chunk } => format!("guided,{min_chunk}"),
+            ScheduleSpec::Tss { params: None } => "tss".into(),
+            ScheduleSpec::Tss { params: Some((f, l)) } => format!("tss,{f},{l}"),
+            ScheduleSpec::Fsc { .. } => "fsc".into(),
+            ScheduleSpec::Fac { .. } => "fac".into(),
+            ScheduleSpec::Fac2 => "fac2".into(),
+            ScheduleSpec::Wf2 => "wf2".into(),
+            ScheduleSpec::Rand { .. } => "rand".into(),
+            ScheduleSpec::StaticSteal { own_chunk } => format!("static_steal,{own_chunk}"),
+            ScheduleSpec::Awf { variant } => format!("awf-{variant}"),
+            ScheduleSpec::Af { .. } => "af".into(),
+            ScheduleSpec::Hybrid { f_static, dyn_chunk } => {
+                format!("hybrid,{f_static},{dyn_chunk}")
+            }
+            ScheduleSpec::Auto => "auto".into(),
+            ScheduleSpec::Tuned { k0 } => format!("tuned,{k0}"),
+        }
+    }
+
+    /// Build one scheduler instance.
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self {
+            ScheduleSpec::Static { chunk } => static_block(*chunk),
+            ScheduleSpec::Dynamic { chunk } => dynamic_chunk(*chunk),
+            ScheduleSpec::Guided { min_chunk } => gss(*min_chunk),
+            ScheduleSpec::Tss { params } => tss(*params),
+            ScheduleSpec::Fsc { overhead_ns, sigma_ns } => fsc(*overhead_ns, *sigma_ns),
+            ScheduleSpec::Fac { mu_sigma } => fac(*mu_sigma),
+            ScheduleSpec::Fac2 => fac2(),
+            ScheduleSpec::Wf2 => wf2(),
+            ScheduleSpec::Rand { bounds, seed } => rand_sched(*bounds, *seed),
+            ScheduleSpec::StaticSteal { own_chunk } => static_steal(*own_chunk),
+            ScheduleSpec::Awf { variant } => awf(
+                AwfVariant::parse(variant).unwrap_or(AwfVariant::B),
+            ),
+            ScheduleSpec::Af { min_chunk } => af(*min_chunk),
+            ScheduleSpec::Hybrid { f_static, dyn_chunk } => hybrid(*f_static, *dyn_chunk),
+            ScheduleSpec::Auto => auto_select(),
+            ScheduleSpec::Tuned { k0 } => tuned_dynamic(*k0),
+        }
+    }
+
+    /// A [`ScheduleFactory`] view of this spec.
+    pub fn factory(&self) -> Box<dyn ScheduleFactory> {
+        Box::new(SpecFactory(self.clone()))
+    }
+
+    /// The full evaluation roster (E2/E3/E6 sweep set).
+    pub fn roster() -> Vec<ScheduleSpec> {
+        vec![
+            ScheduleSpec::Static { chunk: None },
+            ScheduleSpec::Static { chunk: Some(1) },
+            ScheduleSpec::Dynamic { chunk: 1 },
+            ScheduleSpec::Dynamic { chunk: 16 },
+            ScheduleSpec::Guided { min_chunk: 1 },
+            ScheduleSpec::Tss { params: None },
+            ScheduleSpec::Fsc { overhead_ns: 1000.0, sigma_ns: None },
+            ScheduleSpec::Fac { mu_sigma: None },
+            ScheduleSpec::Fac2,
+            ScheduleSpec::Wf2,
+            ScheduleSpec::Rand { bounds: None, seed: 0x5EED },
+            ScheduleSpec::StaticSteal { own_chunk: 4 },
+            ScheduleSpec::Awf { variant: "b".into() },
+            ScheduleSpec::Awf { variant: "c".into() },
+            ScheduleSpec::Af { min_chunk: 1 },
+            ScheduleSpec::Hybrid { f_static: 0.5, dyn_chunk: 8 },
+            ScheduleSpec::Auto,
+            ScheduleSpec::Tuned { k0: 8 },
+        ]
+    }
+}
+
+struct SpecFactory(ScheduleSpec);
+
+impl ScheduleFactory for SpecFactory {
+    fn name(&self) -> String {
+        self.0.label()
+    }
+
+    fn build(&self) -> Box<dyn Scheduler> {
+        self.0.build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::history::LoopRecord;
+    use crate::coordinator::loop_spec::{LoopSpec, TeamSpec};
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in [
+            "static", "static,16", "dynamic,4", "guided", "tss", "tss,100,4",
+            "fac2", "wf2", "af", "auto", "hybrid,0.5,8", "awf-c",
+            "static_steal,2", "rand", "fsc,1000", "fac", "tuned,8",
+        ] {
+            let spec = ScheduleSpec::parse(s).unwrap();
+            let _ = spec.build();
+            let _ = spec.label();
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown() {
+        assert!(ScheduleSpec::parse("quantum").is_err());
+        assert!(ScheduleSpec::parse("dynamic,abc").is_err());
+    }
+
+    #[test]
+    fn aliases() {
+        assert_eq!(
+            ScheduleSpec::parse("ss").unwrap(),
+            ScheduleSpec::Dynamic { chunk: 1 }
+        );
+        assert_eq!(
+            ScheduleSpec::parse("cyclic").unwrap(),
+            ScheduleSpec::Static { chunk: Some(1) }
+        );
+        assert_eq!(ScheduleSpec::parse("gss").unwrap(), ScheduleSpec::Guided {
+            min_chunk: 1
+        });
+    }
+
+    #[test]
+    fn entire_roster_covers_space() {
+        // The master coverage test: every strategy in the roster must
+        // schedule every iteration exactly once on assorted geometries.
+        for spec in ScheduleSpec::roster() {
+            for (n, p) in [(1000u64, 4usize), (37, 5), (1, 2)] {
+                let mut s = spec.build();
+                let chunks = drain_chunks(
+                    &mut *s,
+                    &LoopSpec::upto(n),
+                    &TeamSpec::uniform(p),
+                    &mut LoopRecord::default(),
+                );
+                verify_cover(&chunks, n).unwrap_or_else(|e| {
+                    panic!("{} failed on n={n} p={p}: {e}", spec.label())
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn factory_name_matches_label() {
+        let spec = ScheduleSpec::Fac2;
+        assert_eq!(spec.factory().name(), "fac2");
+    }
+
+    #[test]
+    fn parse_label_roundtrip() {
+        // label() output must parse back to an equivalent spec for the
+        // CLI-expressible subset.
+        for spec in ScheduleSpec::roster() {
+            let label = spec.label();
+            let back = ScheduleSpec::parse(&label)
+                .unwrap_or_else(|e| panic!("label '{label}' unparseable: {e}"));
+            assert_eq!(back.label(), label);
+        }
+    }
+}

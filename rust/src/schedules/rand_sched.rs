@@ -1,0 +1,151 @@
+//! RAND — random self-scheduling [8].
+//!
+//! Each dequeue takes a chunk whose size is drawn uniformly from
+//! `[lo, hi]`.  Introduced in "OpenMP Loop Scheduling Revisited" as a
+//! strawman showing that even an *uninformed* randomized size often beats
+//! a badly matched deterministic schedule.  Default bounds follow the
+//! reference implementation: `lo = ceil(N / 100P)`, `hi = ceil(N / 2P)`.
+//!
+//! Deterministic per-(seed, dequeue-ordinal): reruns produce identical
+//! chunk sequences, which the reproducibility tests rely on.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::common::{ceil_div, TakenCounter};
+use crate::util::rng::Pcg;
+
+pub struct RandSched {
+    /// Explicit bounds; `None` = reference defaults from (N, P).
+    pub bounds: Option<(u64, u64)>,
+    pub seed: u64,
+    lo: u64,
+    hi: u64,
+    todo: TakenCounter,
+    ordinal: AtomicU64,
+}
+
+impl RandSched {
+    pub fn new(bounds: Option<(u64, u64)>, seed: u64) -> Self {
+        if let Some((lo, hi)) = bounds {
+            assert!(lo >= 1 && hi >= lo, "need 1 <= lo <= hi");
+        }
+        Self {
+            bounds,
+            seed,
+            lo: 1,
+            hi: 1,
+            todo: TakenCounter::default(),
+            ordinal: AtomicU64::new(0),
+        }
+    }
+
+    /// Size for dequeue `ordinal` — a pure function, so the sequence is
+    /// reproducible regardless of thread interleaving.
+    fn size_at(&self, ordinal: u64) -> u64 {
+        let mut rng =
+            Pcg::seed_from_u64(self.seed ^ ordinal.wrapping_mul(0x9E3779B97F4A7C15));
+        rng.range_u64(self.lo, self.hi)
+    }
+}
+
+impl Scheduler for RandSched {
+    fn name(&self) -> String {
+        "rand".into()
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, _record: &mut LoopRecord) {
+        let n = loop_.iter_count();
+        let p = team.nthreads as u64;
+        (self.lo, self.hi) = self.bounds.unwrap_or_else(|| {
+            (ceil_div(n.max(1), 100 * p).max(1), ceil_div(n.max(1), 2 * p).max(1))
+        });
+        if self.hi < self.lo {
+            self.hi = self.lo;
+        }
+        self.todo.reset(n);
+        self.ordinal = AtomicU64::new(0);
+    }
+
+    fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        let ord = self.ordinal.fetch_add(1, Ordering::Relaxed);
+        let k = self.size_at(ord);
+        self.todo.take_sized(|rem| k.min(rem))
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    fn drain(n: u64, p: usize, seed: u64) -> Vec<(usize, Chunk)> {
+        let mut s = RandSched::new(None, seed);
+        drain_chunks(
+            &mut s,
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &mut LoopRecord::default(),
+        )
+    }
+
+    #[test]
+    fn covers_space() {
+        for seed in 0..5 {
+            verify_cover(&drain(10_000, 8, seed), 10_000).unwrap();
+        }
+    }
+
+    #[test]
+    fn reproducible_for_fixed_seed() {
+        let a = drain(5000, 4, 42);
+        let b = drain(5000, 4, 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = drain(5000, 4, 1);
+        let b = drain(5000, 4, 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn sizes_within_default_bounds() {
+        let n = 10_000u64;
+        let p = 4u64;
+        let chunks = drain(n, p as usize, 7);
+        let lo = ceil_div(n, 100 * p);
+        let hi = ceil_div(n, 2 * p);
+        // All but the final remainder chunk obey the bounds.
+        for (_, c) in &chunks[..chunks.len() - 1] {
+            assert!(c.len >= lo.min(c.len) && c.len <= hi, "size {}", c.len);
+        }
+    }
+
+    #[test]
+    fn explicit_bounds_respected() {
+        let mut s = RandSched::new(Some((5, 9)), 3);
+        let chunks = drain_chunks(
+            &mut s,
+            &LoopSpec::upto(1000),
+            &TeamSpec::uniform(4),
+            &mut LoopRecord::default(),
+        );
+        verify_cover(&chunks, 1000).unwrap();
+        for (_, c) in &chunks[..chunks.len() - 1] {
+            assert!((5..=9).contains(&c.len));
+        }
+    }
+
+    #[test]
+    fn tiny_space() {
+        verify_cover(&drain(1, 8, 0), 1).unwrap();
+        verify_cover(&drain(3, 2, 0), 3).unwrap();
+    }
+}

@@ -1,0 +1,163 @@
+//! `schedule(static[,chunk])` — static block / block-cyclic scheduling [25].
+//!
+//! Without a chunk parameter, the `N` iterations are divided into `P`
+//! near-equal blocks of `ceil(N/P)` (the OpenMP default `static`).  With a
+//! chunk parameter `k`, chunks of `k` consecutive iterations are assigned
+//! round-robin: thread `t` owns chunks `t, t+P, t+2P, ...` — `k = 1` is
+//! *static cyclic* scheduling (`schedule(static,1)`).
+//!
+//! Fully static: the assignment is a pure function of `(N, P, k, t)`, so
+//! `next` is wait-free per-thread counter arithmetic with zero sharing —
+//! the paper's "virtually no scheduling overhead, at the expense of poor
+//! load balancing" point in the design space.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::common::ceil_div;
+
+pub struct StaticBlock {
+    /// Explicit chunk size; `None` selects the block partition.
+    chunk: Option<u64>,
+    n: u64,
+    p: usize,
+    /// Effective chunk size after `start`.
+    k: u64,
+    /// Per-thread ordinal of the next chunk to hand out.
+    cursor: Vec<AtomicU64>,
+}
+
+impl StaticBlock {
+    pub fn new(chunk: Option<u64>) -> Self {
+        if let Some(k) = chunk {
+            assert!(k > 0, "static chunk must be positive");
+        }
+        Self { chunk, n: 0, p: 1, k: 1, cursor: Vec::new() }
+    }
+}
+
+impl Scheduler for StaticBlock {
+    fn name(&self) -> String {
+        match self.chunk {
+            None => "static".into(),
+            Some(1) => "static,1(cyclic)".into(),
+            Some(k) => format!("static,{k}"),
+        }
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, _record: &mut LoopRecord) {
+        self.n = loop_.iter_count();
+        self.p = team.nthreads;
+        self.k = match self.chunk {
+            Some(k) => k,
+            // OpenMP static: one block of ceil(N/P) per thread.
+            None => ceil_div(self.n.max(1), self.p as u64),
+        };
+        self.cursor = (0..self.p).map(|_| AtomicU64::new(0)).collect();
+    }
+
+    fn next(&self, tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        let j = self.cursor[tid].fetch_add(1, Ordering::Relaxed);
+        let ordinal = tid as u64 + j * self.p as u64;
+        let first = ordinal.checked_mul(self.k)?;
+        if first >= self.n {
+            return None;
+        }
+        Some(Chunk::new(first, self.k.min(self.n - first)))
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    fn drain(n: u64, p: usize, chunk: Option<u64>) -> Vec<(usize, Chunk)> {
+        let mut s = StaticBlock::new(chunk);
+        drain_chunks(
+            &mut s,
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &mut LoopRecord::default(),
+        )
+    }
+
+    #[test]
+    fn block_partition_covers() {
+        let chunks = drain(100, 4, None);
+        verify_cover(&chunks, 100).unwrap();
+        // ceil(100/4)=25 per thread, one chunk each.
+        assert_eq!(chunks.len(), 4);
+        assert!(chunks.iter().all(|(_, c)| c.len == 25));
+    }
+
+    #[test]
+    fn block_partition_uneven() {
+        // N=10, P=4: ceil=3 -> blocks 3,3,3,1.
+        let chunks = drain(10, 4, None);
+        verify_cover(&chunks, 10).unwrap();
+        let mut lens: Vec<u64> = chunks.iter().map(|(_, c)| c.len).collect();
+        lens.sort();
+        assert_eq!(lens, vec![1, 3, 3, 3]);
+    }
+
+    #[test]
+    fn cyclic_assignment() {
+        // static,1: iteration i -> thread i mod P.
+        let chunks = drain(12, 3, Some(1));
+        verify_cover(&chunks, 12).unwrap();
+        for (tid, c) in &chunks {
+            assert_eq!(c.len, 1);
+            assert_eq!(c.first as usize % 3, *tid);
+        }
+    }
+
+    #[test]
+    fn block_cyclic_round_robin() {
+        // k=2, P=2, N=12: t0 gets chunks 0,2,4 -> [0,2),[4,6),[8,10).
+        let chunks = drain(12, 2, Some(2));
+        verify_cover(&chunks, 12).unwrap();
+        let t0: Vec<u64> = chunks
+            .iter()
+            .filter(|(t, _)| *t == 0)
+            .map(|(_, c)| c.first)
+            .collect();
+        assert_eq!(t0, vec![0, 4, 8]);
+    }
+
+    #[test]
+    fn more_threads_than_iterations() {
+        let chunks = drain(3, 8, None);
+        verify_cover(&chunks, 3).unwrap();
+    }
+
+    #[test]
+    fn empty_loop() {
+        assert!(drain(0, 4, None).is_empty());
+        assert!(drain(0, 4, Some(5)).is_empty());
+    }
+
+    #[test]
+    fn exhaustion_is_sticky() {
+        let mut s = StaticBlock::new(Some(4));
+        let spec = LoopSpec::upto(8);
+        let team = TeamSpec::uniform(2);
+        let mut rec = LoopRecord::default();
+        s.start(&spec, &team, &mut rec);
+        while s.next(0, None).is_some() {}
+        assert!(s.next(0, None).is_none());
+        assert!(s.next(0, None).is_none());
+    }
+
+    #[test]
+    fn deterministic_assignment() {
+        let a = drain(1000, 7, Some(13));
+        let b = drain(1000, 7, Some(13));
+        assert_eq!(a, b);
+    }
+}

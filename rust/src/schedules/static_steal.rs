@@ -1,0 +1,175 @@
+//! Static stealing — the Intel/LLVM RTL's `static_steal` schedule [24],[1].
+//!
+//! Iterations are first partitioned statically (one contiguous block per
+//! thread, giving static scheduling's locality); a thread that exhausts
+//! its own block *steals* half of the largest remaining victim block.
+//! This is receiver-initiated load balancing layered over a static
+//! assignment — the scheme the paper cites as an RTL extension that a UDS
+//! interface must be able to express.
+//!
+//! Each per-thread range is a `Mutex<(lo, hi)>`; owners take `k` from the
+//! front, thieves split from the back, so owner and thief contend only on
+//! the victim's lock and only during steals.
+
+use std::sync::Mutex;
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+
+pub struct StaticSteal {
+    /// Iterations an owner takes from its own block per dequeue.
+    pub own_chunk: u64,
+    ranges: Vec<Mutex<(u64, u64)>>,
+}
+
+impl StaticSteal {
+    pub fn new(own_chunk: u64) -> Self {
+        assert!(own_chunk > 0);
+        Self { own_chunk, ranges: Vec::new() }
+    }
+}
+
+impl Scheduler for StaticSteal {
+    fn name(&self) -> String {
+        format!("static_steal,{}", self.own_chunk)
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, _record: &mut LoopRecord) {
+        let n = loop_.iter_count();
+        let p = team.nthreads as u64;
+        let base = n / p;
+        let rem = n % p;
+        self.ranges = (0..p)
+            .map(|t| {
+                let extra = t.min(rem);
+                let lo = t * base + extra;
+                let len = base + u64::from(t < rem);
+                Mutex::new((lo, lo + len))
+            })
+            .collect();
+    }
+
+    fn next(&self, tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        // 1. Take from our own block (front).
+        {
+            let mut r = self.ranges[tid].lock().unwrap();
+            if r.0 < r.1 {
+                let k = self.own_chunk.min(r.1 - r.0);
+                let c = Chunk::new(r.0, k);
+                r.0 += k;
+                return Some(c);
+            }
+        }
+        // 2. Steal: pick the victim with the most remaining work and take
+        //    the back half of its block.
+        loop {
+            let mut best: Option<(usize, u64)> = None;
+            for (v, range) in self.ranges.iter().enumerate() {
+                if v == tid {
+                    continue;
+                }
+                let r = range.lock().unwrap();
+                let left = r.1.saturating_sub(r.0);
+                if left > 0 && best.map_or(true, |(_, b)| left > b) {
+                    best = Some((v, left));
+                }
+            }
+            let Some((victim, _)) = best else {
+                return None;
+            };
+            let mut r = self.ranges[victim].lock().unwrap();
+            let left = r.1.saturating_sub(r.0);
+            if left == 0 {
+                continue; // raced; rescan
+            }
+            let take = (left / 2).max(1).min(left);
+            let first = r.1 - take;
+            r.1 = first;
+            return Some(Chunk::new(first, take));
+        }
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {
+        self.ranges.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    fn drain(n: u64, p: usize, k: u64) -> Vec<(usize, Chunk)> {
+        let mut s = StaticSteal::new(k);
+        drain_chunks(
+            &mut s,
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &mut LoopRecord::default(),
+        )
+    }
+
+    #[test]
+    fn covers_space() {
+        for (n, p, k) in [(1000u64, 4usize, 8u64), (17, 3, 1), (5, 8, 2), (64, 2, 64)] {
+            verify_cover(&drain(n, p, k), n).unwrap();
+        }
+    }
+
+    #[test]
+    fn owner_takes_front_of_own_block() {
+        let mut s = StaticSteal::new(4);
+        let mut rec = LoopRecord::default();
+        s.start(&LoopSpec::upto(100), &TeamSpec::uniform(4), &mut rec);
+        // Thread 2's block is [50, 75).
+        let c = s.next(2, None).unwrap();
+        assert_eq!(c, Chunk::new(50, 4));
+    }
+
+    #[test]
+    fn thief_steals_half_from_back() {
+        let mut s = StaticSteal::new(100);
+        let mut rec = LoopRecord::default();
+        s.start(&LoopSpec::upto(80), &TeamSpec::uniform(2), &mut rec);
+        // Blocks: t0 [0,40), t1 [40,80). Exhaust t0.
+        assert_eq!(s.next(0, None).unwrap(), Chunk::new(0, 40));
+        // t0 now steals half of t1's 40 from the back: [60, 80).
+        let stolen = s.next(0, None).unwrap();
+        assert_eq!(stolen, Chunk::new(60, 20));
+        // Victim still owns its front.
+        assert_eq!(s.next(1, None).unwrap(), Chunk::new(40, 20));
+    }
+
+    #[test]
+    fn single_thread_no_victims() {
+        verify_cover(&drain(50, 1, 7), 50).unwrap();
+    }
+
+    #[test]
+    fn concurrent_stress_no_double_schedule() {
+        use crate::coordinator::executor::{parallel_for, ExecOptions};
+        use crate::coordinator::history::HistoryArena;
+        use crate::coordinator::scheduler::FnFactory;
+        use std::sync::atomic::{AtomicU8, Ordering};
+
+        let n = 20_000u64;
+        let hits: Vec<AtomicU8> = (0..n).map(|_| AtomicU8::new(0)).collect();
+        let f = FnFactory::new("static_steal", || {
+            Box::new(StaticSteal::new(3)) as Box<dyn Scheduler>
+        });
+        let arena = HistoryArena::new();
+        parallel_for(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(8),
+            &f,
+            &arena,
+            &ExecOptions::default(),
+            |i, _| {
+                hits[i as usize].fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+}

@@ -1,0 +1,206 @@
+//! History-driven chunk tuning — the "composing low-overhead scheduling
+//! strategies" direction of Kale & Gropp [21] and the slack-conscious
+//! tuning of [19].
+//!
+//! A `dynamic,k` scheduler whose `k` is *tuned across invocations* by
+//! hill-climbing on the measured makespan stored in the loop's history
+//! record: double `k` while the makespan improves (overhead-bound), halve
+//! it when it regresses (imbalance-bound).  Demonstrates the paper's §3
+//! claim that the history mechanism "reduces the need for manual
+//! performance tuning".
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::common::{ceil_div, TakenCounter};
+
+/// Tuner state persisted in `LoopRecord::user`.
+#[derive(Clone, Copy, Debug)]
+struct TunerState {
+    k: u64,
+    prev_k: u64,
+    prev_makespan: Option<u64>,
+    /// +1 = growing k, -1 = shrinking.
+    direction: i8,
+}
+
+pub struct TunedDynamic {
+    /// Initial chunk size for a cold call site.
+    pub k0: u64,
+    k: u64,
+    k_max: u64,
+    todo: TakenCounter,
+}
+
+impl TunedDynamic {
+    pub fn new(k0: u64) -> Self {
+        assert!(k0 > 0);
+        Self { k0, k: k0, k_max: u64::MAX, todo: TakenCounter::default() }
+    }
+}
+
+impl Scheduler for TunedDynamic {
+    fn name(&self) -> String {
+        format!("tuned-dynamic(k={})", self.k)
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, record: &mut LoopRecord) {
+        let n = loop_.iter_count();
+        self.k_max = ceil_div(n.max(1), team.nthreads as u64).max(1);
+
+        // Pull the tuner state; propose this invocation's k.
+        let st = record
+            .user
+            .as_ref()
+            .and_then(|u| u.downcast_ref::<TunerState>())
+            .copied();
+        self.k = match st {
+            Some(st) => st.k.clamp(1, self.k_max),
+            None => self.k0.clamp(1, self.k_max),
+        };
+        record.tuned_chunk = Some(self.k);
+        self.todo.reset(n);
+    }
+
+    #[inline]
+    fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        self.todo.take_fixed(self.k)
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, record: &mut LoopRecord) {
+        // Hill-climb on the *previous* invocation's makespan (this
+        // invocation's makespan is recorded by the executor after finish,
+        // so we compare against last_makespan_ns = previous one).
+        let observed = record.last_makespan_ns;
+        let st = record
+            .user
+            .as_ref()
+            .and_then(|u| u.downcast_ref::<TunerState>())
+            .copied()
+            .unwrap_or(TunerState {
+                k: self.k,
+                prev_k: self.k,
+                prev_makespan: None,
+                direction: 1,
+            });
+
+        let mut next = st;
+        if observed > 0 {
+            match st.prev_makespan {
+                None => {
+                    // First measurement: try growing.
+                    next.prev_makespan = Some(observed);
+                    next.prev_k = st.k;
+                    next.k = (st.k * 2).clamp(1, self.k_max);
+                }
+                Some(prev) => {
+                    if observed <= prev {
+                        // Improvement: keep moving in the same direction.
+                        next.prev_makespan = Some(observed);
+                        next.prev_k = st.k;
+                    } else {
+                        // Regression: revert and reverse.
+                        next.k = st.prev_k;
+                        next.direction = -st.direction;
+                        next.prev_makespan = Some(observed);
+                    }
+                    next.k = if next.direction > 0 {
+                        (next.k * 2).clamp(1, self.k_max)
+                    } else {
+                        (next.k / 2).max(1)
+                    };
+                }
+            }
+        }
+        record.user = Some(Box::new(next));
+        record.tuned_chunk = Some(next.k);
+    }
+
+    fn is_adaptive(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    #[test]
+    fn covers_space() {
+        let mut s = TunedDynamic::new(8);
+        let chunks = drain_chunks(
+            &mut s,
+            &LoopSpec::upto(1000),
+            &TeamSpec::uniform(4),
+            &mut LoopRecord::default(),
+        );
+        verify_cover(&chunks, 1000).unwrap();
+    }
+
+    #[test]
+    fn cold_start_uses_k0() {
+        let mut s = TunedDynamic::new(16);
+        let mut rec = LoopRecord::default();
+        s.start(&LoopSpec::upto(10_000), &TeamSpec::uniform(4), &mut rec);
+        assert_eq!(rec.tuned_chunk, Some(16));
+    }
+
+    #[test]
+    fn k_grows_while_makespan_improves() {
+        let mut rec = LoopRecord::default();
+        let team = TeamSpec::uniform(4);
+        let spec = LoopSpec::upto(10_000);
+        let mut ks = Vec::new();
+        // Simulate improving makespans: 1000, 900, 800...
+        for (i, ms) in [1000u64, 900, 800, 700].iter().enumerate() {
+            let mut s = TunedDynamic::new(8);
+            s.start(&spec, &team, &mut rec);
+            ks.push(rec.tuned_chunk.unwrap());
+            while s.next(0, None).is_some() {}
+            rec.last_makespan_ns = *ms;
+            let _ = i;
+            s.finish(&team, &mut rec);
+        }
+        // k must be nondecreasing under monotone improvement.
+        assert!(ks.windows(2).all(|w| w[1] >= w[0]), "{ks:?}");
+        assert!(*ks.last().unwrap() > ks[0]);
+    }
+
+    #[test]
+    fn k_reverts_on_regression() {
+        let mut rec = LoopRecord::default();
+        let team = TeamSpec::uniform(4);
+        let spec = LoopSpec::upto(10_000);
+        let run = |rec: &mut LoopRecord, makespan: u64| {
+            let mut s = TunedDynamic::new(8);
+            s.start(&spec, &team, rec);
+            let k = rec.tuned_chunk.unwrap();
+            while s.next(0, None).is_some() {}
+            rec.last_makespan_ns = makespan;
+            s.finish(&team, rec);
+            k
+        };
+        run(&mut rec, 1000); // k=8, grow -> 16
+        let k2 = run(&mut rec, 500); // improved: keep growing -> 32
+        let k3 = run(&mut rec, 2000); // regression at k=32: revert toward 16
+        assert!(k3 >= k2); // k3 observed *during* the bad run
+        let k4 = run(&mut rec, 800);
+        assert!(k4 < k3, "should shrink after regression: {k3} -> {k4}");
+    }
+
+    #[test]
+    fn k_clamped_to_block_size() {
+        let mut rec = LoopRecord::default();
+        rec.user = Some(Box::new(TunerState {
+            k: 1_000_000,
+            prev_k: 1_000_000,
+            prev_makespan: Some(10),
+            direction: 1,
+        }));
+        let mut s = TunedDynamic::new(8);
+        s.start(&LoopSpec::upto(100), &TeamSpec::uniform(4), &mut rec);
+        assert!(rec.tuned_chunk.unwrap() <= 25);
+    }
+}

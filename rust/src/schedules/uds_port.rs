@@ -1,0 +1,528 @@
+//! UDS re-expressions of the built-in strategies — the paper's
+//! sufficiency claim, made executable.
+//!
+//! §3 of the paper: *"the four functions together with begin and end
+//! functions and [the] history object are necessary and sufficient to
+//! fully express an arbitrary user-defined loop scheduling strategy."*
+//!
+//! This module backs that claim by re-implementing representative
+//! strategies **through the user-facing frontends only** — no access to
+//! scheduler internals:
+//!
+//! * [`lambda_static`], [`lambda_dynamic`], [`lambda_gss`],
+//!   [`lambda_tss`], [`lambda_fac2`] — via the §4.1 lambda style;
+//! * [`declare_static`], [`declare_dynamic`], [`declare_gss`] — via the
+//!   §4.2 declare style;
+//! * [`wrap_native`] — the generic adapter proving *any* `Scheduler` is
+//!   expressible as a UDS lambda.
+//!
+//! Experiment E6 asserts chunk-sequence identity between each port and
+//! its native twin and measures the frontend overhead (bench `overhead`).
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use std::sync::Mutex;
+
+use crate::coordinator::declare::{Args, DeclarationBuilder, DeclaredFactory, Registry};
+use crate::coordinator::lambda::{LambdaFactory, UdsBuilder};
+use crate::coordinator::loop_spec::LoopSpec;
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::common::ceil_div;
+
+// ---------------------------------------------------------------------
+// Lambda-style ports (§4.1)
+// ---------------------------------------------------------------------
+
+/// `schedule(static,chunk)` as a lambda-style UDS (the paper's Fig. 2
+/// left, transliterated).
+pub fn lambda_static(chunk: u64) -> Arc<LambdaFactory> {
+    UdsBuilder::named("static")
+        .chunk_size(chunk)
+        .init(|ctx| {
+            let next: Vec<AtomicI64> = (0..ctx.num_threads())
+                .map(|t| {
+                    AtomicI64::new(
+                        ctx.loop_start()
+                            + t as i64 * ctx.chunk_size() as i64 * ctx.loop_step(),
+                    )
+                })
+                .collect();
+            Box::new(next)
+        })
+        .dequeue(|ctx, state, tid, _fb, sink| {
+            let next = state.downcast_ref::<Vec<AtomicI64>>().unwrap();
+            let stride =
+                ctx.num_threads() as i64 * ctx.chunk_size() as i64 * ctx.loop_step();
+            let lb = next[tid].fetch_add(stride, Ordering::Relaxed);
+            if (ctx.loop_step() > 0 && lb >= ctx.loop_end())
+                || (ctx.loop_step() < 0 && lb <= ctx.loop_end())
+            {
+                sink.dequeue_done();
+                return;
+            }
+            let ub_raw = lb + ctx.chunk_size() as i64 * ctx.loop_step();
+            let ub = if ctx.loop_step() > 0 {
+                ub_raw.min(ctx.loop_end())
+            } else {
+                ub_raw.max(ctx.loop_end())
+            };
+            sink.chunk_start(lb);
+            sink.chunk_end(ub);
+        })
+        .build()
+}
+
+/// `schedule(dynamic,k)` as a lambda-style UDS: one shared atomic cursor.
+pub fn lambda_dynamic(k: u64) -> Arc<LambdaFactory> {
+    UdsBuilder::named("dynamic")
+        .chunk_size(k)
+        .init(|_ctx| Box::new(AtomicU64::new(0)))
+        .dequeue(|ctx, state, _tid, _fb, sink| {
+            let cur = state.downcast_ref::<AtomicU64>().unwrap();
+            let n = ctx.iter_count();
+            let first = cur.fetch_add(ctx.chunk_size(), Ordering::Relaxed);
+            if first >= n {
+                sink.dequeue_done();
+                return;
+            }
+            let len = ctx.chunk_size().min(n - first);
+            sink.chunk_start(ctx.loop_start() + first as i64 * ctx.loop_step());
+            sink.chunk_end(
+                ctx.loop_start() + (first + len) as i64 * ctx.loop_step(),
+            );
+        })
+        .build()
+}
+
+/// GSS as a lambda-style UDS: CAS loop on a shared "taken" cursor.
+pub fn lambda_gss(min_chunk: u64) -> Arc<LambdaFactory> {
+    UdsBuilder::named("gss")
+        .chunk_size(min_chunk)
+        .init(|_ctx| Box::new(AtomicU64::new(0)))
+        .dequeue(|ctx, state, _tid, _fb, sink| {
+            let taken = state.downcast_ref::<AtomicU64>().unwrap();
+            let n = ctx.iter_count();
+            let p = ctx.num_threads() as u64;
+            let mut cur = taken.load(Ordering::Relaxed);
+            loop {
+                if cur >= n {
+                    sink.dequeue_done();
+                    return;
+                }
+                let r = n - cur;
+                let k = ceil_div(r, p).max(ctx.chunk_size()).min(r);
+                match taken.compare_exchange_weak(
+                    cur,
+                    cur + k,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        sink.chunk_start(
+                            ctx.loop_start() + cur as i64 * ctx.loop_step(),
+                        );
+                        sink.chunk_end(
+                            ctx.loop_start() + (cur + k) as i64 * ctx.loop_step(),
+                        );
+                        return;
+                    }
+                    Err(actual) => cur = actual,
+                }
+            }
+        })
+        .build()
+}
+
+/// TSS as a lambda-style UDS: the boundary list precomputed in `init`
+/// (the UDS analogue of the compiled-schedule optimization).
+pub fn lambda_tss() -> Arc<LambdaFactory> {
+    UdsBuilder::named("tss")
+        .init(|ctx| {
+            let seq = crate::schedules::tss::Tss::sequence(
+                ctx.iter_count(),
+                ctx.num_threads() as u64,
+                None,
+            );
+            let mut bounds = Vec::with_capacity(seq.len() + 1);
+            let mut acc = 0u64;
+            bounds.push(0u64);
+            for s in seq {
+                acc += s;
+                bounds.push(acc);
+            }
+            Box::new((bounds, AtomicU64::new(0)))
+        })
+        .dequeue(|ctx, state, _tid, _fb, sink| {
+            let (bounds, idx) =
+                state.downcast_ref::<(Vec<u64>, AtomicU64)>().unwrap();
+            let i = idx.fetch_add(1, Ordering::Relaxed) as usize;
+            if i + 1 >= bounds.len() {
+                sink.dequeue_done();
+                return;
+            }
+            sink.chunk_start(ctx.loop_start() + bounds[i] as i64 * ctx.loop_step());
+            sink.chunk_end(ctx.loop_start() + bounds[i + 1] as i64 * ctx.loop_step());
+        })
+        .build()
+}
+
+/// FAC2 as a lambda-style UDS: batch bookkeeping under a mutex, exactly
+/// the structure a user would write from the paper's description.
+pub fn lambda_fac2() -> Arc<LambdaFactory> {
+    struct Fac2State {
+        cursor: u64,
+        batch_left: u64,
+        batch_size: u64,
+    }
+    UdsBuilder::named("fac2")
+        .init(|_ctx| {
+            Box::new(Mutex::new(Fac2State { cursor: 0, batch_left: 0, batch_size: 0 }))
+        })
+        .dequeue(|ctx, state, _tid, _fb, sink| {
+            let st = state.downcast_ref::<Mutex<Fac2State>>().unwrap();
+            let mut st = st.lock().unwrap();
+            let n = ctx.iter_count();
+            let p = ctx.num_threads() as u64;
+            if st.cursor >= n {
+                sink.dequeue_done();
+                return;
+            }
+            if st.batch_left == 0 {
+                st.batch_size = ceil_div(n - st.cursor, 2 * p).max(1);
+                st.batch_left = p;
+            }
+            let len = st.batch_size.min(n - st.cursor);
+            let first = st.cursor;
+            st.cursor += len;
+            st.batch_left -= 1;
+            sink.chunk_start(ctx.loop_start() + first as i64 * ctx.loop_step());
+            sink.chunk_end(ctx.loop_start() + (first + len) as i64 * ctx.loop_step());
+        })
+        .build()
+}
+
+/// The generic sufficiency witness: wrap ANY native scheduler as a
+/// lambda-style UDS.  The native instance lives in the UDS state built by
+/// `init`; dequeue forwards `next` and converts the chunk to logical
+/// bounds through the setter API.
+pub fn wrap_native<F>(name: &str, make: F) -> Arc<LambdaFactory>
+where
+    F: Fn(&LoopSpec, usize) -> Box<dyn Scheduler> + Send + Sync + 'static,
+{
+    UdsBuilder::named(name)
+        .init(move |ctx| {
+            let mut inner = make(ctx.spec(), ctx.num_threads());
+            let team = crate::coordinator::loop_spec::TeamSpec {
+                nthreads: ctx.num_threads(),
+                weights: (0..ctx.num_threads()).map(|t| ctx.weight(t)).collect(),
+            };
+            let mut rec = crate::coordinator::history::LoopRecord::default();
+            inner.start(ctx.spec(), &team, &mut rec);
+            Box::new(Mutex::new(inner))
+        })
+        .dequeue(|ctx, state, tid, fb, sink| {
+            let inner = state.downcast_ref::<Mutex<Box<dyn Scheduler>>>().unwrap();
+            let chunk = inner.lock().unwrap().next(tid, fb);
+            match chunk {
+                None => sink.dequeue_done(),
+                Some(c) => {
+                    let (lo, hi, _) = c.logical_bounds(ctx.spec());
+                    sink.chunk_start(lo);
+                    sink.chunk_end(hi);
+                }
+            }
+        })
+        .build()
+}
+
+// ---------------------------------------------------------------------
+// Declare-style ports (§4.2)
+// ---------------------------------------------------------------------
+
+/// Shared record used by the declare-style ports — the `loop_record_t`
+/// of the paper's Fig. 2 right side.
+#[derive(Default)]
+pub struct DeclRecord {
+    lb: i64,
+    ub: i64,
+    incr: i64,
+    chunksz: i64,
+    nthreads: usize,
+    next_lb: Vec<i64>,
+    taken: u64,
+}
+
+/// Register `static`, `dynamic` and `gss` declare-style schedules in a
+/// registry (idempotent per fresh registry).  Returns factory handles.
+pub fn declare_static(reg: &Registry, chunk: i64) -> DeclaredFactory {
+    if !reg.contains("uds_static") {
+        reg.declare(
+            DeclarationBuilder::schedule("uds_static")
+                .arguments(2)
+                .init(|lb, ub, incr, _c, nthreads, args| {
+                    let lr = args.arg::<Mutex<DeclRecord>>(0);
+                    let chunksz = *args.arg::<i64>(1);
+                    let mut lr = lr.lock().unwrap();
+                    lr.lb = lb;
+                    lr.ub = ub;
+                    lr.incr = incr;
+                    lr.chunksz = chunksz;
+                    lr.nthreads = nthreads;
+                    lr.next_lb =
+                        (0..nthreads as i64).map(|t| lb + t * chunksz * incr).collect();
+                })
+                .next(|lower, upper, incr_out, tid, _fb, args| {
+                    let lr = args.arg::<Mutex<DeclRecord>>(0);
+                    let mut lr = lr.lock().unwrap();
+                    if lr.next_lb[tid] >= lr.ub {
+                        return false;
+                    }
+                    *lower = lr.next_lb[tid];
+                    let step = lr.chunksz * lr.incr;
+                    *upper = (lr.next_lb[tid] + step).min(lr.ub);
+                    *incr_out = lr.incr;
+                    let stride = lr.nthreads as i64 * step;
+                    lr.next_lb[tid] += stride;
+                    true
+                })
+                .fini(|args| {
+                    let lr = args.arg::<Mutex<DeclRecord>>(0);
+                    lr.lock().unwrap().next_lb.clear();
+                })
+                .build(),
+        )
+        .expect("fresh registry");
+    }
+    reg.schedule(
+        "uds_static",
+        Args::new().with(Mutex::new(DeclRecord::default())).with(chunk),
+    )
+    .expect("arity matches")
+}
+
+/// `dynamic,k` via declare directives: shared cursor in the record.
+pub fn declare_dynamic(reg: &Registry, chunk: i64) -> DeclaredFactory {
+    if !reg.contains("uds_dynamic") {
+        reg.declare(
+            DeclarationBuilder::schedule("uds_dynamic")
+                .arguments(2)
+                .init(|lb, ub, incr, _c, nthreads, args| {
+                    let lr = args.arg::<Mutex<DeclRecord>>(0);
+                    let mut lr = lr.lock().unwrap();
+                    lr.lb = lb;
+                    lr.ub = ub;
+                    lr.incr = incr;
+                    lr.chunksz = *args.arg::<i64>(1);
+                    lr.nthreads = nthreads;
+                    lr.taken = 0;
+                })
+                .next(|lower, upper, incr_out, _tid, _fb, args| {
+                    let lr = args.arg::<Mutex<DeclRecord>>(0);
+                    let mut lr = lr.lock().unwrap();
+                    let n = if lr.incr > 0 {
+                        ((lr.ub - lr.lb) as u64).div_ceil(lr.incr as u64)
+                    } else {
+                        0
+                    };
+                    if lr.taken >= n {
+                        return false;
+                    }
+                    let first = lr.taken;
+                    let len = (lr.chunksz as u64).min(n - first);
+                    lr.taken += len;
+                    *lower = lr.lb + first as i64 * lr.incr;
+                    *upper = lr.lb + (first + len) as i64 * lr.incr;
+                    *incr_out = lr.incr;
+                    true
+                })
+                .build(),
+        )
+        .expect("fresh registry");
+    }
+    reg.schedule(
+        "uds_dynamic",
+        Args::new().with(Mutex::new(DeclRecord::default())).with(chunk),
+    )
+    .expect("arity matches")
+}
+
+/// GSS via declare directives.
+pub fn declare_gss(reg: &Registry) -> DeclaredFactory {
+    if !reg.contains("uds_gss") {
+        reg.declare(
+            DeclarationBuilder::schedule("uds_gss")
+                .arguments(1)
+                .init(|lb, ub, incr, _c, nthreads, args| {
+                    let lr = args.arg::<Mutex<DeclRecord>>(0);
+                    let mut lr = lr.lock().unwrap();
+                    lr.lb = lb;
+                    lr.ub = ub;
+                    lr.incr = incr;
+                    lr.nthreads = nthreads;
+                    lr.taken = 0;
+                })
+                .next(|lower, upper, incr_out, _tid, _fb, args| {
+                    let lr = args.arg::<Mutex<DeclRecord>>(0);
+                    let mut lr = lr.lock().unwrap();
+                    let n = if lr.incr > 0 {
+                        ((lr.ub - lr.lb) as u64).div_ceil(lr.incr as u64)
+                    } else {
+                        0
+                    };
+                    if lr.taken >= n {
+                        return false;
+                    }
+                    let r = n - lr.taken;
+                    let k = ceil_div(r, lr.nthreads as u64).max(1).min(r);
+                    let first = lr.taken;
+                    lr.taken += k;
+                    *lower = lr.lb + first as i64 * lr.incr;
+                    *upper = lr.lb + (first + k) as i64 * lr.incr;
+                    *incr_out = lr.incr;
+                    true
+                })
+                .build(),
+        )
+        .expect("fresh registry");
+    }
+    reg.schedule("uds_gss", Args::new().with(Mutex::new(DeclRecord::default())))
+        .expect("arity matches")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::history::LoopRecord;
+    use crate::coordinator::loop_spec::TeamSpec;
+    use crate::coordinator::scheduler::{
+        drain_chunks, verify_cover, ScheduleFactory,
+    };
+    use crate::schedules;
+
+    fn chunks_of(
+        f: &dyn ScheduleFactory,
+        n: u64,
+        p: usize,
+    ) -> Vec<(usize, crate::coordinator::loop_spec::Chunk)> {
+        let mut s = f.build();
+        drain_chunks(
+            &mut *s,
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &mut LoopRecord::default(),
+        )
+    }
+
+    fn native_chunks(
+        mk: &dyn Fn() -> Box<dyn Scheduler>,
+        n: u64,
+        p: usize,
+    ) -> Vec<(usize, crate::coordinator::loop_spec::Chunk)> {
+        let mut s = mk();
+        drain_chunks(
+            &mut *s,
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &mut LoopRecord::default(),
+        )
+    }
+
+    #[test]
+    fn lambda_static_equals_native() {
+        for (n, p, k) in [(1000u64, 4usize, 16u64), (37, 3, 5), (8, 8, 1)] {
+            let uds = chunks_of(&*lambda_static(k), n, p);
+            let nat = native_chunks(&|| schedules::static_block(Some(k)), n, p);
+            assert_eq!(uds, nat, "n={n} p={p} k={k}");
+        }
+    }
+
+    #[test]
+    fn lambda_dynamic_equals_native() {
+        for (n, p, k) in [(1000u64, 4usize, 16u64), (37, 3, 5), (100, 2, 1)] {
+            let uds = chunks_of(&*lambda_dynamic(k), n, p);
+            let nat = native_chunks(&|| schedules::dynamic_chunk(k), n, p);
+            assert_eq!(uds, nat, "n={n} p={p} k={k}");
+        }
+    }
+
+    #[test]
+    fn lambda_gss_equals_native() {
+        for (n, p) in [(1000u64, 4usize), (500, 8), (17, 3)] {
+            let uds = chunks_of(&*lambda_gss(1), n, p);
+            let nat = native_chunks(&|| schedules::gss(1), n, p);
+            assert_eq!(uds, nat, "n={n} p={p}");
+        }
+    }
+
+    #[test]
+    fn lambda_tss_equals_native() {
+        for (n, p) in [(1000u64, 4usize), (10_000, 8)] {
+            let uds = chunks_of(&*lambda_tss(), n, p);
+            let nat = native_chunks(&|| schedules::tss(None), n, p);
+            assert_eq!(uds, nat, "n={n} p={p}");
+        }
+    }
+
+    #[test]
+    fn lambda_fac2_equals_native() {
+        for (n, p) in [(1600u64, 4usize), (999, 7)] {
+            let uds = chunks_of(&*lambda_fac2(), n, p);
+            let nat = native_chunks(&|| schedules::fac2(), n, p);
+            assert_eq!(uds, nat, "n={n} p={p}");
+        }
+    }
+
+    #[test]
+    fn declare_static_equals_native() {
+        let reg = Registry::new();
+        let f = declare_static(&reg, 16);
+        let uds = chunks_of(&f, 1000, 4);
+        let nat = native_chunks(&|| schedules::static_block(Some(16)), 1000, 4);
+        assert_eq!(uds, nat);
+    }
+
+    #[test]
+    fn declare_dynamic_equals_native() {
+        let reg = Registry::new();
+        let f = declare_dynamic(&reg, 8);
+        let uds = chunks_of(&f, 500, 4);
+        let nat = native_chunks(&|| schedules::dynamic_chunk(8), 500, 4);
+        assert_eq!(uds, nat);
+    }
+
+    #[test]
+    fn declare_gss_equals_native() {
+        let reg = Registry::new();
+        let f = declare_gss(&reg);
+        let uds = chunks_of(&f, 1000, 4);
+        let nat = native_chunks(&|| schedules::gss(1), 1000, 4);
+        assert_eq!(uds, nat);
+    }
+
+    #[test]
+    fn wrap_native_preserves_any_strategy() {
+        // The universal adapter: check three structurally different
+        // natives (compiled, CAS-based, stateful-adaptive).
+        type Mk = fn() -> Box<dyn Scheduler>;
+        let cases: Vec<(&str, Mk)> = vec![
+            ("tss", || schedules::tss(None)),
+            ("fac2", || schedules::fac2()),
+            ("af", || schedules::af(1)),
+        ];
+        for (name, mk) in cases {
+            let wrapped = wrap_native(name, move |_, _| mk());
+            let uds = chunks_of(&*wrapped, 777, 4);
+            verify_cover(&uds, 777).unwrap();
+        }
+    }
+
+    #[test]
+    fn ports_cover_space() {
+        verify_cover(&chunks_of(&*lambda_static(7), 555, 3), 555).unwrap();
+        verify_cover(&chunks_of(&*lambda_dynamic(7), 555, 3), 555).unwrap();
+        verify_cover(&chunks_of(&*lambda_gss(1), 555, 3), 555).unwrap();
+        verify_cover(&chunks_of(&*lambda_tss(), 555, 3), 555).unwrap();
+        verify_cover(&chunks_of(&*lambda_fac2(), 555, 3), 555).unwrap();
+    }
+}

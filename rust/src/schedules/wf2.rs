@@ -1,0 +1,146 @@
+//! WF2 — practical weighted factoring [14],[8].
+//!
+//! FAC2 for heterogeneous teams: thread `t`'s chunk in each batch is scaled
+//! by its relative capability weight `w_t` (the paper: WF2 "can employ
+//! workload balancing information specified by the user, such as the
+//! capabilities of a heterogeneous hardware configuration"):
+//!
+//! ```text
+//! k_t = max(1, ceil( w_t * R / (2P) ))
+//! ```
+//!
+//! Weights come from the [`TeamSpec`] (user-specified) — the adaptive
+//! variant that *measures* them instead is [`crate::schedules::awf`].
+//! Implemented request-time (lock-free CAS), the form used by production
+//! RTL patches, rather than strict batch bookkeeping.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::schedules::common::TakenCounter;
+
+pub struct Wf2 {
+    weights: Vec<f64>,
+    p: u64,
+    todo: TakenCounter,
+    /// Remaining-at-batch-start snapshot, refreshed every P dequeues.
+    batch_r: AtomicU64,
+    dequeues: AtomicU64,
+}
+
+impl Wf2 {
+    pub fn new() -> Self {
+        Self {
+            weights: Vec::new(),
+            p: 1,
+            todo: TakenCounter::default(),
+            batch_r: AtomicU64::new(0),
+            dequeues: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Default for Wf2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for Wf2 {
+    fn name(&self) -> String {
+        "wf2".into()
+    }
+
+    fn start(&mut self, loop_: &LoopSpec, team: &TeamSpec, _record: &mut LoopRecord) {
+        self.weights = team.weights.clone();
+        self.p = team.nthreads as u64;
+        self.todo.reset(loop_.iter_count());
+        self.batch_r = AtomicU64::new(loop_.iter_count());
+        self.dequeues = AtomicU64::new(0);
+    }
+
+    fn next(&self, tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        // Refresh the batch snapshot every P dequeues (approximate batch
+        // structure without a lock; the snapshot only sets chunk size).
+        let d = self.dequeues.fetch_add(1, Ordering::Relaxed);
+        if d % self.p == 0 {
+            self.batch_r.store(self.todo.remaining(), Ordering::Relaxed);
+        }
+        let r = self.batch_r.load(Ordering::Relaxed).max(1);
+        let w = self.weights[tid];
+        let k = ((w * r as f64 / (2.0 * self.p as f64)).ceil() as u64).max(1);
+        self.todo.take_sized(|rem| k.min(rem))
+    }
+
+    fn finish(&mut self, _team: &TeamSpec, _record: &mut LoopRecord) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{drain_chunks, verify_cover};
+
+    fn drain(n: u64, team: &TeamSpec) -> Vec<(usize, Chunk)> {
+        let mut s = Wf2::new();
+        drain_chunks(
+            &mut s,
+            &LoopSpec::upto(n),
+            team,
+            &mut LoopRecord::default(),
+        )
+    }
+
+    #[test]
+    fn covers_space_uniform() {
+        let chunks = drain(10_000, &TeamSpec::uniform(8));
+        verify_cover(&chunks, 10_000).unwrap();
+    }
+
+    #[test]
+    fn covers_space_weighted() {
+        let chunks = drain(10_000, &TeamSpec::weighted(&[1.0, 1.0, 2.0, 4.0]));
+        verify_cover(&chunks, 10_000).unwrap();
+    }
+
+    #[test]
+    fn uniform_team_reduces_to_fac2_sizes() {
+        // With all weights 1, the first batch's chunks equal ceil(R/2P).
+        let chunks = drain(1600, &TeamSpec::uniform(4));
+        assert_eq!(chunks[0].1.len, 200);
+    }
+
+    #[test]
+    fn faster_thread_gets_bigger_chunks() {
+        let team = TeamSpec::weighted(&[1.0, 1.0, 1.0, 5.0]);
+        let chunks = drain(100_000, &team);
+        let mut per_tid = vec![0u64; 4];
+        for (tid, c) in &chunks {
+            per_tid[*tid] += c.len;
+        }
+        // Thread 3 (weight 5/2 after normalization) must execute more
+        // iterations than any weight-1 thread.
+        assert!(per_tid[3] > per_tid[0]);
+        assert!(per_tid[3] > per_tid[1]);
+        assert!(per_tid[3] > per_tid[2]);
+    }
+
+    #[test]
+    fn first_chunk_proportional_to_weight() {
+        let team = TeamSpec::weighted(&[1.0, 3.0]);
+        let mut s = Wf2::new();
+        let mut rec = LoopRecord::default();
+        s.start(&LoopSpec::upto(8000), &team, &mut rec);
+        let c0 = s.next(0, None).unwrap();
+        let c1 = s.next(1, None).unwrap();
+        // Normalized weights: 0.5 and 1.5 -> sizes ~1000 and ~3000.
+        assert!(c1.len > 2 * c0.len, "{} !> 2*{}", c1.len, c0.len);
+    }
+
+    #[test]
+    fn empty_loop() {
+        assert!(drain(0, &TeamSpec::uniform(4)).is_empty());
+    }
+}

@@ -1,0 +1,223 @@
+//! TCP scheduling service: submit loop-scheduling jobs as `key=value`
+//! lines, receive one result line per job.  The "launcher/daemon" face of
+//! the runtime — a downstream system can query the simulator fleet-side
+//! to pick a schedule before running it in-process.
+//!
+//! Protocol (std-only substitution for the usual tokio+serde stack):
+//! one request per line, fields separated by whitespace:
+//!
+//! ```text
+//! schedule=fac2 n=100000 threads=8 workload=lognormal mean_ns=1000 h_ns=250 seed=42
+//! ```
+//!
+//! Response (single line):
+//!
+//! ```text
+//! ok schedule=fac2 makespan_ns=... chunks=... dequeues=... imbalance_pct=... efficiency=...
+//! err msg=...
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use uds::coordinator::{LoopRecord, LoopSpec, TeamSpec};
+use uds::schedules::ScheduleSpec;
+use uds::sim::{simulate, NoVariability, SimConfig};
+use uds::workload::WorkloadClass;
+
+/// A parsed job request.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub schedule: String,
+    pub n: u64,
+    pub threads: usize,
+    pub workload: String,
+    pub mean_ns: f64,
+    pub h_ns: u64,
+    pub seed: u64,
+}
+
+impl JobRequest {
+    /// Parse a `key=value`-pairs request line.
+    pub fn parse(line: &str) -> Result<Self, String> {
+        let mut req = JobRequest {
+            schedule: String::new(),
+            n: 0,
+            threads: 8,
+            workload: "lognormal".into(),
+            mean_ns: 1000.0,
+            h_ns: 250,
+            seed: 0,
+        };
+        for tok in line.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got '{tok}'"))?;
+            match k {
+                "schedule" => req.schedule = v.to_string(),
+                "n" => req.n = v.parse().map_err(|e| format!("n: {e}"))?,
+                "threads" => {
+                    req.threads = v.parse().map_err(|e| format!("threads: {e}"))?
+                }
+                "workload" => req.workload = v.to_string(),
+                "mean_ns" => {
+                    req.mean_ns = v.parse().map_err(|e| format!("mean_ns: {e}"))?
+                }
+                "h_ns" => req.h_ns = v.parse().map_err(|e| format!("h_ns: {e}"))?,
+                "seed" => req.seed = v.parse().map_err(|e| format!("seed: {e}"))?,
+                other => return Err(format!("unknown field '{other}'")),
+            }
+        }
+        if req.schedule.is_empty() {
+            return Err("missing field 'schedule'".into());
+        }
+        if req.n == 0 {
+            return Err("missing or zero field 'n'".into());
+        }
+        Ok(req)
+    }
+}
+
+/// Handle one request synchronously.
+pub fn handle(req: &JobRequest) -> String {
+    let spec = match ScheduleSpec::parse(&req.schedule) {
+        Ok(s) => s,
+        Err(e) => return format!("err msg={}", e.replace(' ', "_")),
+    };
+    let Some(class) = WorkloadClass::parse(&req.workload) else {
+        return format!("err msg=unknown_workload_{}", req.workload);
+    };
+    if req.n > 50_000_000 {
+        return "err msg=n_too_large_max_5e7".into();
+    }
+    if req.threads == 0 || req.threads > 1024 {
+        return "err msg=threads_must_be_1..=1024".into();
+    }
+    let costs = class.model(req.n, req.mean_ns, req.seed);
+    let stats = simulate(
+        &LoopSpec::upto(req.n),
+        &TeamSpec::uniform(req.threads),
+        &*spec.factory(),
+        &costs,
+        &NoVariability,
+        &mut LoopRecord::default(),
+        &SimConfig { dequeue_overhead_ns: req.h_ns, trace: false },
+    );
+    format!(
+        "ok schedule={} makespan_ns={} chunks={} dequeues={} imbalance_pct={:.4} efficiency={:.4}",
+        stats.schedule.replace(' ', "_"),
+        stats.makespan_ns,
+        stats.chunks,
+        stats.total_dequeues(),
+        stats.percent_imbalance(),
+        stats.efficiency(),
+    )
+}
+
+fn client_loop(stream: TcpStream) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match JobRequest::parse(&line) {
+            Ok(req) => handle(&req),
+            Err(e) => format!("err msg={}", e.replace(' ', "_")),
+        };
+        if writeln!(writer, "{resp}").is_err() {
+            break;
+        }
+    }
+    if let Some(p) = peer {
+        eprintln!("client {p} disconnected");
+    }
+}
+
+/// Blocking entry point: run the service until killed.  One OS thread
+/// per client (jobs are CPU-bound simulator runs).
+pub fn serve(addr: &str) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    println!("uds service listening on {addr}");
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                std::thread::spawn(move || client_loop(s));
+            }
+            Err(e) => eprintln!("accept error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_request() {
+        let req = JobRequest::parse(
+            "schedule=fac2 n=1000 threads=4 workload=gaussian mean_ns=100 h_ns=10 seed=1",
+        )
+        .unwrap();
+        assert_eq!(req.schedule, "fac2");
+        assert_eq!(req.n, 1000);
+        assert_eq!(req.threads, 4);
+    }
+
+    #[test]
+    fn parse_defaults() {
+        let req = JobRequest::parse("schedule=gss n=100").unwrap();
+        assert_eq!(req.threads, 8);
+        assert_eq!(req.workload, "lognormal");
+    }
+
+    #[test]
+    fn parse_rejects_missing_fields() {
+        assert!(JobRequest::parse("n=100").is_err());
+        assert!(JobRequest::parse("schedule=gss").is_err());
+        assert!(JobRequest::parse("schedule=gss n=1 bogus=1").is_err());
+    }
+
+    #[test]
+    fn handle_ok() {
+        let req = JobRequest::parse("schedule=fac2 n=1000 threads=4 workload=gaussian")
+            .unwrap();
+        let resp = handle(&req);
+        assert!(resp.starts_with("ok "), "{resp}");
+        assert!(resp.contains("makespan_ns="));
+    }
+
+    #[test]
+    fn handle_bad_schedule() {
+        let req = JobRequest::parse("schedule=bogus n=10").unwrap();
+        assert!(handle(&req).starts_with("err "));
+    }
+
+    #[test]
+    fn handle_rejects_huge_n() {
+        let req = JobRequest::parse("schedule=fac2 n=99999999999").unwrap();
+        assert!(handle(&req).starts_with("err "));
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        use std::io::{BufRead, BufReader, Write};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            client_loop(s);
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        writeln!(c, "schedule=gss n=500 threads=2 workload=uniform").unwrap();
+        let mut line = String::new();
+        BufReader::new(c.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.starts_with("ok "), "{line}");
+    }
+}

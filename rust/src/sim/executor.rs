@@ -1,0 +1,329 @@
+//! Discrete-event simulated executor — the deterministic testbed.
+//!
+//! Drives exactly the same [`Scheduler`] trait as the real thread-team
+//! executor, but in *virtual time*: per-iteration costs come from a
+//! [`CostModel`], per-dequeue overhead is the calibrated `h`, and thread
+//! speeds follow a [`Variability`] model.  Always picks the thread with
+//! the smallest virtual clock next, which reproduces the dequeue
+//! interleaving an ideal contention-free runtime would see.
+//!
+//! This is the substitution (DESIGN.md §4) for the companion papers' HPC
+//! testbed: relative schedule orderings depend on the iteration-cost
+//! distribution, `h`, `P` and the noise — all modeled here exactly — and
+//! runs are deterministic and fast enough to sweep thousands of
+//! configurations in the benches.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::ScheduleFactory;
+use crate::metrics::{ChunkLog, RunStats};
+use crate::sim::variability::Variability;
+use crate::workload::CostModel;
+
+/// Simulator parameters.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Cost charged for every `next` call (the scheduling overhead `h`).
+    pub dequeue_overhead_ns: u64,
+    /// Record the full chunk trace.
+    pub trace: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { dequeue_overhead_ns: 100, trace: false }
+    }
+}
+
+/// Simulate one scheduled loop invocation in virtual time.
+pub fn simulate(
+    spec: &LoopSpec,
+    team: &TeamSpec,
+    factory: &dyn ScheduleFactory,
+    costs: &dyn CostModel,
+    var: &dyn Variability,
+    record: &mut LoopRecord,
+    cfg: &SimConfig,
+) -> RunStats {
+    assert_eq!(
+        costs.len(),
+        spec.iter_count(),
+        "cost model must cover the iteration space"
+    );
+    let mut sched = factory.build();
+    record.ensure_team(team.nthreads);
+    sched.start(spec, team, record);
+
+    let p = team.nthreads;
+    let cost_vec = costs.materialize();
+
+    let mut clock = vec![0u64; p];
+    let mut busy = vec![0u64; p];
+    let mut finish = vec![0u64; p];
+    let mut iters = vec![0u64; p];
+    let mut dequeues = vec![0u64; p];
+    let mut fb: Vec<Option<ChunkFeedback>> = vec![None; p];
+    let mut trace = Vec::new();
+    let mut chunks = 0u64;
+
+    // Min-heap over (virtual clock, tid): the earliest-free thread
+    // dequeues next; tid tiebreak keeps runs deterministic.
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+        (0..p).map(|t| Reverse((0u64, t))).collect();
+
+    while let Some(Reverse((t_now, tid))) = heap.pop() {
+        debug_assert_eq!(t_now, clock[tid]);
+        // Charge the dequeue itself.
+        clock[tid] += cfg.dequeue_overhead_ns;
+        dequeues[tid] += 1;
+        match sched.next(tid, fb[tid].as_ref()) {
+            None => {
+                // Thread leaves the team; its finish time includes the
+                // final (failed) dequeue.
+                finish[tid] = clock[tid];
+            }
+            Some(chunk) => {
+                if chunk.len == 0 {
+                    fb[tid] = None;
+                    heap.push(Reverse((clock[tid], tid)));
+                    continue;
+                }
+                chunks += 1;
+                let start_ns = clock[tid];
+                let speed = var.speed(tid, start_ns).max(1e-9);
+                let raw: u64 = chunk
+                    .indices()
+                    .map(|i| cost_vec[i as usize])
+                    .sum();
+                let elapsed = ((raw as f64) / speed).round().max(1.0) as u64;
+                clock[tid] += elapsed;
+                busy[tid] += elapsed;
+                iters[tid] += chunk.len;
+                finish[tid] = clock[tid];
+                if cfg.trace {
+                    trace.push(ChunkLog { tid, chunk, start_ns, elapsed_ns: elapsed });
+                }
+                fb[tid] = Some(ChunkFeedback { chunk, tid, elapsed_ns: elapsed });
+                heap.push(Reverse((clock[tid], tid)));
+            }
+        }
+    }
+
+    let makespan = clock.iter().copied().max().unwrap_or(0);
+    sched.finish(team, record);
+    let busy_f: Vec<f64> = busy.iter().map(|&b| b as f64).collect();
+    record.record_invocation(&busy_f, &iters, makespan);
+
+    trace.sort_by_key(|c| c.start_ns);
+    RunStats {
+        schedule: sched.name(),
+        nthreads: p,
+        iterations: spec.iter_count(),
+        makespan_ns: makespan,
+        busy_ns: busy,
+        finish_ns: finish,
+        iters,
+        dequeues,
+        chunks,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::FnFactory;
+    use crate::schedules;
+    use crate::sim::variability::{Heterogeneous, NoVariability};
+    use crate::workload::{CostModel, SyntheticCost, TraceCost, WorkloadClass};
+
+    fn sim(
+        n: u64,
+        p: usize,
+        factory: &dyn ScheduleFactory,
+        costs: &dyn CostModel,
+        h: u64,
+    ) -> RunStats {
+        simulate(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            factory,
+            costs,
+            &NoVariability,
+            &mut LoopRecord::default(),
+            &SimConfig { dequeue_overhead_ns: h, trace: false },
+        )
+    }
+
+    #[test]
+    fn uniform_static_is_perfectly_balanced() {
+        let costs = WorkloadClass::Uniform.model(1000, 100.0, 0);
+        let f = FnFactory::new("static", || schedules::static_block(None));
+        let stats = sim(1000, 4, &f, &costs, 0);
+        assert_eq!(stats.iters, vec![250; 4]);
+        assert!(stats.percent_imbalance() < 1e-9);
+        // 250 iters x 100ns = 25000ns makespan.
+        assert_eq!(stats.makespan_ns, 25_000);
+    }
+
+    #[test]
+    fn makespan_bounds() {
+        // For any schedule: serial/P <= makespan <= serial (h=0).
+        let costs = WorkloadClass::Lognormal.model(5000, 200.0, 3);
+        let serial = costs.total_ns();
+        for spec in crate::schedules::ScheduleSpec::roster() {
+            let stats = sim(5000, 8, &*spec.factory(), &costs, 0);
+            assert!(
+                stats.makespan_ns as f64 >= serial as f64 / 8.0 - 1e3,
+                "{}: makespan below critical path",
+                spec.label()
+            );
+            assert!(
+                stats.makespan_ns <= serial + 1000,
+                "{}: makespan {} above serial {serial}",
+                spec.label(),
+                stats.makespan_ns
+            );
+            assert_eq!(stats.iters.iter().sum::<u64>(), 5000, "{}", spec.label());
+        }
+    }
+
+    #[test]
+    fn dynamic1_balances_irregular_load() {
+        let costs = WorkloadClass::Increasing.model(2000, 500.0, 1);
+        let stat = sim(
+            2000,
+            4,
+            &FnFactory::new("static", || schedules::static_block(None)),
+            &costs,
+            0,
+        );
+        let dyn1 = sim(
+            2000,
+            4,
+            &FnFactory::new("dynamic", || schedules::self_sched()),
+            &costs,
+            0,
+        );
+        // Increasing workload: static block is badly imbalanced (last
+        // block ~2x mean), SS nearly perfect.
+        assert!(stat.percent_imbalance() > 20.0);
+        assert!(dyn1.percent_imbalance() < 2.0);
+        assert!(dyn1.makespan_ns < stat.makespan_ns);
+    }
+
+    #[test]
+    fn overhead_penalizes_small_chunks() {
+        let costs = WorkloadClass::Uniform.model(10_000, 100.0, 0);
+        let h = 1000; // overhead 10x iteration cost
+        let ss = sim(
+            10_000,
+            4,
+            &FnFactory::new("ss", || schedules::self_sched()),
+            &costs,
+            h,
+        );
+        let chunked = sim(
+            10_000,
+            4,
+            &FnFactory::new("d128", || schedules::dynamic_chunk(128)),
+            &costs,
+            h,
+        );
+        assert!(
+            ss.makespan_ns > 2 * chunked.makespan_ns,
+            "SS {} vs dynamic,128 {}",
+            ss.makespan_ns,
+            chunked.makespan_ns
+        );
+    }
+
+    #[test]
+    fn heterogeneous_speeds_respected() {
+        // Thread 1 runs 4x faster; with SS it should complete ~4x the
+        // iterations of thread 0.
+        let costs = WorkloadClass::Uniform.model(5000, 100.0, 0);
+        let stats = simulate(
+            &LoopSpec::upto(5000),
+            &TeamSpec::uniform(2),
+            &FnFactory::new("ss", || schedules::self_sched()),
+            &costs,
+            &Heterogeneous::new(vec![1.0, 4.0]),
+            &mut LoopRecord::default(),
+            &SimConfig { dequeue_overhead_ns: 0, trace: false },
+        );
+        let ratio = stats.iters[1] as f64 / stats.iters[0] as f64;
+        assert!((ratio - 4.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let costs = WorkloadClass::Exponential.model(3000, 300.0, 9);
+        let f = FnFactory::new("fac2", || schedules::fac2());
+        let a = sim(3000, 8, &f, &costs, 50);
+        let b = sim(3000, 8, &f, &costs, 50);
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+        assert_eq!(a.iters, b.iters);
+        assert_eq!(a.dequeues, b.dequeues);
+    }
+
+    #[test]
+    fn trace_covers_space() {
+        let costs = TraceCost::new(vec![10; 100]);
+        let f = FnFactory::new("gss", || schedules::gss(1));
+        let stats = simulate(
+            &LoopSpec::upto(100),
+            &TeamSpec::uniform(4),
+            &f,
+            &costs,
+            &NoVariability,
+            &mut LoopRecord::default(),
+            &SimConfig { dequeue_overhead_ns: 10, trace: true },
+        );
+        let total: u64 = stats.trace.iter().map(|c| c.chunk.len).sum();
+        assert_eq!(total, 100);
+        assert_eq!(stats.chunks as usize, stats.trace.len());
+    }
+
+    #[test]
+    fn empty_loop() {
+        let costs = TraceCost::new(vec![]);
+        let f = FnFactory::new("static", || schedules::static_block(None));
+        let stats = sim(0, 4, &f, &costs, 10);
+        assert_eq!(stats.iterations, 0);
+        assert_eq!(stats.chunks, 0);
+        // Each thread pays exactly one failed dequeue.
+        assert_eq!(stats.dequeues, vec![1; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cost model must cover")]
+    fn mismatched_cost_model_panics() {
+        let costs = TraceCost::new(vec![10; 5]);
+        let f = FnFactory::new("static", || schedules::static_block(None));
+        sim(10, 2, &f, &costs, 0);
+    }
+
+    #[test]
+    fn history_recorded() {
+        let costs = WorkloadClass::Uniform.model(100, 100.0, 0);
+        let f = FnFactory::new("fac2", || schedules::fac2());
+        let mut rec = LoopRecord::default();
+        simulate(
+            &LoopSpec::upto(100),
+            &TeamSpec::uniform(2),
+            &f,
+            &costs,
+            &NoVariability,
+            &mut rec,
+            &SimConfig::default(),
+        );
+        assert_eq!(rec.invocations, 1);
+        assert!(rec.last_makespan_ns > 0);
+        assert_eq!(rec.thread_iters.iter().sum::<u64>(), 100);
+    }
+}

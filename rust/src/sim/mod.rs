@@ -1,0 +1,8 @@
+//! Discrete-event simulation substrate: virtual-time executor and
+//! system-variability models (DESIGN.md S10/S11).
+
+pub mod executor;
+pub mod variability;
+
+pub use executor::{simulate, SimConfig};
+pub use variability::{Compose, Heterogeneous, NoVariability, NoiseBursts, Variability};

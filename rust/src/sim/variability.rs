@@ -1,0 +1,153 @@
+//! System-induced variability injection — the paper's §1 motivation
+//! ("operating system noise, power capping ... additional irregularity
+//! that has often been neglected in loop scheduling research").
+//!
+//! A [`Variability`] model multiplies a thread's execution speed at a
+//! given virtual time.  Composable pieces:
+//!
+//! * [`Heterogeneous`] — static per-thread speed factors (big.LITTLE,
+//!   power-capped sockets; the WF2/E7 scenario).
+//! * [`NoiseBursts`] — deterministic pseudo-random slowdown windows per
+//!   thread (OS noise / daemon interference; the AWF-vs-static E5
+//!   scenario).
+//! * [`Compose`] — product of two models.
+//! * [`NoVariability`] — the calm baseline.
+
+use crate::util::rng::Pcg;
+
+/// Speed multiplier for (thread, virtual time): 1.0 = nominal, 0.5 = the
+/// thread currently runs at half speed (costs double).
+pub trait Variability: Send + Sync {
+    fn speed(&self, tid: usize, at_ns: u64) -> f64;
+}
+
+/// No variability: every thread at nominal speed always.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoVariability;
+
+impl Variability for NoVariability {
+    fn speed(&self, _tid: usize, _at_ns: u64) -> f64 {
+        1.0
+    }
+}
+
+/// Static heterogeneous speeds (e.g. `[1.0, 1.0, 2.0, 4.0]`).
+#[derive(Clone, Debug)]
+pub struct Heterogeneous {
+    pub speeds: Vec<f64>,
+}
+
+impl Heterogeneous {
+    pub fn new(speeds: Vec<f64>) -> Self {
+        assert!(speeds.iter().all(|&s| s > 0.0));
+        Self { speeds }
+    }
+}
+
+impl Variability for Heterogeneous {
+    fn speed(&self, tid: usize, _at_ns: u64) -> f64 {
+        self.speeds.get(tid).copied().unwrap_or(1.0)
+    }
+}
+
+/// Pseudo-random noise bursts: time is divided into windows of
+/// `window_ns`; in each window a thread is slowed to `slow_factor` with
+/// probability `prob`.  Deterministic in `(seed, tid, window)`.
+#[derive(Clone, Debug)]
+pub struct NoiseBursts {
+    pub window_ns: u64,
+    pub prob: f64,
+    pub slow_factor: f64,
+    pub seed: u64,
+}
+
+impl NoiseBursts {
+    pub fn new(window_ns: u64, prob: f64, slow_factor: f64, seed: u64) -> Self {
+        assert!(window_ns > 0);
+        assert!((0.0..=1.0).contains(&prob));
+        assert!(slow_factor > 0.0 && slow_factor <= 1.0);
+        Self { window_ns, prob, slow_factor, seed }
+    }
+}
+
+impl Variability for NoiseBursts {
+    fn speed(&self, tid: usize, at_ns: u64) -> f64 {
+        let window = at_ns / self.window_ns;
+        let z = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            ^ (tid as u64).wrapping_mul(0xBF58476D1CE4E5B9)
+            ^ window.wrapping_mul(0x94D049BB133111EB);
+        let mut rng = Pcg::seed_from_u64(z);
+        if rng.f64() < self.prob {
+            self.slow_factor
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Product composition of two variability models.
+pub struct Compose<A: Variability, B: Variability>(pub A, pub B);
+
+impl<A: Variability, B: Variability> Variability for Compose<A, B> {
+    fn speed(&self, tid: usize, at_ns: u64) -> f64 {
+        self.0.speed(tid, at_ns) * self.1.speed(tid, at_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_variability_is_unit() {
+        assert_eq!(NoVariability.speed(3, 12345), 1.0);
+    }
+
+    #[test]
+    fn heterogeneous_speeds() {
+        let h = Heterogeneous::new(vec![1.0, 2.0]);
+        assert_eq!(h.speed(0, 0), 1.0);
+        assert_eq!(h.speed(1, 999), 2.0);
+        assert_eq!(h.speed(9, 0), 1.0); // out of range -> nominal
+    }
+
+    #[test]
+    fn noise_deterministic() {
+        let n = NoiseBursts::new(1000, 0.3, 0.25, 7);
+        for tid in 0..4 {
+            for t in [0u64, 500, 1500, 10_000] {
+                assert_eq!(n.speed(tid, t), n.speed(tid, t));
+            }
+        }
+    }
+
+    #[test]
+    fn noise_constant_within_window() {
+        let n = NoiseBursts::new(1000, 0.5, 0.25, 3);
+        assert_eq!(n.speed(0, 0), n.speed(0, 999));
+    }
+
+    #[test]
+    fn noise_probability_approximate() {
+        let n = NoiseBursts::new(1, 0.3, 0.25, 11);
+        let slowed = (0..100_000)
+            .filter(|&w| n.speed(0, w) < 1.0)
+            .count() as f64
+            / 100_000.0;
+        assert!((slowed - 0.3).abs() < 0.02, "observed {slowed}");
+    }
+
+    #[test]
+    fn zero_prob_never_slows() {
+        let n = NoiseBursts::new(100, 0.0, 0.5, 1);
+        assert!((0..1000).all(|w| n.speed(0, w * 100) == 1.0));
+    }
+
+    #[test]
+    fn compose_multiplies() {
+        let c = Compose(Heterogeneous::new(vec![0.5]), Heterogeneous::new(vec![0.5]));
+        assert_eq!(c.speed(0, 0), 0.25);
+    }
+}

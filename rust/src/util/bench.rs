@@ -1,0 +1,157 @@
+//! Minimal micro-benchmark harness (std-only).
+//!
+//! Offline substitution for `criterion`: warms up, runs timed batches,
+//! reports min/median/mean per iteration.  Used by the `cargo bench`
+//! targets (which are `harness = false` plain binaries).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// A benchmark group with a header, like criterion's groups.
+pub struct Bench {
+    group: String,
+    /// Target wall time per benchmark (split across samples).
+    pub budget: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn group(name: impl Into<String>) -> Self {
+        let group = name.into();
+        println!("\n== bench group: {group} ==");
+        println!(
+            "{:<48} {:>12} {:>12} {:>12}",
+            "name", "min", "median", "mean"
+        );
+        Self {
+            group,
+            budget: Duration::from_millis(600),
+            samples: 12,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs ONE logical iteration per call.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Measurement {
+        // Warm-up + calibration: find iters/sample so one sample takes
+        // ~budget/samples.
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < Duration::from_millis(30) {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_nanos() as u64 / calib_iters.max(1);
+        let sample_budget =
+            (self.budget.as_nanos() as u64 / self.samples as u64).max(1);
+        let iters_per_sample = (sample_budget / per_iter.max(1)).clamp(1, 1 << 24);
+
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let s0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f());
+            }
+            times.push(s0.elapsed() / iters_per_sample as u32);
+        }
+        times.sort();
+        let min = times[0];
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let m = Measurement {
+            name: format!("{}/{name}", self.group),
+            iters: iters_per_sample * self.samples as u64,
+            min,
+            median,
+            mean,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Write results as CSV under `results/bench_<group>.csv`.
+    pub fn save_csv(&self) -> std::io::Result<()> {
+        std::fs::create_dir_all("results")?;
+        let mut out = String::from("name,min_ns,median_ns,mean_ns,iters\n");
+        for m in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                m.name,
+                m.min.as_nanos(),
+                m.median.as_nanos(),
+                m.mean.as_nanos(),
+                m.iters
+            ));
+        }
+        let path = format!(
+            "results/bench_{}.csv",
+            self.group.replace(['/', ' '], "_")
+        );
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::group("selftest");
+        b.budget = Duration::from_millis(50);
+        b.samples = 4;
+        let m = b.bench("noop_sum", || (0..100u64).sum::<u64>()).clone();
+        assert!(m.min <= m.median && m.median <= m.mean * 2);
+        assert!(m.iters > 0);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(12)), "12ns");
+        assert_eq!(fmt_dur(Duration::from_micros(3)), "3.000us");
+        assert_eq!(fmt_dur(Duration::from_millis(5)), "5.000ms");
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.000s");
+    }
+}

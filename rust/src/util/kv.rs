@@ -1,0 +1,121 @@
+//! Tiny `key=value` text format (std-only serde substitution) used for
+//! the artifact manifest and the service protocol.
+//!
+//! Format: one `key=value` pair per line; `#` comments; values are
+//! strings, parsed on demand.  List values are comma-separated.
+
+use std::collections::BTreeMap;
+
+/// An ordered key-value document.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Kv {
+    map: BTreeMap<String, String>,
+}
+
+impl Kv {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut map = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key=value", lineno + 1))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Self { map })
+    }
+
+    pub fn set(&mut self, k: &str, v: impl ToString) -> &mut Self {
+        self.map.insert(k.to_string(), v.to_string());
+        self
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.map.get(k).map(String::as_str)
+    }
+
+    pub fn require(&self, k: &str) -> Result<&str, String> {
+        self.get(k).ok_or_else(|| format!("missing key '{k}'"))
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, k: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.require(k)?
+            .parse::<T>()
+            .map_err(|e| format!("key '{k}': {e}"))
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, k: &str, default: T) -> T {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list value.
+    pub fn get_list<T: std::str::FromStr>(&self, k: &str) -> Result<Vec<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.require(k)?
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| s.trim().parse::<T>().map_err(|e| format!("key '{k}': {e}")))
+            .collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.map {
+            out.push_str(k);
+            out.push('=');
+            out.push_str(v);
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut kv = Kv::new();
+        kv.set("a", 7).set("list", "1,2,3").set("name", "x y");
+        let back = Kv::parse(&kv.render()).unwrap();
+        assert_eq!(back, kv);
+        assert_eq!(back.get_parsed::<u64>("a").unwrap(), 7);
+        assert_eq!(back.get_list::<u32>("list").unwrap(), vec![1, 2, 3]);
+        assert_eq!(back.get("name").unwrap(), "x y");
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let kv = Kv::parse("# header\n\n a = 1 \n").unwrap();
+        assert_eq!(kv.get("a"), Some("1"));
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        assert!(Kv::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn missing_key_reported() {
+        let kv = Kv::parse("a=1").unwrap();
+        assert!(kv.require("b").unwrap_err().contains("'b'"));
+        assert_eq!(kv.get_or("b", 9u32), 9);
+    }
+}

@@ -1,0 +1,15 @@
+//! Std-only utility substitutes for the usual crates.io dependencies
+//! (this build environment is offline; see DESIGN.md "Offline
+//! substitutions").
+//!
+//! * [`rng`]   — PCG PRNG + normal/exponential/lognormal (for `rand*`)
+//! * [`bench`] — micro-benchmark harness (for `criterion`)
+//! * [`kv`]    — `key=value` text format (for `serde`/`serde_json`)
+
+pub mod bench;
+pub mod kv;
+pub mod rng;
+
+pub use bench::Bench;
+pub use kv::Kv;
+pub use rng::{splitmix64, Pcg};

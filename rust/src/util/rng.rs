@@ -1,0 +1,194 @@
+//! Deterministic PRNG + distribution sampling (std-only).
+//!
+//! Offline substitution for `rand`/`rand_pcg`/`rand_distr` (DESIGN.md
+//! "Offline substitutions"): a splitmix64-seeded PCG-XSH-RR 64/32 core
+//! with Box-Muller normal, inverse-CDF exponential and derived lognormal
+//! samplers.  Everything the workload generator and RAND schedule need,
+//! fully reproducible from a `u64` seed.
+
+/// splitmix64: the canonical seed expander (also usable standalone as a
+/// statelss hash for per-index sampling).
+#[inline]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32: small, fast, statistically solid.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let s0 = splitmix64(seed);
+        let s1 = splitmix64(s0);
+        let mut rng = Self { state: 0, inc: (s1 << 1) | 1 };
+        rng.state = rng.state.wrapping_add(s0);
+        rng.next_u32();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive); unbiased via rejection.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        let span = hi - lo + 1;
+        if span == 0 {
+            // span overflowed: full u64 range.
+            return self.next_u64();
+        }
+        // Lemire-style rejection.
+        let zone = u64::MAX - (u64::MAX - span + 1) % span;
+        loop {
+            let v = self.next_u64();
+            if v <= zone {
+                return lo + v % span;
+            }
+        }
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.f64();
+            return (-2.0 * u1.ln()).sqrt()
+                * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// Exponential with mean 1 (inverse CDF).
+    pub fn exp1(&mut self) -> f64 {
+        loop {
+            let u = self.f64();
+            if u < 1.0 {
+                return -(1.0 - u).ln();
+            }
+        }
+    }
+
+    /// Lognormal with log-mean `m` and log-stddev `s`.
+    pub fn lognormal(&mut self, m: f64, s: f64) -> f64 {
+        (m + s * self.normal()).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg::seed_from_u64(42);
+        let mut b = Pcg::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_decorrelate() {
+        let mut a = Pcg::seed_from_u64(1);
+        let mut b = Pcg::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Pcg::seed_from_u64(9);
+        let mean: f64 = (0..100_000).map(|_| r.f64()).sum::<f64>() / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn range_bounds_and_uniformity() {
+        let mut r = Pcg::seed_from_u64(3);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            let v = r.range_u64(5, 14);
+            assert!((5..=14).contains(&v));
+            counts[(v - 5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::seed_from_u64(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn exp1_mean() {
+        let mut r = Pcg::seed_from_u64(13);
+        let n = 200_000;
+        let mean = (0..n).map(|_| r.exp1()).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn lognormal_mean() {
+        // E[lognormal(m, s)] = exp(m + s^2/2).
+        let mut r = Pcg::seed_from_u64(17);
+        let (m, s) = (0.0, 0.5);
+        let n = 200_000;
+        let mean = (0..n).map(|_| r.lognormal(m, s)).sum::<f64>() / n as f64;
+        let want = (m + s * s / 2.0f64).exp();
+        assert!((mean - want).abs() / want < 0.03, "{mean} vs {want}");
+    }
+
+    #[test]
+    fn splitmix_avalanche() {
+        // Flipping one input bit should flip ~half the output bits.
+        let a = splitmix64(0x1234);
+        let b = splitmix64(0x1235);
+        let flipped = (a ^ b).count_ones();
+        assert!((20..=44).contains(&flipped), "{flipped}");
+    }
+}

@@ -1,0 +1,216 @@
+//! Per-iteration cost models with random-access deterministic sampling.
+
+use crate::util::rng::{splitmix64, Pcg};
+
+/// Maps a normalized iteration index to its cost in nanoseconds.
+pub trait CostModel: Send + Sync {
+    fn cost_ns(&self, i: u64) -> u64;
+    fn len(&self) -> u64;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total serial cost.
+    fn total_ns(&self) -> u64 {
+        (0..self.len()).map(|i| self.cost_ns(i)).sum()
+    }
+
+    /// Mean/stddev over the whole space (exact, by enumeration).
+    fn stats(&self) -> (f64, f64) {
+        let n = self.len();
+        if n == 0 {
+            return (0.0, 0.0);
+        }
+        let costs: Vec<f64> = (0..n).map(|i| self.cost_ns(i) as f64).collect();
+        let mean = costs.iter().sum::<f64>() / n as f64;
+        let var = costs.iter().map(|c| (c - mean).powi(2)).sum::<f64>() / n as f64;
+        (mean, var.sqrt())
+    }
+
+    /// Materialize into a vector (for tight simulator loops).
+    fn materialize(&self) -> Vec<u64> {
+        (0..self.len()).map(|i| self.cost_ns(i)).collect()
+    }
+}
+
+/// Shape of the iteration-cost distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Dist {
+    /// Every iteration costs exactly the mean.
+    Constant,
+    /// Linear ramp from ~0 to ~2x mean (rising or falling).
+    Linear { rising: bool },
+    /// Normal with coefficient of variation `cv`, truncated at 1ns.
+    Gaussian { cv: f64 },
+    /// Exponential with the given mean.
+    Exponential,
+    /// Lognormal with log-stddev `sigma`, scaled to the mean.
+    Lognormal { sigma: f64 },
+    /// `1-frac_heavy` cheap iterations, `frac_heavy` costing `ratio`x.
+    Bimodal { frac_heavy: f64, ratio: f64 },
+    /// Periodic ramp with the given period.
+    Sawtooth { period: u64 },
+}
+
+/// A synthetic workload: `cost(i)` is a pure function of `(seed, i)`.
+#[derive(Clone, Debug)]
+pub struct SyntheticCost {
+    n: u64,
+    mean_ns: f64,
+    dist: Dist,
+    seed: u64,
+}
+
+impl SyntheticCost {
+    pub fn new(n: u64, mean_ns: f64, dist: Dist, seed: u64) -> Self {
+        assert!(mean_ns > 0.0);
+        Self { n, mean_ns, dist, seed }
+    }
+
+    #[inline]
+    fn rng_for(&self, i: u64) -> Pcg {
+        // splitmix-style index mixing for decorrelated per-index streams.
+        let z = splitmix64(self.seed ^ i.wrapping_mul(0x9E3779B97F4A7C15));
+        Pcg::seed_from_u64(z)
+    }
+}
+
+impl CostModel for SyntheticCost {
+    fn cost_ns(&self, i: u64) -> u64 {
+        debug_assert!(i < self.n);
+        let mu = self.mean_ns;
+        let x = match self.dist {
+            Dist::Constant => mu,
+            Dist::Linear { rising } => {
+                // Ramp 0..2mu keeps the mean at mu.
+                let frac = if self.n <= 1 {
+                    0.5
+                } else {
+                    i as f64 / (self.n - 1) as f64
+                };
+                let frac = if rising { frac } else { 1.0 - frac };
+                2.0 * mu * frac
+            }
+            Dist::Gaussian { cv } => {
+                let z = self.rng_for(i).normal();
+                mu * (1.0 + cv * z)
+            }
+            Dist::Exponential => mu * self.rng_for(i).exp1(),
+            Dist::Lognormal { sigma } => {
+                // E[lognormal(m, s)] = exp(m + s^2/2); solve m for mean mu.
+                let m = mu.ln() - sigma * sigma / 2.0;
+                self.rng_for(i).lognormal(m, sigma)
+            }
+            Dist::Bimodal { frac_heavy, ratio } => {
+                // Normalize so the mixture mean is mu.
+                let base = mu / (1.0 - frac_heavy + frac_heavy * ratio);
+                if self.rng_for(i).f64() < frac_heavy {
+                    base * ratio
+                } else {
+                    base
+                }
+            }
+            Dist::Sawtooth { period } => {
+                let phase = (i % period.max(1)) as f64 / period.max(1) as f64;
+                2.0 * mu * phase
+            }
+        };
+        x.max(1.0).round() as u64
+    }
+
+    fn len(&self) -> u64 {
+        self.n
+    }
+}
+
+/// A trace-backed workload: explicit per-iteration costs, e.g. replayed
+/// from an application profile (the "production trace" substitute of
+/// DESIGN.md §4).
+#[derive(Clone, Debug, Default)]
+pub struct TraceCost {
+    costs: Vec<u64>,
+}
+
+impl TraceCost {
+    pub fn new(costs: Vec<u64>) -> Self {
+        Self { costs }
+    }
+}
+
+impl CostModel for TraceCost {
+    fn cost_ns(&self, i: u64) -> u64 {
+        self.costs[i as usize]
+    }
+
+    fn len(&self) -> u64 {
+        self.costs.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_random_access() {
+        let m = SyntheticCost::new(1000, 500.0, Dist::Lognormal { sigma: 1.0 }, 42);
+        let seq: Vec<u64> = (0..1000).map(|i| m.cost_ns(i)).collect();
+        // Access out of order and compare.
+        for &i in &[999u64, 0, 500, 3, 998] {
+            assert_eq!(m.cost_ns(i), seq[i as usize]);
+        }
+        // Same seed -> same workload.
+        let m2 = SyntheticCost::new(1000, 500.0, Dist::Lognormal { sigma: 1.0 }, 42);
+        assert_eq!(m2.materialize(), seq);
+    }
+
+    #[test]
+    fn different_seeds_decorrelate() {
+        let a = SyntheticCost::new(100, 500.0, Dist::Exponential, 1).materialize();
+        let b = SyntheticCost::new(100, 500.0, Dist::Exponential, 2).materialize();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn costs_never_zero() {
+        for dist in [
+            Dist::Gaussian { cv: 2.0 },
+            Dist::Exponential,
+            Dist::Linear { rising: true },
+            Dist::Sawtooth { period: 10 },
+        ] {
+            let m = SyntheticCost::new(1000, 10.0, dist, 9);
+            assert!((0..1000).all(|i| m.cost_ns(i) >= 1));
+        }
+    }
+
+    #[test]
+    fn gaussian_cv_matches() {
+        let m = SyntheticCost::new(100_000, 1000.0, Dist::Gaussian { cv: 0.3 }, 5);
+        let (mean, sd) = m.stats();
+        assert!((mean - 1000.0).abs() < 30.0, "mean {mean}");
+        assert!((sd / mean - 0.3).abs() < 0.05, "cv {}", sd / mean);
+    }
+
+    #[test]
+    fn exponential_cv_near_one() {
+        let m = SyntheticCost::new(100_000, 1000.0, Dist::Exponential, 5);
+        let (mean, sd) = m.stats();
+        assert!((sd / mean - 1.0).abs() < 0.1, "cv {}", sd / mean);
+    }
+
+    #[test]
+    fn trace_cost_roundtrip() {
+        let t = TraceCost::new(vec![5, 10, 15]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.cost_ns(1), 10);
+        assert_eq!(t.total_ns(), 30);
+    }
+
+    #[test]
+    fn stats_empty() {
+        let t = TraceCost::new(vec![]);
+        assert_eq!(t.stats(), (0.0, 0.0));
+        assert!(t.is_empty());
+    }
+}

@@ -1,0 +1,137 @@
+//! Workload substrate: per-iteration cost models and the named workload
+//! classes of the companion evaluation ("OpenMP Loop Scheduling
+//! Revisited" [8]).
+//!
+//! A [`CostModel`] maps a normalized iteration index to its execution
+//! cost in nanoseconds.  Sampling is *random-access deterministic*: the
+//! cost of iteration `i` is a pure function of `(seed, i)`, so simulator
+//! runs, real runs and property tests all observe the same workload
+//! regardless of scheduling order.
+
+pub mod cost_model;
+
+pub use cost_model::{CostModel, Dist, SyntheticCost, TraceCost};
+
+
+/// The named workload classes the evaluation sweeps (E2/E3).  Parameters
+/// follow the shapes used in [8]: mean iteration cost around `mean_ns`
+/// with class-specific irregularity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadClass {
+    /// Identical iterations (matrix ops, regular stencils).
+    Uniform,
+    /// Linearly increasing cost (triangular loops, e.g. LU, Mandelbrot rows).
+    Increasing,
+    /// Linearly decreasing cost.
+    Decreasing,
+    /// Gaussian around the mean (mild irregularity).
+    Gaussian,
+    /// Exponential (many cheap, few expensive — adaptive mesh codes).
+    Exponential,
+    /// Lognormal heavy tail (N-body leaf costs, sparse rows).
+    Lognormal,
+    /// Two populations: 90% cheap, 10% 10x (branchy kernels).
+    Bimodal,
+    /// Periodic ramp (wavefront sweeps across time steps).
+    Sawtooth,
+}
+
+impl WorkloadClass {
+    pub const ALL: [WorkloadClass; 8] = [
+        WorkloadClass::Uniform,
+        WorkloadClass::Increasing,
+        WorkloadClass::Decreasing,
+        WorkloadClass::Gaussian,
+        WorkloadClass::Exponential,
+        WorkloadClass::Lognormal,
+        WorkloadClass::Bimodal,
+        WorkloadClass::Sawtooth,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadClass::Uniform => "uniform",
+            WorkloadClass::Increasing => "increasing",
+            WorkloadClass::Decreasing => "decreasing",
+            WorkloadClass::Gaussian => "gaussian",
+            WorkloadClass::Exponential => "exponential",
+            WorkloadClass::Lognormal => "lognormal",
+            WorkloadClass::Bimodal => "bimodal",
+            WorkloadClass::Sawtooth => "sawtooth",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|c| c.name() == s.to_ascii_lowercase())
+    }
+
+    /// Instantiate the class as a concrete cost model with the given mean
+    /// cost and seed.
+    pub fn model(&self, n: u64, mean_ns: f64, seed: u64) -> SyntheticCost {
+        let dist = match self {
+            WorkloadClass::Uniform => Dist::Constant,
+            WorkloadClass::Increasing => Dist::Linear { rising: true },
+            WorkloadClass::Decreasing => Dist::Linear { rising: false },
+            WorkloadClass::Gaussian => Dist::Gaussian { cv: 0.3 },
+            WorkloadClass::Exponential => Dist::Exponential,
+            WorkloadClass::Lognormal => Dist::Lognormal { sigma: 1.0 },
+            WorkloadClass::Bimodal => Dist::Bimodal { frac_heavy: 0.1, ratio: 10.0 },
+            WorkloadClass::Sawtooth => Dist::Sawtooth { period: (n / 16).max(2) },
+        };
+        SyntheticCost::new(n, mean_ns, dist, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for c in WorkloadClass::ALL {
+            assert_eq!(WorkloadClass::parse(c.name()), Some(c));
+        }
+        assert_eq!(WorkloadClass::parse("nope"), None);
+    }
+
+    #[test]
+    fn models_have_requested_mean() {
+        let n = 50_000;
+        for c in WorkloadClass::ALL {
+            let m = c.model(n, 1000.0, 7);
+            let total: u64 = (0..n).map(|i| m.cost_ns(i)).sum();
+            let mean = total as f64 / n as f64;
+            assert!(
+                (mean - 1000.0).abs() / 1000.0 < 0.15,
+                "{}: mean {mean}",
+                c.name()
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_has_zero_variance() {
+        let m = WorkloadClass::Uniform.model(100, 500.0, 1);
+        assert!((0..100).all(|i| m.cost_ns(i) == 500));
+    }
+
+    #[test]
+    fn increasing_is_monotone() {
+        let m = WorkloadClass::Increasing.model(1000, 100.0, 1);
+        let costs: Vec<u64> = (0..1000).map(|i| m.cost_ns(i)).collect();
+        assert!(costs.windows(2).all(|w| w[0] <= w[1]));
+        assert!(costs[999] > costs[0]);
+    }
+
+    #[test]
+    fn bimodal_has_two_populations() {
+        let m = WorkloadClass::Bimodal.model(10_000, 1000.0, 3);
+        let costs: Vec<u64> = (0..10_000).map(|i| m.cost_ns(i)).collect();
+        let max = *costs.iter().max().unwrap();
+        let min = *costs.iter().min().unwrap();
+        assert!(max as f64 / min as f64 > 5.0);
+        let heavy = costs.iter().filter(|&&c| c > min * 5).count();
+        let frac = heavy as f64 / costs.len() as f64;
+        assert!((0.05..0.2).contains(&frac), "heavy fraction {frac}");
+    }
+}

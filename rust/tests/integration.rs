@@ -1,0 +1,334 @@
+//! Integration tests: executors x schedulers x workloads x history.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+use uds::coordinator::{
+    parallel_for, ExecOptions, HistoryArena, LoopRecord, LoopSpec, TeamSpec,
+};
+use uds::schedules::ScheduleSpec;
+use uds::sim::{simulate, Heterogeneous, NoVariability, NoiseBursts, SimConfig};
+use uds::workload::{CostModel, TraceCost, WorkloadClass};
+
+/// Every roster schedule, on the REAL thread-team executor, must execute
+/// every iteration exactly once.
+#[test]
+fn real_executor_exactly_once_all_schedules() {
+    let n = 10_007u64; // prime, to stress remainders
+    let team = TeamSpec::uniform(4);
+    for spec in ScheduleSpec::roster() {
+        let hits: Vec<AtomicU8> = (0..n).map(|_| AtomicU8::new(0)).collect();
+        let history = HistoryArena::new();
+        let stats = parallel_for(
+            &LoopSpec::upto(n),
+            &team,
+            &*spec.factory(),
+            &history,
+            &ExecOptions::default(),
+            |i, _| {
+                hits[i as usize].fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(stats.iterations, n, "{}", spec.label());
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(
+                h.load(Ordering::Relaxed),
+                1,
+                "{}: iteration {i} ran wrong number of times",
+                spec.label()
+            );
+        }
+    }
+}
+
+/// Simulator and real executor must agree on the *chunk count* for
+/// deterministic (dequeue-order-independent) schedules.
+#[test]
+fn sim_and_real_agree_on_chunk_counts() {
+    let n = 4096u64;
+    let team = TeamSpec::uniform(4);
+    let costs = TraceCost::new(vec![50; n as usize]);
+    for spec in [
+        ScheduleSpec::Static { chunk: Some(32) },
+        ScheduleSpec::Dynamic { chunk: 32 },
+        ScheduleSpec::Tss { params: None },
+        ScheduleSpec::Fac2,
+    ] {
+        let sim_stats = simulate(
+            &LoopSpec::upto(n),
+            &team,
+            &*spec.factory(),
+            &costs,
+            &NoVariability,
+            &mut LoopRecord::default(),
+            &SimConfig::default(),
+        );
+        let history = HistoryArena::new();
+        let real_stats = parallel_for(
+            &LoopSpec::upto(n),
+            &team,
+            &*spec.factory(),
+            &history,
+            &ExecOptions::default(),
+            |_, _| {},
+        );
+        assert_eq!(
+            sim_stats.chunks,
+            real_stats.chunks,
+            "{}: sim {} vs real {}",
+            spec.label(),
+            sim_stats.chunks,
+            real_stats.chunks
+        );
+    }
+}
+
+/// Strided and negative-stride loops pass logical indices to the body.
+#[test]
+fn strided_loops_all_schedules() {
+    use std::sync::Mutex;
+    let spec_up = LoopSpec::new(100, 150, 7).unwrap(); // 100,107,...,149 (8 iters)
+    let spec_down = LoopSpec::new(50, 10, -5).unwrap(); // 50,45,...,15 (8 iters)
+    let team = TeamSpec::uniform(3);
+    for sched in ScheduleSpec::roster() {
+        for (loop_spec, expect) in [
+            (spec_up, (0..8).map(|k| 100 + 7 * k).collect::<Vec<i64>>()),
+            (spec_down, (0..8).map(|k| 50 - 5 * k).collect::<Vec<i64>>()),
+        ] {
+            let seen = Mutex::new(Vec::new());
+            let history = HistoryArena::new();
+            parallel_for(
+                &loop_spec,
+                &team,
+                &*sched.factory(),
+                &history,
+                &ExecOptions::default(),
+                |i, _| seen.lock().unwrap().push(i),
+            );
+            let mut v = seen.into_inner().unwrap();
+            v.sort();
+            let mut e = expect.clone();
+            e.sort();
+            assert_eq!(v, e, "{} on {loop_spec:?}", sched.label());
+        }
+    }
+}
+
+/// AWF learns heterogeneous speeds across invocations: by the 4th
+/// invocation its makespan must beat oblivious FAC2 on a 4x-skewed team.
+#[test]
+fn awf_adapts_to_heterogeneity() {
+    let n = 20_000u64;
+    let p = 4usize;
+    let costs = WorkloadClass::Uniform.model(n, 1_000.0, 7);
+    let het = Heterogeneous::new(vec![1.0, 1.0, 1.0, 8.0]);
+    let cfg = SimConfig { dequeue_overhead_ns: 100, trace: false };
+
+    let run_seq = |spec: ScheduleSpec, invocations: usize| -> u64 {
+        let mut rec = LoopRecord::default();
+        let mut last = 0;
+        for _ in 0..invocations {
+            let stats = simulate(
+                &LoopSpec::upto(n),
+                &TeamSpec::uniform(p),
+                &*spec.factory(),
+                &costs,
+                &het,
+                &mut rec,
+                &cfg,
+            );
+            last = stats.makespan_ns;
+        }
+        last
+    };
+
+    let awf = run_seq(ScheduleSpec::Awf { variant: "b".into() }, 5);
+    let static_ms = run_seq(ScheduleSpec::Static { chunk: None }, 5);
+    // Static block gives every thread n/4; the slow threads dominate.
+    // AWF should be at least 1.5x better.
+    assert!(
+        (static_ms as f64) > 1.5 * awf as f64,
+        "awf {awf} vs static {static_ms}"
+    );
+}
+
+/// The history arena preserves per-call-site records across invocations
+/// and isolates distinct call sites.
+#[test]
+fn history_isolated_per_call_site() {
+    let team = TeamSpec::uniform(2);
+    let history = HistoryArena::new();
+    let f = ScheduleSpec::Fac2.factory();
+    for (site, n) in [("a", 100u64), ("a", 100), ("b", 50)] {
+        parallel_for(
+            &LoopSpec::upto(n),
+            &team,
+            &*f,
+            &history,
+            &ExecOptions { call_site: Some(site.into()), ..Default::default() },
+            |_, _| {},
+        );
+    }
+    assert_eq!(history.record("a").lock().unwrap().invocations, 2);
+    assert_eq!(history.record("b").lock().unwrap().invocations, 1);
+    assert_eq!(history.len(), 2);
+}
+
+/// Tuned-dynamic converges: across invocations on an overhead-dominated
+/// workload the tuner must grow k and reduce total dequeues.
+#[test]
+fn tuned_dynamic_reduces_dequeues_over_time() {
+    let n = 50_000u64;
+    let costs = WorkloadClass::Uniform.model(n, 50.0, 1);
+    let cfg = SimConfig { dequeue_overhead_ns: 2_000, trace: false };
+    let spec = ScheduleSpec::Tuned { k0: 1 };
+    let mut rec = LoopRecord::default();
+    let mut dequeues = Vec::new();
+    for _ in 0..8 {
+        let stats = simulate(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(4),
+            &*spec.factory(),
+            &costs,
+            &NoVariability,
+            &mut rec,
+            &cfg,
+        );
+        dequeues.push(stats.total_dequeues());
+    }
+    assert!(
+        dequeues.last().unwrap() * 4 < dequeues[0],
+        "tuner failed to grow k: {dequeues:?}"
+    );
+}
+
+/// Noise hurts static more than the adaptive/dynamic families (the E5
+/// claim, asserted at integration level).
+#[test]
+fn noise_hurts_static_more_than_self_scheduling() {
+    let n = 20_000u64;
+    let costs = WorkloadClass::Uniform.model(n, 1_000.0, 3);
+    let noise = NoiseBursts::new(200_000, 0.4, 0.2, 9);
+    let cfg = SimConfig { dequeue_overhead_ns: 100, trace: false };
+    let run = |spec: ScheduleSpec| {
+        simulate(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(4),
+            &*spec.factory(),
+            &costs,
+            &noise,
+            &mut LoopRecord::default(),
+            &cfg,
+        )
+        .makespan_ns
+    };
+    let st = run(ScheduleSpec::Static { chunk: None });
+    let ss = run(ScheduleSpec::Dynamic { chunk: 16 });
+    assert!(st > ss, "static {st} should exceed dynamic,16 {ss} under noise");
+}
+
+/// Empty loops, single iterations and single threads never hang or panic.
+#[test]
+fn degenerate_geometries() {
+    for spec in ScheduleSpec::roster() {
+        for (n, p) in [(0u64, 1usize), (0, 8), (1, 1), (1, 8), (2, 2)] {
+            let counter = AtomicU64::new(0);
+            let history = HistoryArena::new();
+            let stats = parallel_for(
+                &LoopSpec::upto(n),
+                &TeamSpec::uniform(p),
+                &*spec.factory(),
+                &history,
+                &ExecOptions::default(),
+                |_, _| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                },
+            );
+            assert_eq!(counter.load(Ordering::Relaxed), n, "{} n={n} p={p}", spec.label());
+            assert_eq!(stats.iterations, n);
+        }
+    }
+}
+
+/// Trace mode records a complete, ordered chunk log.
+#[test]
+fn trace_mode_complete() {
+    let n = 1000u64;
+    let costs = WorkloadClass::Gaussian.model(n, 200.0, 5);
+    let stats = simulate(
+        &LoopSpec::upto(n),
+        &TeamSpec::uniform(4),
+        &*ScheduleSpec::Guided { min_chunk: 1 }.factory(),
+        &costs,
+        &NoVariability,
+        &mut LoopRecord::default(),
+        &SimConfig { dequeue_overhead_ns: 10, trace: true },
+    );
+    let total: u64 = stats.trace.iter().map(|c| c.chunk.len).sum();
+    assert_eq!(total, n);
+    assert!(stats.trace.windows(2).all(|w| w[0].start_ns <= w[1].start_ns));
+}
+
+/// The WF2/E7 claim: on a heterogeneous team, user-weighted WF2 beats
+/// weight-oblivious FAC2.
+#[test]
+fn wf2_beats_fac2_on_heterogeneous_team() {
+    let n = 50_000u64;
+    let speeds = vec![1.0, 1.0, 2.0, 4.0];
+    let costs = WorkloadClass::Uniform.model(n, 1_000.0, 11);
+    let het = Heterogeneous::new(speeds.clone());
+    let cfg = SimConfig { dequeue_overhead_ns: 100, trace: false };
+    let wf2 = simulate(
+        &LoopSpec::upto(n),
+        &TeamSpec::weighted(&speeds),
+        &*ScheduleSpec::Wf2.factory(),
+        &costs,
+        &het,
+        &mut LoopRecord::default(),
+        &cfg,
+    );
+    let fac2 = simulate(
+        &LoopSpec::upto(n),
+        &TeamSpec::uniform(4),
+        &*ScheduleSpec::Fac2.factory(),
+        &costs,
+        &het,
+        &mut LoopRecord::default(),
+        &cfg,
+    );
+    assert!(
+        wf2.makespan_ns < fac2.makespan_ns,
+        "wf2 {} vs fac2 {}",
+        wf2.makespan_ns,
+        fac2.makespan_ns
+    );
+}
+
+/// Auto-selection settles on static for regular loops and improves on
+/// its exploration invocation.
+#[test]
+fn auto_selects_static_for_regular_loop() {
+    let n = 10_000u64;
+    let costs = WorkloadClass::Uniform.model(n, 500.0, 2);
+    let cfg = SimConfig { dequeue_overhead_ns: 500, trace: false };
+    let spec = ScheduleSpec::Auto;
+    let mut rec = LoopRecord::default();
+    let mut makespans = Vec::new();
+    for _ in 0..4 {
+        let stats = simulate(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(4),
+            &*spec.factory(),
+            &costs,
+            &NoVariability,
+            &mut rec,
+            &cfg,
+        );
+        makespans.push(stats.makespan_ns);
+        rec.invocations = rec.invocations.max(1);
+    }
+    assert_eq!(rec.selected.as_deref(), Some("static"));
+    assert!(
+        *makespans.last().unwrap() < makespans[0],
+        "selection should improve on exploration: {makespans:?}"
+    );
+}

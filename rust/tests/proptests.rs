@@ -1,0 +1,270 @@
+//! Property-based tests over the coordinator invariants: exact cover,
+//! determinism, UDS-port equivalence, simulator bounds.
+//!
+//! Offline substitution for `proptest`: a seeded-PRNG case generator
+//! (`cases`) runs each property over N random configurations and reports
+//! the failing seed, so any failure is reproducible by fixing `BASE_SEED`.
+
+use uds::coordinator::{drain_chunks, verify_cover, LoopRecord, LoopSpec, ScheduleFactory, TeamSpec};
+use uds::schedules::ScheduleSpec;
+use uds::sim::{simulate, NoVariability, SimConfig};
+use uds::util::rng::Pcg;
+use uds::workload::{CostModel, Dist, SyntheticCost};
+
+const BASE_SEED: u64 = 0xC0FFEE;
+
+/// Run `prop` over `n_cases` PRNG-derived cases; panic with the case seed
+/// on failure so it can be replayed.
+fn cases(name: &str, n_cases: u64, mut prop: impl FnMut(&mut Pcg)) {
+    for case in 0..n_cases {
+        let seed = BASE_SEED ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_roster_spec(rng: &mut Pcg) -> ScheduleSpec {
+    let roster = ScheduleSpec::roster();
+    roster[rng.range_u64(0, roster.len() as u64 - 1) as usize].clone()
+}
+
+/// THE invariant: every scheduler covers an arbitrary iteration space
+/// exactly once under the canonical drain interleaving.
+#[test]
+fn prop_exact_cover() {
+    cases("exact_cover", 120, |rng| {
+        let spec = random_roster_spec(rng);
+        let n = rng.range_u64(0, 5_000);
+        let p = rng.range_u64(1, 11) as usize;
+        let mut s = spec.build();
+        let chunks = drain_chunks(
+            &mut *s,
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &mut LoopRecord::default(),
+        );
+        if n > 0 {
+            verify_cover(&chunks, n)
+                .unwrap_or_else(|e| panic!("{} n={n} p={p}: {e}", spec.label()));
+        } else {
+            assert!(chunks.is_empty(), "{}: empty loop produced chunks", spec.label());
+        }
+    });
+}
+
+/// Strided loops: iteration counts and logical mapping hold for
+/// arbitrary (lb, len, incr), both directions.
+#[test]
+fn prop_strided_cover() {
+    cases("strided_cover", 80, |rng| {
+        let spec = random_roster_spec(rng);
+        let lb = rng.range_u64(0, 2_000) as i64 - 1_000;
+        let len = rng.range_u64(0, 2_000);
+        let mag = rng.range_u64(1, 19) as i64;
+        let incr = if rng.f64() < 0.5 { mag } else { -mag };
+        let ub = lb + len as i64 * incr;
+        let loop_spec = LoopSpec::new(lb, ub, incr).unwrap();
+        assert_eq!(loop_spec.iter_count(), len, "geometry setup");
+        let p = rng.range_u64(1, 7) as usize;
+        let mut s = spec.build();
+        let chunks = drain_chunks(
+            &mut *s,
+            &loop_spec,
+            &TeamSpec::uniform(p),
+            &mut LoopRecord::default(),
+        );
+        if len > 0 {
+            verify_cover(&chunks, len).unwrap_or_else(|e| {
+                panic!("{} lb={lb} incr={incr} len={len}: {e}", spec.label())
+            });
+        }
+    });
+}
+
+/// Chunk sequences are deterministic run-to-run (same interleaving).
+#[test]
+fn prop_deterministic_chunks() {
+    cases("deterministic_chunks", 60, |rng| {
+        let spec = random_roster_spec(rng);
+        let n = rng.range_u64(1, 3_000);
+        let p = rng.range_u64(1, 7) as usize;
+        let drain = || {
+            let mut s = spec.build();
+            drain_chunks(
+                &mut *s,
+                &LoopSpec::upto(n),
+                &TeamSpec::uniform(p),
+                &mut LoopRecord::default(),
+            )
+        };
+        assert_eq!(drain(), drain(), "{} n={n} p={p}", spec.label());
+    });
+}
+
+/// Simulator physics: serial/P <= makespan <= serial + dequeue costs.
+#[test]
+fn prop_sim_makespan_bounds() {
+    cases("sim_makespan_bounds", 60, |rng| {
+        let spec = random_roster_spec(rng);
+        let n = rng.range_u64(1, 2_000);
+        let p = rng.range_u64(1, 7) as usize;
+        let h = rng.range_u64(0, 500);
+        let seed = rng.next_u64();
+        let costs = SyntheticCost::new(n, 200.0, Dist::Lognormal { sigma: 0.8 }, seed);
+        let serial = costs.total_ns();
+        let stats = simulate(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &*spec.factory(),
+            &costs,
+            &NoVariability,
+            &mut LoopRecord::default(),
+            &SimConfig { dequeue_overhead_ns: h, trace: false },
+        );
+        let lower = serial / p as u64;
+        let upper = serial + stats.total_dequeues() * h + p as u64 * h + p as u64 + 1;
+        assert!(
+            stats.makespan_ns >= lower,
+            "{}: makespan {} < critical path {lower}",
+            spec.label(),
+            stats.makespan_ns
+        );
+        assert!(
+            stats.makespan_ns <= upper,
+            "{}: makespan {} > serial+overhead {upper}",
+            spec.label(),
+            stats.makespan_ns
+        );
+        assert_eq!(stats.iters.iter().sum::<u64>(), n, "{}", spec.label());
+    });
+}
+
+/// GSS's closed-form sequence: sums to n, nonincreasing, head ceil(n/p).
+#[test]
+fn prop_gss_sequence_closed_form() {
+    cases("gss_sequence", 200, |rng| {
+        let n = rng.range_u64(1, 50_000);
+        let p = rng.range_u64(1, 31);
+        let seq = uds::schedules::Gss::sequence(n, p, 1);
+        assert_eq!(seq.iter().sum::<u64>(), n);
+        assert!(seq.windows(2).all(|w| w[0] >= w[1]));
+        assert_eq!(seq[0], n.div_ceil(p));
+    });
+}
+
+/// TSS and FAC2 compiled sequences always cover exactly.
+#[test]
+fn prop_compiled_sequences_cover() {
+    cases("compiled_sequences", 200, |rng| {
+        let n = rng.range_u64(0, 100_000);
+        let p = rng.range_u64(1, 31);
+        let tss: u64 = uds::schedules::Tss::sequence(n, p, None).iter().sum();
+        assert_eq!(tss, n, "tss n={n} p={p}");
+        let fac2: u64 = uds::schedules::Fac2::sequence(n, p).iter().sum();
+        assert_eq!(fac2, n, "fac2 n={n} p={p}");
+    });
+}
+
+/// UDS lambda ports are chunk-identical to natives for arbitrary geometry
+/// (the E6 property, generalized).
+#[test]
+fn prop_lambda_ports_equiv() {
+    cases("lambda_ports_equiv", 40, |rng| {
+        use uds::schedules::uds_port;
+        let n = rng.range_u64(1, 3_000);
+        let p = rng.range_u64(1, 7) as usize;
+        let k = rng.range_u64(1, 63);
+        let team = TeamSpec::uniform(p);
+        let spec = LoopSpec::upto(n);
+        let pairs: Vec<(
+            Box<dyn uds::coordinator::Scheduler>,
+            Box<dyn uds::coordinator::Scheduler>,
+            &str,
+        )> = vec![
+            (
+                uds::schedules::static_block(Some(k)),
+                uds_port::lambda_static(k).build(),
+                "static",
+            ),
+            (
+                uds::schedules::dynamic_chunk(k),
+                uds_port::lambda_dynamic(k).build(),
+                "dynamic",
+            ),
+            (uds::schedules::gss(1), uds_port::lambda_gss(1).build(), "gss"),
+            (uds::schedules::tss(None), uds_port::lambda_tss().build(), "tss"),
+            (uds::schedules::fac2(), uds_port::lambda_fac2().build(), "fac2"),
+        ];
+        for (mut native, mut uds_s, name) in pairs {
+            let a = drain_chunks(&mut *native, &spec, &team, &mut LoopRecord::default());
+            let b = drain_chunks(&mut *uds_s, &spec, &team, &mut LoopRecord::default());
+            assert_eq!(a, b, "{name} n={n} p={p} k={k}");
+        }
+    });
+}
+
+/// Workload generators: requested mean is hit within tolerance.
+#[test]
+fn prop_workload_means() {
+    cases("workload_means", 10, |rng| {
+        use uds::workload::WorkloadClass;
+        let seed = rng.next_u64();
+        let mean = 50.0 + rng.f64() * 4_950.0;
+        for class in WorkloadClass::ALL {
+            let m = class.model(20_000, mean, seed);
+            let (got, _sd) = m.stats();
+            assert!(
+                (got - mean).abs() / mean < 0.25,
+                "{}: mean {got} want {mean}",
+                class.name()
+            );
+        }
+    });
+}
+
+/// Metrics: imbalance is scale-invariant and nonnegative.
+#[test]
+fn prop_imbalance_properties() {
+    cases("imbalance_properties", 100, |rng| {
+        let len = rng.range_u64(1, 31) as usize;
+        let xs: Vec<u64> = (0..len).map(|_| rng.range_u64(1, 1_000_000)).collect();
+        let imb = uds::metrics::ratio_imbalance(&xs);
+        assert!(imb >= 0.0);
+        let scaled: Vec<u64> = xs.iter().map(|&x| x * 3).collect();
+        let imb2 = uds::metrics::ratio_imbalance(&scaled);
+        assert!((imb - imb2).abs() < 1e-9);
+    });
+}
+
+/// History-carrying schedules (AWF/AF/auto/tuned) still exact-cover on
+/// every invocation of a multi-invocation sequence.
+#[test]
+fn prop_adaptives_cover_across_invocations() {
+    cases("adaptives_multi_invocation", 30, |rng| {
+        let n = rng.range_u64(1, 2_000);
+        let p = rng.range_u64(1, 7) as usize;
+        for label in ["awf-b", "awf-c", "af", "auto", "tuned,4"] {
+            let spec = ScheduleSpec::parse(label).unwrap();
+            let mut rec = LoopRecord::default();
+            for inv in 0..3 {
+                let mut s = spec.build();
+                let chunks = drain_chunks(
+                    &mut *s,
+                    &LoopSpec::upto(n),
+                    &TeamSpec::uniform(p),
+                    &mut rec,
+                );
+                verify_cover(&chunks, n).unwrap_or_else(|e| {
+                    panic!("{label} inv={inv} n={n} p={p}: {e}")
+                });
+                rec.invocations += 1;
+            }
+        }
+    });
+}
