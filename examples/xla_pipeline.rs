@@ -42,6 +42,13 @@ fn main() {
     let artifacts = PathBuf::from(
         std::env::var("UDS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
+    if !uds::runtime::available() {
+        eprintln!(
+            "PJRT backend unavailable — rebuild with `--features pjrt` \
+             after adding the `xla` dependency (see rust/Cargo.toml)"
+        );
+        std::process::exit(1);
+    }
     if !artifacts.join("manifest.txt").exists() {
         eprintln!("artifacts not found — run `make artifacts` first");
         std::process::exit(1);

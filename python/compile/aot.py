@@ -11,7 +11,7 @@ Outputs, one per depth class:
     artifacts/work_d{depth}.hlo.txt   -- the executable the Rust runtime loads
     artifacts/manifest.txt            -- shapes, depth classes, tolerances
                                          (key=value lines; the Rust side is
-                                         offline/serde-free, see DESIGN.md)
+                                         offline/serde-free key=value format)
     artifacts/golden.txt              -- deterministic input/output vectors the
                                          Rust integration tests check numerics
                                          against (first/last elements + checksum)

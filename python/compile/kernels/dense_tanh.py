@@ -13,7 +13,7 @@ The kernel is row-tiled: the grid iterates over tiles of TILE_M rows of
 -- fits comfortably in VMEM and the matmul shape (TILE_M, D) @ (D, D) maps
 directly onto the MXU systolic array.  With the default TILE_M=128 and
 D=256 the footprint is ~0.5 MiB, far under the ~16 MiB VMEM budget (see
-DESIGN.md section 7).
+the vmem_footprint_bytes estimate below).
 
 ``interpret=True`` is mandatory in this image: real TPU lowering emits a
 Mosaic custom-call the CPU PJRT plugin cannot execute.  The interpret path
@@ -89,5 +89,5 @@ def dense_tanh(x: jax.Array, w: jax.Array, b: jax.Array,
 
 
 def vmem_bytes(tile_m: int = TILE_M, d: int = 256, itemsize: int = 4) -> int:
-    """Estimated per-grid-step VMEM footprint (see DESIGN.md section 7)."""
+    """Estimated per-grid-step VMEM footprint (see the vmem_footprint_bytes estimate below)."""
     return itemsize * (tile_m * d + d * d + d + tile_m * d)

@@ -10,7 +10,7 @@ dispatching the chunk to the matching AOT-compiled executable
 
 The depth loop uses ``lax.fori_loop`` so the lowered HLO contains a single
 while-loop around one fused matmul+bias+tanh body instead of ``depth``
-unrolled copies (see DESIGN.md section 7, L2 target).
+unrolled copies (sized to the L2 VMEM target; see dense_tanh.py).
 """
 
 from __future__ import annotations

@@ -132,7 +132,7 @@ class TestDenseTanhHypothesis:
 
 class TestVmemEstimate:
     def test_default_fits_vmem(self):
-        # DESIGN.md section 7: default geometry must sit far below 16 MiB.
+        # VMEM budget: default geometry must sit far below 16 MiB.
         assert vmem_bytes() < 16 * 1024 * 1024 // 4
 
     def test_scales_with_tile(self):

@@ -1,0 +1,121 @@
+//! Sim-throughput bench: simulations/second before vs. after the
+//! prefix-sum cost engine (EXPERIMENTS.md §Sim-throughput).
+//!
+//! Two call paths per schedule, same workload/geometry:
+//!
+//! * `per_run_materialize` — today's `simulate()` wrapper: every run
+//!   pays the O(n) cost-table build (one RNG sample per iteration, the
+//!   dominant pre-change cost) plus fresh arena allocation.  The
+//!   pre-change code paid this *and* O(n) per-iteration summation
+//!   inside the virtual-time loop, so the speedup this bench reports
+//!   is a lower bound on the true before/after ratio.
+//! * `cached_index` — the post-change hot path: the `CostIndex` is
+//!   built once outside the timed region (exactly like the service's
+//!   workload cache and the sweep drivers), the `SimArena` is reused,
+//!   and each run is O(chunks).
+//!
+//! Run: `cargo bench --bench sim_throughput` (full: n=1e6, P=8) or
+//! `cargo bench --bench sim_throughput -- --smoke` (CI-sized n=20k).
+//! The headline ratio is printed at the end and recorded in
+//! EXPERIMENTS.md.
+
+use uds::coordinator::{LoopRecord, LoopSpec, TeamSpec};
+use uds::schedules::ScheduleSpec;
+use uds::sim::{simulate, simulate_indexed, NoVariability, SimArena, SimConfig};
+use uds::util::Bench;
+use uds::workload::{CostIndex, WorkloadClass};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let n: u64 = if smoke { 20_000 } else { 1_000_000 };
+    let p = 8usize;
+    let cfg = SimConfig { dequeue_overhead_ns: 250, trace: false };
+    let class = WorkloadClass::Lognormal;
+    let model = class.model(n, 1_000.0, 42);
+
+    let group = if smoke { "sim_throughput_smoke" } else { "sim_throughput" };
+    let mut g = Bench::group(group);
+    if smoke {
+        g.budget = std::time::Duration::from_millis(200);
+        g.samples = 4;
+    }
+
+    let mut pairs: Vec<(String, f64, f64)> = Vec::new();
+    for name in ["fac2", "gss"] {
+        let spec = ScheduleSpec::parse(name).unwrap();
+        let factory = spec.factory();
+
+        let before = g
+            .bench(&format!("{name}/per_run_materialize"), || {
+                simulate(
+                    &LoopSpec::upto(n),
+                    &TeamSpec::uniform(p),
+                    &*factory,
+                    &model,
+                    &NoVariability,
+                    &mut LoopRecord::default(),
+                    &cfg,
+                )
+                .makespan_ns
+            })
+            .clone();
+
+        let index = CostIndex::build(&model);
+        let mut arena = SimArena::new();
+        let after = g
+            .bench(&format!("{name}/cached_index"), || {
+                simulate_indexed(
+                    &LoopSpec::upto(n),
+                    &TeamSpec::uniform(p),
+                    &*factory,
+                    &index,
+                    &NoVariability,
+                    &mut LoopRecord::default(),
+                    &cfg,
+                    &mut arena,
+                )
+                .makespan_ns
+            })
+            .clone();
+
+        // Sanity: both paths must simulate the identical physics.
+        let a = simulate(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &*factory,
+            &model,
+            &NoVariability,
+            &mut LoopRecord::default(),
+            &cfg,
+        );
+        let b = simulate_indexed(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &*factory,
+            &index,
+            &NoVariability,
+            &mut LoopRecord::default(),
+            &cfg,
+            &mut arena,
+        );
+        assert_eq!(a.makespan_ns, b.makespan_ns, "{name}: paths diverged");
+
+        pairs.push((
+            name.to_string(),
+            before.mean.as_secs_f64(),
+            after.mean.as_secs_f64(),
+        ));
+    }
+
+    println!("\n== sims/second (n={n}, P={p}, lognormal, h=250ns) ==");
+    for (name, before_s, after_s) in &pairs {
+        let before_rate = 1.0 / before_s.max(1e-12);
+        let after_rate = 1.0 / after_s.max(1e-12);
+        let speedup = after_rate / before_rate.max(1e-12);
+        println!(
+            "{name:<6} before={before_rate:>12.1}/s  after={after_rate:>12.1}/s  speedup={speedup:.1}x"
+        );
+    }
+    let _ = g.save_csv();
+}

@@ -19,8 +19,6 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use std::sync::Mutex;
-
 use crate::coordinator::feedback::ChunkFeedback;
 use crate::coordinator::history::HistoryArena;
 use crate::coordinator::loop_spec::{LoopSpec, TeamSpec};
@@ -46,7 +44,7 @@ impl Default for ExecOptions {
 /// scheduled by a fresh scheduler from `factory` onto `team.nthreads`
 /// OS threads.
 ///
-/// This is the real-time twin of [`crate::sim::SimExecutor`]; both drive
+/// This is the real-time twin of [`crate::sim::simulate`]; both drive
 /// the identical [`Scheduler`] trait, so a strategy validated under the
 /// simulator runs unchanged on real threads.
 pub fn parallel_for<F>(
@@ -82,10 +80,13 @@ where
     let iters: Vec<AtomicU64> = (0..p).map(|_| AtomicU64::new(0)).collect();
     let dequeues: Vec<AtomicU64> = (0..p).map(|_| AtomicU64::new(0)).collect();
     let chunks = AtomicU64::new(0);
-    let trace: Mutex<Vec<ChunkLog>> = Mutex::new(Vec::new());
+    // Per-thread trace buffers, merged after the team joins — no shared
+    // lock on the dequeue-execute hot loop.
+    let mut trace: Vec<ChunkLog> = Vec::new();
 
     let t0 = Instant::now();
     std::thread::scope(|scope| {
+        let mut workers = Vec::with_capacity(p);
         for tid in 0..p {
             let body = &body;
             let busy = &busy;
@@ -93,10 +94,10 @@ where
             let iters = &iters;
             let dequeues = &dequeues;
             let chunks = &chunks;
-            let trace = &trace;
             let opts = &*opts;
-            scope.spawn(move || {
+            workers.push(scope.spawn(move || {
                 let mut fb: Option<ChunkFeedback> = None;
+                let mut local_trace: Vec<ChunkLog> = Vec::new();
                 loop {
                     dequeues[tid].fetch_add(1, Ordering::Relaxed);
                     let Some(chunk) = sched_ref.next(tid, fb.as_ref()) else {
@@ -118,7 +119,7 @@ where
                     finish[tid]
                         .store(start_ns + elapsed_ns, Ordering::Relaxed);
                     if opts.trace {
-                        trace.lock().unwrap().push(ChunkLog {
+                        local_trace.push(ChunkLog {
                             tid,
                             chunk,
                             start_ns,
@@ -127,7 +128,13 @@ where
                     }
                     fb = Some(ChunkFeedback { chunk, tid, elapsed_ns });
                 }
-            });
+                local_trace
+            }));
+        }
+        for w in workers {
+            // join() propagates body panics, like the scope's implicit
+            // join did before.
+            trace.extend(w.join().unwrap());
         }
     });
     let makespan_ns = t0.elapsed().as_nanos() as u64;
@@ -142,7 +149,6 @@ where
         rec.record_invocation(&busy_f, &iters_v, makespan_ns);
     }
 
-    let mut trace = trace.into_inner().unwrap();
     trace.sort_by_key(|c| c.start_ns);
     RunStats {
         schedule: sched.name(),
@@ -164,6 +170,7 @@ mod tests {
     use crate::coordinator::scheduler::FnFactory;
     use crate::schedules;
     use std::sync::atomic::AtomicU32;
+    use std::sync::Mutex;
 
     fn count_body_runs(spec: LoopSpec, team: TeamSpec, f: &dyn ScheduleFactory) -> u64 {
         let hits = AtomicU32::new(0);

@@ -1,8 +1,14 @@
-//! The E1–E8 experiments (DESIGN.md §4).
+//! The E1–E8 experiments (see EXPERIMENTS.md).
 //!
 //! All experiments except E8 run on the deterministic virtual-time
-//! simulator (S11) so results are exactly reproducible; E8 exercises the
+//! simulator so results are exactly reproducible; E8 exercises the
 //! real thread-team executor with PJRT-backed compute.
+//!
+//! The sweep-shaped experiments (E2–E5, E7) build one prefix-sum
+//! [`CostIndex`] per workload and fan configurations out over scoped
+//! threads; per-configuration results are deterministic, so the
+//! parallel drivers produce bit-identical tables to the old sequential
+//! ones (EXPERIMENTS.md §Sim-throughput).
 
 use std::path::Path;
 
@@ -12,8 +18,11 @@ use crate::coordinator::scheduler::{drain_chunks, ScheduleFactory};
 use crate::eval::table::{fmt_ns, Table};
 use crate::metrics::RunStats;
 use crate::schedules::ScheduleSpec;
-use crate::sim::{simulate, Heterogeneous, NoVariability, NoiseBursts, SimConfig};
-use crate::workload::{CostModel, WorkloadClass};
+use crate::sim::{
+    simulate, simulate_indexed, Heterogeneous, NoVariability, NoiseBursts, SimArena,
+    SimConfig,
+};
+use crate::workload::{CostIndex, WorkloadClass};
 
 /// Shared experiment parameters.
 #[derive(Clone, Debug)]
@@ -39,16 +48,18 @@ impl Default for EvalConfig {
 fn sim_once(
     cfg: &EvalConfig,
     factory: &dyn ScheduleFactory,
-    costs: &dyn CostModel,
+    index: &CostIndex,
+    arena: &mut SimArena,
 ) -> RunStats {
-    simulate(
-        &LoopSpec::upto(costs.len()),
+    simulate_indexed(
+        &LoopSpec::upto(index.len()),
         &TeamSpec::uniform(cfg.p),
         factory,
-        costs,
+        index,
         &NoVariability,
         &mut LoopRecord::default(),
         &SimConfig { dequeue_overhead_ns: cfg.h_ns, trace: false },
+        arena,
     )
 }
 
@@ -101,15 +112,33 @@ pub fn e1(cfg: &EvalConfig) -> Vec<Table> {
 // -----------------------------------------------------------------------
 
 fn run_matrix(cfg: &EvalConfig) -> Vec<(ScheduleSpec, WorkloadClass, RunStats)> {
-    let mut out = Vec::new();
-    for class in WorkloadClass::ALL {
-        let costs = class.model(cfg.n, cfg.mean_ns, cfg.seed);
-        for spec in roster() {
-            let stats = sim_once(cfg, &*spec.factory(), &costs);
-            out.push((spec, class, stats));
-        }
-    }
-    out
+    // One scoped thread per workload class; each builds its cost index
+    // once and reuses one arena across the whole schedule roster.
+    let specs = roster();
+    let specs_ref = &specs;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = WorkloadClass::ALL
+            .iter()
+            .map(|&class| {
+                s.spawn(move || {
+                    let index = class.index(cfg.n, cfg.mean_ns, cfg.seed);
+                    let mut arena = SimArena::new();
+                    specs_ref
+                        .iter()
+                        .map(|spec| {
+                            let stats =
+                                sim_once(cfg, &*spec.factory(), &index, &mut arena);
+                            (spec.clone(), class, stats)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("matrix worker"))
+            .collect()
+    })
 }
 
 /// E2: makespan per schedule per workload class, normalized to the best
@@ -213,26 +242,45 @@ pub fn e4(cfg: &EvalConfig) -> Vec<Table> {
         WorkloadClass::Gaussian,
         WorkloadClass::Lognormal,
     ];
-    let costs: Vec<_> = classes
+    // Indexes are built once and shared read-only across the sweep
+    // threads (one thread per chunk size k).
+    let indexes: Vec<CostIndex> = classes
         .iter()
-        .map(|c| c.model(cfg.n, cfg.mean_ns, cfg.seed))
+        .map(|c| c.index(cfg.n, cfg.mean_ns, cfg.seed))
         .collect();
+    let indexes_ref = &indexes;
+    let mut ks = Vec::new();
     let mut k = 1u64;
     while k <= cfg.n / cfg.p as u64 {
-        let spec = ScheduleSpec::Dynamic { chunk: k };
-        let runs: Vec<RunStats> = costs
-            .iter()
-            .map(|c| sim_once(cfg, &*spec.factory(), c))
-            .collect();
-        t.row(vec![
-            k.to_string(),
-            fmt_ns(runs[0].makespan_ns),
-            fmt_ns(runs[1].makespan_ns),
-            fmt_ns(runs[2].makespan_ns),
-            runs[0].total_dequeues().to_string(),
-            format!("{:.2}", runs[2].percent_imbalance()),
-        ]);
+        ks.push(k);
         k *= 4;
+    }
+    let rows: Vec<Vec<String>> = std::thread::scope(|s| {
+        let handles: Vec<_> = ks
+            .iter()
+            .map(|&k| {
+                s.spawn(move || {
+                    let spec = ScheduleSpec::Dynamic { chunk: k };
+                    let mut arena = SimArena::new();
+                    let runs: Vec<RunStats> = indexes_ref
+                        .iter()
+                        .map(|ix| sim_once(cfg, &*spec.factory(), ix, &mut arena))
+                        .collect();
+                    vec![
+                        k.to_string(),
+                        fmt_ns(runs[0].makespan_ns),
+                        fmt_ns(runs[1].makespan_ns),
+                        fmt_ns(runs[2].makespan_ns),
+                        runs[0].total_dequeues().to_string(),
+                        format!("{:.2}", runs[2].percent_imbalance()),
+                    ]
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("e4 worker")).collect()
+    });
+    for row in rows {
+        t.row(row);
     }
     vec![t]
 }
@@ -264,37 +312,57 @@ pub fn e5(cfg: &EvalConfig) -> Vec<Table> {
         ),
         &headers.iter().map(String::as_str).collect::<Vec<_>>(),
     );
-    let costs = WorkloadClass::Gaussian.model(cfg.n, cfg.mean_ns, cfg.seed);
+    let index = WorkloadClass::Gaussian.index(cfg.n, cfg.mean_ns, cfg.seed);
+    let index_ref = &index;
     let invocations = 6usize;
-    for spec in &schedules {
-        let mut cells = vec![spec.label()];
-        for &prob in &probs {
-            let noise = NoiseBursts::new(
-                (cfg.mean_ns as u64 * 200).max(1),
-                prob,
-                0.25,
-                cfg.seed ^ 0xA5,
-            );
-            let mut rec = LoopRecord::default();
-            let mut last = Vec::new();
-            for inv in 0..invocations {
-                let stats = simulate(
-                    &LoopSpec::upto(cfg.n),
-                    &TeamSpec::uniform(cfg.p),
-                    &*spec.factory(),
-                    &costs,
-                    &noise,
-                    &mut rec,
-                    &SimConfig { dequeue_overhead_ns: cfg.h_ns, trace: false },
-                );
-                if inv >= invocations - 3 {
-                    last.push(stats.makespan_ns);
-                }
-            }
-            let mean = last.iter().sum::<u64>() / last.len() as u64;
-            cells.push(fmt_ns(mean));
-        }
-        t.row(cells);
+    // One scoped thread per schedule row; invocations within a row stay
+    // sequential (the adaptives learn through the shared LoopRecord).
+    let rows: Vec<Vec<String>> = std::thread::scope(|s| {
+        let handles: Vec<_> = schedules
+            .iter()
+            .map(|spec| {
+                let spec = spec.clone();
+                s.spawn(move || {
+                    let mut arena = SimArena::new();
+                    let mut cells = vec![spec.label()];
+                    for &prob in &probs {
+                        let noise = NoiseBursts::new(
+                            (cfg.mean_ns as u64 * 200).max(1),
+                            prob,
+                            0.25,
+                            cfg.seed ^ 0xA5,
+                        );
+                        let mut rec = LoopRecord::default();
+                        let mut last = Vec::new();
+                        for inv in 0..invocations {
+                            let stats = simulate_indexed(
+                                &LoopSpec::upto(cfg.n),
+                                &TeamSpec::uniform(cfg.p),
+                                &*spec.factory(),
+                                index_ref,
+                                &noise,
+                                &mut rec,
+                                &SimConfig {
+                                    dequeue_overhead_ns: cfg.h_ns,
+                                    trace: false,
+                                },
+                                &mut arena,
+                            );
+                            if inv >= invocations - 3 {
+                                last.push(stats.makespan_ns);
+                            }
+                        }
+                        let mean = last.iter().sum::<u64>() / last.len() as u64;
+                        cells.push(fmt_ns(mean));
+                    }
+                    cells
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("e5 worker")).collect()
+    });
+    for row in rows {
+        t.row(row);
     }
     vec![t]
 }
@@ -312,7 +380,8 @@ pub fn e6(cfg: &EvalConfig) -> Vec<Table> {
     let n = cfg.n.min(50_000);
     let spec = LoopSpec::upto(n);
     let team = TeamSpec::uniform(cfg.p);
-    let costs = WorkloadClass::Gaussian.model(n, cfg.mean_ns, cfg.seed);
+    let index = WorkloadClass::Gaussian.index(n, cfg.mean_ns, cfg.seed);
+    let mut arena = SimArena::new();
 
     let mut t = Table::new(
         "e6_uds_equivalence",
@@ -375,8 +444,8 @@ pub fn e6(cfg: &EvalConfig) -> Vec<Table> {
             drain_chunks(&mut *su, &spec, &team, &mut LoopRecord::default());
         let identical = native_chunks == uds_chunks;
 
-        let m_native = sim_once(cfg, &*native, &costs).makespan_ns;
-        let m_uds = sim_once(cfg, &*uds, &costs).makespan_ns;
+        let m_native = sim_once(cfg, &*native, &index, &mut arena).makespan_ns;
+        let m_uds = sim_once(cfg, &*uds, &index, &mut arena).makespan_ns;
         let delta = 100.0 * (m_uds as f64 - m_native as f64) / m_native as f64;
         t.row(vec![
             strategy.into(),
@@ -419,7 +488,8 @@ pub fn e7(cfg: &EvalConfig) -> Vec<Table> {
     let het = Heterogeneous::new(speeds.clone());
     let team_weighted = TeamSpec::weighted(&speeds);
     let team_uniform = TeamSpec::uniform(cfg.p);
-    let costs = WorkloadClass::Uniform.model(cfg.n, cfg.mean_ns, cfg.seed);
+    let index = WorkloadClass::Uniform.index(cfg.n, cfg.mean_ns, cfg.seed);
+    let mut arena = SimArena::new();
 
     let mut t = Table::new(
         "e7_heterogeneous",
@@ -443,14 +513,15 @@ pub fn e7(cfg: &EvalConfig) -> Vec<Table> {
         let mut rec = LoopRecord::default();
         let mut stats = None;
         for _ in 0..4 {
-            stats = Some(simulate(
+            stats = Some(simulate_indexed(
                 &LoopSpec::upto(cfg.n),
                 team,
                 &*spec.factory(),
-                &costs,
+                &index,
                 &het,
                 &mut rec,
                 &SimConfig { dequeue_overhead_ns: cfg.h_ns, trace: false },
+                &mut arena,
             ));
         }
         let stats = stats.unwrap();
@@ -493,6 +564,15 @@ pub fn e8(cfg: &EvalConfig, artifacts: &Path) -> Vec<Table> {
             .to_string(),
         &["schedule", "sim makespan", "speedup vs static", "real wall (1 core)"],
     );
+    if !crate::runtime::available() {
+        t.row(vec![
+            "(skipped)".into(),
+            "built without the `pjrt` feature".into(),
+            "-".into(),
+            "-".into(),
+        ]);
+        return vec![t];
+    }
     if !artifacts.join("manifest.txt").exists() {
         t.row(vec![
             "(skipped)".into(),

@@ -1,5 +1,5 @@
 //! Experiment harness: regenerates every evaluation table/figure
-//! (DESIGN.md §4, EXPERIMENTS.md).
+//! (see EXPERIMENTS.md).
 //!
 //! Each `eN` function is pure over its [`EvalConfig`] and returns
 //! [`Table`]s; the CLI (`uds eval <exp>`) prints them as markdown and

@@ -19,7 +19,7 @@
 //! * [`runtime`] — PJRT-backed execution of AOT-compiled JAX/Pallas
 //!   compute artifacts on the request path (Python never runs here).
 //! * [`eval`] — the E1–E8 experiment harness regenerating the evaluation
-//!   tables/figures (see DESIGN.md §4, EXPERIMENTS.md).
+//!   tables/figures (see EXPERIMENTS.md).
 //! * [`metrics`] — makespan / imbalance / overhead statistics.
 //!
 //! ## Quickstart

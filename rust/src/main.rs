@@ -2,13 +2,13 @@
 //!
 //! Subcommands:
 //! * `run`            — execute one scheduled loop (simulated or real threads)
-//! * `eval`           — regenerate the E1–E8 evaluation tables (DESIGN.md §4)
+//! * `eval`           — regenerate the E1–E8 evaluation tables (EXPERIMENTS.md)
 //! * `list-schedules` — the built-in strategy roster
 //! * `calibrate`      — measure this host's dequeue overhead `h`
 //! * `serve`          — JSON-lines-style scheduling service over TCP
 //!
 //! Argument parsing is a small std-only implementation (offline clap
-//! substitution, see DESIGN.md).
+//! substitution; this build has no crates.io access).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -18,8 +18,8 @@ use uds::coordinator::{
 };
 use uds::eval::{self, EvalConfig};
 use uds::schedules::ScheduleSpec;
-use uds::sim::{simulate, NoVariability, SimConfig};
-use uds::workload::{CostModel, WorkloadClass};
+use uds::sim::{simulate_indexed, NoVariability, SimArena, SimConfig};
+use uds::workload::{CostIndex, CostModel, WorkloadClass};
 
 mod service;
 
@@ -144,6 +144,11 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let class = WorkloadClass::parse(&workload)
         .ok_or_else(|| format!("unknown workload '{workload}'"))?;
     let costs = class.model(n, mean_ns, seed);
+    // One O(n) index build shared by every simulated invocation; the
+    // arena makes repeat invocations allocation-free (hot-path twin of
+    // the service cache).
+    let index = if real { None } else { Some(CostIndex::build(&costs)) };
+    let mut arena = SimArena::new();
     let loop_spec = LoopSpec::upto(n);
     let team = TeamSpec::uniform(threads);
     let mut rec = LoopRecord::default();
@@ -159,14 +164,15 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 |i, _tid| spin_ns(costs.cost_ns(i as u64)),
             )
         } else {
-            simulate(
+            simulate_indexed(
                 &loop_spec,
                 &team,
                 &*spec.factory(),
-                &costs,
+                index.as_ref().expect("index built for simulated runs"),
                 &NoVariability,
                 &mut rec,
                 &SimConfig { dequeue_overhead_ns: h_ns, trace: false },
+                &mut arena,
             )
         };
         println!(

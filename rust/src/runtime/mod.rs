@@ -2,19 +2,23 @@
 //! from the L3 request path.  Python runs only at build time
 //! (`make artifacts`); this module makes the Rust binary self-contained.
 //!
-//! Flow (see /opt/xla-example and DESIGN.md §2): `aot.py` lowers the L2
-//! `work_chunk` graph to HLO **text** per depth class; here we parse the
-//! text (`HloModuleProto::from_text_file`), compile on the PJRT CPU
-//! client, and execute with concrete buffers.
+//! Flow: `aot.py` lowers the L2 `work_chunk` graph to HLO **text** per
+//! depth class; here we parse the text (`HloModuleProto::from_text_file`),
+//! compile on the PJRT CPU client, and execute with concrete buffers.
 //!
 //! The `xla` crate's `PjRtClient` is `Rc`-based and not `Send`, so a
 //! [`WorkRuntime`] is thread-bound; [`with_runtime`] provides the
 //! thread-local instance worker threads use from inside `parallel_for`
 //! bodies (each worker compiles its own copies once — amortized over the
 //! whole run).
+//!
+//! The engine is gated behind the `pjrt` cargo feature (the `xla` crate
+//! is not available everywhere); [`available`] reports whether the real
+//! backend is compiled in, and default builds get an API-compatible
+//! stub whose `load` always errors.
 
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{with_runtime, WorkRuntime};
+pub use engine::{available, with_runtime, WorkRuntime};
 pub use manifest::{Golden, GoldenRecord, Manifest};

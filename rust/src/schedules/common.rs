@@ -194,6 +194,74 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_take_sized_no_overlap() {
+        // The CAS loop under real multi-thread contention: per-thread
+        // size functions (GSS-like, remaining-dependent) must still
+        // carve the space into non-overlapping, gap-free chunks.
+        use std::sync::Arc;
+        let n = 200_000u64;
+        let c = Arc::new(TakenCounter::default());
+        c.reset(n);
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(ch) = c.take_sized(|rem| (rem / (t + 2)).max(1)) {
+                    got.push(ch);
+                }
+                got
+            }));
+        }
+        let mut all: Vec<Chunk> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_by_key(|c| c.first);
+        let mut expect = 0;
+        for ch in &all {
+            assert!(ch.len >= 1);
+            assert_eq!(ch.first, expect, "gap or overlap at {expect}");
+            expect = ch.end();
+        }
+        assert_eq!(expect, n);
+        assert!(c.take_sized(|r| r).is_none());
+        assert_eq!(c.remaining(), 0);
+    }
+
+    #[test]
+    fn concurrent_take_mixed_fixed_and_sized() {
+        // Fixed-size (fetch_add) and sized (CAS) takers interleaving on
+        // one counter — the static_steal/hybrid sharing pattern.
+        use std::sync::Arc;
+        let n = 100_000u64;
+        let c = Arc::new(TakenCounter::default());
+        c.reset(n);
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut total = 0u64;
+                if t % 2 == 0 {
+                    while let Some(ch) = c.take_fixed(13) {
+                        total += ch.len;
+                    }
+                } else {
+                    while let Some(ch) = c.take_sized(|rem| (rem / 16).max(1)) {
+                        total += ch.len;
+                    }
+                }
+                total
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        // take_fixed may overshoot its reservation past n (wait-free
+        // fetch_add), but claimed iterations must never exceed or
+        // undershoot the space.
+        assert_eq!(total, n);
+    }
+
+    #[test]
     fn concurrent_take_fixed_no_overlap() {
         use std::sync::Arc;
         let c = Arc::new(TakenCounter::default());

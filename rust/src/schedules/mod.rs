@@ -1,7 +1,7 @@
 //! The schedule strategy library: every strategy the paper cites,
 //! implemented natively against the UDS [`Scheduler`] trait.
 //!
-//! See DESIGN.md §3 for the strategy-to-citation table.  The UDS
+//! Each strategy module's doc comment names its source paper.  The UDS
 //! re-expressions of these strategies (through the §4.1 lambda and §4.2
 //! declare frontends) live in [`uds_port`]; E6 verifies native and UDS
 //! forms produce identical chunk sequences.

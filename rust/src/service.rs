@@ -16,14 +16,35 @@
 //! ok schedule=fac2 makespan_ns=... chunks=... dequeues=... imbalance_pct=... efficiency=...
 //! err msg=...
 //! ```
+//!
+//! ## Request-path architecture (EXPERIMENTS.md §Sim-throughput)
+//!
+//! * **Workload cache** — a [`Service`] holds an LRU cache of prefix-sum
+//!   [`CostIndex`]es keyed by `(workload, n, mean_ns, seed)`.  The first
+//!   request for a scenario pays the one O(n) build; every subsequent
+//!   request (any schedule, any thread count) shares the same immutable
+//!   `Arc<CostIndex>` and runs in O(chunks).
+//! * **Bounded worker pool** — instead of one OS thread per client, a
+//!   fixed pool of workers drains accepted connections from a bounded
+//!   queue (accept-side backpressure).  Jobs are CPU-bound simulator
+//!   runs, so more threads than cores only adds contention.
+//! * **Pooled arenas** — each worker owns one [`SimArena`] reused for
+//!   every request it serves, so the simulate call allocates nothing
+//!   proportional to `n`.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 
 use uds::coordinator::{LoopRecord, LoopSpec, TeamSpec};
 use uds::schedules::ScheduleSpec;
-use uds::sim::{simulate, NoVariability, SimConfig};
-use uds::workload::WorkloadClass;
+use uds::sim::{simulate_indexed, NoVariability, SimArena, SimConfig};
+use uds::workload::{CostIndex, WorkloadClass};
+
+/// Largest accepted iteration count (bounds a single index build).
+const MAX_N: u64 = 50_000_000;
 
 /// A parsed job request.
 #[derive(Debug, Clone)]
@@ -78,43 +99,194 @@ impl JobRequest {
     }
 }
 
-/// Handle one request synchronously.
-pub fn handle(req: &JobRequest) -> String {
-    let spec = match ScheduleSpec::parse(&req.schedule) {
-        Ok(s) => s,
-        Err(e) => return format!("err msg={}", e.replace(' ', "_")),
-    };
-    let Some(class) = WorkloadClass::parse(&req.workload) else {
-        return format!("err msg=unknown_workload_{}", req.workload);
-    };
-    if req.n > 50_000_000 {
-        return "err msg=n_too_large_max_5e7".into();
-    }
-    if req.threads == 0 || req.threads > 1024 {
-        return "err msg=threads_must_be_1..=1024".into();
-    }
-    let costs = class.model(req.n, req.mean_ns, req.seed);
-    let stats = simulate(
-        &LoopSpec::upto(req.n),
-        &TeamSpec::uniform(req.threads),
-        &*spec.factory(),
-        &costs,
-        &NoVariability,
-        &mut LoopRecord::default(),
-        &SimConfig { dequeue_overhead_ns: req.h_ns, trace: false },
-    );
-    format!(
-        "ok schedule={} makespan_ns={} chunks={} dequeues={} imbalance_pct={:.4} efficiency={:.4}",
-        stats.schedule.replace(' ', "_"),
-        stats.makespan_ns,
-        stats.chunks,
-        stats.total_dequeues(),
-        stats.percent_imbalance(),
-        stats.efficiency(),
-    )
+/// Cache key: everything that determines the per-iteration cost vector.
+/// `mean_ns` participates as its bit pattern so the key stays `Eq`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct CacheKey {
+    class: WorkloadClass,
+    n: u64,
+    mean_bits: u64,
+    seed: u64,
 }
 
-fn client_loop(stream: TcpStream) {
+struct CacheEntry {
+    /// Last-touched tick (monotone); smallest = least recently used.
+    stamp: u64,
+    index: Arc<CostIndex>,
+}
+
+/// Shared request-path state: the LRU workload cache plus counters.
+pub struct Service {
+    cache: Mutex<HashMap<CacheKey, CacheEntry>>,
+    tick: AtomicU64,
+    builds: AtomicU64,
+    hits: AtomicU64,
+    max_entries: usize,
+    max_bytes: usize,
+}
+
+impl Default for Service {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Service {
+    /// Default budgets: up to 32 cached workloads or ~512 MiB of prefix
+    /// tables, whichever binds first.
+    pub fn new() -> Self {
+        Self::with_capacity(32, 512 << 20)
+    }
+
+    pub fn with_capacity(max_entries: usize, max_bytes: usize) -> Self {
+        Self {
+            cache: Mutex::new(HashMap::new()),
+            tick: AtomicU64::new(1),
+            builds: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            max_entries: max_entries.max(1),
+            max_bytes,
+        }
+    }
+
+    /// `(index builds, cache hits)` since construction.  A repeated
+    /// scenario must raise hits without raising builds — that is the
+    /// "no O(n) work on the hot path" contract the tests pin down.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (
+            self.builds.load(Ordering::Relaxed),
+            self.hits.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Number of currently cached workloads.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Peek at the cached index for a request without touching LRU
+    /// state; `None` on miss or unknown workload.
+    pub fn cached_index(&self, req: &JobRequest) -> Option<Arc<CostIndex>> {
+        let class = WorkloadClass::parse(&req.workload)?;
+        let key = CacheKey {
+            class,
+            n: req.n,
+            mean_bits: req.mean_ns.to_bits(),
+            seed: req.seed,
+        };
+        self.cache.lock().unwrap().get(&key).map(|e| e.index.clone())
+    }
+
+    fn index_for(
+        &self,
+        class: WorkloadClass,
+        n: u64,
+        mean_ns: f64,
+        seed: u64,
+    ) -> Arc<CostIndex> {
+        let key = CacheKey { class, n, mean_bits: mean_ns.to_bits(), seed };
+        {
+            let mut map = self.cache.lock().unwrap();
+            if let Some(e) = map.get_mut(&key) {
+                e.stamp = self.tick.fetch_add(1, Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return e.index.clone();
+            }
+        }
+        // Miss: run the O(n) build *outside* the lock so concurrent
+        // requests for other (cached) scenarios are not stalled behind
+        // it.  Two racing builders of the same key both pay the build;
+        // the first insert wins and both share it afterwards.
+        let index = Arc::new(CostIndex::build(&class.model(n, mean_ns, seed)));
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.cache.lock().unwrap();
+        let stamp = self.tick.fetch_add(1, Ordering::Relaxed);
+        let shared = match map.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                e.get_mut().stamp = stamp;
+                e.get().index.clone()
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(CacheEntry { stamp, index: index.clone() });
+                index
+            }
+        };
+        self.evict_locked(&mut map);
+        shared
+    }
+
+    /// Drop least-recently-used entries until within budget.  The most
+    /// recent entry is always kept, even if alone over budget.
+    fn evict_locked(&self, map: &mut HashMap<CacheKey, CacheEntry>) {
+        loop {
+            let total: usize = map.values().map(|e| e.index.approx_bytes()).sum();
+            if map.len() <= 1
+                || (map.len() <= self.max_entries && total <= self.max_bytes)
+            {
+                return;
+            }
+            let oldest = map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| *k)
+                .expect("non-empty map");
+            map.remove(&oldest);
+        }
+    }
+
+    /// Handle one request, reusing `arena` for all simulator scratch
+    /// state.  On a cache hit this performs no allocation proportional
+    /// to `n`.
+    pub fn handle(&self, req: &JobRequest, arena: &mut SimArena) -> String {
+        let spec = match ScheduleSpec::parse(&req.schedule) {
+            Ok(s) => s,
+            Err(e) => return format!("err msg={}", e.replace(' ', "_")),
+        };
+        let Some(class) = WorkloadClass::parse(&req.workload) else {
+            return format!("err msg=unknown_workload_{}", req.workload);
+        };
+        if req.n > MAX_N {
+            return "err msg=n_too_large_max_5e7".into();
+        }
+        if req.threads == 0 || req.threads > 1024 {
+            return "err msg=threads_must_be_1..=1024".into();
+        }
+        let index = self.index_for(class, req.n, req.mean_ns, req.seed);
+        let stats = simulate_indexed(
+            &LoopSpec::upto(req.n),
+            &TeamSpec::uniform(req.threads),
+            &*spec.factory(),
+            &index,
+            &NoVariability,
+            &mut LoopRecord::default(),
+            &SimConfig { dequeue_overhead_ns: req.h_ns, trace: false },
+            arena,
+        );
+        format!(
+            "ok schedule={} makespan_ns={} chunks={} dequeues={} imbalance_pct={:.4} efficiency={:.4}",
+            stats.schedule.replace(' ', "_"),
+            stats.makespan_ns,
+            stats.chunks,
+            stats.total_dequeues(),
+            stats.percent_imbalance(),
+            stats.efficiency(),
+        )
+    }
+}
+
+/// Handle one request against a process-wide [`Service`] with a
+/// per-thread arena — convenience for one-shot/CLI callers and tests.
+pub fn handle(req: &JobRequest) -> String {
+    static SERVICE: OnceLock<Service> = OnceLock::new();
+    thread_local! {
+        static ARENA: std::cell::RefCell<SimArena> =
+            std::cell::RefCell::new(SimArena::new());
+    }
+    let svc = SERVICE.get_or_init(Service::new);
+    ARENA.with(|a| svc.handle(req, &mut a.borrow_mut()))
+}
+
+fn client_loop(stream: TcpStream, svc: &Service, arena: &mut SimArena) {
     let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -127,7 +299,7 @@ fn client_loop(stream: TcpStream) {
             continue;
         }
         let resp = match JobRequest::parse(&line) {
-            Ok(req) => handle(&req),
+            Ok(req) => svc.handle(&req, arena),
             Err(e) => format!("err msg={}", e.replace(' ', "_")),
         };
         if writeln!(writer, "{resp}").is_err() {
@@ -139,19 +311,62 @@ fn client_loop(stream: TcpStream) {
     }
 }
 
-/// Blocking entry point: run the service until killed.  One OS thread
-/// per client (jobs are CPU-bound simulator runs).
-pub fn serve(addr: &str) -> anyhow::Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    println!("uds service listening on {addr}");
+fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(4)
+        .clamp(2, 32)
+}
+
+/// Accept loop over an already-bound listener: feed connections to a
+/// bounded pool of `workers` threads sharing one [`Service`].  A full
+/// queue blocks `accept` (backpressure) instead of spawning unboundedly.
+pub fn serve_on(listener: TcpListener, workers: usize) {
+    let workers = workers.max(1);
+    let svc = Arc::new(Service::new());
+    let (tx, rx) = mpsc::sync_channel::<TcpStream>(workers * 4);
+    let rx = Arc::new(Mutex::new(rx));
+    for wid in 0..workers {
+        let rx = Arc::clone(&rx);
+        let svc = Arc::clone(&svc);
+        std::thread::Builder::new()
+            .name(format!("uds-worker-{wid}"))
+            .spawn(move || {
+                let mut arena = SimArena::new();
+                loop {
+                    // Hold the receiver lock only for the dequeue itself.
+                    let next = { rx.lock().unwrap().recv() };
+                    match next {
+                        Ok(stream) => client_loop(stream, &svc, &mut arena),
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn service worker");
+    }
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
-                std::thread::spawn(move || client_loop(s));
+                // A worker is tied up for a connection's lifetime, so an
+                // idle client must not pin it forever: evict connections
+                // that go quiet (the read in client_loop errors out).
+                let _ = s.set_read_timeout(Some(std::time::Duration::from_secs(30)));
+                if tx.send(s).is_err() {
+                    break;
+                }
             }
             Err(e) => eprintln!("accept error: {e}"),
         }
     }
+}
+
+/// Blocking entry point: run the service until killed, on a worker pool
+/// sized to the host's parallelism.
+pub fn serve(addr: &str) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let workers = default_workers();
+    println!("uds service listening on {addr} ({workers} workers)");
+    serve_on(listener, workers);
     Ok(())
 }
 
@@ -206,18 +421,133 @@ mod tests {
     }
 
     #[test]
+    fn cache_hit_reuses_index_without_rebuild() {
+        let svc = Service::new();
+        let mut arena = SimArena::new();
+        let req = JobRequest::parse(
+            "schedule=fac2 n=20000 threads=8 workload=lognormal seed=7",
+        )
+        .unwrap();
+        let r1 = svc.handle(&req, &mut arena);
+        assert!(r1.starts_with("ok "), "{r1}");
+        assert_eq!(svc.cache_stats().0, 1, "first request builds the index");
+
+        // Same scenario, different schedule + thread count: still a hit.
+        let mut req2 = req.clone();
+        req2.schedule = "gss".into();
+        req2.threads = 4;
+        let r2 = svc.handle(&req2, &mut arena);
+        assert!(r2.starts_with("ok "), "{r2}");
+        let r3 = svc.handle(&req, &mut arena);
+        assert_eq!(r1, r3, "deterministic replies on the cached path");
+
+        let (builds, hits) = svc.cache_stats();
+        assert_eq!(builds, 1, "cache hits must not re-run the O(n) build");
+        assert!(hits >= 2, "hits {hits}");
+
+        // All consumers share the identical Arc'd index — no per-request
+        // cost-vector allocation.
+        let a = svc.cached_index(&req).unwrap();
+        let b = svc.cached_index(&req2).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn distinct_scenarios_build_distinct_indexes() {
+        let svc = Service::new();
+        let mut arena = SimArena::new();
+        for line in [
+            "schedule=fac2 n=1000 workload=uniform seed=1",
+            "schedule=fac2 n=1000 workload=uniform seed=2",
+            "schedule=fac2 n=2000 workload=uniform seed=1",
+            "schedule=fac2 n=1000 workload=gaussian seed=1",
+            "schedule=fac2 n=1000 workload=uniform mean_ns=500 seed=1",
+        ] {
+            let req = JobRequest::parse(line).unwrap();
+            assert!(svc.handle(&req, &mut arena).starts_with("ok "));
+        }
+        assert_eq!(svc.cache_stats().0, 5);
+        assert_eq!(svc.cache_len(), 5);
+    }
+
+    #[test]
+    fn lru_eviction_respects_entry_budget() {
+        let svc = Service::with_capacity(2, usize::MAX);
+        let mut arena = SimArena::new();
+        let req = |seed: u64| {
+            JobRequest::parse(&format!(
+                "schedule=fac2 n=500 workload=uniform seed={seed}"
+            ))
+            .unwrap()
+        };
+        svc.handle(&req(1), &mut arena);
+        svc.handle(&req(2), &mut arena);
+        // Touch seed=1 so seed=2 becomes the LRU victim.
+        svc.handle(&req(1), &mut arena);
+        svc.handle(&req(3), &mut arena);
+        assert_eq!(svc.cache_len(), 2);
+        assert!(svc.cached_index(&req(1)).is_some(), "recently-used survives");
+        assert!(svc.cached_index(&req(2)).is_none(), "LRU entry evicted");
+        assert!(svc.cached_index(&req(3)).is_some());
+    }
+
+    #[test]
+    fn byte_budget_keeps_most_recent() {
+        // Budget fits one small index only; the newest must survive.
+        let svc = Service::with_capacity(8, 2_000);
+        let mut arena = SimArena::new();
+        let req = |seed: u64| {
+            JobRequest::parse(&format!(
+                "schedule=fac2 n=400 workload=uniform seed={seed}"
+            ))
+            .unwrap()
+        };
+        svc.handle(&req(1), &mut arena);
+        svc.handle(&req(2), &mut arena);
+        assert_eq!(svc.cache_len(), 1);
+        assert!(svc.cached_index(&req(2)).is_some());
+    }
+
+    #[test]
     fn end_to_end_over_tcp() {
         use std::io::{BufRead, BufReader, Write};
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        std::thread::spawn(move || {
-            let (s, _) = listener.accept().unwrap();
-            client_loop(s);
-        });
+        std::thread::spawn(move || serve_on(listener, 2));
         let mut c = TcpStream::connect(addr).unwrap();
         writeln!(c, "schedule=gss n=500 threads=2 workload=uniform").unwrap();
         let mut line = String::new();
         BufReader::new(c.try_clone().unwrap()).read_line(&mut line).unwrap();
         assert!(line.starts_with("ok "), "{line}");
+    }
+
+    #[test]
+    fn worker_pool_serves_concurrent_clients() {
+        use std::io::{BufRead, BufReader, Write};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || serve_on(listener, 3));
+        let clients: Vec<_> = (0..6)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut c = TcpStream::connect(addr).unwrap();
+                    let mut reader = BufReader::new(c.try_clone().unwrap());
+                    for round in 0..3 {
+                        writeln!(
+                            c,
+                            "schedule=fac2 n=2000 threads=4 workload=lognormal seed={}",
+                            i % 2
+                        )
+                        .unwrap();
+                        let mut line = String::new();
+                        reader.read_line(&mut line).unwrap();
+                        assert!(line.starts_with("ok "), "client {i} round {round}: {line}");
+                    }
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
     }
 }

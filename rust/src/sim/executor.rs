@@ -2,16 +2,32 @@
 //!
 //! Drives exactly the same [`Scheduler`] trait as the real thread-team
 //! executor, but in *virtual time*: per-iteration costs come from a
-//! [`CostModel`], per-dequeue overhead is the calibrated `h`, and thread
-//! speeds follow a [`Variability`] model.  Always picks the thread with
-//! the smallest virtual clock next, which reproduces the dequeue
-//! interleaving an ideal contention-free runtime would see.
+//! prefix-sum [`CostIndex`], per-dequeue overhead is the calibrated `h`,
+//! and thread speeds follow a [`Variability`] model.  Always picks the
+//! thread with the smallest virtual clock next, which reproduces the
+//! dequeue interleaving an ideal contention-free runtime would see.
 //!
-//! This is the substitution (DESIGN.md §4) for the companion papers' HPC
-//! testbed: relative schedule orderings depend on the iteration-cost
-//! distribution, `h`, `P` and the noise — all modeled here exactly — and
-//! runs are deterministic and fast enough to sweep thousands of
-//! configurations in the benches.
+//! This substitutes for the companion papers' HPC testbed: relative
+//! schedule orderings depend on the iteration-cost distribution, `h`,
+//! `P` and the noise — all modeled here exactly — and runs are
+//! deterministic and fast enough to sweep thousands of configurations.
+//!
+//! ## Hot path (EXPERIMENTS.md §Sim-throughput)
+//!
+//! The sweep engine and the TCP service both call the simulator in a
+//! loop, so the per-run cost must be O(chunks), not O(n):
+//!
+//! * chunk costs are one subtraction against a shared [`CostIndex`]
+//!   (build it once per workload, reuse across runs);
+//! * all per-run scratch state lives in a caller-owned [`SimArena`]
+//!   that is reset, never reallocated, between runs;
+//! * the earliest-free-thread selection is a flat min-scan over at most
+//!   [`FLAT_SCAN_MAX_THREADS`] clocks (cache-friendly, branch-cheap)
+//!   and only falls back to a binary heap for larger teams.
+//!
+//! [`simulate`] remains as the convenience wrapper that builds a fresh
+//! index + arena per call — correct, but O(n) per run; use
+//! [`simulate_indexed`] in loops.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -19,10 +35,14 @@ use std::collections::BinaryHeap;
 use crate::coordinator::feedback::ChunkFeedback;
 use crate::coordinator::history::LoopRecord;
 use crate::coordinator::loop_spec::{LoopSpec, TeamSpec};
-use crate::coordinator::scheduler::ScheduleFactory;
+use crate::coordinator::scheduler::{ScheduleFactory, Scheduler};
 use crate::metrics::{ChunkLog, RunStats};
 use crate::sim::variability::Variability;
-use crate::workload::CostModel;
+use crate::workload::{CostIndex, CostModel};
+
+/// Teams up to this size use the flat min-scan dispatcher (one u64
+/// active-mask + linear clock scan); larger teams use a binary heap.
+pub const FLAT_SCAN_MAX_THREADS: usize = 64;
 
 /// Simulator parameters.
 #[derive(Clone, Debug)]
@@ -39,7 +59,194 @@ impl Default for SimConfig {
     }
 }
 
+/// Reusable per-run scratch state: per-thread clocks, busy/iteration
+/// counters, feedback slots and the large-team heap.  Reset (not
+/// reallocated) at the start of every [`simulate_indexed`] call, so a
+/// long-lived arena makes repeated simulation runs allocation-free
+/// apart from the O(P) vectors cloned into the returned [`RunStats`].
+#[derive(Debug, Default)]
+pub struct SimArena {
+    clock: Vec<u64>,
+    busy: Vec<u64>,
+    finish: Vec<u64>,
+    iters: Vec<u64>,
+    dequeues: Vec<u64>,
+    fb: Vec<Option<ChunkFeedback>>,
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+}
+
+impl SimArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, p: usize) {
+        for v in [
+            &mut self.clock,
+            &mut self.busy,
+            &mut self.finish,
+            &mut self.iters,
+            &mut self.dequeues,
+        ] {
+            v.clear();
+            v.resize(p, 0);
+        }
+        self.fb.clear();
+        self.fb.resize(p, None);
+        self.heap.clear();
+    }
+}
+
+/// One dequeue-execute step for thread `tid`.  Returns `false` when the
+/// thread leaves the team (its scheduler returned `None`).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn sim_step(
+    tid: usize,
+    sched: &dyn Scheduler,
+    index: &CostIndex,
+    var: &dyn Variability,
+    cfg: &SimConfig,
+    clock: &mut [u64],
+    busy: &mut [u64],
+    finish: &mut [u64],
+    iters: &mut [u64],
+    dequeues: &mut [u64],
+    fb: &mut [Option<ChunkFeedback>],
+    trace: &mut Vec<ChunkLog>,
+    chunks: &mut u64,
+) -> bool {
+    // Charge the dequeue itself.
+    clock[tid] += cfg.dequeue_overhead_ns;
+    dequeues[tid] += 1;
+    match sched.next(tid, fb[tid].as_ref()) {
+        None => {
+            // Thread leaves the team; its finish time includes the
+            // final (failed) dequeue.
+            finish[tid] = clock[tid];
+            false
+        }
+        Some(chunk) => {
+            if chunk.len == 0 {
+                fb[tid] = None;
+                return true;
+            }
+            *chunks += 1;
+            let start_ns = clock[tid];
+            let speed = var.speed(tid, start_ns).max(1e-9);
+            // O(1) chunk cost: one prefix-sum subtraction.
+            let raw = index.range_ns(chunk.first, chunk.end());
+            let elapsed = ((raw as f64) / speed).round().max(1.0) as u64;
+            clock[tid] += elapsed;
+            busy[tid] += elapsed;
+            iters[tid] += chunk.len;
+            finish[tid] = clock[tid];
+            if cfg.trace {
+                trace.push(ChunkLog { tid, chunk, start_ns, elapsed_ns: elapsed });
+            }
+            fb[tid] = Some(ChunkFeedback { chunk, tid, elapsed_ns: elapsed });
+            true
+        }
+    }
+}
+
+/// Simulate one scheduled loop invocation in virtual time against a
+/// prebuilt [`CostIndex`], reusing `arena` for all per-run scratch
+/// state.  This is the hot-path entry point: O(chunks) per call.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_indexed(
+    spec: &LoopSpec,
+    team: &TeamSpec,
+    factory: &dyn ScheduleFactory,
+    index: &CostIndex,
+    var: &dyn Variability,
+    record: &mut LoopRecord,
+    cfg: &SimConfig,
+    arena: &mut SimArena,
+) -> RunStats {
+    assert_eq!(
+        index.len(),
+        spec.iter_count(),
+        "cost model must cover the iteration space"
+    );
+    let mut sched = factory.build();
+    record.ensure_team(team.nthreads);
+    sched.start(spec, team, record);
+
+    let p = team.nthreads;
+    arena.reset(p);
+    let SimArena { clock, busy, finish, iters, dequeues, fb, heap } = arena;
+    let mut trace = Vec::new();
+    let mut chunks = 0u64;
+    let sched_ref: &dyn Scheduler = &*sched;
+
+    if p <= FLAT_SCAN_MAX_THREADS {
+        // Flat dispatcher: active-thread bitmask + linear min-scan.
+        // Scanning ascending tid with a strict `<` keeps the lowest tid
+        // on clock ties — identical dequeue interleaving to the heap.
+        let mut active: u64 = if p == 64 { u64::MAX } else { (1u64 << p) - 1 };
+        while active != 0 {
+            let mut tid = usize::MAX;
+            let mut best = u64::MAX;
+            let mut m = active;
+            while m != 0 {
+                let t = m.trailing_zeros() as usize;
+                m &= m - 1;
+                if clock[t] < best {
+                    best = clock[t];
+                    tid = t;
+                }
+            }
+            let alive = sim_step(
+                tid, sched_ref, index, var, cfg, clock, busy, finish, iters,
+                dequeues, fb, &mut trace, &mut chunks,
+            );
+            if !alive {
+                active &= !(1u64 << tid);
+            }
+        }
+    } else {
+        // Min-heap over (virtual clock, tid): the earliest-free thread
+        // dequeues next; tid tiebreak keeps runs deterministic.
+        heap.extend((0..p).map(|t| Reverse((0u64, t))));
+        while let Some(Reverse((t_now, tid))) = heap.pop() {
+            debug_assert_eq!(t_now, clock[tid]);
+            let alive = sim_step(
+                tid, sched_ref, index, var, cfg, clock, busy, finish, iters,
+                dequeues, fb, &mut trace, &mut chunks,
+            );
+            if alive {
+                heap.push(Reverse((clock[tid], tid)));
+            }
+        }
+    }
+
+    let makespan = clock.iter().copied().max().unwrap_or(0);
+    sched.finish(team, record);
+    let busy_f: Vec<f64> = busy.iter().map(|&b| b as f64).collect();
+    record.record_invocation(&busy_f, iters, makespan);
+
+    trace.sort_by_key(|c| c.start_ns);
+    RunStats {
+        schedule: sched.name(),
+        nthreads: p,
+        iterations: spec.iter_count(),
+        makespan_ns: makespan,
+        busy_ns: busy.clone(),
+        finish_ns: finish.clone(),
+        iters: iters.clone(),
+        dequeues: dequeues.clone(),
+        chunks,
+        trace,
+    }
+}
+
 /// Simulate one scheduled loop invocation in virtual time.
+///
+/// Convenience wrapper over [`simulate_indexed`]: builds a fresh
+/// [`CostIndex`] (one O(n) pass over `costs`) and a fresh [`SimArena`]
+/// per call.  Fine for one-shot runs and tests; sweeps and services
+/// should build the index once and call [`simulate_indexed`].
 pub fn simulate(
     spec: &LoopSpec,
     team: &TeamSpec,
@@ -54,83 +261,9 @@ pub fn simulate(
         spec.iter_count(),
         "cost model must cover the iteration space"
     );
-    let mut sched = factory.build();
-    record.ensure_team(team.nthreads);
-    sched.start(spec, team, record);
-
-    let p = team.nthreads;
-    let cost_vec = costs.materialize();
-
-    let mut clock = vec![0u64; p];
-    let mut busy = vec![0u64; p];
-    let mut finish = vec![0u64; p];
-    let mut iters = vec![0u64; p];
-    let mut dequeues = vec![0u64; p];
-    let mut fb: Vec<Option<ChunkFeedback>> = vec![None; p];
-    let mut trace = Vec::new();
-    let mut chunks = 0u64;
-
-    // Min-heap over (virtual clock, tid): the earliest-free thread
-    // dequeues next; tid tiebreak keeps runs deterministic.
-    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
-        (0..p).map(|t| Reverse((0u64, t))).collect();
-
-    while let Some(Reverse((t_now, tid))) = heap.pop() {
-        debug_assert_eq!(t_now, clock[tid]);
-        // Charge the dequeue itself.
-        clock[tid] += cfg.dequeue_overhead_ns;
-        dequeues[tid] += 1;
-        match sched.next(tid, fb[tid].as_ref()) {
-            None => {
-                // Thread leaves the team; its finish time includes the
-                // final (failed) dequeue.
-                finish[tid] = clock[tid];
-            }
-            Some(chunk) => {
-                if chunk.len == 0 {
-                    fb[tid] = None;
-                    heap.push(Reverse((clock[tid], tid)));
-                    continue;
-                }
-                chunks += 1;
-                let start_ns = clock[tid];
-                let speed = var.speed(tid, start_ns).max(1e-9);
-                let raw: u64 = chunk
-                    .indices()
-                    .map(|i| cost_vec[i as usize])
-                    .sum();
-                let elapsed = ((raw as f64) / speed).round().max(1.0) as u64;
-                clock[tid] += elapsed;
-                busy[tid] += elapsed;
-                iters[tid] += chunk.len;
-                finish[tid] = clock[tid];
-                if cfg.trace {
-                    trace.push(ChunkLog { tid, chunk, start_ns, elapsed_ns: elapsed });
-                }
-                fb[tid] = Some(ChunkFeedback { chunk, tid, elapsed_ns: elapsed });
-                heap.push(Reverse((clock[tid], tid)));
-            }
-        }
-    }
-
-    let makespan = clock.iter().copied().max().unwrap_or(0);
-    sched.finish(team, record);
-    let busy_f: Vec<f64> = busy.iter().map(|&b| b as f64).collect();
-    record.record_invocation(&busy_f, &iters, makespan);
-
-    trace.sort_by_key(|c| c.start_ns);
-    RunStats {
-        schedule: sched.name(),
-        nthreads: p,
-        iterations: spec.iter_count(),
-        makespan_ns: makespan,
-        busy_ns: busy,
-        finish_ns: finish,
-        iters,
-        dequeues,
-        chunks,
-        trace,
-    }
+    let index = CostIndex::build(costs);
+    let mut arena = SimArena::default();
+    simulate_indexed(spec, team, factory, &index, var, record, cfg, &mut arena)
 }
 
 #[cfg(test)]
@@ -139,7 +272,7 @@ mod tests {
     use crate::coordinator::scheduler::FnFactory;
     use crate::schedules;
     use crate::sim::variability::{Heterogeneous, NoVariability};
-    use crate::workload::{CostModel, SyntheticCost, TraceCost, WorkloadClass};
+    use crate::workload::{CostModel, TraceCost, WorkloadClass};
 
     fn sim(
         n: u64,
@@ -272,6 +405,65 @@ mod tests {
     }
 
     #[test]
+    fn indexed_with_reused_arena_matches_wrapper() {
+        // simulate() (fresh index+arena) and simulate_indexed() with a
+        // shared index and a reused arena must agree exactly, run after
+        // run — the arena reset must leave no state behind.
+        let costs = WorkloadClass::Lognormal.model(4000, 400.0, 13);
+        let index = CostIndex::build(&costs);
+        let mut arena = SimArena::new();
+        let cfg = SimConfig { dequeue_overhead_ns: 120, trace: false };
+        for spec in [
+            crate::schedules::ScheduleSpec::Fac2,
+            crate::schedules::ScheduleSpec::Guided { min_chunk: 1 },
+            crate::schedules::ScheduleSpec::Dynamic { chunk: 16 },
+        ] {
+            let reference = simulate(
+                &LoopSpec::upto(4000),
+                &TeamSpec::uniform(8),
+                &*spec.factory(),
+                &costs,
+                &NoVariability,
+                &mut LoopRecord::default(),
+                &cfg,
+            );
+            for _ in 0..3 {
+                let fast = simulate_indexed(
+                    &LoopSpec::upto(4000),
+                    &TeamSpec::uniform(8),
+                    &*spec.factory(),
+                    &index,
+                    &NoVariability,
+                    &mut LoopRecord::default(),
+                    &cfg,
+                    &mut arena,
+                );
+                assert_eq!(fast.makespan_ns, reference.makespan_ns, "{}", spec.label());
+                assert_eq!(fast.iters, reference.iters, "{}", spec.label());
+                assert_eq!(fast.dequeues, reference.dequeues, "{}", spec.label());
+                assert_eq!(fast.busy_ns, reference.busy_ns, "{}", spec.label());
+            }
+        }
+    }
+
+    #[test]
+    fn heap_path_matches_flat_scan_semantics() {
+        // P=65 exceeds FLAT_SCAN_MAX_THREADS and exercises the heap
+        // dispatcher; the invariants (full coverage, per-thread dequeue
+        // accounting) must hold identically.
+        let n = 2_000u64;
+        let costs = TraceCost::new(vec![100; n as usize]);
+        let f = FnFactory::new("gss", || schedules::gss(1));
+        let stats = sim(n, FLAT_SCAN_MAX_THREADS + 1, &f, &costs, 10);
+        assert_eq!(stats.iters.iter().sum::<u64>(), n);
+        assert_eq!(stats.nthreads, FLAT_SCAN_MAX_THREADS + 1);
+        // Every thread pays at least the final failed dequeue.
+        assert!(stats.dequeues.iter().all(|&d| d >= 1));
+        let b = sim(n, FLAT_SCAN_MAX_THREADS + 1, &f, &costs, 10);
+        assert_eq!(stats.makespan_ns, b.makespan_ns);
+    }
+
+    #[test]
     fn trace_covers_space() {
         let costs = TraceCost::new(vec![10; 100]);
         let f = FnFactory::new("gss", || schedules::gss(1));
@@ -309,6 +501,23 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "cost model must cover")]
+    fn mismatched_index_panics() {
+        let index = CostIndex::from_costs(&[10; 5]);
+        let f = FnFactory::new("static", || schedules::static_block(None));
+        simulate_indexed(
+            &LoopSpec::upto(10),
+            &TeamSpec::uniform(2),
+            &f,
+            &index,
+            &NoVariability,
+            &mut LoopRecord::default(),
+            &SimConfig::default(),
+            &mut SimArena::new(),
+        );
+    }
+
+    #[test]
     fn history_recorded() {
         let costs = WorkloadClass::Uniform.model(100, 100.0, 0);
         let f = FnFactory::new("fac2", || schedules::fac2());
@@ -325,5 +534,15 @@ mod tests {
         assert_eq!(rec.invocations, 1);
         assert!(rec.last_makespan_ns > 0);
         assert_eq!(rec.thread_iters.iter().sum::<u64>(), 100);
+    }
+
+    #[test]
+    fn single_iteration_single_thread() {
+        let costs = TraceCost::new(vec![42]);
+        let f = FnFactory::new("static", || schedules::static_block(None));
+        let stats = sim(1, 1, &f, &costs, 7);
+        assert_eq!(stats.iters, vec![1]);
+        // One successful dequeue + the failing one, 7ns each, + 42ns body.
+        assert_eq!(stats.makespan_ns, 7 + 42 + 7);
     }
 }

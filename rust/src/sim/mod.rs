@@ -1,8 +1,15 @@
 //! Discrete-event simulation substrate: virtual-time executor and
-//! system-variability models (DESIGN.md S10/S11).
+//! system-variability models (the paper's testbed substitute).
+//!
+//! Hot-path users (sweeps, the TCP service) should build a
+//! [`crate::workload::CostIndex`] once per workload and drive
+//! [`simulate_indexed`] with a reused [`SimArena`]; see
+//! EXPERIMENTS.md §Sim-throughput for the measured difference.
 
 pub mod executor;
 pub mod variability;
 
-pub use executor::{simulate, SimConfig};
+pub use executor::{
+    simulate, simulate_indexed, SimArena, SimConfig, FLAT_SCAN_MAX_THREADS,
+};
 pub use variability::{Compose, Heterogeneous, NoVariability, NoiseBursts, Variability};

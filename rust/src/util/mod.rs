@@ -1,6 +1,6 @@
 //! Std-only utility substitutes for the usual crates.io dependencies
-//! (this build environment is offline; see DESIGN.md "Offline
-//! substitutions").
+//! (this build environment is offline; the only external dependency is
+//! the vendored `anyhow` shim under `vendor/`).
 //!
 //! * [`rng`]   — PCG PRNG + normal/exponential/lognormal (for `rand*`)
 //! * [`bench`] — micro-benchmark harness (for `criterion`)

@@ -1,7 +1,7 @@
 //! Deterministic PRNG + distribution sampling (std-only).
 //!
-//! Offline substitution for `rand`/`rand_pcg`/`rand_distr` (DESIGN.md
-//! "Offline substitutions"): a splitmix64-seeded PCG-XSH-RR 64/32 core
+//! Offline substitution for `rand`/`rand_pcg`/`rand_distr` (this build
+//! environment is offline): a splitmix64-seeded PCG-XSH-RR 64/32 core
 //! with Box-Muller normal, inverse-CDF exponential and derived lognormal
 //! samplers.  Everything the workload generator and RAND schedule need,
 //! fully reproducible from a `u64` seed.

@@ -1,0 +1,190 @@
+//! Prefix-sum cost index: the simulator's O(1)-per-chunk cost oracle.
+//!
+//! The virtual-time executor charges every dispatched chunk the sum of
+//! its per-iteration costs.  Summing those costs per chunk is O(n) per
+//! simulation run, and synthetic cost models pay an RNG evaluation per
+//! index on top.  A [`CostIndex`] precomputes the cumulative cost
+//! sequence **once** so that any chunk's cost is a single subtraction:
+//!
+//! ```text
+//! range_ns(lo, hi) = prefix[hi] - prefix[lo]        // O(1)
+//! ```
+//!
+//! `total_ns()` and `stats()` fall out of the same single pass, so an
+//! index fully replaces repeated [`CostModel`] enumeration on the sweep
+//! and service hot paths (see EXPERIMENTS.md §Sim-throughput).  The
+//! index is immutable after construction and `Sync`, so one instance is
+//! safely shared across sweep threads and cached service requests.
+
+use crate::workload::cost_model::CostModel;
+
+/// Immutable cumulative-cost table over an iteration space `0..n`.
+#[derive(Clone, Debug)]
+pub struct CostIndex {
+    /// `prefix[i]` = total cost of iterations `0..i`; length `n + 1`.
+    prefix: Vec<u64>,
+    mean: f64,
+    stddev: f64,
+}
+
+impl CostIndex {
+    /// Evaluate `model` once per iteration and build the index.
+    /// O(n) time, the only O(n) pass any consumer of the index pays.
+    pub fn build(model: &dyn CostModel) -> Self {
+        let n = model.len();
+        let mut prefix = Vec::with_capacity(n as usize + 1);
+        prefix.push(0u64);
+        let mut acc = 0u64;
+        let mut sum = 0.0f64;
+        let mut sumsq = 0.0f64;
+        for i in 0..n {
+            let c = model.cost_ns(i);
+            acc += c;
+            prefix.push(acc);
+            let cf = c as f64;
+            sum += cf;
+            sumsq += cf * cf;
+        }
+        let (mean, stddev) = if n == 0 {
+            (0.0, 0.0)
+        } else {
+            let mean = sum / n as f64;
+            let var = (sumsq / n as f64 - mean * mean).max(0.0);
+            (mean, var.sqrt())
+        };
+        Self { prefix, mean, stddev }
+    }
+
+    /// Build directly from explicit per-iteration costs.
+    pub fn from_costs(costs: &[u64]) -> Self {
+        Self::build(&crate::workload::cost_model::TraceCost::new(costs.to_vec()))
+    }
+
+    /// Number of iterations covered.
+    #[inline]
+    pub fn len(&self) -> u64 {
+        (self.prefix.len() - 1) as u64
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.prefix.len() == 1
+    }
+
+    /// Cost of the half-open iteration range `[lo, hi)` in one
+    /// subtraction.
+    #[inline]
+    pub fn range_ns(&self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi && hi < self.prefix.len() as u64);
+        self.prefix[hi as usize] - self.prefix[lo as usize]
+    }
+
+    /// Cost of a single iteration (derived from adjacent prefix entries).
+    #[inline]
+    pub fn cost_ns(&self, i: u64) -> u64 {
+        self.range_ns(i, i + 1)
+    }
+
+    /// Total serial cost — the last prefix entry, O(1).
+    #[inline]
+    pub fn total_ns(&self) -> u64 {
+        *self.prefix.last().unwrap()
+    }
+
+    /// Exact (mean, stddev) over the whole space, captured during the
+    /// build pass.
+    #[inline]
+    pub fn stats(&self) -> (f64, f64) {
+        (self.mean, self.stddev)
+    }
+
+    /// Approximate resident size — what the service cache budgets on.
+    pub fn approx_bytes(&self) -> usize {
+        self.prefix.len() * std::mem::size_of::<u64>()
+    }
+}
+
+/// A `CostIndex` is itself a [`CostModel`], so indexed and un-indexed
+/// call paths stay interchangeable in tests and the eval harness.
+impl CostModel for CostIndex {
+    fn cost_ns(&self, i: u64) -> u64 {
+        CostIndex::cost_ns(self, i)
+    }
+
+    fn len(&self) -> u64 {
+        CostIndex::len(self)
+    }
+
+    fn total_ns(&self) -> u64 {
+        CostIndex::total_ns(self)
+    }
+
+    fn stats(&self) -> (f64, f64) {
+        CostIndex::stats(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::cost_model::{Dist, SyntheticCost, TraceCost};
+
+    #[test]
+    fn prefix_matches_direct_sums() {
+        let m = SyntheticCost::new(500, 300.0, Dist::Lognormal { sigma: 1.0 }, 3);
+        let idx = CostIndex::build(&m);
+        assert_eq!(idx.len(), 500);
+        assert_eq!(idx.total_ns(), m.total_ns());
+        for (lo, hi) in [(0u64, 500u64), (0, 1), (499, 500), (17, 230), (42, 42)] {
+            let direct: u64 = (lo..hi).map(|i| m.cost_ns(i)).sum();
+            assert_eq!(idx.range_ns(lo, hi), direct, "[{lo},{hi})");
+        }
+        for i in [0u64, 1, 250, 499] {
+            assert_eq!(CostIndex::cost_ns(&idx, i), m.cost_ns(i));
+        }
+    }
+
+    #[test]
+    fn stats_match_model_enumeration() {
+        let m = SyntheticCost::new(10_000, 1000.0, Dist::Gaussian { cv: 0.3 }, 5);
+        let idx = CostIndex::build(&m);
+        let (em, es) = m.stats();
+        let (im, is) = idx.stats();
+        assert!((em - im).abs() < 1e-6, "mean {im} vs {em}");
+        assert!((es - is).abs() < 1e-3, "stddev {is} vs {es}");
+    }
+
+    #[test]
+    fn empty_index() {
+        let idx = CostIndex::from_costs(&[]);
+        assert!(idx.is_empty());
+        assert_eq!(idx.len(), 0);
+        assert_eq!(idx.total_ns(), 0);
+        assert_eq!(idx.stats(), (0.0, 0.0));
+        assert_eq!(idx.range_ns(0, 0), 0);
+    }
+
+    #[test]
+    fn from_costs_roundtrip() {
+        let idx = CostIndex::from_costs(&[5, 10, 15]);
+        assert_eq!(idx.total_ns(), 30);
+        assert_eq!(idx.range_ns(1, 3), 25);
+        assert_eq!(CostIndex::cost_ns(&idx, 1), 10);
+    }
+
+    #[test]
+    fn acts_as_cost_model() {
+        let t = TraceCost::new(vec![1, 2, 3, 4]);
+        let idx = CostIndex::build(&t);
+        let as_model: &dyn CostModel = &idx;
+        assert_eq!(as_model.len(), 4);
+        assert_eq!(as_model.total_ns(), 10);
+        assert_eq!(as_model.materialize(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn approx_bytes_scales_with_n() {
+        let idx = CostIndex::from_costs(&[1; 100]);
+        assert_eq!(idx.approx_bytes(), 101 * 8);
+    }
+}

@@ -124,8 +124,8 @@ impl CostModel for SyntheticCost {
 }
 
 /// A trace-backed workload: explicit per-iteration costs, e.g. replayed
-/// from an application profile (the "production trace" substitute of
-/// DESIGN.md §4).
+/// from an application profile (the evaluation's "production trace"
+/// substitute; see EXPERIMENTS.md E8 for the measured-cost replay).
 #[derive(Clone, Debug, Default)]
 pub struct TraceCost {
     costs: Vec<u64>,

@@ -8,15 +8,17 @@
 //! runs, real runs and property tests all observe the same workload
 //! regardless of scheduling order.
 
+pub mod cost_index;
 pub mod cost_model;
 
+pub use cost_index::CostIndex;
 pub use cost_model::{CostModel, Dist, SyntheticCost, TraceCost};
 
 
 /// The named workload classes the evaluation sweeps (E2/E3).  Parameters
 /// follow the shapes used in [8]: mean iteration cost around `mean_ns`
 /// with class-specific irregularity.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum WorkloadClass {
     /// Identical iterations (matrix ops, regular stencils).
     Uniform,
@@ -79,6 +81,12 @@ impl WorkloadClass {
             WorkloadClass::Sawtooth => Dist::Sawtooth { period: (n / 16).max(2) },
         };
         SyntheticCost::new(n, mean_ns, dist, seed)
+    }
+
+    /// Instantiate the class and build its prefix-sum [`CostIndex`] in
+    /// one pass — the form the simulator hot path consumes.
+    pub fn index(&self, n: u64, mean_ns: f64, seed: u64) -> CostIndex {
+        CostIndex::build(&self.model(n, mean_ns, seed))
     }
 }
 

@@ -7,9 +7,9 @@
 
 use uds::coordinator::{drain_chunks, verify_cover, LoopRecord, LoopSpec, ScheduleFactory, TeamSpec};
 use uds::schedules::ScheduleSpec;
-use uds::sim::{simulate, NoVariability, SimConfig};
+use uds::sim::{simulate, simulate_indexed, NoVariability, SimArena, SimConfig};
 use uds::util::rng::Pcg;
-use uds::workload::{CostModel, Dist, SyntheticCost};
+use uds::workload::{CostIndex, CostModel, Dist, SyntheticCost};
 
 const BASE_SEED: u64 = 0xC0FFEE;
 
@@ -205,6 +205,94 @@ fn prop_lambda_ports_equiv() {
             let a = drain_chunks(&mut *native, &spec, &team, &mut LoopRecord::default());
             let b = drain_chunks(&mut *uds_s, &spec, &team, &mut LoopRecord::default());
             assert_eq!(a, b, "{name} n={n} p={p} k={k}");
+        }
+    });
+}
+
+/// The prefix-sum cost index: `range_ns(lo, hi)` equals direct
+/// `cost_ns` summation for arbitrary ranges, across every `Dist`
+/// variant, and the derived totals/stats agree with the model's.
+#[test]
+fn prop_cost_index_matches_direct_sum() {
+    let dists = [
+        Dist::Constant,
+        Dist::Linear { rising: true },
+        Dist::Linear { rising: false },
+        Dist::Gaussian { cv: 0.3 },
+        Dist::Exponential,
+        Dist::Lognormal { sigma: 1.0 },
+        Dist::Bimodal { frac_heavy: 0.1, ratio: 10.0 },
+        Dist::Sawtooth { period: 17 },
+    ];
+    cases("cost_index_range", 25, |rng| {
+        for dist in dists {
+            let n = rng.range_u64(1, 2_000);
+            let seed = rng.next_u64();
+            let mean = 10.0 + rng.f64() * 2_000.0;
+            let model = SyntheticCost::new(n, mean, dist, seed);
+            let index = CostIndex::build(&model);
+            assert_eq!(index.len(), n);
+            assert_eq!(index.total_ns(), model.total_ns(), "{dist:?}");
+            for _ in 0..8 {
+                let lo = rng.range_u64(0, n);
+                let hi = rng.range_u64(lo, n);
+                let direct: u64 = (lo..hi).map(|i| model.cost_ns(i)).sum();
+                assert_eq!(
+                    index.range_ns(lo, hi),
+                    direct,
+                    "{dist:?} n={n} [{lo},{hi})"
+                );
+            }
+            let i = rng.range_u64(0, n - 1);
+            assert_eq!(index.cost_ns(i), model.cost_ns(i), "{dist:?} i={i}");
+        }
+    });
+}
+
+/// The indexed hot path (shared CostIndex + reused SimArena) is
+/// bit-identical to the one-shot `simulate` wrapper for arbitrary
+/// schedule/geometry/overhead, including back-to-back arena reuse.
+#[test]
+fn prop_indexed_sim_equals_wrapper() {
+    cases("indexed_sim_equivalence", 40, |rng| {
+        let spec = random_roster_spec(rng);
+        let n = rng.range_u64(1, 2_000);
+        let p = rng.range_u64(1, 9) as usize;
+        let h = rng.range_u64(0, 400);
+        let seed = rng.next_u64();
+        let costs = SyntheticCost::new(n, 300.0, Dist::Exponential, seed);
+        let cfg = SimConfig { dequeue_overhead_ns: h, trace: false };
+        let reference = simulate(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &*spec.factory(),
+            &costs,
+            &NoVariability,
+            &mut LoopRecord::default(),
+            &cfg,
+        );
+        let index = CostIndex::build(&costs);
+        let mut arena = SimArena::new();
+        for round in 0..2 {
+            let fast = simulate_indexed(
+                &LoopSpec::upto(n),
+                &TeamSpec::uniform(p),
+                &*spec.factory(),
+                &index,
+                &NoVariability,
+                &mut LoopRecord::default(),
+                &cfg,
+                &mut arena,
+            );
+            assert_eq!(
+                fast.makespan_ns, reference.makespan_ns,
+                "{} n={n} p={p} h={h} round={round}",
+                spec.label()
+            );
+            assert_eq!(fast.iters, reference.iters, "{}", spec.label());
+            assert_eq!(fast.busy_ns, reference.busy_ns, "{}", spec.label());
+            assert_eq!(fast.dequeues, reference.dequeues, "{}", spec.label());
+            assert_eq!(fast.chunks, reference.chunks, "{}", spec.label());
         }
     });
 }

@@ -12,6 +12,10 @@ use uds::runtime::{with_runtime, Golden, WorkRuntime};
 use uds::schedules::ScheduleSpec;
 
 fn artifacts_dir() -> Option<PathBuf> {
+    if !uds::runtime::available() {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.txt").exists().then_some(dir)
 }
