@@ -16,18 +16,33 @@
 //!
 //! Run: `cargo bench --bench sim_throughput` (full: n=1e6, P=8) or
 //! `cargo bench --bench sim_throughput -- --smoke` (CI-sized n=20k).
-//! The headline ratio is printed at the end and recorded in
-//! EXPERIMENTS.md.
+//! `--json PATH` additionally writes the measurements as a perf-gate
+//! document (`uds perf-gate` compares it against `bench_baseline.json`);
+//! the `calibration` entry is a fixed PRNG churn the gate uses to
+//! cancel raw host speed.  The headline ratio is printed at the end and
+//! recorded in EXPERIMENTS.md.
 
 use uds::coordinator::{LoopRecord, LoopSpec, TeamSpec};
 use uds::schedules::ScheduleSpec;
 use uds::sim::{simulate, simulate_indexed, NoVariability, SimArena, SimConfig};
+use uds::util::rng::Pcg;
 use uds::util::Bench;
 use uds::workload::{CostIndex, WorkloadClass};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path: Option<String> = args
+        .iter()
+        .position(|a| a == "--json")
+        .map(|i| {
+            args.get(i + 1)
+                .unwrap_or_else(|| {
+                    eprintln!("--json needs a path");
+                    std::process::exit(2);
+                })
+                .clone()
+        });
     let n: u64 = if smoke { 20_000 } else { 1_000_000 };
     let p = 8usize;
     let cfg = SimConfig { dequeue_overhead_ns: 250, trace: false };
@@ -40,6 +55,17 @@ fn main() {
         g.budget = std::time::Duration::from_millis(200);
         g.samples = 4;
     }
+
+    // Fixed CPU-bound reference workload: the perf gate divides every
+    // mean by this to cancel host speed across CI runners.
+    let mut rng = Pcg::seed_from_u64(7);
+    g.bench("calibration", || {
+        let mut acc = 0u64;
+        for _ in 0..100_000 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        acc
+    });
 
     let mut pairs: Vec<(String, f64, f64)> = Vec::new();
     for name in ["fac2", "gss"] {
@@ -114,8 +140,14 @@ fn main() {
         let after_rate = 1.0 / after_s.max(1e-12);
         let speedup = after_rate / before_rate.max(1e-12);
         println!(
-            "{name:<6} before={before_rate:>12.1}/s  after={after_rate:>12.1}/s  speedup={speedup:.1}x"
+            "{name:<6} before={before_rate:>12.1}/s  after={after_rate:>12.1}/s  \
+speedup={speedup:.1}x"
         );
     }
     let _ = g.save_csv();
+    if let Some(path) = json_path {
+        let path = std::path::PathBuf::from(path);
+        g.save_json(&path).expect("write bench json");
+        println!("saved {}", path.display());
+    }
 }

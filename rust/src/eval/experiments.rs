@@ -45,6 +45,22 @@ impl Default for EvalConfig {
     }
 }
 
+impl EvalConfig {
+    /// Provenance pairs for the machine-readable report layer
+    /// ([`crate::eval::report::eval_report`]): every parameter that
+    /// determines the tables, so an artifact is reproducible from its
+    /// own header.
+    pub fn meta(&self) -> Vec<(String, String)> {
+        vec![
+            ("n".into(), self.n.to_string()),
+            ("threads".into(), self.p.to_string()),
+            ("mean_ns".into(), crate::eval::report::fmt_f64(self.mean_ns)),
+            ("h_ns".into(), self.h_ns.to_string()),
+            ("seed".into(), self.seed.to_string()),
+        ]
+    }
+}
+
 fn sim_once(
     cfg: &EvalConfig,
     factory: &dyn ScheduleFactory,
@@ -493,7 +509,12 @@ pub fn e7(cfg: &EvalConfig) -> Vec<Table> {
 
     let mut t = Table::new(
         "e7_heterogeneous",
-        format!("heterogeneous cores (speeds {:?}...), N={}, P={}", &speeds[..4.min(speeds.len())], cfg.n, cfg.p),
+        format!(
+            "heterogeneous cores (speeds {:?}...), N={}, P={}",
+            &speeds[..4.min(speeds.len())],
+            cfg.n,
+            cfg.p
+        ),
         &["schedule", "weights", "makespan", "imbalance%"],
     );
 
@@ -828,6 +849,17 @@ mod tests {
         // Presence check; numeric comparison happens in integration tests.
         assert!(!ms("wf2").is_empty());
         assert!(!ms("static").is_empty());
+    }
+
+    #[test]
+    fn eval_report_document_includes_config_and_tables() {
+        let cfg = tiny();
+        let tables = e1(&cfg);
+        let doc = crate::eval::report::eval_report(&cfg.meta(), &tables);
+        assert!(doc.contains("\"config\":{"));
+        assert!(doc.contains("\"n\":\"4000\""));
+        assert!(doc.contains("\"tables\":[{"));
+        assert!(doc.contains("\"id\":\"e1_chunk_evolution\""));
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! CI performance gate: compare a bench run against a committed
+//! baseline and fail on throughput regressions.
+//!
+//! The bench harness ([`crate::util::Bench::save_json`]) writes a
+//! [`BenchDoc`]; `uds perf-gate` loads the committed
+//! `bench_baseline.json` plus the fresh run and calls [`compare`].
+//!
+//! Two mechanisms keep the gate usable across heterogeneous CI runners:
+//!
+//! * **Calibration scaling** — when both documents carry an entry whose
+//!   name ends in `/calibration` (a fixed deterministic CPU workload),
+//!   every mean is expressed relative to it, cancelling raw host speed
+//!   to first order.  Without calibration the gate falls back to raw
+//!   nanoseconds.
+//! * **Provisional baselines** — a baseline marked
+//!   `"provisional":true` reports the delta table but never fails; CI
+//!   stays green until a maintainer refreshes the file with
+//!   `uds perf-gate --update-baseline` on a representative runner.
+
+use std::path::Path;
+
+use crate::eval::report::{json_array, parse_flat, JsonObj};
+use crate::eval::table::Table;
+
+/// Entry names ending in this suffix are the calibration workload.
+pub const CALIBRATION_SUFFIX: &str = "/calibration";
+
+/// One benchmark measurement in a gate document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchEntry {
+    pub name: String,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchEntry {
+    fn json(&self) -> String {
+        JsonObj::new()
+            .str("name", &self.name)
+            .f64("mean_ns", self.mean_ns)
+            .f64("min_ns", self.min_ns)
+            .f64("median_ns", self.median_ns)
+            .u64("iters", self.iters)
+            .finish()
+    }
+}
+
+/// A bench result document (`bench_baseline.json` and the per-run
+/// artifact share this schema).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BenchDoc {
+    pub group: String,
+    /// Report-only baseline: deltas are printed but never fail the gate.
+    pub provisional: bool,
+    pub entries: Vec<BenchEntry>,
+}
+
+impl BenchDoc {
+    pub fn json(&self) -> String {
+        let entries = json_array(self.entries.iter().map(|e| e.json()));
+        JsonObj::new()
+            .str("group", &self.group)
+            .bool("provisional", self.provisional)
+            .raw("results", &entries)
+            .finish()
+    }
+
+    /// Parse the subset of JSON our writers emit: a header with
+    /// `group`/`provisional` and a `results` array of flat objects.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let marker = "\"results\":";
+        let at = text
+            .find(marker)
+            .ok_or_else(|| "bench doc: missing 'results' array".to_string())?;
+        let head = &text[..at];
+        let group = head
+            .split("\"group\":\"")
+            .nth(1)
+            .and_then(|rest| rest.split('"').next())
+            .unwrap_or("")
+            .to_string();
+        let provisional = head.contains("\"provisional\":true");
+
+        let mut entries = Vec::new();
+        let tail = &text[at + marker.len()..];
+        let open = tail
+            .find('[')
+            .ok_or_else(|| "bench doc: 'results' is not an array".to_string())?;
+        let mut rest = &tail[open + 1..];
+        loop {
+            let Some(start) = rest.find('{') else { break };
+            // Our writers never emit nested braces or brace characters
+            // inside entry strings, so the next '}' closes the object.
+            let end = rest[start..]
+                .find('}')
+                .ok_or_else(|| "bench doc: unterminated entry".to_string())?;
+            let obj = &rest[start..start + end + 1];
+            let map = parse_flat(obj)?;
+            entries.push(BenchEntry {
+                name: map
+                    .get("name")
+                    .cloned()
+                    .ok_or_else(|| "bench entry: missing 'name'".to_string())?,
+                mean_ns: map
+                    .get("mean_ns")
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| "bench entry: missing 'mean_ns'".to_string())?,
+                min_ns: map.get("min_ns").and_then(|v| v.parse().ok()).unwrap_or(0.0),
+                median_ns: map
+                    .get("median_ns")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(0.0),
+                iters: map.get("iters").and_then(|v| v.parse().ok()).unwrap_or(0),
+            });
+            rest = &rest[start + end + 1..];
+        }
+        Ok(Self { group, provisional, entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    fn calibration_mean(&self) -> Option<f64> {
+        self.entries
+            .iter()
+            .find(|e| e.name.ends_with(CALIBRATION_SUFFIX))
+            .map(|e| e.mean_ns)
+            .filter(|&m| m > 0.0)
+    }
+}
+
+/// Outcome of a gate comparison.
+#[derive(Debug)]
+pub struct GateOutcome {
+    /// The printable delta table (name, baseline, current, Δthroughput).
+    pub table: Table,
+    /// Human-readable failure lines; empty = gate passes.
+    pub failures: Vec<String>,
+    /// True when calibration scaling was applied.
+    pub calibrated: bool,
+    /// True when the baseline was provisional (report-only).
+    pub provisional: bool,
+}
+
+impl GateOutcome {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Compare `current` against `baseline`; a benchmark fails when its
+/// throughput (1/mean, calibration-scaled when possible) drops more
+/// than `threshold_pct` percent.  Entries present on only one side are
+/// reported but never fail.
+pub fn compare(baseline: &BenchDoc, current: &BenchDoc, threshold_pct: f64) -> GateOutcome {
+    let calib = match (baseline.calibration_mean(), current.calibration_mean()) {
+        (Some(b), Some(c)) => Some((b, c)),
+        _ => None,
+    };
+    let mut title = format!("throughput vs baseline (fail < -{threshold_pct}%");
+    if calib.is_some() {
+        title.push_str(", calibration-scaled");
+    }
+    if baseline.provisional {
+        title.push_str(", PROVISIONAL baseline: report-only");
+    }
+    title.push(')');
+    let mut table = Table::new(
+        "perf_gate",
+        title,
+        &["benchmark", "baseline mean", "current mean", "Δ throughput", "verdict"],
+    );
+    let mut failures = Vec::new();
+    for base in &baseline.entries {
+        if base.name.ends_with(CALIBRATION_SUFFIX) {
+            continue;
+        }
+        let Some(cur) = current.entries.iter().find(|e| e.name == base.name) else {
+            table.row(vec![
+                base.name.clone(),
+                format!("{:.0}ns", base.mean_ns),
+                "-".into(),
+                "-".into(),
+                "missing".into(),
+            ]);
+            continue;
+        };
+        // Normalized means: raw ns, or host-speed-cancelled via the
+        // calibration workload.
+        let (bnorm, cnorm) = match calib {
+            Some((bc, cc)) => (base.mean_ns / bc, cur.mean_ns / cc),
+            None => (base.mean_ns, cur.mean_ns),
+        };
+        if bnorm <= 0.0 || cnorm <= 0.0 {
+            table.row(vec![
+                base.name.clone(),
+                format!("{:.0}ns", base.mean_ns),
+                format!("{:.0}ns", cur.mean_ns),
+                "-".into(),
+                "unmeasured".into(),
+            ]);
+            continue;
+        }
+        // Throughput change: tp = 1/norm ⇒ Δ% = (bnorm/cnorm - 1)·100.
+        let delta_pct = (bnorm / cnorm - 1.0) * 100.0;
+        let fails = delta_pct < -threshold_pct && !baseline.provisional;
+        if fails {
+            failures.push(format!(
+                "{}: throughput {:+.1}% (limit -{threshold_pct}%)",
+                base.name, delta_pct
+            ));
+        }
+        table.row(vec![
+            base.name.clone(),
+            format!("{:.0}ns", base.mean_ns),
+            format!("{:.0}ns", cur.mean_ns),
+            format!("{delta_pct:+.1}%"),
+            if fails { "FAIL".into() } else { "ok".into() },
+        ]);
+    }
+    for cur in &current.entries {
+        if !cur.name.ends_with(CALIBRATION_SUFFIX)
+            && !baseline.entries.iter().any(|e| e.name == cur.name)
+        {
+            table.row(vec![
+                cur.name.clone(),
+                "-".into(),
+                format!("{:.0}ns", cur.mean_ns),
+                "-".into(),
+                "new".into(),
+            ]);
+        }
+    }
+    GateOutcome {
+        table,
+        failures,
+        calibrated: calib.is_some(),
+        provisional: baseline.provisional,
+    }
+}
+
+/// Synthesize a uniformly slowed copy of `doc` (calibration entries
+/// untouched): the self-test input that must trip the gate.
+pub fn degrade(doc: &BenchDoc, slowdown: f64) -> BenchDoc {
+    let mut out = doc.clone();
+    out.provisional = false;
+    for e in &mut out.entries {
+        if !e.name.ends_with(CALIBRATION_SUFFIX) {
+            e.mean_ns *= slowdown;
+            e.min_ns *= slowdown;
+            e.median_ns *= slowdown;
+        }
+    }
+    out
+}
+
+/// Persist a baseline document (`--update-baseline`).
+pub fn write_baseline(path: &Path, doc: &BenchDoc) -> std::io::Result<()> {
+    let mut pretty = doc.json();
+    // One entry per line keeps the committed file diffable.
+    pretty = pretty.replace(",{\"name\"", ",\n{\"name\"").replace("[{\"name\"", "[\n{\"name\"");
+    std::fs::write(path, pretty + "\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(provisional: bool, pairs: &[(&str, f64)]) -> BenchDoc {
+        BenchDoc {
+            group: "g".into(),
+            provisional,
+            entries: pairs
+                .iter()
+                .map(|&(name, mean_ns)| BenchEntry {
+                    name: name.into(),
+                    mean_ns,
+                    min_ns: mean_ns * 0.9,
+                    median_ns: mean_ns,
+                    iters: 100,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn doc_json_roundtrip() {
+        let d = doc(true, &[("g/a", 100.0), ("g/calibration", 1000.5)]);
+        let back = BenchDoc::parse(&d.json()).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn gate_passes_within_threshold() {
+        let base = doc(false, &[("g/a", 100.0), ("g/b", 200.0)]);
+        let cur = doc(false, &[("g/a", 110.0), ("g/b", 190.0)]);
+        let out = compare(&base, &cur, 15.0);
+        assert!(out.passed(), "{:?}", out.failures);
+        assert_eq!(out.table.rows.len(), 2);
+    }
+
+    #[test]
+    fn gate_fails_on_degraded_result() {
+        let base = doc(false, &[("g/a", 100.0), ("g/b", 200.0)]);
+        let degraded = degrade(&base, 1.5); // 50% slower → ~-33% throughput
+        let out = compare(&base, &degraded, 15.0);
+        assert!(!out.passed());
+        assert_eq!(out.failures.len(), 2);
+        assert!(out.failures[0].contains("g/a"), "{:?}", out.failures);
+    }
+
+    #[test]
+    fn calibration_cancels_uniform_host_slowdown() {
+        let base = doc(false, &[("g/a", 100.0), ("g/calibration", 1000.0)]);
+        // Everything (calibration included) 3x slower: a slower host,
+        // not a regression.
+        let mut cur = base.clone();
+        for e in &mut cur.entries {
+            e.mean_ns *= 3.0;
+        }
+        let out = compare(&base, &cur, 15.0);
+        assert!(out.calibrated);
+        assert!(out.passed(), "{:?}", out.failures);
+
+        // But a real regression on top of the slow host still trips.
+        let degraded = degrade(&cur, 1.5);
+        let out = compare(&base, &degraded, 15.0);
+        assert!(!out.passed());
+    }
+
+    #[test]
+    fn provisional_baseline_reports_but_never_fails() {
+        let base = doc(true, &[("g/a", 100.0)]);
+        let degraded = degrade(&base, 10.0);
+        let out = compare(&base, &degraded, 15.0);
+        assert!(out.provisional);
+        assert!(out.passed());
+        // The delta is still visible in the table.
+        assert!(out.table.rows[0][3].starts_with('-'), "{:?}", out.table.rows);
+    }
+
+    #[test]
+    fn disjoint_names_reported_not_failed() {
+        let base = doc(false, &[("g/gone", 100.0)]);
+        let cur = doc(false, &[("g/new", 50.0)]);
+        let out = compare(&base, &cur, 15.0);
+        assert!(out.passed());
+        let verdicts: Vec<&str> =
+            out.table.rows.iter().map(|r| r[4].as_str()).collect();
+        assert_eq!(verdicts, ["missing", "new"]);
+    }
+
+    #[test]
+    fn baseline_file_roundtrip() {
+        let dir = std::env::temp_dir().join("uds_perf_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("baseline.json");
+        let d = doc(false, &[("g/a", 123.0), ("g/b", 456.0)]);
+        write_baseline(&path, &d).unwrap();
+        let back = BenchDoc::load(&path).unwrap();
+        assert_eq!(back, d);
+        // One entry per line for diffability.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() >= 3, "{text}");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(BenchDoc::parse("{}").is_err());
+        assert!(BenchDoc::parse("not json").is_err());
+    }
+
+}

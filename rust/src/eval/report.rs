@@ -1,0 +1,556 @@
+//! Machine-readable report layer (std-only JSON writer/reader).
+//!
+//! Every artifact-producing layer emits through this module so a CI job
+//! or downstream tool never has to scrape human-oriented tables:
+//!
+//! * the TCP service's `BATCH` response streams one [`ScenarioResult`]
+//!   JSON line per scenario plus a terminal [`SweepSummary`] record;
+//! * `uds sweep` aggregates the same records into `report.json` /
+//!   `report.csv` via [`Report`];
+//! * `uds eval` saves each table as JSON next to its CSV and a combined
+//!   [`eval_report`] document;
+//! * the bench harness and the perf gate exchange
+//!   [`crate::eval::perf_gate::BenchDoc`] files built on these writers.
+//!
+//! The reader side ([`parse_flat`]) understands exactly the flat
+//! `{"key":value}` objects these writers emit — strings, numbers and
+//! booleans, no nesting — which is all the wire protocol and the gate
+//! need.  It is not a general JSON parser.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::eval::table::Table;
+
+/// Escape a string for inclusion in a JSON document (quotes excluded).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render an `f64` as a JSON number.  Uses Rust's shortest-roundtrip
+/// `Display`, so `parse::<f64>()` recovers the exact bits — the property
+/// that makes remote and local sweep artifacts byte-identical.
+pub fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Incremental flat-object writer: `{"a":1,"b":"x"}`.
+#[derive(Debug)]
+pub struct JsonObj {
+    buf: String,
+    first: bool,
+}
+
+impl Default for JsonObj {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        Self { buf: String::from("{"), first: true }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+        let _ = write!(self.buf, "\"{}\":", escape(k));
+    }
+
+    pub fn str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        let _ = write!(self.buf, "\"{}\"", escape(v));
+        self
+    }
+
+    pub fn u64(&mut self, k: &str, v: u64) -> &mut Self {
+        self.key(k);
+        let _ = write!(self.buf, "{v}");
+        self
+    }
+
+    pub fn f64(&mut self, k: &str, v: f64) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&fmt_f64(v));
+        self
+    }
+
+    pub fn bool(&mut self, k: &str, v: bool) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Insert a pre-rendered JSON value (object, array, ...) verbatim.
+    pub fn raw(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(v);
+        self
+    }
+
+    pub fn finish(&mut self) -> String {
+        let mut out = std::mem::take(&mut self.buf);
+        out.push('}');
+        out
+    }
+}
+
+/// Render pre-rendered JSON values as an array.
+pub fn json_array<I>(items: I) -> String
+where
+    I: IntoIterator,
+    I::Item: AsRef<str>,
+{
+    let mut out = String::from("[");
+    for (i, item) in items.into_iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(item.as_ref());
+    }
+    out.push(']');
+    out
+}
+
+/// Parse one flat JSON object (`{"k":"v","n":1.5,"b":true}`) into raw
+/// string values: string values are unescaped, numbers/booleans kept as
+/// their literal text.  Nested objects/arrays are rejected — the wire
+/// protocol never emits them inside a record.
+pub fn parse_flat(line: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut map = BTreeMap::new();
+    let bytes: Vec<char> = line.trim().chars().collect();
+    let mut i = 0usize;
+    let err = |what: &str, at: usize| format!("json: {what} at char {at}");
+    let skip_ws = |i: &mut usize| {
+        while bytes.get(*i).is_some_and(|c| c.is_whitespace()) {
+            *i += 1;
+        }
+    };
+    // Parse a quoted string starting at `*i` (which must be '"').
+    let parse_str = |i: &mut usize| -> Result<String, String> {
+        if bytes.get(*i) != Some(&'"') {
+            return Err(err("expected '\"'", *i));
+        }
+        *i += 1;
+        let mut out = String::new();
+        loop {
+            match bytes.get(*i) {
+                None => return Err(err("unterminated string", *i)),
+                Some('"') => {
+                    *i += 1;
+                    return Ok(out);
+                }
+                Some('\\') => {
+                    *i += 1;
+                    match bytes.get(*i) {
+                        Some('"') => out.push('"'),
+                        Some('\\') => out.push('\\'),
+                        Some('/') => out.push('/'),
+                        Some('n') => out.push('\n'),
+                        Some('r') => out.push('\r'),
+                        Some('t') => out.push('\t'),
+                        Some('u') => {
+                            let hex: String =
+                                bytes.get(*i + 1..*i + 5).unwrap_or(&[]).iter().collect();
+                            let code = u32::from_str_radix(&hex, 16)
+                                .map_err(|_| err("bad \\u escape", *i))?;
+                            out.push(
+                                char::from_u32(code).ok_or_else(|| err("bad codepoint", *i))?,
+                            );
+                            *i += 4;
+                        }
+                        _ => return Err(err("bad escape", *i)),
+                    }
+                    *i += 1;
+                }
+                Some(&c) => {
+                    out.push(c);
+                    *i += 1;
+                }
+            }
+        }
+    };
+
+    skip_ws(&mut i);
+    if bytes.get(i) != Some(&'{') {
+        return Err(err("expected '{'", i));
+    }
+    i += 1;
+    skip_ws(&mut i);
+    if bytes.get(i) == Some(&'}') {
+        return Ok(map);
+    }
+    loop {
+        skip_ws(&mut i);
+        let key = parse_str(&mut i)?;
+        skip_ws(&mut i);
+        if bytes.get(i) != Some(&':') {
+            return Err(err("expected ':'", i));
+        }
+        i += 1;
+        skip_ws(&mut i);
+        let val = match bytes.get(i) {
+            Some('"') => parse_str(&mut i)?,
+            Some('{') | Some('[') => return Err(err("nested values unsupported", i)),
+            Some(_) => {
+                let start = i;
+                while bytes
+                    .get(i)
+                    .is_some_and(|&c| c != ',' && c != '}' && !c.is_whitespace())
+                {
+                    i += 1;
+                }
+                bytes[start..i].iter().collect()
+            }
+            None => return Err(err("unexpected end", i)),
+        };
+        map.insert(key, val);
+        skip_ws(&mut i);
+        match bytes.get(i) {
+            Some(',') => i += 1,
+            Some('}') => {
+                i += 1;
+                break;
+            }
+            _ => return Err(err("expected ',' or '}'", i)),
+        }
+    }
+    skip_ws(&mut i);
+    if i != bytes.len() {
+        return Err(err("trailing characters", i));
+    }
+    Ok(map)
+}
+
+fn flat_get<'m>(map: &'m BTreeMap<String, String>, k: &str) -> Result<&'m str, String> {
+    map.get(k).map(String::as_str).ok_or_else(|| format!("missing field '{k}'"))
+}
+
+fn flat_parse<T: std::str::FromStr>(
+    map: &BTreeMap<String, String>,
+    k: &str,
+) -> Result<T, String> {
+    flat_get(map, k)?.parse().map_err(|_| format!("bad field '{k}'"))
+}
+
+// -----------------------------------------------------------------------
+// Scenario records (the BATCH / sweep payload)
+// -----------------------------------------------------------------------
+
+/// One simulated scenario outcome — the unit record of a sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioResult {
+    pub id: u64,
+    pub schedule: String,
+    pub workload: String,
+    pub n: u64,
+    pub threads: u64,
+    pub mean_ns: f64,
+    pub h_ns: u64,
+    pub seed: u64,
+    pub makespan_ns: u64,
+    pub chunks: u64,
+    pub dequeues: u64,
+    pub imbalance_pct: f64,
+    pub efficiency: f64,
+}
+
+impl ScenarioResult {
+    pub const CSV_HEADER: &str = "id,schedule,workload,n,threads,mean_ns,\
+h_ns,seed,makespan_ns,chunks,dequeues,imbalance_pct,efficiency";
+
+    /// The newline-delimited wire/report form: `{"type":"result",...}`.
+    pub fn json_line(&self) -> String {
+        JsonObj::new()
+            .str("type", "result")
+            .u64("id", self.id)
+            .str("schedule", &self.schedule)
+            .str("workload", &self.workload)
+            .u64("n", self.n)
+            .u64("threads", self.threads)
+            .f64("mean_ns", self.mean_ns)
+            .u64("h_ns", self.h_ns)
+            .u64("seed", self.seed)
+            .u64("makespan_ns", self.makespan_ns)
+            .u64("chunks", self.chunks)
+            .u64("dequeues", self.dequeues)
+            .f64("imbalance_pct", self.imbalance_pct)
+            .f64("efficiency", self.efficiency)
+            .finish()
+    }
+
+    pub fn csv_row(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.id,
+            esc(&self.schedule),
+            esc(&self.workload),
+            self.n,
+            self.threads,
+            fmt_f64(self.mean_ns),
+            self.h_ns,
+            self.seed,
+            self.makespan_ns,
+            self.chunks,
+            self.dequeues,
+            fmt_f64(self.imbalance_pct),
+            fmt_f64(self.efficiency),
+        )
+    }
+
+    /// Rebuild from a parsed wire line (the remote sweep client path).
+    pub fn from_flat(map: &BTreeMap<String, String>) -> Result<Self, String> {
+        Ok(Self {
+            id: flat_parse(map, "id")?,
+            schedule: flat_get(map, "schedule")?.to_string(),
+            workload: flat_get(map, "workload")?.to_string(),
+            n: flat_parse(map, "n")?,
+            threads: flat_parse(map, "threads")?,
+            mean_ns: flat_parse(map, "mean_ns")?,
+            h_ns: flat_parse(map, "h_ns")?,
+            seed: flat_parse(map, "seed")?,
+            makespan_ns: flat_parse(map, "makespan_ns")?,
+            chunks: flat_parse(map, "chunks")?,
+            dequeues: flat_parse(map, "dequeues")?,
+            imbalance_pct: flat_parse(map, "imbalance_pct")?,
+            efficiency: flat_parse(map, "efficiency")?,
+        })
+    }
+}
+
+/// The terminal record of a BATCH response / the roll-up of a report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepSummary {
+    pub scenarios: u64,
+    pub distinct_workloads: u64,
+    /// `CostIndex` builds paid by this sweep's own fetches (counted
+    /// per-sweep, immune to concurrent cache users).
+    pub index_builds: u64,
+    /// Cache hits observed by this sweep's own fetches.
+    pub cache_hits: u64,
+}
+
+impl SweepSummary {
+    pub fn json_line(&self) -> String {
+        JsonObj::new()
+            .str("type", "summary")
+            .u64("scenarios", self.scenarios)
+            .u64("distinct_workloads", self.distinct_workloads)
+            .u64("index_builds", self.index_builds)
+            .u64("cache_hits", self.cache_hits)
+            .finish()
+    }
+
+    pub fn from_flat(map: &BTreeMap<String, String>) -> Result<Self, String> {
+        Ok(Self {
+            scenarios: flat_parse(map, "scenarios")?,
+            distinct_workloads: flat_parse(map, "distinct_workloads")?,
+            index_builds: flat_parse(map, "index_builds")?,
+            cache_hits: flat_parse(map, "cache_hits")?,
+        })
+    }
+}
+
+// -----------------------------------------------------------------------
+// Aggregate report artifacts (uds sweep)
+// -----------------------------------------------------------------------
+
+/// A full sweep report: metadata, per-scenario records, roll-up.
+/// Persisted as `report.json` + `report.csv`.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Free-form provenance (grid spec, mode, target address, ...).
+    pub meta: Vec<(String, String)>,
+    pub summary: SweepSummary,
+    pub results: Vec<ScenarioResult>,
+}
+
+impl Report {
+    pub fn json(&self) -> String {
+        let mut meta = JsonObj::new();
+        for (k, v) in &self.meta {
+            meta.str(k, v);
+        }
+        let meta = meta.finish();
+        let results = json_array(self.results.iter().map(|r| r.json_line()));
+        JsonObj::new()
+            .raw("meta", &meta)
+            .raw("summary", &self.summary.json_line())
+            .raw("results", &results)
+            .finish()
+    }
+
+    pub fn csv(&self) -> String {
+        let mut out = String::from(ScenarioResult::CSV_HEADER);
+        out.push('\n');
+        for r in &self.results {
+            out.push_str(&r.csv_row());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write `<dir>/report.json` and `<dir>/report.csv`.
+    pub fn save(&self, dir: &Path) -> std::io::Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(dir)?;
+        let json_path = dir.join("report.json");
+        let csv_path = dir.join("report.csv");
+        std::fs::write(&json_path, self.json())?;
+        std::fs::write(&csv_path, self.csv())?;
+        Ok((json_path, csv_path))
+    }
+}
+
+// -----------------------------------------------------------------------
+// Table JSON (uds eval)
+// -----------------------------------------------------------------------
+
+/// Combined eval document: run config + every produced table, one JSON
+/// file a dashboard can ingest without scraping markdown.
+pub fn eval_report(meta: &[(String, String)], tables: &[Table]) -> String {
+    let mut m = JsonObj::new();
+    for (k, v) in meta {
+        m.str(k, v);
+    }
+    let m = m.finish();
+    let arr = json_array(tables.iter().map(|t| t.json()));
+    JsonObj::new().raw("config", &m).raw("tables", &arr).finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ScenarioResult {
+        ScenarioResult {
+            id: 3,
+            schedule: "dynamic,16".into(),
+            workload: "lognormal".into(),
+            n: 1000,
+            threads: 8,
+            mean_ns: 1000.5,
+            h_ns: 250,
+            seed: 42,
+            makespan_ns: 123456,
+            chunks: 63,
+            dequeues: 71,
+            imbalance_pct: 1.25,
+            efficiency: 0.975,
+        }
+    }
+
+    #[test]
+    fn scenario_json_roundtrip() {
+        let r = sample();
+        let line = r.json_line();
+        let map = parse_flat(&line).unwrap();
+        assert_eq!(map.get("type").unwrap(), "result");
+        let back = ScenarioResult::from_flat(&map).unwrap();
+        assert_eq!(back, r);
+        // Re-rendering the parsed record is byte-identical: the property
+        // that makes remote and local artifacts indistinguishable.
+        assert_eq!(back.json_line(), line);
+    }
+
+    #[test]
+    fn summary_roundtrip() {
+        let s = SweepSummary {
+            scenarios: 120,
+            distinct_workloads: 4,
+            index_builds: 4,
+            cache_hits: 120,
+        };
+        let back = SweepSummary::from_flat(&parse_flat(&s.json_line()).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn escape_special_chars() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        let line = JsonObj::new().str("k", "a\"b\\c\nd").finish();
+        let map = parse_flat(&line).unwrap();
+        assert_eq!(map.get("k").unwrap(), "a\"b\\c\nd");
+    }
+
+    #[test]
+    fn f64_shortest_roundtrip() {
+        for v in [0.1, 1000.0, 1.0 / 3.0, 123456.789] {
+            let s = fmt_f64(v);
+            assert_eq!(s.parse::<f64>().unwrap().to_bits(), v.to_bits(), "{s}");
+        }
+        assert_eq!(fmt_f64(f64::NAN), "null");
+    }
+
+    #[test]
+    fn parse_flat_rejects_malformed() {
+        assert!(parse_flat("not json").is_err());
+        assert!(parse_flat("{\"a\":1").is_err());
+        assert!(parse_flat("{\"a\":{\"nested\":1}}").is_err());
+        assert!(parse_flat("{\"a\":1} trailing").is_err());
+        assert!(parse_flat("{}").unwrap().is_empty());
+    }
+
+    #[test]
+    fn csv_quotes_schedule_labels() {
+        let r = sample();
+        let row = r.csv_row();
+        assert!(row.contains("\"dynamic,16\""), "{row}");
+        assert_eq!(
+            row.split(',').count(),
+            ScenarioResult::CSV_HEADER.split(',').count() + 1,
+            "quoted comma adds one split"
+        );
+    }
+
+    #[test]
+    fn report_artifacts_written() {
+        let dir = std::env::temp_dir().join("uds_report_test");
+        let rep = Report {
+            meta: vec![("mode".into(), "local".into())],
+            summary: SweepSummary { scenarios: 1, ..Default::default() },
+            results: vec![sample()],
+        };
+        let (j, c) = rep.save(&dir).unwrap();
+        let jtext = std::fs::read_to_string(j).unwrap();
+        assert!(jtext.contains("\"results\":[{"));
+        assert!(jtext.contains("\"mode\":\"local\""));
+        let ctext = std::fs::read_to_string(c).unwrap();
+        assert!(ctext.starts_with("id,schedule"));
+        assert_eq!(ctext.lines().count(), 2);
+    }
+
+    #[test]
+    fn json_array_renders() {
+        assert_eq!(json_array(["1", "2"]), "[1,2]");
+        assert_eq!(json_array(Vec::<String>::new()), "[]");
+    }
+}

@@ -84,6 +84,31 @@ impl Table {
         std::fs::write(&path, self.csv())?;
         Ok(path)
     }
+
+    /// Render as a JSON object (via the [`crate::eval::report`] layer):
+    /// `{"id":...,"title":...,"headers":[...],"rows":[[...],...]}`.
+    pub fn json(&self) -> String {
+        use crate::eval::report::{escape, json_array, JsonObj};
+        let headers =
+            json_array(self.headers.iter().map(|h| format!("\"{}\"", escape(h))));
+        let rows = json_array(self.rows.iter().map(|row| {
+            json_array(row.iter().map(|c| format!("\"{}\"", escape(c))))
+        }));
+        JsonObj::new()
+            .str("id", &self.id)
+            .str("title", &self.title)
+            .raw("headers", &headers)
+            .raw("rows", &rows)
+            .finish()
+    }
+
+    /// Write `<dir>/<id>.json`; creates the directory.
+    pub fn save_json(&self, dir: &Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.id));
+        std::fs::write(&path, self.json())?;
+        Ok(path)
+    }
 }
 
 /// Format nanoseconds human-readably.
@@ -127,6 +152,16 @@ mod tests {
         t.row(vec!["7".into()]);
         let path = t.save_csv(&dir).unwrap();
         assert!(std::fs::read_to_string(path).unwrap().contains('7'));
+    }
+
+    #[test]
+    fn json_escapes_and_roundtrips_shape() {
+        let mut t = Table::new("t4", "q\"uote", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        let j = t.json();
+        assert!(j.contains("\"id\":\"t4\""));
+        assert!(j.contains("q\\\"uote"));
+        assert!(j.contains("[[\"1\",\"x,y\"]]"));
     }
 
     #[test]

@@ -19,8 +19,13 @@
 //! * [`runtime`] — PJRT-backed execution of AOT-compiled JAX/Pallas
 //!   compute artifacts on the request path (Python never runs here).
 //! * [`eval`] — the E1–E8 experiment harness regenerating the evaluation
-//!   tables/figures (see EXPERIMENTS.md).
+//!   tables/figures (see EXPERIMENTS.md), the machine-readable
+//!   [`eval::report`] layer and the CI [`eval::perf_gate`].
 //! * [`metrics`] — makespan / imbalance / overhead statistics.
+//! * [`service`] — the TCP scheduling service: cached cost indexes, a
+//!   bounded worker pool, and the `BATCH` scenario-sweep protocol.
+//! * [`sweep`] — scenario grids and the deterministic batch sweep
+//!   engine shared by the service and the `uds sweep` CLI.
 //!
 //! ## Quickstart
 //!
@@ -45,7 +50,9 @@ pub mod eval;
 pub mod metrics;
 pub mod runtime;
 pub mod schedules;
+pub mod service;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 pub mod workload;
 

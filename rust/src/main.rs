@@ -3,6 +3,9 @@
 //! Subcommands:
 //! * `run`            — execute one scheduled loop (simulated or real threads)
 //! * `eval`           — regenerate the E1–E8 evaluation tables (EXPERIMENTS.md)
+//! * `sweep`          — run a scenario grid (locally or against a remote
+//!                      service) and write report.json/report.csv
+//! * `perf-gate`      — compare a bench JSON against the committed baseline
 //! * `list-schedules` — the built-in strategy roster
 //! * `calibrate`      — measure this host's dequeue overhead `h`
 //! * `serve`          — JSON-lines-style scheduling service over TCP
@@ -16,12 +19,14 @@ use std::path::PathBuf;
 use uds::coordinator::{
     parallel_for, ExecOptions, HistoryArena, LoopRecord, LoopSpec, TeamSpec,
 };
+use uds::eval::perf_gate::{self, BenchDoc};
+use uds::eval::report::{parse_flat, Report, ScenarioResult, SweepSummary};
 use uds::eval::{self, EvalConfig};
 use uds::schedules::ScheduleSpec;
+use uds::service;
 use uds::sim::{simulate_indexed, NoVariability, SimArena, SimConfig};
+use uds::sweep::{run_sweep, SweepGrid};
 use uds::workload::{CostIndex, CostModel, WorkloadClass};
-
-mod service;
 
 const USAGE: &str = "\
 uds — user-defined loop scheduling runtime
@@ -32,6 +37,12 @@ USAGE:
   uds eval  [EXP] [--n N] [--threads P] [--mean-ns X] [--h-ns H]
             [--seed S] [--out DIR] [--artifacts DIR]
             EXP: e1..e8 | all (default all)
+  uds sweep --schedules S1;S2 --n N1,N2 [--workloads W1,W2] [--threads P1,P2]
+            [--seeds K1,K2] [--mean-ns X] [--h-ns H] [--workers W]
+            [--out DIR] [--remote HOST:PORT]
+            (schedule list is ';'-separated: labels embed commas)
+  uds perf-gate [--baseline FILE] [--current FILE] [--threshold-pct T]
+            [--update-baseline] [--self-test]
   uds list-schedules
   uds calibrate [--n N] [--threads P]
   uds serve [--addr HOST:PORT]
@@ -41,6 +52,9 @@ SCHEDULES (--schedule): static[,k] dynamic[,k] guided[,min] tss[,f,l]
   awf-b|c|d|e af[,min] hybrid[,f,k] auto tuned[,k0]
 WORKLOADS (--workload): uniform increasing decreasing gaussian
   exponential lognormal bimodal sawtooth";
+
+/// Flags that take no value.
+const BOOL_FLAGS: [&str; 3] = ["real", "self-test", "update-baseline"];
 
 /// Minimal flag parser: positional args + `--key value` pairs.
 struct Flags {
@@ -55,7 +69,7 @@ impl Flags {
         let mut it = args.iter().peekable();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
-                if key == "real" {
+                if BOOL_FLAGS.contains(&key) {
                     named.insert(key.to_string(), "true".to_string());
                     continue;
                 }
@@ -103,6 +117,8 @@ fn main() {
     let result = match cmd.as_str() {
         "run" => cmd_run(&rest),
         "eval" => cmd_eval(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "perf-gate" => cmd_perf_gate(&rest),
         "list-schedules" => {
             for spec in ScheduleSpec::roster() {
                 println!("{}", spec.label());
@@ -176,7 +192,8 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             )
         };
         println!(
-            "[inv {inv}] schedule={} makespan={} chunks={} dequeues={} imbalance={:.2}% efficiency={:.3}",
+            "[inv {inv}] schedule={} makespan={} chunks={} dequeues={} \
+imbalance={:.2}% efficiency={:.3}",
             stats.schedule,
             eval::fmt_ns(stats.makespan_ns),
             stats.chunks,
@@ -226,13 +243,174 @@ fn cmd_eval(args: &[String]) -> Result<(), String> {
     } else {
         vec![exp.as_str()]
     };
+    let mut all_tables = Vec::new();
     for name in exps {
         for table in run(name) {
             println!("{}", table.markdown());
             let path = table.save_csv(&out).map_err(|e| e.to_string())?;
-            println!("saved {}\n", path.display());
+            let jpath = table.save_json(&out).map_err(|e| e.to_string())?;
+            println!("saved {} + {}\n", path.display(), jpath.display());
+            all_tables.push(table);
         }
     }
+    // Combined machine-readable document: config + every table.
+    let doc = eval::report::eval_report(&cfg.meta(), &all_tables);
+    let doc_path = out.join("eval_report.json");
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    std::fs::write(&doc_path, doc).map_err(|e| e.to_string())?;
+    println!("saved {}", doc_path.display());
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<(), String> {
+    let flags = Flags::parse(args)?;
+    // CLI flags map 1:1 onto the BATCH grid grammar.
+    let mut pairs: Vec<(&str, &str)> = Vec::new();
+    for (flag, key) in [
+        ("workloads", "workloads"),
+        ("schedules", "schedules"),
+        ("n", "n"),
+        ("threads", "threads"),
+        ("seeds", "seeds"),
+        ("mean-ns", "mean_ns"),
+        ("h-ns", "h_ns"),
+        ("workers", "workers"),
+    ] {
+        if let Some(v) = flags.named.get(flag) {
+            pairs.push((key, v.as_str()));
+        }
+    }
+    let grid = SweepGrid::from_pairs(pairs).map_err(|e| e.to_string())?;
+    let out = PathBuf::from(flags.get_str("out", "results/sweep"));
+    let report = match flags.named.get("remote") {
+        Some(addr) => sweep_remote(&grid, addr)?,
+        None => sweep_local(&grid),
+    };
+    let (jpath, cpath) = report.save(&out).map_err(|e| e.to_string())?;
+    let s = &report.summary;
+    println!(
+        "sweep: {} scenarios, {} distinct workloads, {} index builds, {} cache hits",
+        s.scenarios, s.distinct_workloads, s.index_builds, s.cache_hits
+    );
+    println!("saved {}", jpath.display());
+    println!("saved {}", cpath.display());
+    Ok(())
+}
+
+fn sweep_meta(grid: &SweepGrid, mode: &str, addr: Option<&str>) -> Vec<(String, String)> {
+    let mut meta = vec![
+        ("generator".to_string(), "uds sweep".to_string()),
+        ("mode".to_string(), mode.to_string()),
+        ("grid".to_string(), grid.to_batch_line()),
+    ];
+    if let Some(a) = addr {
+        meta.push(("remote".to_string(), a.to_string()));
+    }
+    meta
+}
+
+/// Run the grid in-process against a fresh [`service::Service`].
+fn sweep_local(grid: &SweepGrid) -> Report {
+    let svc = service::Service::new();
+    let scenarios = grid.expand();
+    let (results, summary) = run_sweep(&svc, &scenarios, grid.workers);
+    Report { meta: sweep_meta(grid, "local", None), summary, results }
+}
+
+/// Send the grid as one `BATCH` line to a remote service and collect
+/// the streamed result records into the same report shape as a local
+/// run (artifacts are byte-identical modulo the meta header).
+fn sweep_remote(grid: &SweepGrid, addr: &str) -> Result<Report, String> {
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    writeln!(stream, "{}", grid.to_batch_line()).map_err(|e| e.to_string())?;
+    let reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+    let mut results = Vec::new();
+    let mut summary = None;
+    for line in reader.lines() {
+        let line = line.map_err(|e| e.to_string())?;
+        if line.starts_with("ERR ") {
+            return Err(format!("service rejected the grid: {line}"));
+        }
+        let map = parse_flat(&line)?;
+        match map.get("type").map(String::as_str) {
+            Some("result") => results.push(ScenarioResult::from_flat(&map)?),
+            Some("summary") => {
+                summary = Some(SweepSummary::from_flat(&map)?);
+                break;
+            }
+            _ => return Err(format!("unexpected response line: {line}")),
+        }
+    }
+    let summary = summary.ok_or("connection closed before the summary record")?;
+    if summary.scenarios != results.len() as u64 {
+        return Err(format!(
+            "summary reports {} scenarios but {} results arrived",
+            summary.scenarios,
+            results.len()
+        ));
+    }
+    Ok(Report { meta: sweep_meta(grid, "remote", Some(addr)), summary, results })
+}
+
+fn cmd_perf_gate(args: &[String]) -> Result<(), String> {
+    let flags = Flags::parse(args)?;
+    let baseline_path = PathBuf::from(flags.get_str("baseline", "bench_baseline.json"));
+    let threshold: f64 = flags.get("threshold-pct", 15.0)?;
+
+    if flags.has("update-baseline") {
+        let current_path =
+            PathBuf::from(flags.get_str("current", "results/bench_smoke.json"));
+        let current = BenchDoc::load(&current_path)?;
+        perf_gate::write_baseline(&baseline_path, &current)
+            .map_err(|e| e.to_string())?;
+        println!(
+            "baseline {} refreshed from {} ({} benchmarks)",
+            baseline_path.display(),
+            current_path.display(),
+            current.entries.len()
+        );
+        return Ok(());
+    }
+
+    let baseline = BenchDoc::load(&baseline_path)?;
+    if flags.has("self-test") {
+        // Prove the gate trips: feed it a synthetically degraded copy
+        // of its own baseline (2x slower ⇒ -50% throughput).
+        let mut strict = baseline.clone();
+        strict.provisional = false;
+        let degraded = perf_gate::degrade(&strict, 2.0);
+        let outcome = perf_gate::compare(&strict, &degraded, threshold);
+        println!("{}", outcome.table.markdown());
+        if outcome.passed() {
+            return Err("perf-gate self-test: a 2x slowdown was NOT rejected".into());
+        }
+        println!(
+            "perf-gate self-test ok: degraded input rejected ({} failures)",
+            outcome.failures.len()
+        );
+        return Ok(());
+    }
+
+    let current_path =
+        PathBuf::from(flags.get_str("current", "results/bench_smoke.json"));
+    let current = BenchDoc::load(&current_path)?;
+    let outcome = perf_gate::compare(&baseline, &current, threshold);
+    println!("{}", outcome.table.markdown());
+    if !outcome.calibrated {
+        println!("note: no calibration entry on both sides; comparing raw ns");
+    }
+    if outcome.provisional {
+        println!(
+            "baseline is PROVISIONAL: deltas reported, gate not enforced; refresh \
+with `uds perf-gate --update-baseline` on a representative runner"
+        );
+    }
+    if !outcome.passed() {
+        return Err(format!("perf regression: {}", outcome.failures.join("; ")));
+    }
+    println!("perf-gate ok");
     Ok(())
 }
 

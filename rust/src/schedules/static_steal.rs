@@ -72,7 +72,11 @@ impl Scheduler for StaticSteal {
                 }
                 let r = range.lock().unwrap();
                 let left = r.1.saturating_sub(r.0);
-                if left > 0 && best.map_or(true, |(_, b)| left > b) {
+                let better = match best {
+                    Some((_, b)) => left > b,
+                    None => true,
+                };
+                if left > 0 && better {
                     best = Some((v, left));
                 }
             }

@@ -3,19 +3,35 @@
 //! the runtime — a downstream system can query the simulator fleet-side
 //! to pick a schedule before running it in-process.
 //!
-//! Protocol (std-only substitution for the usual tokio+serde stack):
-//! one request per line, fields separated by whitespace:
+//! Protocol (std-only substitution for the usual tokio+serde stack), one
+//! request per line:
 //!
 //! ```text
 //! schedule=fac2 n=100000 threads=8 workload=lognormal mean_ns=1000 h_ns=250 seed=42
+//! BATCH schedules=fac2;gss n=1000,10000 workloads=lognormal,uniform seeds=1,2
 //! ```
 //!
-//! Response (single line):
+//! A single job answers with one line:
 //!
 //! ```text
 //! ok schedule=fac2 makespan_ns=... chunks=... dequeues=... imbalance_pct=... efficiency=...
-//! err msg=...
+//! ERR <code> <detail>
 //! ```
+//!
+//! A `BATCH` request expands its scenario grid (see
+//! [`crate::sweep::SweepGrid`]) and streams back one JSON result line
+//! per scenario in grid order, terminated by a summary record:
+//!
+//! ```text
+//! {"type":"result","id":0,...,"makespan_ns":...}
+//! ...
+//! {"type":"summary","scenarios":N,"distinct_workloads":D,"index_builds":B,"cache_hits":H}
+//! ```
+//!
+//! Error codes are stable protocol surface (`bad_request`, `bad_field`,
+//! `bad_value`, `bad_schedule`, `bad_workload`, `bad_n`, `bad_threads`,
+//! `bad_mean`, `empty_grid`, `grid_too_large`, `bad_workers`); details
+//! are human-oriented and may change.
 //!
 //! ## Request-path architecture (EXPERIMENTS.md §Sim-throughput)
 //!
@@ -31,6 +47,10 @@
 //! * **Pooled arenas** — each worker owns one [`SimArena`] reused for
 //!   every request it serves, so the simulate call allocates nothing
 //!   proportional to `n`.
+//! * **Batched sweeps** — a `BATCH` request fans its grid out over the
+//!   bounded scoped-worker pool in [`crate::sweep`], prefetching each
+//!   distinct workload into the shared cache exactly once; results are
+//!   bit-identical for any worker count.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -38,13 +58,13 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
 
-use uds::coordinator::{LoopRecord, LoopSpec, TeamSpec};
-use uds::schedules::ScheduleSpec;
-use uds::sim::{simulate_indexed, NoVariability, SimArena, SimConfig};
-use uds::workload::{CostIndex, WorkloadClass};
-
-/// Largest accepted iteration count (bounds a single index build).
-const MAX_N: u64 = 50_000_000;
+use crate::coordinator::{LoopRecord, LoopSpec, TeamSpec};
+use crate::schedules::ScheduleSpec;
+use crate::sim::{simulate_indexed, NoVariability, SimArena, SimConfig};
+use crate::sweep::grid::{MAX_N, MAX_THREADS};
+use crate::sweep::SweepGrid;
+use crate::util::CodedError;
+use crate::workload::{CostIndex, WorkloadClass};
 
 /// A parsed job request.
 #[derive(Debug, Clone)]
@@ -60,7 +80,7 @@ pub struct JobRequest {
 
 impl JobRequest {
     /// Parse a `key=value`-pairs request line.
-    pub fn parse(line: &str) -> Result<Self, String> {
+    pub fn parse(line: &str) -> Result<Self, CodedError> {
         let mut req = JobRequest {
             schedule: String::new(),
             n: 0,
@@ -70,30 +90,35 @@ impl JobRequest {
             h_ns: 250,
             seed: 0,
         };
+        let bad = |k: &str, v: &str| CodedError::new("bad_value", format!("{k}: '{v}'"));
         for tok in line.split_whitespace() {
-            let (k, v) = tok
-                .split_once('=')
-                .ok_or_else(|| format!("expected key=value, got '{tok}'"))?;
+            let (k, v) = tok.split_once('=').ok_or_else(|| {
+                CodedError::new("bad_request", format!("expected key=value, got '{tok}'"))
+            })?;
             match k {
                 "schedule" => req.schedule = v.to_string(),
-                "n" => req.n = v.parse().map_err(|e| format!("n: {e}"))?,
-                "threads" => {
-                    req.threads = v.parse().map_err(|e| format!("threads: {e}"))?
-                }
+                "n" => req.n = v.parse().map_err(|_| bad(k, v))?,
+                "threads" => req.threads = v.parse().map_err(|_| bad(k, v))?,
                 "workload" => req.workload = v.to_string(),
-                "mean_ns" => {
-                    req.mean_ns = v.parse().map_err(|e| format!("mean_ns: {e}"))?
+                "mean_ns" => req.mean_ns = v.parse().map_err(|_| bad(k, v))?,
+                "h_ns" => req.h_ns = v.parse().map_err(|_| bad(k, v))?,
+                "seed" => req.seed = v.parse().map_err(|_| bad(k, v))?,
+                other => {
+                    return Err(CodedError::new("bad_field", format!("'{other}'")));
                 }
-                "h_ns" => req.h_ns = v.parse().map_err(|e| format!("h_ns: {e}"))?,
-                "seed" => req.seed = v.parse().map_err(|e| format!("seed: {e}"))?,
-                other => return Err(format!("unknown field '{other}'")),
             }
         }
         if req.schedule.is_empty() {
-            return Err("missing field 'schedule'".into());
+            return Err(CodedError::new("bad_request", "missing field 'schedule'"));
         }
         if req.n == 0 {
-            return Err("missing or zero field 'n'".into());
+            return Err(CodedError::new("bad_n", "missing or zero field 'n'"));
+        }
+        if !req.mean_ns.is_finite() || req.mean_ns <= 0.0 {
+            return Err(CodedError::new(
+                "bad_mean",
+                format!("mean_ns must be finite and > 0, got {}", req.mean_ns),
+            ));
         }
         Ok(req)
     }
@@ -177,26 +202,50 @@ impl Service {
         self.cache.lock().unwrap().get(&key).map(|e| e.index.clone())
     }
 
-    fn index_for(
+    /// Entry budget of the LRU cache — the sweep prefetcher caps its
+    /// warm-up at this so prebuilt indexes aren't evicted before use.
+    pub(crate) fn cache_entry_budget(&self) -> usize {
+        self.max_entries
+    }
+
+    /// Fetch (building and caching on miss) the cost index for one
+    /// workload.
+    pub(crate) fn index_for(
         &self,
         class: WorkloadClass,
         n: u64,
         mean_ns: f64,
         seed: u64,
     ) -> Arc<CostIndex> {
+        self.index_for_counted(class, n, mean_ns, seed).0
+    }
+
+    /// As [`Self::index_for`], also reporting whether this call paid
+    /// the O(n) build — the sweep engine's entry into the shared cache:
+    /// per-sweep accounting must not read the service-global counters,
+    /// which concurrent clients advance too.
+    pub(crate) fn index_for_counted(
+        &self,
+        class: WorkloadClass,
+        n: u64,
+        mean_ns: f64,
+        seed: u64,
+    ) -> (Arc<CostIndex>, bool) {
         let key = CacheKey { class, n, mean_bits: mean_ns.to_bits(), seed };
         {
             let mut map = self.cache.lock().unwrap();
             if let Some(e) = map.get_mut(&key) {
                 e.stamp = self.tick.fetch_add(1, Ordering::Relaxed);
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                return e.index.clone();
+                return (e.index.clone(), false);
             }
         }
         // Miss: run the O(n) build *outside* the lock so concurrent
         // requests for other (cached) scenarios are not stalled behind
         // it.  Two racing builders of the same key both pay the build;
-        // the first insert wins and both share it afterwards.
+        // the first insert wins and both share it afterwards.  (The
+        // sweep engine sidesteps the race by prefetching each distinct
+        // key from exactly one thread.)
         let index = Arc::new(CostIndex::build(&class.model(n, mean_ns, seed)));
         self.builds.fetch_add(1, Ordering::Relaxed);
         let mut map = self.cache.lock().unwrap();
@@ -212,7 +261,7 @@ impl Service {
             }
         };
         self.evict_locked(&mut map);
-        shared
+        (shared, true)
     }
 
     /// Drop least-recently-used entries until within budget.  The most
@@ -238,18 +287,29 @@ impl Service {
     /// state.  On a cache hit this performs no allocation proportional
     /// to `n`.
     pub fn handle(&self, req: &JobRequest, arena: &mut SimArena) -> String {
-        let spec = match ScheduleSpec::parse(&req.schedule) {
-            Ok(s) => s,
-            Err(e) => return format!("err msg={}", e.replace(' ', "_")),
-        };
-        let Some(class) = WorkloadClass::parse(&req.workload) else {
-            return format!("err msg=unknown_workload_{}", req.workload);
-        };
-        if req.n > MAX_N {
-            return "err msg=n_too_large_max_5e7".into();
+        match self.try_handle(req, arena) {
+            Ok(line) => line,
+            Err(e) => e.wire(),
         }
-        if req.threads == 0 || req.threads > 1024 {
-            return "err msg=threads_must_be_1..=1024".into();
+    }
+
+    fn try_handle(
+        &self,
+        req: &JobRequest,
+        arena: &mut SimArena,
+    ) -> Result<String, CodedError> {
+        let spec = ScheduleSpec::parse(&req.schedule)
+            .map_err(|e| CodedError::new("bad_schedule", e))?;
+        let class = WorkloadClass::parse(&req.workload)
+            .ok_or_else(|| CodedError::new("bad_workload", format!("'{}'", req.workload)))?;
+        if req.n > MAX_N {
+            return Err(CodedError::new("bad_n", format!("n must be 1..={MAX_N}")));
+        }
+        if req.threads == 0 || req.threads as u64 > MAX_THREADS {
+            return Err(CodedError::new(
+                "bad_threads",
+                format!("threads must be 1..={MAX_THREADS}"),
+            ));
         }
         let index = self.index_for(class, req.n, req.mean_ns, req.seed);
         let stats = simulate_indexed(
@@ -262,15 +322,45 @@ impl Service {
             &SimConfig { dequeue_overhead_ns: req.h_ns, trace: false },
             arena,
         );
-        format!(
-            "ok schedule={} makespan_ns={} chunks={} dequeues={} imbalance_pct={:.4} efficiency={:.4}",
+        Ok(format!(
+            "ok schedule={} makespan_ns={} chunks={} dequeues={} \
+imbalance_pct={:.4} efficiency={:.4}",
             stats.schedule.replace(' ', "_"),
             stats.makespan_ns,
             stats.chunks,
             stats.total_dequeues(),
             stats.percent_imbalance(),
             stats.efficiency(),
-        )
+        ))
+    }
+
+    /// Handle one `BATCH` line: expand the grid, fan out over the sweep
+    /// pool, stream one JSON result line per scenario (grid order) and
+    /// a terminal summary record.  Protocol errors answer with a single
+    /// `ERR <code> <detail>` line.
+    pub fn handle_batch<W: Write>(&self, line: &str, writer: &mut W) {
+        let grid = match SweepGrid::parse_batch_line(line) {
+            Ok(g) => g,
+            Err(e) => {
+                let _ = writeln!(writer, "{}", e.wire());
+                return;
+            }
+        };
+        let scenarios = grid.expand();
+        let mut broken = false;
+        // Returning `false` from the emit callback cancels the sweep:
+        // once the client stops reading (write error / timeout) the
+        // remaining scenarios are not worth simulating.
+        let summary =
+            crate::sweep::run_sweep_with(self, &scenarios, grid.workers, |r| {
+                if writeln!(writer, "{}", r.json_line()).is_err() {
+                    broken = true;
+                }
+                !broken
+            });
+        if !broken {
+            let _ = writeln!(writer, "{}", summary.json_line());
+        }
     }
 }
 
@@ -295,12 +385,23 @@ fn client_loop(stream: TcpStream, svc: &Service, arena: &mut SimArena) {
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let Ok(line) = line else { break };
-        if line.trim().is_empty() {
+        let line = line.trim();
+        if line.is_empty() {
             continue;
         }
-        let resp = match JobRequest::parse(&line) {
+        if line.starts_with("BATCH") {
+            // Batches stream many small lines: buffer them instead of
+            // one write syscall per scenario.
+            let mut buffered = std::io::BufWriter::new(&mut writer);
+            svc.handle_batch(line, &mut buffered);
+            if buffered.flush().is_err() {
+                break;
+            }
+            continue;
+        }
+        let resp = match JobRequest::parse(line) {
             Ok(req) => svc.handle(&req, arena),
-            Err(e) => format!("err msg={}", e.replace(' ', "_")),
+            Err(e) => e.wire(),
         };
         if writeln!(writer, "{resp}").is_err() {
             break;
@@ -347,10 +448,14 @@ pub fn serve_on(listener: TcpListener, workers: usize) {
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
-                // A worker is tied up for a connection's lifetime, so an
-                // idle client must not pin it forever: evict connections
-                // that go quiet (the read in client_loop errors out).
+                // A worker is tied up for a connection's lifetime, so a
+                // stalled client must not pin it forever: evict both
+                // quiet readers (the read in client_loop errors out) and
+                // clients that stop draining a BATCH stream (the write
+                // blocks once the socket buffer fills, then times out,
+                // which cancels the sweep).
                 let _ = s.set_read_timeout(Some(std::time::Duration::from_secs(30)));
+                let _ = s.set_write_timeout(Some(std::time::Duration::from_secs(30)));
                 if tx.send(s).is_err() {
                     break;
                 }
@@ -373,6 +478,7 @@ pub fn serve(addr: &str) -> anyhow::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::eval::report::{parse_flat, SweepSummary};
 
     #[test]
     fn parse_full_request() {
@@ -394,9 +500,28 @@ mod tests {
 
     #[test]
     fn parse_rejects_missing_fields() {
-        assert!(JobRequest::parse("n=100").is_err());
-        assert!(JobRequest::parse("schedule=gss").is_err());
-        assert!(JobRequest::parse("schedule=gss n=1 bogus=1").is_err());
+        assert_eq!(JobRequest::parse("n=100").unwrap_err().code, "bad_request");
+        assert_eq!(JobRequest::parse("schedule=gss").unwrap_err().code, "bad_n");
+        assert_eq!(
+            JobRequest::parse("schedule=gss n=1 bogus=1").unwrap_err().code,
+            "bad_field"
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_mean() {
+        for line in [
+            "schedule=gss n=10 mean_ns=nan",
+            "schedule=gss n=10 mean_ns=inf",
+            "schedule=gss n=10 mean_ns=0",
+            "schedule=gss n=10 mean_ns=-5",
+        ] {
+            assert_eq!(JobRequest::parse(line).unwrap_err().code, "bad_mean", "{line}");
+        }
+        assert_eq!(
+            JobRequest::parse("schedule=gss n=10 mean_ns=abc").unwrap_err().code,
+            "bad_value"
+        );
     }
 
     #[test]
@@ -409,15 +534,31 @@ mod tests {
     }
 
     #[test]
-    fn handle_bad_schedule() {
+    fn handle_errors_are_coded() {
         let req = JobRequest::parse("schedule=bogus n=10").unwrap();
-        assert!(handle(&req).starts_with("err "));
+        let resp = handle(&req);
+        assert!(resp.starts_with("ERR bad_schedule"), "{resp}");
+
+        let req = JobRequest::parse("schedule=fac2 n=10 workload=bogus").unwrap();
+        assert!(handle(&req).starts_with("ERR bad_workload"));
+
+        let req = JobRequest::parse("schedule=fac2 n=99999999999").unwrap();
+        assert!(handle(&req).starts_with("ERR bad_n"));
+
+        let mut req = JobRequest::parse("schedule=fac2 n=10").unwrap();
+        req.threads = 0;
+        assert!(handle(&req).starts_with("ERR bad_threads"));
     }
 
     #[test]
-    fn handle_rejects_huge_n() {
-        let req = JobRequest::parse("schedule=fac2 n=99999999999").unwrap();
-        assert!(handle(&req).starts_with("err "));
+    fn error_lines_have_stable_shape() {
+        let req = JobRequest::parse("schedule=bogus,x,y n=10").unwrap();
+        let resp = handle(&req);
+        // `ERR <code> <detail>`: exactly one space-free code token.
+        let mut parts = resp.splitn(3, ' ');
+        assert_eq!(parts.next(), Some("ERR"));
+        let code = parts.next().unwrap();
+        assert!(!code.is_empty() && code.chars().all(|c| c.is_ascii_lowercase() || c == '_'));
     }
 
     #[test]
@@ -506,6 +647,51 @@ mod tests {
         svc.handle(&req(2), &mut arena);
         assert_eq!(svc.cache_len(), 1);
         assert!(svc.cached_index(&req(2)).is_some());
+    }
+
+    #[test]
+    fn batch_streams_results_and_summary() {
+        let svc = Service::new();
+        let mut out = Vec::new();
+        // workloads(2) x n(1) x seeds(1) x schedules(2) x threads(2) = 8.
+        svc.handle_batch(
+            "BATCH workloads=uniform,gaussian schedules=fac2;gss n=500 threads=2,4 \
+seeds=1 workers=3",
+            &mut out,
+        );
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 8 + 1, "{text}");
+        for (i, line) in lines[..8].iter().enumerate() {
+            let map = parse_flat(line).unwrap();
+            assert_eq!(map.get("type").unwrap(), "result");
+            assert_eq!(map.get("id").unwrap(), &i.to_string());
+        }
+        let summary =
+            SweepSummary::from_flat(&parse_flat(lines[8]).unwrap()).unwrap();
+        assert_eq!(summary.scenarios, 8);
+        assert_eq!(summary.distinct_workloads, 2);
+        assert_eq!(summary.index_builds, 2, "one build per distinct workload");
+    }
+
+    #[test]
+    fn batch_malformed_framing_answers_coded_error() {
+        let svc = Service::new();
+        for (line, code) in [
+            ("BATCH", "ERR empty_grid"),
+            ("BATCH schedules=fac2 n", "ERR bad_request"),
+            ("BATCH schedules=fac2 n=0", "ERR bad_n"),
+            ("BATCH nonsense", "ERR bad_request"),
+            ("BATCH schedules=fac2 n=1 bogus=2", "ERR bad_field"),
+        ] {
+            let mut out = Vec::new();
+            svc.handle_batch(line, &mut out);
+            let text = String::from_utf8(out).unwrap();
+            assert_eq!(text.lines().count(), 1, "{line}: {text}");
+            assert!(text.starts_with(code), "{line}: {text}");
+        }
+        // No scenario ever ran.
+        assert_eq!(svc.cache_stats().0, 0);
     }
 
     #[test]

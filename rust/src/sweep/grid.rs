@@ -1,0 +1,411 @@
+//! Scenario grids: the cartesian product
+//! `workloads x n x seeds x schedules x threads` that a `BATCH` request
+//! or `uds sweep` invocation expands into individually simulated
+//! scenarios.
+//!
+//! Grammar (one line, whitespace-separated `key=value` pairs, list
+//! values comma-separated):
+//!
+//! ```text
+//! BATCH schedules=fac2;gss n=1000,10000 [workloads=lognormal,...]
+//!       [threads=4,8] [seeds=0,1] [mean_ns=1000] [h_ns=250] [workers=0]
+//! ```
+//!
+//! (The schedules separator is ';' because schedule labels themselves
+//! embed commas, e.g. `dynamic,16`.)
+//!
+//! `schedules` and `n` are required; everything else defaults.  The
+//! expansion order is fixed (workload-major, threads innermost) so a
+//! grid's scenario ids — and therefore the result stream — are
+//! independent of how many workers execute it.
+
+use crate::schedules::ScheduleSpec;
+use crate::util::CodedError;
+use crate::workload::WorkloadClass;
+
+/// Largest accepted iteration count per scenario (bounds one index build).
+pub const MAX_N: u64 = 50_000_000;
+
+/// Largest accepted simulated team size.
+pub const MAX_THREADS: u64 = 1024;
+
+/// Hard cap on the expanded grid size: one BATCH may not fan out into
+/// more scenarios than this (backpressure belongs to the client).
+pub const MAX_SCENARIOS: u64 = 100_000;
+
+/// Most workers a single sweep will fan out over.
+pub const MAX_WORKERS: usize = 64;
+
+/// One fully-specified simulation scenario (a grid point).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Position in the grid's fixed expansion order.
+    pub id: u64,
+    pub schedule: ScheduleSpec,
+    pub workload: WorkloadClass,
+    pub n: u64,
+    pub threads: usize,
+    pub mean_ns: f64,
+    pub h_ns: u64,
+    pub seed: u64,
+}
+
+/// A parsed, validated scenario grid.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    pub workloads: Vec<WorkloadClass>,
+    pub schedules: Vec<ScheduleSpec>,
+    pub ns: Vec<u64>,
+    pub threads: Vec<u64>,
+    pub seeds: Vec<u64>,
+    pub mean_ns: f64,
+    pub h_ns: u64,
+    /// Requested sweep parallelism; 0 = runner default.
+    pub workers: usize,
+}
+
+fn parse_list<T: std::str::FromStr>(k: &'static str, v: &str) -> Result<Vec<T>, CodedError> {
+    v.split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            s.trim()
+                .parse::<T>()
+                .map_err(|_| CodedError::new("bad_value", format!("{k}: '{s}'")))
+        })
+        .collect()
+}
+
+impl SweepGrid {
+    /// Parse from `(key, value)` pairs — the shared backend of the
+    /// `BATCH` wire line and the `uds sweep` CLI flags.
+    pub fn from_pairs<'a>(
+        pairs: impl IntoIterator<Item = (&'a str, &'a str)>,
+    ) -> Result<Self, CodedError> {
+        let mut grid = SweepGrid {
+            workloads: Vec::new(),
+            schedules: Vec::new(),
+            ns: Vec::new(),
+            threads: Vec::new(),
+            seeds: Vec::new(),
+            mean_ns: 1000.0,
+            h_ns: 250,
+            workers: 0,
+        };
+        for (k, v) in pairs {
+            match k {
+                "workloads" => {
+                    for name in v.split(',').filter(|s| !s.trim().is_empty()) {
+                        let class = WorkloadClass::parse(name.trim()).ok_or_else(|| {
+                            CodedError::new("bad_workload", format!("'{name}'"))
+                        })?;
+                        grid.workloads.push(class);
+                    }
+                }
+                // Schedule labels embed commas (`dynamic,16`), so the
+                // schedules list separator is ';', not ','.
+                "schedules" => {
+                    for label in v.split(';') {
+                        if label.trim().is_empty() {
+                            continue;
+                        }
+                        grid.schedules.push(ScheduleSpec::parse(label.trim()).map_err(
+                            |e| CodedError::new("bad_schedule", e),
+                        )?);
+                    }
+                }
+                "n" => grid.ns = parse_list("n", v)?,
+                "threads" => grid.threads = parse_list("threads", v)?,
+                "seeds" => grid.seeds = parse_list("seeds", v)?,
+                "mean_ns" => {
+                    grid.mean_ns = v
+                        .parse()
+                        .map_err(|_| CodedError::new("bad_value", format!("mean_ns: '{v}'")))?;
+                }
+                "h_ns" => {
+                    grid.h_ns = v
+                        .parse()
+                        .map_err(|_| CodedError::new("bad_value", format!("h_ns: '{v}'")))?;
+                }
+                "workers" => {
+                    grid.workers = v
+                        .parse()
+                        .map_err(|_| CodedError::new("bad_value", format!("workers: '{v}'")))?;
+                }
+                other => {
+                    return Err(CodedError::new("bad_field", format!("'{other}'")));
+                }
+            }
+        }
+        grid.apply_defaults_and_validate()?;
+        Ok(grid)
+    }
+
+    /// Parse a `BATCH ...` wire line (with or without the `BATCH` tag).
+    pub fn parse_batch_line(line: &str) -> Result<Self, CodedError> {
+        let body = line.trim().strip_prefix("BATCH").unwrap_or(line).trim();
+        let mut pairs = Vec::new();
+        for tok in body.split_whitespace() {
+            let (k, v) = tok.split_once('=').ok_or_else(|| {
+                CodedError::new("bad_request", format!("expected key=value, got '{tok}'"))
+            })?;
+            pairs.push((k, v));
+        }
+        Self::from_pairs(pairs)
+    }
+
+    /// Render back to the canonical `BATCH ...` wire line (the remote
+    /// sweep client sends this; `parse_batch_line` roundtrips it).
+    pub fn to_batch_line(&self) -> String {
+        let join_u64 = |xs: &[u64]| {
+            xs.iter().map(u64::to_string).collect::<Vec<_>>().join(",")
+        };
+        // ';'-joined: schedule labels embed commas (`dynamic,16`).
+        let schedules = self
+            .schedules
+            .iter()
+            .map(|s| s.label())
+            .collect::<Vec<_>>()
+            .join(";");
+        format!(
+            "BATCH workloads={} schedules={} n={} threads={} seeds={} \
+mean_ns={} h_ns={} workers={}",
+            self.workloads.iter().map(|w| w.name()).collect::<Vec<_>>().join(","),
+            schedules,
+            join_u64(&self.ns),
+            join_u64(&self.threads),
+            join_u64(&self.seeds),
+            crate::eval::report::fmt_f64(self.mean_ns),
+            self.h_ns,
+            self.workers,
+        )
+    }
+
+    fn apply_defaults_and_validate(&mut self) -> Result<(), CodedError> {
+        if self.workloads.is_empty() {
+            self.workloads.push(WorkloadClass::Lognormal);
+        }
+        if self.threads.is_empty() {
+            self.threads.push(8);
+        }
+        if self.seeds.is_empty() {
+            self.seeds.push(0);
+        }
+        if self.schedules.is_empty() {
+            return Err(CodedError::new("empty_grid", "missing field 'schedules'"));
+        }
+        if self.ns.is_empty() {
+            return Err(CodedError::new("empty_grid", "missing field 'n'"));
+        }
+        for &n in &self.ns {
+            if n == 0 || n > MAX_N {
+                return Err(CodedError::new("bad_n", format!("n must be 1..={MAX_N}, got {n}")));
+            }
+        }
+        for &t in &self.threads {
+            if t == 0 || t > MAX_THREADS {
+                return Err(CodedError::new(
+                    "bad_threads",
+                    format!("threads must be 1..={MAX_THREADS}, got {t}"),
+                ));
+            }
+        }
+        if !self.mean_ns.is_finite() || self.mean_ns <= 0.0 {
+            return Err(CodedError::new(
+                "bad_mean",
+                format!("mean_ns must be finite and > 0, got {}", self.mean_ns),
+            ));
+        }
+        if self.workers > MAX_WORKERS {
+            return Err(CodedError::new(
+                "bad_workers",
+                format!("workers must be 0..={MAX_WORKERS}"),
+            ));
+        }
+        if self.size() > MAX_SCENARIOS {
+            return Err(CodedError::new(
+                "grid_too_large",
+                format!("{} scenarios > cap {MAX_SCENARIOS}", self.size()),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Expanded scenario count (saturating, checked against the cap
+    /// before materialization).
+    pub fn size(&self) -> u64 {
+        [
+            self.workloads.len(),
+            self.ns.len(),
+            self.seeds.len(),
+            self.schedules.len(),
+            self.threads.len(),
+        ]
+        .iter()
+        .fold(1u64, |acc, &len| acc.saturating_mul(len as u64))
+    }
+
+    /// Materialize the grid in its fixed expansion order.
+    pub fn expand(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.size() as usize);
+        let mut id = 0u64;
+        for &workload in &self.workloads {
+            for &n in &self.ns {
+                for &seed in &self.seeds {
+                    for schedule in &self.schedules {
+                        for &threads in &self.threads {
+                            out.push(Scenario {
+                                id,
+                                schedule: schedule.clone(),
+                                workload,
+                                n,
+                                threads: threads as usize,
+                                mean_ns: self.mean_ns,
+                                h_ns: self.h_ns,
+                                seed,
+                            });
+                            id += 1;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_line() {
+        let g = SweepGrid::parse_batch_line(
+            "BATCH workloads=lognormal,uniform schedules=fac2;gss n=1000,2000 \
+threads=4,8 seeds=1,2,3 mean_ns=500 h_ns=100 workers=4",
+        )
+        .unwrap();
+        assert_eq!(g.workloads.len(), 2);
+        assert_eq!(g.schedules.len(), 2);
+        assert_eq!(g.size(), 2 * 2 * 2 * 3 * 2);
+        assert_eq!(g.expand().len() as u64, g.size());
+        assert_eq!(g.mean_ns, 500.0);
+        assert_eq!(g.workers, 4);
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let g = SweepGrid::parse_batch_line("BATCH schedules=fac2 n=100").unwrap();
+        assert_eq!(g.workloads, vec![WorkloadClass::Lognormal]);
+        assert_eq!(g.threads, vec![8]);
+        assert_eq!(g.seeds, vec![0]);
+        assert_eq!(g.size(), 1);
+    }
+
+    #[test]
+    fn parameterized_schedule_labels() {
+        let g = SweepGrid::parse_batch_line(
+            "BATCH schedules=dynamic,16;static;tss n=100",
+        )
+        .unwrap();
+        assert_eq!(g.schedules.len(), 3);
+        assert_eq!(g.schedules[0].label(), "dynamic,16");
+    }
+
+    #[test]
+    fn empty_and_missing_grids_rejected() {
+        let err = SweepGrid::parse_batch_line("BATCH").unwrap_err();
+        assert_eq!(err.code, "empty_grid");
+        let err = SweepGrid::parse_batch_line("BATCH schedules=fac2").unwrap_err();
+        assert_eq!(err.code, "empty_grid");
+        let err = SweepGrid::parse_batch_line("BATCH schedules= n=100").unwrap_err();
+        assert_eq!(err.code, "empty_grid");
+    }
+
+    #[test]
+    fn malformed_tokens_rejected() {
+        let err = SweepGrid::parse_batch_line("BATCH schedules=fac2 n").unwrap_err();
+        assert_eq!(err.code, "bad_request");
+        let err = SweepGrid::parse_batch_line("BATCH bogus=1 schedules=fac2 n=1")
+            .unwrap_err();
+        assert_eq!(err.code, "bad_field");
+        let err =
+            SweepGrid::parse_batch_line("BATCH schedules=nope n=100").unwrap_err();
+        assert_eq!(err.code, "bad_schedule");
+        let err = SweepGrid::parse_batch_line("BATCH schedules=fac2 n=abc").unwrap_err();
+        assert_eq!(err.code, "bad_value");
+        let err = SweepGrid::parse_batch_line("BATCH schedules=fac2 n=100 workloads=x")
+            .unwrap_err();
+        assert_eq!(err.code, "bad_workload");
+    }
+
+    #[test]
+    fn bounds_enforced() {
+        let err =
+            SweepGrid::parse_batch_line("BATCH schedules=fac2 n=0").unwrap_err();
+        assert_eq!(err.code, "bad_n");
+        let err = SweepGrid::parse_batch_line(
+            "BATCH schedules=fac2 n=99999999999",
+        )
+        .unwrap_err();
+        assert_eq!(err.code, "bad_n");
+        let err = SweepGrid::parse_batch_line("BATCH schedules=fac2 n=10 threads=0")
+            .unwrap_err();
+        assert_eq!(err.code, "bad_threads");
+        let err = SweepGrid::parse_batch_line(
+            "BATCH schedules=fac2 n=10 mean_ns=nan",
+        )
+        .unwrap_err();
+        assert_eq!(err.code, "bad_mean");
+        let err = SweepGrid::parse_batch_line(
+            "BATCH schedules=fac2 n=10 mean_ns=0",
+        )
+        .unwrap_err();
+        assert_eq!(err.code, "bad_mean");
+    }
+
+    #[test]
+    fn grid_cap_enforced() {
+        // 8 workloads x 1000 n values x 20 seeds = 160k > 100k cap.
+        let ns: String = (1..=1000).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+        let seeds: String = (0..20).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+        let line = format!(
+            "BATCH workloads=uniform,increasing,decreasing,gaussian,exponential,\
+lognormal,bimodal,sawtooth schedules=fac2 n={ns} seeds={seeds}"
+        );
+        let err = SweepGrid::parse_batch_line(&line).unwrap_err();
+        assert_eq!(err.code, "grid_too_large");
+    }
+
+    #[test]
+    fn expansion_order_is_stable() {
+        let g = SweepGrid::parse_batch_line(
+            "BATCH workloads=uniform,gaussian schedules=fac2;gss n=10,20 threads=2,4",
+        )
+        .unwrap();
+        let scenarios = g.expand();
+        assert_eq!(scenarios.len(), 16);
+        // ids are dense and ordered.
+        for (i, s) in scenarios.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+        }
+        // workload-major, threads innermost.
+        assert_eq!(scenarios[0].workload, WorkloadClass::Uniform);
+        assert_eq!(scenarios[0].threads, 2);
+        assert_eq!(scenarios[1].threads, 4);
+        assert_eq!(scenarios[8].workload, WorkloadClass::Gaussian);
+    }
+
+    #[test]
+    fn batch_line_roundtrip() {
+        let g = SweepGrid::parse_batch_line(
+            "BATCH workloads=uniform schedules=dynamic,16;fac2 n=10,20 threads=2 \
+seeds=5 mean_ns=750.5 h_ns=10 workers=2",
+        )
+        .unwrap();
+        let line = g.to_batch_line();
+        let g2 = SweepGrid::parse_batch_line(&line).unwrap();
+        assert_eq!(g2.to_batch_line(), line);
+        assert_eq!(g2.size(), g.size());
+        assert_eq!(g2.schedules[0].label(), "dynamic,16");
+    }
+}

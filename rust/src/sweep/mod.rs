@@ -1,0 +1,333 @@
+//! Batch sweep engine: expand a [`SweepGrid`] and shard its scenarios
+//! across a bounded pool of scoped workers, all sharing one
+//! [`Service`]'s `Arc<CostIndex>` LRU cache.
+//!
+//! Invariants the tests pin down:
+//!
+//! * **Determinism** — results are emitted in grid order and every
+//!   per-scenario record is bit-identical whether 1 or N workers ran
+//!   the sweep (each scenario is an independent deterministic
+//!   simulation; sharding only changes who computes it).
+//! * **Build-once** — the distinct workloads of a grid are prefetched
+//!   into the service cache before the fan-out, each by exactly one
+//!   thread, so a sweep performs at most one O(n) `CostIndex` build per
+//!   distinct `(workload, n, mean_ns, seed)` (cache capacity
+//!   permitting) no matter how many scenarios share it.
+
+pub mod grid;
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::coordinator::{LoopRecord, LoopSpec, TeamSpec};
+use crate::eval::report::{ScenarioResult, SweepSummary};
+use crate::service::Service;
+use crate::sim::{simulate_indexed, NoVariability, SimArena, SimConfig};
+use crate::workload::WorkloadClass;
+
+pub use grid::{Scenario, SweepGrid, MAX_SCENARIOS, MAX_WORKERS};
+
+/// Default sweep parallelism when the grid requests `workers=0`.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(4)
+        .clamp(1, 8)
+}
+
+/// Per-sweep cache accounting.  Deltas of the service-global counters
+/// would be corrupted by concurrent clients sharing the cache, so every
+/// sweep counts its own builds/hits via [`Service::index_for_counted`].
+#[derive(Default)]
+struct SweepCounters {
+    builds: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl SweepCounters {
+    fn fetch(
+        &self,
+        svc: &Service,
+        class: WorkloadClass,
+        n: u64,
+        mean_ns: f64,
+        seed: u64,
+    ) -> std::sync::Arc<crate::workload::CostIndex> {
+        let (index, built) = svc.index_for_counted(class, n, mean_ns, seed);
+        if built {
+            self.builds.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        index
+    }
+}
+
+/// Simulate one scenario against the service's shared index cache.
+fn run_one(
+    svc: &Service,
+    sc: &Scenario,
+    arena: &mut SimArena,
+    counters: &SweepCounters,
+) -> ScenarioResult {
+    let index = counters.fetch(svc, sc.workload, sc.n, sc.mean_ns, sc.seed);
+    let stats = simulate_indexed(
+        &LoopSpec::upto(sc.n),
+        &TeamSpec::uniform(sc.threads),
+        &*sc.schedule.factory(),
+        &index,
+        &NoVariability,
+        &mut LoopRecord::default(),
+        &SimConfig { dequeue_overhead_ns: sc.h_ns, trace: false },
+        arena,
+    );
+    ScenarioResult {
+        id: sc.id,
+        schedule: sc.schedule.label(),
+        workload: sc.workload.name().to_string(),
+        n: sc.n,
+        threads: sc.threads as u64,
+        mean_ns: sc.mean_ns,
+        h_ns: sc.h_ns,
+        seed: sc.seed,
+        makespan_ns: stats.makespan_ns,
+        chunks: stats.chunks,
+        dequeues: stats.total_dequeues(),
+        imbalance_pct: stats.percent_imbalance(),
+        efficiency: stats.efficiency(),
+    }
+}
+
+/// The distinct workload keys of a scenario list, first-seen order.
+fn distinct_workloads(scenarios: &[Scenario]) -> Vec<(WorkloadClass, u64, f64, u64)> {
+    let mut seen = HashSet::new();
+    let mut out = Vec::new();
+    for sc in scenarios {
+        let key = (sc.workload, sc.n, sc.mean_ns.to_bits(), sc.seed);
+        if seen.insert(key) {
+            out.push((sc.workload, sc.n, sc.mean_ns, sc.seed));
+        }
+    }
+    out
+}
+
+/// Run every scenario, streaming results to `emit` in grid (id) order.
+///
+/// Workers claim scenarios from an atomic cursor; a reorder buffer on
+/// the calling thread releases results strictly in id order, so the
+/// emitted stream is identical for any worker count.  `emit` returning
+/// `false` cancels the sweep: workers stop claiming scenarios (useful
+/// when the consumer — e.g. a disconnected BATCH client — is gone).
+/// Returns the sweep summary; builds/hits are counted by this sweep
+/// itself, so concurrent cache users cannot skew them.
+pub fn run_sweep_with(
+    svc: &Service,
+    scenarios: &[Scenario],
+    workers: usize,
+    mut emit: impl FnMut(ScenarioResult) -> bool,
+) -> SweepSummary {
+    let workers = if workers == 0 {
+        default_workers()
+    } else {
+        workers.min(MAX_WORKERS)
+    };
+    let counters = SweepCounters::default();
+
+    // Prefetch distinct workloads (one builder thread per key) so the
+    // fan-out below only ever hits the cache — capped at the cache's
+    // entry budget: beyond it prebuilt indexes would be evicted before
+    // use, so over-budget keys are left to build on demand (and the
+    // summary's builds may then exceed the distinct count).
+    let distinct = distinct_workloads(scenarios);
+    let prefetch = distinct.len().min(svc.cache_entry_budget());
+    let dcursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(prefetch.max(1)) {
+            s.spawn(|| loop {
+                let i = dcursor.fetch_add(1, Ordering::Relaxed);
+                if i >= prefetch {
+                    break;
+                }
+                let (class, n, mean_ns, seed) = distinct[i];
+                counters.fetch(svc, class, n, mean_ns, seed);
+            });
+        }
+    });
+
+    let cursor = AtomicUsize::new(0);
+    let cancelled = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::channel::<(u64, ScenarioResult)>();
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let cancelled = &cancelled;
+            let counters = &counters;
+            s.spawn(move || {
+                let mut arena = SimArena::new();
+                loop {
+                    if cancelled.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    let Some(sc) = scenarios.get(i) else { break };
+                    let result = run_one(svc, sc, &mut arena, counters);
+                    // Keyed by slice position (not sc.id) so emission
+                    // order follows the caller's slice even for
+                    // hand-built scenario lists.
+                    if tx.send((i as u64, result)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        // Reorder buffer: release the stream strictly in id order.
+        // After cancellation, keep draining in-flight results (cheap)
+        // without emitting so the workers' sends never block.
+        let mut pending = std::collections::BTreeMap::new();
+        let mut next = 0u64;
+        for (id, result) in rx {
+            if cancelled.load(Ordering::Relaxed) {
+                continue;
+            }
+            pending.insert(id, result);
+            while let Some(r) = pending.remove(&next) {
+                if !emit(r) {
+                    cancelled.store(true, Ordering::Relaxed);
+                    break;
+                }
+                next += 1;
+            }
+        }
+    });
+
+    SweepSummary {
+        scenarios: scenarios.len() as u64,
+        distinct_workloads: distinct.len() as u64,
+        index_builds: counters.builds.load(Ordering::Relaxed),
+        cache_hits: counters.hits.load(Ordering::Relaxed),
+    }
+}
+
+/// Collecting wrapper over [`run_sweep_with`].
+pub fn run_sweep(
+    svc: &Service,
+    scenarios: &[Scenario],
+    workers: usize,
+) -> (Vec<ScenarioResult>, SweepSummary) {
+    let mut out = Vec::with_capacity(scenarios.len());
+    let summary = run_sweep_with(svc, scenarios, workers, |r| {
+        out.push(r);
+        true
+    });
+    (out, summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid(line: &str) -> Vec<Scenario> {
+        SweepGrid::parse_batch_line(line).unwrap().expand()
+    }
+
+    #[test]
+    fn results_arrive_in_grid_order() {
+        let svc = Service::new();
+        let scenarios = grid(
+            "BATCH workloads=uniform,gaussian schedules=fac2;gss n=500,1000 \
+threads=2,4 seeds=1",
+        );
+        let (results, summary) = run_sweep(&svc, &scenarios, 3);
+        assert_eq!(results.len(), 16);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        assert_eq!(summary.scenarios, 16);
+        assert_eq!(summary.distinct_workloads, 4);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let scenarios = grid(
+            "BATCH workloads=lognormal,bimodal schedules=fac2;dynamic,16;gss \
+n=400,800 threads=3 seeds=1,2",
+        );
+        let (one, _) = run_sweep(&Service::new(), &scenarios, 1);
+        let (eight, _) = run_sweep(&Service::new(), &scenarios, 8);
+        assert_eq!(one, eight);
+        // Bit-identical on the wire, not just logically equal.
+        let lines = |rs: &[crate::eval::report::ScenarioResult]| {
+            rs.iter().map(|r| r.json_line()).collect::<Vec<_>>()
+        };
+        assert_eq!(lines(&one), lines(&eight));
+    }
+
+    #[test]
+    fn each_distinct_workload_builds_once() {
+        let svc = Service::new();
+        // 2 workloads x 2 n x 2 seeds = 8 distinct indexes, 48 scenarios.
+        let scenarios = grid(
+            "BATCH workloads=uniform,lognormal schedules=fac2;gss;static n=300,600 \
+threads=2 seeds=7,8",
+        );
+        let (results, summary) = run_sweep(&svc, &scenarios, 6);
+        assert_eq!(results.len(), 48);
+        assert_eq!(summary.distinct_workloads, 8);
+        assert_eq!(summary.index_builds, 8, "one build per distinct workload");
+        assert_eq!(summary.cache_hits, 48, "every scenario hits the cache");
+        // A second identical sweep is all hits, zero builds.
+        let (_, again) = run_sweep(&svc, &scenarios, 6);
+        assert_eq!(again.index_builds, 0);
+        assert_eq!(again.cache_hits, 48 + 8, "prefetch also hits now");
+    }
+
+    #[test]
+    fn sweep_matches_direct_simulation() {
+        let svc = Service::new();
+        let scenarios =
+            grid("BATCH workloads=gaussian schedules=fac2 n=1000 threads=4 seeds=3");
+        let (results, _) = run_sweep(&svc, &scenarios, 2);
+        let mut arena = SimArena::new();
+        let direct =
+            run_one(&svc, &scenarios[0], &mut arena, &SweepCounters::default());
+        assert_eq!(results[0], direct);
+        assert!(direct.makespan_ns > 0);
+        assert!(direct.efficiency > 0.0 && direct.efficiency <= 1.0);
+    }
+
+    #[test]
+    fn cancelled_sweep_stops_emitting_and_terminates() {
+        let svc = Service::new();
+        // 16 scenarios; cancel after 3 emissions.
+        let scenarios = grid(
+            "BATCH workloads=uniform schedules=fac2;gss;static;dynamic,16 \
+n=200,400 threads=2 seeds=1,2",
+        );
+        let mut got = 0u64;
+        let summary = run_sweep_with(&svc, &scenarios, 4, |r| {
+            assert_eq!(r.id, got, "in-order up to the cancellation point");
+            got += 1;
+            got < 3
+        });
+        assert_eq!(got, 3, "nothing emitted after emit returned false");
+        // The summary still describes the full grid shape.
+        assert_eq!(summary.scenarios, 16);
+        assert_eq!(summary.distinct_workloads, 4);
+    }
+
+    #[test]
+    fn summary_counts_are_sweep_local() {
+        let svc = Service::new();
+        let scenarios =
+            grid("BATCH workloads=uniform,gaussian schedules=fac2 n=500 threads=2");
+        // Pollute the global counters with unrelated traffic first.
+        svc.index_for(crate::workload::WorkloadClass::Lognormal, 900, 1000.0, 5);
+        svc.index_for(crate::workload::WorkloadClass::Lognormal, 900, 1000.0, 5);
+        let (_, summary) = run_sweep(&svc, &scenarios, 2);
+        assert_eq!(summary.index_builds, 2, "only this sweep's builds counted");
+        assert_eq!(summary.cache_hits, 2, "only this sweep's hits counted");
+    }
+}

@@ -131,6 +131,35 @@ impl Bench {
         );
         std::fs::write(path, out)
     }
+
+    /// Write results as a perf-gate [`BenchDoc`] JSON document — the
+    /// format `uds perf-gate` compares against `bench_baseline.json`.
+    ///
+    /// [`BenchDoc`]: crate::eval::perf_gate::BenchDoc
+    pub fn save_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use crate::eval::perf_gate::{BenchDoc, BenchEntry};
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let doc = BenchDoc {
+            group: self.group.clone(),
+            provisional: false,
+            entries: self
+                .results
+                .iter()
+                .map(|m| BenchEntry {
+                    name: m.name.clone(),
+                    mean_ns: m.mean.as_nanos() as f64,
+                    min_ns: m.min.as_nanos() as f64,
+                    median_ns: m.median.as_nanos() as f64,
+                    iters: m.iters,
+                })
+                .collect(),
+        };
+        std::fs::write(path, doc.json() + "\n")
+    }
 }
 
 #[cfg(test)]
@@ -145,6 +174,22 @@ mod tests {
         let m = b.bench("noop_sum", || (0..100u64).sum::<u64>()).clone();
         assert!(m.min <= m.median && m.median <= m.mean * 2);
         assert!(m.iters > 0);
+    }
+
+    #[test]
+    fn save_json_is_gate_parseable() {
+        let mut b = Bench::group("jsontest");
+        b.budget = Duration::from_millis(40);
+        b.samples = 2;
+        b.bench("calibration", || (0..64u64).sum::<u64>());
+        b.bench("case_a", || (0..128u64).product::<u64>());
+        let path = std::env::temp_dir().join("uds_bench_test.json");
+        b.save_json(&path).unwrap();
+        let doc = crate::eval::perf_gate::BenchDoc::load(&path).unwrap();
+        assert_eq!(doc.group, "jsontest");
+        assert_eq!(doc.entries.len(), 2);
+        assert_eq!(doc.entries[0].name, "jsontest/calibration");
+        assert!(doc.entries.iter().all(|e| e.mean_ns > 0.0 && e.iters > 0));
     }
 
     #[test]

@@ -13,3 +13,58 @@ pub mod rng;
 pub use bench::Bench;
 pub use kv::Kv;
 pub use rng::{splitmix64, Pcg};
+
+/// A machine-stable coded error: protocol layers render it as
+/// `ERR <code> <detail>`, so clients can switch on `code` without
+/// scraping free text.  `detail` is human-oriented and may change;
+/// `code` is part of the wire contract (see EXPERIMENTS.md §Batch
+/// sweeps).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CodedError {
+    pub code: &'static str,
+    pub detail: String,
+}
+
+impl CodedError {
+    pub fn new(code: &'static str, detail: impl Into<String>) -> Self {
+        Self { code, detail: detail.into() }
+    }
+
+    /// The single-line wire form: `ERR <code> <detail>` with whitespace
+    /// in the detail collapsed to underscores (the protocol is
+    /// line/space delimited).
+    pub fn wire(&self) -> String {
+        let detail: String = self
+            .detail
+            .split_whitespace()
+            .collect::<Vec<_>>()
+            .join("_");
+        if detail.is_empty() {
+            format!("ERR {}", self.code)
+        } else {
+            format!("ERR {} {detail}", self.code)
+        }
+    }
+}
+
+impl std::fmt::Display for CodedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code, self.detail)
+    }
+}
+
+impl std::error::Error for CodedError {}
+
+#[cfg(test)]
+mod tests {
+    use super::CodedError;
+
+    #[test]
+    fn wire_form_is_space_free_after_code() {
+        let e = CodedError::new("bad_value", "n: invalid digit found");
+        assert_eq!(e.wire(), "ERR bad_value n:_invalid_digit_found");
+        assert_eq!(e.wire().split(' ').count(), 3);
+        let empty = CodedError::new("empty_grid", "");
+        assert_eq!(empty.wire(), "ERR empty_grid");
+    }
+}

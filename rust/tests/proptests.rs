@@ -330,6 +330,44 @@ fn prop_imbalance_properties() {
     });
 }
 
+/// Sweep sharding is physics-invariant: for arbitrary small grids, the
+/// per-scenario result stream is bit-identical whether 1 worker or N
+/// workers executed it (the ISSUE-3 batch determinism pin).
+#[test]
+fn prop_sweep_worker_count_invariant() {
+    use uds::eval::report::ScenarioResult;
+    use uds::service::Service;
+    use uds::sweep::{run_sweep, SweepGrid};
+    cases("sweep_worker_invariance", 8, |rng| {
+        let workloads = ["uniform", "gaussian", "lognormal", "bimodal"];
+        let scheds = ["fac2", "gss", "static", "dynamic,16", "tss", "awf-b"];
+        let pick = |rng: &mut Pcg, pool: &[&str]| {
+            pool[rng.range_u64(0, pool.len() as u64 - 1) as usize].to_string()
+        };
+        let line = format!(
+            "BATCH workloads={},{} schedules={};{} n={},{} threads={},{} seeds={}",
+            pick(rng, &workloads),
+            pick(rng, &workloads),
+            pick(rng, &scheds),
+            pick(rng, &scheds),
+            rng.range_u64(50, 1_500),
+            rng.range_u64(50, 1_500),
+            rng.range_u64(1, 6),
+            rng.range_u64(1, 6),
+            rng.range_u64(0, 999),
+        );
+        let grid = SweepGrid::parse_batch_line(&line).unwrap();
+        let scenarios = grid.expand();
+        let workers = rng.range_u64(2, 8) as usize;
+        let (a, _) = run_sweep(&Service::new(), &scenarios, 1);
+        let (b, _) = run_sweep(&Service::new(), &scenarios, workers);
+        let wire = |rs: &[ScenarioResult]| {
+            rs.iter().map(|r| r.json_line()).collect::<Vec<_>>()
+        };
+        assert_eq!(wire(&a), wire(&b), "workers={workers} grid={line}");
+    });
+}
+
 /// History-carrying schedules (AWF/AF/auto/tuned) still exact-cover on
 /// every invocation of a multi-invocation sequence.
 #[test]

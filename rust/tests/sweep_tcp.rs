@@ -1,0 +1,119 @@
+//! End-to-end BATCH sweep over TCP: the acceptance criteria of the
+//! batch subsystem (ISSUE 3).
+//!
+//! * a ≥100-scenario grid streams one JSON record per scenario plus a
+//!   terminal summary;
+//! * the result stream is bit-identical for 1 vs 8 workers;
+//! * each distinct workload's `CostIndex` is built at most once,
+//!   asserted via the summary's cache-stat deltas.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use uds::eval::report::{parse_flat, ScenarioResult, SweepSummary};
+use uds::service::serve_on;
+
+fn spawn_service(pool_workers: usize) -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || serve_on(listener, pool_workers));
+    addr
+}
+
+/// Send one line, collect the full response (until summary or ERR).
+fn roundtrip(addr: std::net::SocketAddr, line: &str) -> Vec<String> {
+    let mut c = TcpStream::connect(addr).unwrap();
+    writeln!(c, "{line}").unwrap();
+    let reader = BufReader::new(c.try_clone().unwrap());
+    let mut out = Vec::new();
+    for l in reader.lines() {
+        let l = l.unwrap();
+        let done = l.contains("\"type\":\"summary\"") || l.starts_with("ERR");
+        out.push(l);
+        if done {
+            break;
+        }
+    }
+    out
+}
+
+fn summary_of(lines: &[String]) -> SweepSummary {
+    SweepSummary::from_flat(&parse_flat(lines.last().unwrap()).unwrap()).unwrap()
+}
+
+#[test]
+fn batch_sweep_120_scenarios_streams_deterministically() {
+    let addr = spawn_service(2);
+    // workloads(2) x n(2) x seeds(1) x schedules(5) x threads(3) = 120.
+    let grid = "BATCH workloads=lognormal,uniform \
+schedules=fac2;gss;static;dynamic,16;tss n=500,1000 threads=2,4,8 seeds=1 \
+workers=1";
+    let one = roundtrip(addr, grid);
+    assert_eq!(one.len(), 121, "120 results + summary");
+
+    // Every record is valid flat JSON with dense, ordered ids.
+    for (i, line) in one[..120].iter().enumerate() {
+        let map = parse_flat(line).unwrap();
+        assert_eq!(map.get("type").unwrap(), "result", "{line}");
+        let rec = ScenarioResult::from_flat(&map).unwrap();
+        assert_eq!(rec.id, i as u64);
+        assert!(rec.makespan_ns > 0);
+    }
+
+    // Cold cache: exactly one build per distinct (workload, n) pair.
+    let s1 = summary_of(&one);
+    assert_eq!(s1.scenarios, 120);
+    assert_eq!(s1.distinct_workloads, 4);
+    assert_eq!(s1.index_builds, 4, "each distinct CostIndex built once");
+    assert_eq!(s1.cache_hits, 120, "every scenario served from the cache");
+
+    // Same grid, 8 workers, warm cache: bit-identical result stream,
+    // zero rebuilds.
+    let eight = roundtrip(addr, &grid.replace("workers=1", "workers=8"));
+    assert_eq!(eight.len(), 121);
+    assert_eq!(one[..120], eight[..120], "sharding must not change results");
+    let s8 = summary_of(&eight);
+    assert_eq!(s8.index_builds, 0, "warm cache rebuilds nothing");
+    assert_eq!(s8.scenarios, 120);
+}
+
+#[test]
+fn batch_errors_leave_connection_usable() {
+    let addr = spawn_service(1);
+    let mut c = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(c.try_clone().unwrap());
+    let mut line = String::new();
+
+    // Malformed framing answers one coded error line...
+    writeln!(c, "BATCH schedules=fac2 n=not-a-number").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR bad_value"), "{line}");
+
+    // ...and the same connection still serves single jobs and batches.
+    writeln!(c, "schedule=gss n=200 threads=2 workload=uniform").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ok "), "{line}");
+
+    writeln!(c, "BATCH schedules=fac2 n=200 workloads=uniform").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"type\":\"result\""), "{line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"type\":\"summary\""), "{line}");
+}
+
+#[test]
+fn oversized_grid_rejected_up_front() {
+    let addr = spawn_service(1);
+    let ns: String =
+        (1..=2000).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+    let line = format!(
+        "BATCH workloads=uniform,gaussian,lognormal,bimodal \
+schedules=fac2;gss;static;dynamic,16 n={ns} seeds=1,2,3,4"
+    );
+    let resp = roundtrip(addr, &line);
+    assert_eq!(resp.len(), 1);
+    assert!(resp[0].starts_with("ERR grid_too_large"), "{}", resp[0]);
+}
