@@ -22,6 +22,13 @@
 //! user functions receive logical loop bounds exactly as in the proposal
 //! and keep their state inside the user arguments (interior mutability),
 //! mirroring the C idiom of passing a `loop_record_t *`.
+//!
+//! A [`Registry`] holds *declarations*; schedule *names* that the CLI,
+//! sweep grids and the `BATCH` wire protocol resolve live in the open
+//! [`ScheduleRegistry`] namespace.  [`Registry::publish`] bridges the
+//! two: it binds a declaration to an argument maker and registers the
+//! result, after which the declared schedule is resolvable by label
+//! everywhere a builtin is.
 
 use std::any::Any;
 use std::collections::HashMap;
@@ -33,6 +40,7 @@ use crate::coordinator::feedback::ChunkFeedback;
 use crate::coordinator::history::LoopRecord;
 use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
 use crate::coordinator::scheduler::{ScheduleFactory, Scheduler};
+use crate::schedules::registry::ScheduleRegistry;
 
 /// A positional user-argument pack (`omp_arg0..omp_argN`).
 #[derive(Clone, Default)]
@@ -210,6 +218,75 @@ impl Registry {
             ));
         }
         Ok(DeclaredFactory { decl, args })
+    }
+
+    /// Bind a declared schedule to an argument *maker*: every
+    /// [`ScheduleFactory::build`] call receives a fresh `Args` pack, so
+    /// concurrently running loop instances (e.g. sweep scenarios sharing
+    /// one factory) never share user state.  The maker's arity is
+    /// checked once against a probe pack.
+    pub fn template<F>(&self, name: &str, make_args: F) -> Result<TemplateFactory, String>
+    where
+        F: Fn() -> Args + Send + Sync + 'static,
+    {
+        let decl = self
+            .decls
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| format!("schedule '{name}' not declared"))?;
+        let probe = make_args();
+        if probe.len() != decl.arity {
+            return Err(format!(
+                "schedule '{}' declared with arguments({}) but called with {}",
+                name,
+                decl.arity,
+                probe.len()
+            ));
+        }
+        Ok(TemplateFactory { decl, make_args: Arc::new(make_args) })
+    }
+
+    /// Publish a declared schedule into a [`ScheduleRegistry`] under its
+    /// declared name.  Every label surface — the CLI `--schedule` flag,
+    /// sweep grids, the service's single-job line and the `BATCH` wire
+    /// protocol — then resolves the name like a builtin, building each
+    /// loop's scheduler from a fresh `make_args` pack.
+    pub fn publish<F>(
+        &self,
+        schedules: &ScheduleRegistry,
+        name: &str,
+        summary: &str,
+        make_args: F,
+    ) -> Result<(), String>
+    where
+        F: Fn() -> Args + Send + Sync + 'static,
+    {
+        let factory = Arc::new(self.template(name, make_args)?);
+        schedules.register_factory(name, factory, summary)
+    }
+}
+
+/// A declared schedule bound to an argument maker instead of one fixed
+/// argument pack — the shareable, re-buildable form a schedule registry
+/// entry needs (see [`Registry::template`]).
+pub struct TemplateFactory {
+    decl: Declaration,
+    make_args: Arc<dyn Fn() -> Args + Send + Sync>,
+}
+
+impl ScheduleFactory for TemplateFactory {
+    fn name(&self) -> String {
+        format!("declare:{}", self.decl.name)
+    }
+
+    fn build(&self) -> Box<dyn Scheduler> {
+        Box::new(DeclaredScheduler {
+            decl: self.decl.clone(),
+            args: (self.make_args)(),
+            spec: LoopSpec::upto(0),
+        })
     }
 }
 
@@ -424,6 +501,66 @@ mod tests {
         declare_mystatic(&reg, 4);
         assert_eq!(reg.names(), vec!["mystatic".to_string()]);
         assert!(reg.contains("mystatic"));
+    }
+
+    #[test]
+    fn template_instances_are_independent() {
+        let reg = Registry::new();
+        declare_mystatic(&reg, 8);
+        let f = reg
+            .template("mystatic", || {
+                Args::new().with(Mutex::new(LoopRecordT::default())).with(8i64)
+            })
+            .unwrap();
+        let spec = LoopSpec::upto(320);
+        let team = TeamSpec::uniform(2);
+        let mut rec = LoopRecord::default();
+        let mut a = f.build();
+        a.start(&spec, &team, &mut rec);
+        let first = a.next(0, None).expect("work available");
+        // Starting a second instance must not reset the first: each
+        // build() received its own Args pack.
+        let mut b = f.build();
+        b.start(&spec, &team, &mut rec);
+        let mut chunks = vec![(0usize, first)];
+        let mut live = [true; 2];
+        while live.iter().any(|&l| l) {
+            for (tid, alive) in live.iter_mut().enumerate() {
+                if !*alive {
+                    continue;
+                }
+                match a.next(tid, None) {
+                    Some(c) => chunks.push((tid, c)),
+                    None => *alive = false,
+                }
+            }
+        }
+        verify_cover(&chunks, 320).unwrap();
+    }
+
+    #[test]
+    fn publish_makes_name_resolvable_by_label() {
+        let decl = Registry::new();
+        declare_mystatic(&decl, 16);
+        let schedules = ScheduleRegistry::new();
+        decl.publish(&schedules, "mystatic", "declare-style static,16", || {
+            Args::new().with(Mutex::new(LoopRecordT::default())).with(16i64)
+        })
+        .unwrap();
+        let spec = schedules.parse("mystatic").unwrap();
+        assert_eq!(spec.label(), "mystatic");
+        let mut s = schedules.build("mystatic").unwrap();
+        let chunks = drain_chunks(
+            &mut *s,
+            &LoopSpec::upto(1000),
+            &TeamSpec::uniform(4),
+            &mut LoopRecord::default(),
+        );
+        verify_cover(&chunks, 1000).unwrap();
+        // An arity-mismatched maker is rejected at publish time.
+        assert!(decl.publish(&schedules, "mystatic", "dup", Args::new).is_err());
+        // Unknown declarations cannot be published.
+        assert!(decl.publish(&schedules, "nope", "x", Args::new).is_err());
     }
 
     #[test]

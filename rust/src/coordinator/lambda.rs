@@ -19,7 +19,10 @@
 //! the setter functions (`OMP_UDS_loop_chunk_start/end/step`,
 //! `OMP_UDS_loop_dequeue_done`).  The `schedule_template` directive of the
 //! paper corresponds to registering the resulting factory under a name
-//! (see [`crate::coordinator::declare::Registry`]).
+//! in the open schedule namespace ([`ScheduleRegistry`]):
+//! [`UdsBuilder::register`] builds the template *and* publishes it, after
+//! which the name resolves everywhere a builtin label does — the CLI,
+//! sweep grids, and the `BATCH` wire protocol.
 
 use std::any::Any;
 use std::sync::Arc;
@@ -28,6 +31,7 @@ use crate::coordinator::feedback::ChunkFeedback;
 use crate::coordinator::history::LoopRecord;
 use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
 use crate::coordinator::scheduler::{ScheduleFactory, Scheduler};
+use crate::schedules::registry::ScheduleRegistry;
 
 /// The compiler-generated getter set of §4.1: everything a UDS lambda may
 /// ask about the loop being scheduled.
@@ -212,6 +216,23 @@ impl UdsBuilder {
             finalize: self.finalize,
             user: self.user,
         })
+    }
+
+    /// [`UdsBuilder::build`] plus publication into a [`ScheduleRegistry`]
+    /// under the template's name — the paper's `declare
+    /// schedule_template` registration step.  Afterwards the name is
+    /// resolvable from every label surface (CLI, sweep grids, `BATCH`).
+    pub fn register(
+        self,
+        schedules: &ScheduleRegistry,
+    ) -> Result<Arc<LambdaFactory>, String> {
+        let factory = self.build();
+        schedules.register_factory(
+            &factory.name,
+            factory.clone(),
+            "lambda-style user-defined schedule (§4.1)",
+        )?;
+        Ok(factory)
     }
 }
 
@@ -441,6 +462,42 @@ mod tests {
     #[should_panic(expected = "dequeue")]
     fn missing_dequeue_panics() {
         let _ = UdsBuilder::named("broken").build();
+    }
+
+    #[test]
+    fn register_publishes_template_by_name() {
+        let schedules = ScheduleRegistry::new();
+        let f = UdsBuilder::named("lambda_serial")
+            .init(|_| Box::new(AtomicI64::new(0)))
+            .dequeue(|ctx, state, _, _, sink| {
+                let cur = state.downcast_ref::<AtomicI64>().unwrap();
+                let k = cur.fetch_add(1, Ordering::Relaxed);
+                let lb = ctx.loop_start() + k * ctx.loop_step();
+                if lb >= ctx.loop_end() {
+                    sink.dequeue_done();
+                    return;
+                }
+                sink.chunk_start(lb);
+                sink.chunk_end(lb + ctx.loop_step());
+            })
+            .register(&schedules)
+            .unwrap();
+        assert_eq!(f.name(), "uds:lambda_serial");
+        assert!(schedules.contains("lambda_serial"));
+        assert_eq!(schedules.parse("lambda_serial").unwrap().label(), "lambda_serial");
+        let mut s = schedules.build("lambda_serial").unwrap();
+        let chunks = drain_chunks(
+            &mut *s,
+            &LoopSpec::upto(9),
+            &TeamSpec::uniform(2),
+            &mut LoopRecord::default(),
+        );
+        verify_cover(&chunks, 9).unwrap();
+        // The name is taken now — re-registering is an error.
+        assert!(UdsBuilder::named("lambda_serial")
+            .dequeue(|_, _, _, _, sink| sink.dequeue_done())
+            .register(&schedules)
+            .is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::coordinator::loop_spec::{LoopSpec, TeamSpec};
 use crate::coordinator::scheduler::{drain_chunks, ScheduleFactory};
 use crate::eval::table::{fmt_ns, Table};
 use crate::metrics::RunStats;
-use crate::schedules::ScheduleSpec;
+use crate::schedules::{AwfVariant, ScheduleSpec};
 use crate::sim::{
     simulate, simulate_indexed, Heterogeneous, NoVariability, NoiseBursts, SimArena,
     SimConfig,
@@ -313,8 +313,8 @@ pub fn e5(cfg: &EvalConfig) -> Vec<Table> {
         ScheduleSpec::Dynamic { chunk: 16 },
         ScheduleSpec::Guided { min_chunk: 1 },
         ScheduleSpec::Fac2,
-        ScheduleSpec::Awf { variant: "b".into() },
-        ScheduleSpec::Awf { variant: "c".into() },
+        ScheduleSpec::Awf { variant: AwfVariant::B },
+        ScheduleSpec::Awf { variant: AwfVariant::C },
         ScheduleSpec::Af { min_chunk: 1 },
     ];
     let probs = [0.0, 0.1, 0.25, 0.5];
@@ -524,8 +524,8 @@ pub fn e7(cfg: &EvalConfig) -> Vec<Table> {
         (ScheduleSpec::Guided { min_chunk: 1 }, false),
         (ScheduleSpec::Fac2, false),
         (ScheduleSpec::Wf2, true),
-        (ScheduleSpec::Awf { variant: "b".into() }, false),
-        (ScheduleSpec::Awf { variant: "c".into() }, false),
+        (ScheduleSpec::Awf { variant: AwfVariant::B }, false),
+        (ScheduleSpec::Awf { variant: AwfVariant::C }, false),
         (ScheduleSpec::Af { min_chunk: 1 }, false),
     ];
     for (spec, weighted) in cases {
@@ -639,7 +639,7 @@ pub fn e8(cfg: &EvalConfig, artifacts: &Path) -> Vec<Table> {
         ScheduleSpec::Dynamic { chunk: 4 },
         ScheduleSpec::Guided { min_chunk: 1 },
         ScheduleSpec::Fac2,
-        ScheduleSpec::Awf { variant: "c".into() },
+        ScheduleSpec::Awf { variant: AwfVariant::C },
     ];
 
     // ---- Phase 1: real execution (correctness + calibration) ----

@@ -11,7 +11,10 @@
 //!   worksharing executor, both proposed surface syntaxes (§4.1 lambda
 //!   style, §4.2 declare style) and cross-invocation history.
 //! * [`schedules`] — every strategy the paper cites, implemented natively
-//!   and re-expressed through the UDS frontends.
+//!   and re-expressed through the UDS frontends, plus the open
+//!   [`schedules::registry::ScheduleRegistry`]: the single namespace
+//!   resolving schedule labels (builtin or user-registered) for the CLI,
+//!   the wire protocol, sweeps and the eval roster.
 //! * [`workload`] — per-iteration cost models (the evaluation's workload
 //!   classes).
 //! * [`sim`] — a deterministic virtual-time executor plus system-noise /
@@ -61,4 +64,4 @@ pub use coordinator::{
     LoopSpec, ScheduleFactory, Scheduler, TeamSpec,
 };
 pub use metrics::RunStats;
-pub use schedules::ScheduleSpec;
+pub use schedules::{ScheduleRegistry, ScheduleSpec};

@@ -6,7 +6,9 @@
 //! * `sweep`          — run a scenario grid (locally or against a remote
 //!                      service) and write report.json/report.csv
 //! * `perf-gate`      — compare a bench JSON against the committed baseline
-//! * `list-schedules` — the built-in strategy roster
+//! * `list-schedules` — every name in the schedule registry (builtins
+//!                      plus registered user-defined schedules) and the
+//!                      eval roster
 //! * `calibrate`      — measure this host's dequeue overhead `h`
 //! * `serve`          — JSON-lines-style scheduling service over TCP
 //!
@@ -22,7 +24,7 @@ use uds::coordinator::{
 use uds::eval::perf_gate::{self, BenchDoc};
 use uds::eval::report::{parse_flat, Report, ScenarioResult, SweepSummary};
 use uds::eval::{self, EvalConfig};
-use uds::schedules::ScheduleSpec;
+use uds::schedules::{ScheduleRegistry, ScheduleSpec};
 use uds::service;
 use uds::sim::{simulate_indexed, NoVariability, SimArena, SimConfig};
 use uds::sweep::{run_sweep, SweepGrid};
@@ -48,8 +50,10 @@ USAGE:
   uds serve [--addr HOST:PORT]
 
 SCHEDULES (--schedule): static[,k] dynamic[,k] guided[,min] tss[,f,l]
-  fsc[,h[,sigma]] fac[,mu,sigma] fac2 wf2 rand[,lo,hi] static_steal[,k]
-  awf-b|c|d|e af[,min] hybrid[,f,k] auto tuned[,k0]
+  fsc[,h[,sigma]] fac[,mu,sigma] fac2 wf2 rand[,seed|,lo,hi[,seed]]
+  static_steal[,k] awf-b|c|d|e af[,min] hybrid[,f[,k]] auto tuned[,k0]
+  — plus any user-defined schedule registered in the schedule registry
+  (run `uds list-schedules` for the live namespace)
 WORKLOADS (--workload): uniform increasing decreasing gaussian
   exponential lognormal bimodal sawtooth";
 
@@ -120,8 +124,26 @@ fn main() {
         "sweep" => cmd_sweep(&rest),
         "perf-gate" => cmd_perf_gate(&rest),
         "list-schedules" => {
+            let entries = ScheduleRegistry::global().entries();
+            println!("schedule registry ({} entries):", entries.len());
+            for e in &entries {
+                let aliases = if e.aliases().is_empty() {
+                    String::new()
+                } else {
+                    format!("  [aliases: {}]", e.aliases().join(", "))
+                };
+                let kind = if e.is_builtin() { "builtin" } else { "user" };
+                println!(
+                    "  {:<28} {:<7} {}{}",
+                    e.signature(),
+                    kind,
+                    e.summary(),
+                    aliases
+                );
+            }
+            println!("eval roster:");
             for spec in ScheduleSpec::roster() {
-                println!("{}", spec.label());
+                println!("  {}", spec.label());
             }
             Ok(())
         }
@@ -280,11 +302,24 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
             pairs.push((key, v.as_str()));
         }
     }
-    let grid = SweepGrid::from_pairs(pairs).map_err(|e| e.to_string())?;
     let out = PathBuf::from(flags.get_str("out", "results/sweep"));
     let report = match flags.named.get("remote") {
-        Some(addr) => sweep_remote(&grid, addr)?,
-        None => sweep_local(&grid),
+        Some(addr) => {
+            // Remote grids are validated by the *server's* schedule
+            // registry: user-defined schedules registered in the server
+            // process must be sweepable by name even when this client
+            // doesn't know them, so the raw flag values are forwarded
+            // verbatim and a bad grid surfaces as the server's ERR line.
+            let line = std::iter::once("BATCH".to_string())
+                .chain(pairs.iter().map(|(k, v)| format!("{k}={v}")))
+                .collect::<Vec<_>>()
+                .join(" ");
+            sweep_remote(&line, addr)?
+        }
+        None => {
+            let grid = SweepGrid::from_pairs(pairs).map_err(|e| e.to_string())?;
+            sweep_local(&grid)
+        }
     };
     let (jpath, cpath) = report.save(&out).map_err(|e| e.to_string())?;
     let s = &report.summary;
@@ -297,11 +332,11 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-fn sweep_meta(grid: &SweepGrid, mode: &str, addr: Option<&str>) -> Vec<(String, String)> {
+fn sweep_meta(batch_line: &str, mode: &str, addr: Option<&str>) -> Vec<(String, String)> {
     let mut meta = vec![
         ("generator".to_string(), "uds sweep".to_string()),
         ("mode".to_string(), mode.to_string()),
-        ("grid".to_string(), grid.to_batch_line()),
+        ("grid".to_string(), batch_line.to_string()),
     ];
     if let Some(a) = addr {
         meta.push(("remote".to_string(), a.to_string()));
@@ -314,17 +349,18 @@ fn sweep_local(grid: &SweepGrid) -> Report {
     let svc = service::Service::new();
     let scenarios = grid.expand();
     let (results, summary) = run_sweep(&svc, &scenarios, grid.workers);
-    Report { meta: sweep_meta(grid, "local", None), summary, results }
+    Report { meta: sweep_meta(&grid.to_batch_line(), "local", None), summary, results }
 }
 
-/// Send the grid as one `BATCH` line to a remote service and collect
-/// the streamed result records into the same report shape as a local
-/// run (artifacts are byte-identical modulo the meta header).
-fn sweep_remote(grid: &SweepGrid, addr: &str) -> Result<Report, String> {
+/// Send one `BATCH` line to a remote service and collect the streamed
+/// result records into the same report shape as a local run (artifacts
+/// are byte-identical modulo the meta header).  The line is validated
+/// by the server, whose schedule registry is authoritative.
+fn sweep_remote(batch_line: &str, addr: &str) -> Result<Report, String> {
     use std::io::{BufRead, BufReader, Write};
     let mut stream = std::net::TcpStream::connect(addr)
         .map_err(|e| format!("connect {addr}: {e}"))?;
-    writeln!(stream, "{}", grid.to_batch_line()).map_err(|e| e.to_string())?;
+    writeln!(stream, "{batch_line}").map_err(|e| e.to_string())?;
     let reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
     let mut results = Vec::new();
     let mut summary = None;
@@ -351,7 +387,7 @@ fn sweep_remote(grid: &SweepGrid, addr: &str) -> Result<Report, String> {
             results.len()
         ));
     }
-    Ok(Report { meta: sweep_meta(grid, "remote", Some(addr)), summary, results })
+    Ok(Report { meta: sweep_meta(batch_line, "remote", Some(addr)), summary, results })
 }
 
 fn cmd_perf_gate(args: &[String]) -> Result<(), String> {

@@ -45,6 +45,16 @@ impl AwfVariant {
         }
     }
 
+    /// Lowercase variant letter — the label form is `awf-<letter>`.
+    pub fn letter(self) -> char {
+        match self {
+            Self::B => 'b',
+            Self::C => 'c',
+            Self::D => 'd',
+            Self::E => 'e',
+        }
+    }
+
     fn within_invocation(self) -> bool {
         matches!(self, Self::C | Self::E)
     }

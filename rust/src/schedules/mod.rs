@@ -5,6 +5,15 @@
 //! re-expressions of these strategies (through the §4.1 lambda and §4.2
 //! declare frontends) live in [`uds_port`]; E6 verifies native and UDS
 //! forms produce identical chunk sequences.
+//!
+//! Schedule *names* live in one open namespace, the
+//! [`registry::ScheduleRegistry`]: every builtin self-registers there,
+//! and user-defined schedules published through the frontends
+//! ([`crate::coordinator::declare::Registry::publish`],
+//! [`crate::coordinator::lambda::UdsBuilder::register`]) join the same
+//! map.  [`ScheduleSpec::parse`] resolves against it, so a registered
+//! name works everywhere a builtin label does — CLI, sweep grids, the
+//! `BATCH` wire protocol, and the eval roster.
 
 pub mod af;
 pub mod auto_select;
@@ -17,6 +26,7 @@ pub mod fsc;
 pub mod gss;
 pub mod hybrid;
 pub mod rand_sched;
+pub mod registry;
 pub mod static_block;
 pub mod static_steal;
 pub mod tss;
@@ -36,6 +46,9 @@ pub use fsc::Fsc;
 pub use gss::{Gss, GssCompiled};
 pub use hybrid::Hybrid;
 pub use rand_sched::RandSched;
+pub use registry::{
+    registration, ParamKind, ParamSpec, ParamValue, Registration, ScheduleRegistry,
+};
 pub use static_block::StaticBlock;
 pub use static_steal::StaticSteal;
 pub use tss::Tss;
@@ -119,6 +132,14 @@ pub fn tuned_dynamic(k0: u64) -> Box<dyn Scheduler> {
 /// A parseable, serializable schedule description — what a
 /// `schedule(...)` clause names.  `ScheduleSpec::factory()` turns it into
 /// a [`ScheduleFactory`] for the executors.
+///
+/// The builtin strategies keep typed variants (the eval harness and the
+/// benches construct them directly); the [`ScheduleSpec::Registered`]
+/// variant opens the set to every name in the
+/// [`registry::ScheduleRegistry`], so user-defined schedules need no
+/// enum edit.  [`ScheduleSpec::parse`] resolves all of them from one
+/// namespace, and [`ScheduleSpec::label`] is lossless: it renders a
+/// canonical label that parses back to an equal spec.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ScheduleSpec {
     Static { chunk: Option<u64> },
@@ -131,124 +152,81 @@ pub enum ScheduleSpec {
     Wf2,
     Rand { bounds: Option<(u64, u64)>, seed: u64 },
     StaticSteal { own_chunk: u64 },
-    Awf { variant: String },
+    Awf { variant: AwfVariant },
     Af { min_chunk: u64 },
     Hybrid { f_static: f64, dyn_chunk: u64 },
     Auto,
     Tuned { k0: u64 },
+    /// An open, registry-resolved schedule: any name registered in the
+    /// [`registry::ScheduleRegistry`] (e.g. a published §4.1/§4.2 UDS),
+    /// carried as its canonical label.
+    Registered { label: String },
 }
 
 impl ScheduleSpec {
-    /// Parse CLI syntax: `static`, `static,16`, `dynamic,4`, `guided`,
-    /// `tss`, `tss,100,4`, `fsc,1000`, `fac`, `fac2`, `wf2`, `rand,7`,
-    /// `static_steal,2`, `awf-b|c|d|e`, `af`, `hybrid,0.5,8`, `auto`,
-    /// `tuned,8`.
+    /// Parse a schedule label through the global
+    /// [`registry::ScheduleRegistry`].  Builtin syntax: `static[,k]`,
+    /// `dynamic[,k]`, `guided[,min]`, `tss[,f,l]`, `fsc[,h[,sigma]]`,
+    /// `fac[,mu,sigma]`, `fac2`, `wf2`, `rand[,seed|,lo,hi[,seed]]`,
+    /// `static_steal[,k]`, `awf-b|c|d|e`, `af[,min]`, `hybrid[,f[,k]]`,
+    /// `auto`, `tuned[,k0]` — plus any registered user-defined name.
+    /// Unknown names and invalid parameters are rejected here, never
+    /// deferred to build time.
     pub fn parse(s: &str) -> Result<Self, String> {
-        let parts: Vec<&str> = s.split(',').map(str::trim).collect();
-        let head = parts[0].to_ascii_lowercase();
-        let num = |i: usize| -> Result<u64, String> {
-            parts
-                .get(i)
-                .ok_or_else(|| format!("'{s}': missing parameter {i}"))?
-                .parse::<u64>()
-                .map_err(|e| format!("'{s}': {e}"))
-        };
-        let fnum = |i: usize| -> Result<f64, String> {
-            parts
-                .get(i)
-                .ok_or_else(|| format!("'{s}': missing parameter {i}"))?
-                .parse::<f64>()
-                .map_err(|e| format!("'{s}': {e}"))
-        };
-        Ok(match head.as_str() {
-            "static" => ScheduleSpec::Static {
-                chunk: if parts.len() > 1 { Some(num(1)?) } else { None },
-            },
-            "cyclic" | "static_cyclic" => ScheduleSpec::Static { chunk: Some(1) },
-            "dynamic" | "ss" | "pss" => ScheduleSpec::Dynamic {
-                chunk: if parts.len() > 1 { num(1)? } else { 1 },
-            },
-            "guided" | "gss" => ScheduleSpec::Guided {
-                min_chunk: if parts.len() > 1 { num(1)? } else { 1 },
-            },
-            "tss" | "trapezoid" => ScheduleSpec::Tss {
-                params: if parts.len() > 2 {
-                    Some((num(1)?, num(2)?))
-                } else {
-                    None
-                },
-            },
-            "fsc" => ScheduleSpec::Fsc {
-                overhead_ns: if parts.len() > 1 { fnum(1)? } else { 1000.0 },
-                sigma_ns: if parts.len() > 2 { Some(fnum(2)?) } else { None },
-            },
-            "fac" => ScheduleSpec::Fac {
-                mu_sigma: if parts.len() > 2 {
-                    Some((fnum(1)?, fnum(2)?))
-                } else {
-                    None
-                },
-            },
-            "fac2" => ScheduleSpec::Fac2,
-            "wf" | "wf2" => ScheduleSpec::Wf2,
-            "rand" | "random" => ScheduleSpec::Rand {
-                bounds: if parts.len() > 2 {
-                    Some((num(1)?, num(2)?))
-                } else {
-                    None
-                },
-                seed: if parts.len() == 2 { num(1)? } else { 0x5EED },
-            },
-            "static_steal" | "steal" => ScheduleSpec::StaticSteal {
-                own_chunk: if parts.len() > 1 { num(1)? } else { 1 },
-            },
-            "awf" | "awf-b" => ScheduleSpec::Awf { variant: "b".into() },
-            "awf-c" => ScheduleSpec::Awf { variant: "c".into() },
-            "awf-d" => ScheduleSpec::Awf { variant: "d".into() },
-            "awf-e" => ScheduleSpec::Awf { variant: "e".into() },
-            "af" => ScheduleSpec::Af {
-                min_chunk: if parts.len() > 1 { num(1)? } else { 1 },
-            },
-            "hybrid" => ScheduleSpec::Hybrid {
-                f_static: if parts.len() > 1 { fnum(1)? } else { 0.5 },
-                dyn_chunk: if parts.len() > 2 { num(2)? } else { 8 },
-            },
-            "auto" => ScheduleSpec::Auto,
-            "tuned" | "tuned_dynamic" => ScheduleSpec::Tuned {
-                k0: if parts.len() > 1 { num(1)? } else { 8 },
-            },
-            _ => return Err(format!("unknown schedule '{s}'")),
-        })
+        registry::ScheduleRegistry::global().parse(s)
     }
 
-    /// Canonical display name.
+    /// Canonical display name — lossless: `parse(spec.label())` yields
+    /// an equal spec, and the label is a fixed point of
+    /// `parse(..).label()`.
     pub fn label(&self) -> String {
         match self {
             ScheduleSpec::Static { chunk: None } => "static".into(),
-            ScheduleSpec::Static { chunk: Some(1) } => "static,1".into(),
             ScheduleSpec::Static { chunk: Some(k) } => format!("static,{k}"),
             ScheduleSpec::Dynamic { chunk } => format!("dynamic,{chunk}"),
             ScheduleSpec::Guided { min_chunk: 1 } => "guided".into(),
             ScheduleSpec::Guided { min_chunk } => format!("guided,{min_chunk}"),
             ScheduleSpec::Tss { params: None } => "tss".into(),
             ScheduleSpec::Tss { params: Some((f, l)) } => format!("tss,{f},{l}"),
-            ScheduleSpec::Fsc { .. } => "fsc".into(),
-            ScheduleSpec::Fac { .. } => "fac".into(),
+            ScheduleSpec::Fsc { overhead_ns, sigma_ns: None } => {
+                format!("fsc,{overhead_ns}")
+            }
+            ScheduleSpec::Fsc { overhead_ns, sigma_ns: Some(s) } => {
+                format!("fsc,{overhead_ns},{s}")
+            }
+            ScheduleSpec::Fac { mu_sigma: None } => "fac".into(),
+            ScheduleSpec::Fac { mu_sigma: Some((m, s)) } => format!("fac,{m},{s}"),
             ScheduleSpec::Fac2 => "fac2".into(),
             ScheduleSpec::Wf2 => "wf2".into(),
-            ScheduleSpec::Rand { .. } => "rand".into(),
+            ScheduleSpec::Rand { bounds: None, seed } => format!("rand,{seed}"),
+            ScheduleSpec::Rand { bounds: Some((lo, hi)), seed } => {
+                format!("rand,{lo},{hi},{seed}")
+            }
             ScheduleSpec::StaticSteal { own_chunk } => format!("static_steal,{own_chunk}"),
-            ScheduleSpec::Awf { variant } => format!("awf-{variant}"),
-            ScheduleSpec::Af { .. } => "af".into(),
+            ScheduleSpec::Awf { variant } => format!("awf-{}", variant.letter()),
+            ScheduleSpec::Af { min_chunk: 1 } => "af".into(),
+            ScheduleSpec::Af { min_chunk } => format!("af,{min_chunk}"),
             ScheduleSpec::Hybrid { f_static, dyn_chunk } => {
                 format!("hybrid,{f_static},{dyn_chunk}")
             }
             ScheduleSpec::Auto => "auto".into(),
             ScheduleSpec::Tuned { k0 } => format!("tuned,{k0}"),
+            ScheduleSpec::Registered { label } => label.clone(),
         }
     }
 
     /// Build one scheduler instance.
+    ///
+    /// # Panics
+    ///
+    /// A [`ScheduleSpec::Registered`] spec panics if its label does not
+    /// resolve in [`registry::ScheduleRegistry::global`].  Specs from
+    /// [`ScheduleSpec::parse`] always resolve there (global entries are
+    /// never removed).  Specs parsed from an *instance* registry
+    /// ([`registry::ScheduleRegistry::new`]) whose names were never
+    /// registered globally do hit this — resolve those through
+    /// [`registry::ScheduleRegistry::build`] on the same instance
+    /// instead.
     pub fn build(&self) -> Box<dyn Scheduler> {
         match self {
             ScheduleSpec::Static { chunk } => static_block(*chunk),
@@ -261,13 +239,14 @@ impl ScheduleSpec {
             ScheduleSpec::Wf2 => wf2(),
             ScheduleSpec::Rand { bounds, seed } => rand_sched(*bounds, *seed),
             ScheduleSpec::StaticSteal { own_chunk } => static_steal(*own_chunk),
-            ScheduleSpec::Awf { variant } => awf(
-                AwfVariant::parse(variant).unwrap_or(AwfVariant::B),
-            ),
+            ScheduleSpec::Awf { variant } => awf(*variant),
             ScheduleSpec::Af { min_chunk } => af(*min_chunk),
             ScheduleSpec::Hybrid { f_static, dyn_chunk } => hybrid(*f_static, *dyn_chunk),
             ScheduleSpec::Auto => auto_select(),
             ScheduleSpec::Tuned { k0 } => tuned_dynamic(*k0),
+            ScheduleSpec::Registered { label } => registry::ScheduleRegistry::global()
+                .build_open(label)
+                .unwrap_or_else(|e| panic!("registered schedule '{label}': {e}")),
         }
     }
 
@@ -276,28 +255,10 @@ impl ScheduleSpec {
         Box::new(SpecFactory(self.clone()))
     }
 
-    /// The full evaluation roster (E2/E3/E6 sweep set).
+    /// The full evaluation roster (E2/E3/E6 sweep set) — the labels the
+    /// global registry's entries contribute, in registration order.
     pub fn roster() -> Vec<ScheduleSpec> {
-        vec![
-            ScheduleSpec::Static { chunk: None },
-            ScheduleSpec::Static { chunk: Some(1) },
-            ScheduleSpec::Dynamic { chunk: 1 },
-            ScheduleSpec::Dynamic { chunk: 16 },
-            ScheduleSpec::Guided { min_chunk: 1 },
-            ScheduleSpec::Tss { params: None },
-            ScheduleSpec::Fsc { overhead_ns: 1000.0, sigma_ns: None },
-            ScheduleSpec::Fac { mu_sigma: None },
-            ScheduleSpec::Fac2,
-            ScheduleSpec::Wf2,
-            ScheduleSpec::Rand { bounds: None, seed: 0x5EED },
-            ScheduleSpec::StaticSteal { own_chunk: 4 },
-            ScheduleSpec::Awf { variant: "b".into() },
-            ScheduleSpec::Awf { variant: "c".into() },
-            ScheduleSpec::Af { min_chunk: 1 },
-            ScheduleSpec::Hybrid { f_static: 0.5, dyn_chunk: 8 },
-            ScheduleSpec::Auto,
-            ScheduleSpec::Tuned { k0: 8 },
-        ]
+        registry::ScheduleRegistry::global().roster()
     }
 }
 
@@ -324,8 +285,9 @@ mod tests {
     fn parse_roundtrip() {
         for s in [
             "static", "static,16", "dynamic,4", "guided", "tss", "tss,100,4",
-            "fac2", "wf2", "af", "auto", "hybrid,0.5,8", "awf-c",
-            "static_steal,2", "rand", "fsc,1000", "fac", "tuned,8",
+            "fac2", "wf2", "af", "af,4", "auto", "hybrid,0.5,8", "awf-c",
+            "static_steal,2", "rand", "rand,7", "rand,2,9", "rand,2,9,7",
+            "fsc,1000", "fsc,1000,50", "fac", "fac,800,200", "tuned,8",
         ] {
             let spec = ScheduleSpec::parse(s).unwrap();
             let _ = spec.build();
@@ -337,6 +299,13 @@ mod tests {
     fn parse_rejects_unknown() {
         assert!(ScheduleSpec::parse("quantum").is_err());
         assert!(ScheduleSpec::parse("dynamic,abc").is_err());
+        // Invalid AWF variants are rejected at parse time, never
+        // silently coerced to a default variant.
+        assert!(ScheduleSpec::parse("awf-q").is_err());
+        // Parameterless strategies reject a parameter tail.
+        assert!(ScheduleSpec::parse("fac2,9").is_err());
+        // Both-or-none parameter pairs reject a lone half.
+        assert!(ScheduleSpec::parse("tss,100").is_err());
     }
 
     #[test]
@@ -382,13 +351,66 @@ mod tests {
 
     #[test]
     fn parse_label_roundtrip() {
-        // label() output must parse back to an equivalent spec for the
-        // CLI-expressible subset.
+        // label() must be lossless: it parses back to an *equal* spec
+        // (not merely an equal label), and is a parse→label fixed point.
         for spec in ScheduleSpec::roster() {
             let label = spec.label();
             let back = ScheduleSpec::parse(&label)
                 .unwrap_or_else(|e| panic!("label '{label}' unparseable: {e}"));
+            assert_eq!(back, spec, "label '{label}' dropped parameters");
             assert_eq!(back.label(), label);
         }
+    }
+
+    #[test]
+    fn parameterized_labels_are_lossless() {
+        // The historic lossy cases: fsc/fac/rand labels dropped their
+        // parameters, so distinct sweep scenarios were indistinguishable
+        // in reports.
+        for spec in [
+            ScheduleSpec::Fsc { overhead_ns: 750.0, sigma_ns: Some(55.5) },
+            ScheduleSpec::Fac { mu_sigma: Some((900.0, 120.0)) },
+            ScheduleSpec::Rand { bounds: Some((2, 64)), seed: 7 },
+            ScheduleSpec::Rand { bounds: None, seed: 99 },
+            ScheduleSpec::Af { min_chunk: 4 },
+        ] {
+            let label = spec.label();
+            assert_eq!(ScheduleSpec::parse(&label).unwrap(), spec, "{label}");
+        }
+        assert_eq!(
+            ScheduleSpec::Rand { bounds: Some((2, 64)), seed: 7 }.label(),
+            "rand,2,64,7"
+        );
+        assert_eq!(
+            ScheduleSpec::Fsc { overhead_ns: 1000.0, sigma_ns: None }.label(),
+            "fsc,1000"
+        );
+    }
+
+    #[test]
+    fn registered_names_resolve_via_parse() {
+        use crate::coordinator::scheduler::FnFactory;
+        use std::sync::Arc;
+        registry::ScheduleRegistry::global()
+            .register_factory(
+                "modtest_uds",
+                Arc::new(FnFactory::new("modtest_uds", || fac2())),
+                "schedules::tests twin of fac2",
+            )
+            .unwrap();
+        let spec = ScheduleSpec::parse("modtest_uds").unwrap();
+        assert_eq!(spec, ScheduleSpec::Registered { label: "modtest_uds".into() });
+        assert_eq!(spec.label(), "modtest_uds");
+        assert_eq!(spec.factory().name(), "modtest_uds");
+        // Builds through the global registry and behaves like its twin.
+        let spec_loop = LoopSpec::upto(777);
+        let team = TeamSpec::uniform(4);
+        let mut uds = spec.build();
+        let a = drain_chunks(&mut *uds, &spec_loop, &team, &mut LoopRecord::default());
+        let mut native = fac2();
+        let b =
+            drain_chunks(&mut *native, &spec_loop, &team, &mut LoopRecord::default());
+        assert_eq!(a, b);
+        verify_cover(&a, 777).unwrap();
     }
 }

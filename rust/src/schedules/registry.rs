@@ -1,0 +1,980 @@
+//! The open schedule registry — one namespace for every schedule name.
+//!
+//! The source paper's central argument is that a standard cannot
+//! enumerate every useful scheduling strategy; the interface must let
+//! *users* define and **name** new ones.  This module is that namespace
+//! made concrete: a [`ScheduleRegistry`] maps canonical names (plus
+//! aliases) to parameterized factory constructors with typed parameter
+//! descriptors.  Every builtin strategy self-registers here, and
+//! schedules defined through the §4.1 lambda frontend
+//! ([`crate::coordinator::lambda::UdsBuilder::register`]) or the §4.2
+//! declare frontend ([`crate::coordinator::declare::Registry::publish`])
+//! register into the same map — so any schedule, builtin or
+//! user-defined, is resolvable from a string label in the CLI, the
+//! `BATCH` wire protocol, sweep grids, and the eval roster.
+//!
+//! [`ScheduleSpec::parse`] delegates to [`ScheduleRegistry::global`]:
+//! registering a name makes it immediately usable everywhere a builtin
+//! label is.  Labels are lossless — `spec.label()` is a canonical fixed
+//! point that parses back to an equal spec — which is what lets sweep
+//! reports and roster tables identify scenarios unambiguously.
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::coordinator::scheduler::{ScheduleFactory, Scheduler};
+use crate::schedules::{AwfVariant, ScheduleSpec};
+
+/// Seed of the `rand` strategy when a label omits it.
+pub const DEFAULT_RAND_SEED: u64 = 0x5EED;
+
+/// The type of one positional schedule parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    U64,
+    F64,
+}
+
+/// A typed positional parameter descriptor.  Required parameters come
+/// first; optional ones may be omitted from the tail of a label.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: &'static str,
+    pub kind: ParamKind,
+    pub required: bool,
+}
+
+/// One parsed parameter value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ParamValue {
+    U64(u64),
+    F64(f64),
+}
+
+impl ParamValue {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            ParamValue::U64(v) => Some(*v),
+            ParamValue::F64(_) => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ParamValue::U64(v) => Some(*v as f64),
+            ParamValue::F64(v) => Some(*v),
+        }
+    }
+
+    /// Canonical label rendering (u64 digits; f64 shortest-roundtrip).
+    fn render(&self) -> String {
+        match self {
+            ParamValue::U64(v) => v.to_string(),
+            ParamValue::F64(v) => format!("{v}"),
+        }
+    }
+}
+
+/// Parses the parameter tail of a builtin label.  `orig` is the full
+/// label (for error messages), `head` the alias token that matched, and
+/// `rest` the comma-separated parameters after it.
+pub type LabelParser =
+    dyn Fn(&str, &str, &[&str]) -> Result<ScheduleSpec, String> + Send + Sync;
+
+/// Constructs a factory for an open (user-registered) entry from its
+/// resolved parameter values.  The slice holds the values actually
+/// provided: between the required count and the full descriptor count.
+pub type OpenCtor =
+    dyn Fn(&[ParamValue]) -> Result<Arc<dyn ScheduleFactory>, String> + Send + Sync;
+
+enum Resolver {
+    /// A builtin strategy: parses into a typed [`ScheduleSpec`] variant.
+    Builtin(Arc<LabelParser>),
+    /// An open entry: parses into [`ScheduleSpec::Registered`] and
+    /// constructs through the stored factory constructor.
+    Open(Arc<OpenCtor>),
+}
+
+/// One named registry entry: canonical name, aliases, typed parameter
+/// descriptors, and the resolver turning labels into schedulers.
+pub struct Registration {
+    name: String,
+    aliases: Vec<String>,
+    params: Vec<ParamSpec>,
+    summary: String,
+    usage: Option<String>,
+    roster_labels: Vec<String>,
+    resolver: Resolver,
+}
+
+impl Registration {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn aliases(&self) -> &[String] {
+        &self.aliases
+    }
+
+    pub fn params(&self) -> &[ParamSpec] {
+        &self.params
+    }
+
+    pub fn summary(&self) -> &str {
+        &self.summary
+    }
+
+    /// Whether this entry is one of the crate's builtin strategies (as
+    /// opposed to an open, user-registered constructor).
+    pub fn is_builtin(&self) -> bool {
+        matches!(self.resolver, Resolver::Builtin(_))
+    }
+
+    /// `name,p1[,p2]` usage string for `uds list-schedules` and docs.
+    /// Entries whose parameters are coupled (both-or-none pairs,
+    /// alternative arities) set an explicit usage string; otherwise the
+    /// signature is derived from the descriptors.
+    pub fn signature(&self) -> String {
+        if let Some(u) = &self.usage {
+            return u.clone();
+        }
+        let mut s = self.name.clone();
+        for p in &self.params {
+            if p.required {
+                s.push(',');
+                s.push_str(p.name);
+            } else {
+                s.push_str("[,");
+                s.push_str(p.name);
+                s.push(']');
+            }
+        }
+        s
+    }
+}
+
+/// Builder for a [`Registration`] — see [`registration`].
+pub struct RegistrationBuilder {
+    name: String,
+    aliases: Vec<String>,
+    params: Vec<ParamSpec>,
+    summary: String,
+    usage: Option<String>,
+    roster_labels: Vec<String>,
+}
+
+/// Start a [`Registration`] for `name`.
+pub fn registration(name: impl Into<String>) -> RegistrationBuilder {
+    RegistrationBuilder {
+        name: name.into(),
+        aliases: Vec::new(),
+        params: Vec::new(),
+        summary: String::new(),
+        usage: None,
+        roster_labels: Vec::new(),
+    }
+}
+
+impl RegistrationBuilder {
+    pub fn alias(mut self, a: &str) -> Self {
+        self.aliases.push(a.to_string());
+        self
+    }
+
+    /// Append a required positional parameter.  Required parameters may
+    /// not follow optional ones (parameters are positional).
+    pub fn param(mut self, name: &'static str, kind: ParamKind) -> Self {
+        assert!(
+            self.params.iter().all(|p| p.required),
+            "required parameter '{name}' may not follow an optional one"
+        );
+        self.params.push(ParamSpec { name, kind, required: true });
+        self
+    }
+
+    /// Append an optional positional parameter.
+    pub fn optional(mut self, name: &'static str, kind: ParamKind) -> Self {
+        self.params.push(ParamSpec { name, kind, required: false });
+        self
+    }
+
+    pub fn summary(mut self, s: impl Into<String>) -> Self {
+        self.summary = s.into();
+        self
+    }
+
+    /// Override the derived [`Registration::signature`] — for entries
+    /// whose parameters are coupled in ways positional descriptors
+    /// cannot express (both-or-none pairs, alternative arities).
+    pub fn usage(mut self, u: impl Into<String>) -> Self {
+        self.usage = Some(u.into());
+        self
+    }
+
+    /// Contribute `label` to [`ScheduleRegistry::roster`].
+    fn roster(mut self, label: impl Into<String>) -> Self {
+        self.roster_labels.push(label.into());
+        self
+    }
+
+    /// Finish as a builtin entry (crate-internal: builtins parse into
+    /// typed [`ScheduleSpec`] variants).
+    fn builtin<F>(self, parser: F) -> Registration
+    where
+        F: Fn(&str, &str, &[&str]) -> Result<ScheduleSpec, String>
+            + Send
+            + Sync
+            + 'static,
+    {
+        Registration {
+            name: self.name,
+            aliases: self.aliases,
+            params: self.params,
+            summary: self.summary,
+            usage: self.usage,
+            roster_labels: self.roster_labels,
+            resolver: Resolver::Builtin(Arc::new(parser)),
+        }
+    }
+
+    /// Finish as an open entry: `ctor` receives the parameter values a
+    /// label actually provided and returns the factory to run.
+    pub fn open<F>(self, ctor: F) -> Registration
+    where
+        F: Fn(&[ParamValue]) -> Result<Arc<dyn ScheduleFactory>, String>
+            + Send
+            + Sync
+            + 'static,
+    {
+        Registration {
+            name: self.name,
+            aliases: self.aliases,
+            params: self.params,
+            summary: self.summary,
+            usage: self.usage,
+            roster_labels: self.roster_labels,
+            resolver: Resolver::Open(Arc::new(ctor)),
+        }
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Every head token (canonical names and aliases, lowercase) →
+    /// index into `order`.
+    by_head: HashMap<String, usize>,
+    /// Registration order — fixes roster and listing order.
+    order: Vec<Arc<Registration>>,
+}
+
+/// The schedule-name registry: a concurrent map from labels to
+/// parameterized schedule constructors.  See the module docs.
+pub struct ScheduleRegistry {
+    inner: RwLock<Inner>,
+}
+
+impl Default for ScheduleRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScheduleRegistry {
+    /// An empty registry (no builtins) — for scoped embedding and tests;
+    /// resolve against it with [`ScheduleRegistry::parse`] /
+    /// [`ScheduleRegistry::build`].
+    pub fn new() -> Self {
+        Self { inner: RwLock::new(Inner::default()) }
+    }
+
+    /// A registry pre-populated with every builtin strategy.
+    pub fn with_builtins() -> Self {
+        let reg = Self::new();
+        reg.install_builtins();
+        reg
+    }
+
+    /// The process-wide namespace behind [`ScheduleSpec::parse`]: the
+    /// CLI, the TCP service (single jobs and `BATCH`), sweep grids and
+    /// the eval roster all resolve labels here.  Register a user-defined
+    /// schedule into it and every one of those surfaces accepts the name.
+    pub fn global() -> &'static ScheduleRegistry {
+        static GLOBAL: OnceLock<ScheduleRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(ScheduleRegistry::with_builtins)
+    }
+
+    /// Register an entry.  Canonical names and aliases share one
+    /// namespace; a taken head is an error (as redeclaration is for
+    /// OpenMP UDRs), and entries are never removed.
+    pub fn register(&self, reg: Registration) -> Result<(), String> {
+        validate_name(&reg.name)?;
+        for a in &reg.aliases {
+            validate_name(a)?;
+        }
+        let mut heads = Vec::with_capacity(1 + reg.aliases.len());
+        heads.push(reg.name.clone());
+        heads.extend(reg.aliases.iter().cloned());
+        let mut inner = self.inner.write().unwrap();
+        for h in &heads {
+            if inner.by_head.contains_key(h) {
+                return Err(format!("schedule name '{h}' is already registered"));
+            }
+        }
+        let idx = inner.order.len();
+        inner.order.push(Arc::new(reg));
+        for h in heads {
+            inner.by_head.insert(h, idx);
+        }
+        Ok(())
+    }
+
+    /// Register a fixed factory under `name` — the simplest way to make
+    /// a lambda/declare-style UDS resolvable by label everywhere.
+    pub fn register_factory(
+        &self,
+        name: &str,
+        factory: Arc<dyn ScheduleFactory>,
+        summary: &str,
+    ) -> Result<(), String> {
+        self.register(
+            registration(name).summary(summary).open(move |_| Ok(factory.clone())),
+        )
+    }
+
+    /// Whether `head` (a canonical name or alias, case-insensitive)
+    /// resolves.
+    pub fn contains(&self, head: &str) -> bool {
+        self.inner
+            .read()
+            .unwrap()
+            .by_head
+            .contains_key(&head.to_ascii_lowercase())
+    }
+
+    /// Sorted canonical names.
+    pub fn names(&self) -> Vec<String> {
+        let inner = self.inner.read().unwrap();
+        let mut v: Vec<String> = inner.order.iter().map(|r| r.name.clone()).collect();
+        v.sort();
+        v
+    }
+
+    /// Every entry, registration order.
+    pub fn entries(&self) -> Vec<Arc<Registration>> {
+        self.inner.read().unwrap().order.clone()
+    }
+
+    fn entry_for(&self, head: &str) -> Option<Arc<Registration>> {
+        let inner = self.inner.read().unwrap();
+        inner.by_head.get(head).map(|&i| inner.order[i].clone())
+    }
+
+    /// Resolve a label (`head[,p1[,p2...]]`) into a [`ScheduleSpec`].
+    /// Unknown heads, malformed or out-of-range parameters, and excess
+    /// parameters are all rejected here — never deferred to build time.
+    pub fn parse(&self, s: &str) -> Result<ScheduleSpec, String> {
+        let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+        let head = parts[0].to_ascii_lowercase();
+        let entry = self
+            .entry_for(&head)
+            .ok_or_else(|| format!("unknown schedule '{s}'"))?;
+        match &entry.resolver {
+            Resolver::Builtin(parser) => parser.as_ref()(s, &head, &parts[1..]),
+            Resolver::Open(ctor) => {
+                let values = parse_params(s, &entry.params, &parts[1..])?;
+                // Run the constructor once now so value-level rejections
+                // (not just kind mismatches) surface at parse time —
+                // build() must never panic on a parse-accepted label.
+                ctor.as_ref()(&values).map_err(|e| format!("'{s}': {e}"))?;
+                Ok(ScheduleSpec::Registered {
+                    label: open_label(&entry.name, &values),
+                })
+            }
+        }
+    }
+
+    /// Build a scheduler straight from a label (builtin or open) against
+    /// *this* registry — the instance-scoped twin of
+    /// [`ScheduleSpec::build`], which resolves open labels through
+    /// [`ScheduleRegistry::global`].
+    pub fn build(&self, label: &str) -> Result<Box<dyn Scheduler>, String> {
+        match self.parse(label)? {
+            ScheduleSpec::Registered { label } => self.build_open(&label),
+            spec => Ok(spec.build()),
+        }
+    }
+
+    /// Resolve an open (registry-constructed) label to a scheduler.
+    pub(crate) fn build_open(&self, label: &str) -> Result<Box<dyn Scheduler>, String> {
+        let parts: Vec<&str> = label.split(',').map(str::trim).collect();
+        let head = parts[0].to_ascii_lowercase();
+        let entry = self
+            .entry_for(&head)
+            .ok_or_else(|| format!("'{label}' is not registered"))?;
+        match &entry.resolver {
+            Resolver::Open(ctor) => {
+                let values = parse_params(label, &entry.params, &parts[1..])?;
+                Ok(ctor.as_ref()(&values)?.build())
+            }
+            Resolver::Builtin(_) => {
+                Err(format!("'{head}' is a builtin label, not an open registration"))
+            }
+        }
+    }
+
+    /// The evaluation roster (E2/E3/E6 sweep set): every label the
+    /// entries contribute, in registration order.
+    pub fn roster(&self) -> Vec<ScheduleSpec> {
+        let mut out = Vec::new();
+        for e in self.entries() {
+            for label in &e.roster_labels {
+                out.push(
+                    self.parse(label)
+                        .unwrap_or_else(|err| panic!("roster label '{label}': {err}")),
+                );
+            }
+        }
+        out
+    }
+
+    /// Register every builtin strategy.  Registration order fixes the
+    /// roster order, which the E2/E3 tables inherit.
+    fn install_builtins(&self) {
+        use super::ScheduleSpec as S;
+        let reg = |r: Registration| {
+            self.register(r).expect("builtin registration");
+        };
+
+        reg(registration("static")
+            .alias("cyclic")
+            .alias("static_cyclic")
+            .optional("chunk", ParamKind::U64)
+            .summary("block scheduling; 'static,k' is block-cyclic, 'cyclic' = 'static,1'")
+            .roster("static")
+            .roster("static,1")
+            .builtin(|orig, head, rest| {
+                if head != "static" {
+                    // cyclic / static_cyclic: fixed chunk 1.
+                    at_most(orig, rest, 0)?;
+                    return Ok(S::Static { chunk: Some(1) });
+                }
+                at_most(orig, rest, 1)?;
+                Ok(S::Static {
+                    chunk: if rest.is_empty() { None } else { Some(num(orig, rest, 0)?) },
+                })
+            }));
+
+        reg(registration("dynamic")
+            .alias("ss")
+            .alias("pss")
+            .optional("chunk", ParamKind::U64)
+            .summary("self-scheduling with fixed chunk k (default 1)")
+            .roster("dynamic,1")
+            .roster("dynamic,16")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 1)?;
+                Ok(S::Dynamic {
+                    chunk: if rest.is_empty() { 1 } else { num(orig, rest, 0)? },
+                })
+            }));
+
+        reg(registration("guided")
+            .alias("gss")
+            .optional("min_chunk", ParamKind::U64)
+            .summary("guided self-scheduling (GSS): remaining/P sized chunks")
+            .roster("guided")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 1)?;
+                Ok(S::Guided {
+                    min_chunk: if rest.is_empty() { 1 } else { num(orig, rest, 0)? },
+                })
+            }));
+
+        reg(registration("tss")
+            .alias("trapezoid")
+            .optional("first", ParamKind::U64)
+            .optional("last", ParamKind::U64)
+            .usage("tss[,first,last]")
+            .summary("trapezoid self-scheduling; 'tss,f,l' sets both sizes or neither")
+            .roster("tss")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 2)?;
+                let params = match rest.len() {
+                    0 => None,
+                    2 => Some((num(orig, rest, 0)?, num(orig, rest, 1)?)),
+                    _ => {
+                        return Err(format!(
+                            "'{orig}': tss takes both 'first' and 'last' or neither"
+                        ))
+                    }
+                };
+                Ok(S::Tss { params })
+            }));
+
+        reg(registration("fsc")
+            .optional("overhead_ns", ParamKind::F64)
+            .optional("sigma_ns", ParamKind::F64)
+            .summary("fixed-size chunking from the overhead/variance model")
+            .roster("fsc,1000")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 2)?;
+                Ok(S::Fsc {
+                    overhead_ns: if rest.is_empty() { 1000.0 } else { fnum(orig, rest, 0)? },
+                    sigma_ns: if rest.len() > 1 { Some(fnum(orig, rest, 1)?) } else { None },
+                })
+            }));
+
+        reg(registration("fac")
+            .optional("mu_ns", ParamKind::F64)
+            .optional("sigma_ns", ParamKind::F64)
+            .usage("fac[,mu_ns,sigma_ns]")
+            .summary("factoring; 'fac,mu,sigma' sets both moments or neither")
+            .roster("fac")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 2)?;
+                let mu_sigma = match rest.len() {
+                    0 => None,
+                    2 => Some((fnum(orig, rest, 0)?, fnum(orig, rest, 1)?)),
+                    _ => {
+                        return Err(format!(
+                            "'{orig}': fac takes both 'mu_ns' and 'sigma_ns' or neither"
+                        ))
+                    }
+                };
+                Ok(S::Fac { mu_sigma })
+            }));
+
+        reg(registration("fac2")
+            .summary("practical factoring: halve the batch every round")
+            .roster("fac2")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 0)?;
+                Ok(S::Fac2)
+            }));
+
+        reg(registration("wf2")
+            .alias("wf")
+            .summary("weighted factoring over static thread weights")
+            .roster("wf2")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 0)?;
+                Ok(S::Wf2)
+            }));
+
+        reg(registration("rand")
+            .alias("random")
+            .optional("lo", ParamKind::U64)
+            .optional("hi", ParamKind::U64)
+            .optional("seed", ParamKind::U64)
+            .usage("rand[,seed|,lo,hi[,seed]]")
+            .summary("random chunk sizes in [lo,hi]; 'rand,seed' | 'rand,lo,hi[,seed]'")
+            .roster("rand,24301")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 3)?;
+                let (bounds, seed) = match rest.len() {
+                    0 => (None, DEFAULT_RAND_SEED),
+                    1 => (None, num(orig, rest, 0)?),
+                    2 => (
+                        Some((num(orig, rest, 0)?, num(orig, rest, 1)?)),
+                        DEFAULT_RAND_SEED,
+                    ),
+                    _ => (
+                        Some((num(orig, rest, 0)?, num(orig, rest, 1)?)),
+                        num(orig, rest, 2)?,
+                    ),
+                };
+                if let Some((lo, hi)) = bounds {
+                    if lo == 0 || hi < lo {
+                        return Err(format!("'{orig}': need 1 <= lo <= hi"));
+                    }
+                }
+                Ok(S::Rand { bounds, seed })
+            }));
+
+        reg(registration("static_steal")
+            .alias("steal")
+            .optional("own_chunk", ParamKind::U64)
+            .summary("static blocks plus work stealing in own_chunk pieces")
+            .roster("static_steal,4")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 1)?;
+                Ok(S::StaticSteal {
+                    own_chunk: if rest.is_empty() { 1 } else { num(orig, rest, 0)? },
+                })
+            }));
+
+        for (variant, head, aliases, in_roster) in [
+            (AwfVariant::B, "awf-b", &["awf"][..], true),
+            (AwfVariant::C, "awf-c", &[][..], true),
+            (AwfVariant::D, "awf-d", &[][..], false),
+            (AwfVariant::E, "awf-e", &[][..], false),
+        ] {
+            let mut b = registration(head).summary(format!(
+                "adaptive weighted factoring, variant {}",
+                variant.letter().to_ascii_uppercase()
+            ));
+            for a in aliases {
+                b = b.alias(a);
+            }
+            if in_roster {
+                b = b.roster(head);
+            }
+            reg(b.builtin(move |orig, _head, rest| {
+                at_most(orig, rest, 0)?;
+                Ok(S::Awf { variant })
+            }));
+        }
+
+        reg(registration("af")
+            .optional("min_chunk", ParamKind::U64)
+            .summary("adaptive factoring from measured per-iteration moments")
+            .roster("af")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 1)?;
+                Ok(S::Af {
+                    min_chunk: if rest.is_empty() { 1 } else { num(orig, rest, 0)? },
+                })
+            }));
+
+        reg(registration("hybrid")
+            .optional("f_static", ParamKind::F64)
+            .optional("dyn_chunk", ParamKind::U64)
+            .summary("static f_static fraction, then dynamic dyn_chunk leftovers")
+            .roster("hybrid,0.5,8")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 2)?;
+                Ok(S::Hybrid {
+                    f_static: if rest.is_empty() { 0.5 } else { fnum(orig, rest, 0)? },
+                    dyn_chunk: if rest.len() > 1 { num(orig, rest, 1)? } else { 8 },
+                })
+            }));
+
+        reg(registration("auto")
+            .summary("runtime-selected: profile first invocations, then commit")
+            .roster("auto")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 0)?;
+                Ok(S::Auto)
+            }));
+
+        reg(registration("tuned")
+            .alias("tuned_dynamic")
+            .optional("k0", ParamKind::U64)
+            .summary("dynamic with a chunk size tuned across invocations")
+            .roster("tuned,8")
+            .builtin(|orig, _head, rest| {
+                at_most(orig, rest, 1)?;
+                Ok(S::Tuned {
+                    k0: if rest.is_empty() { 8 } else { num(orig, rest, 0)? },
+                })
+            }));
+    }
+}
+
+/// Names must survive every label surface: the CLI, ';'-separated grid
+/// lists, and whitespace-tokenized wire lines.
+fn validate_name(name: &str) -> Result<(), String> {
+    if name.is_empty() {
+        return Err("schedule names must be non-empty".into());
+    }
+    let ok = name
+        .chars()
+        .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || matches!(c, '_' | '-' | '.'));
+    if !ok {
+        return Err(format!(
+            "invalid schedule name '{name}': use lowercase ASCII letters, digits, \
+'_', '-' or '.'"
+        ));
+    }
+    Ok(())
+}
+
+fn parse_params(
+    orig: &str,
+    specs: &[ParamSpec],
+    rest: &[&str],
+) -> Result<Vec<ParamValue>, String> {
+    if rest.len() > specs.len() {
+        return Err(format!(
+            "'{orig}': too many parameters (at most {})",
+            specs.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(rest.len());
+    for (i, spec) in specs.iter().enumerate() {
+        match rest.get(i) {
+            Some(tok) => out.push(parse_value(orig, spec, tok)?),
+            None if spec.required => {
+                return Err(format!("'{orig}': missing parameter '{}'", spec.name));
+            }
+            None => break,
+        }
+    }
+    Ok(out)
+}
+
+fn parse_value(orig: &str, spec: &ParamSpec, tok: &str) -> Result<ParamValue, String> {
+    match spec.kind {
+        ParamKind::U64 => tok
+            .parse::<u64>()
+            .map(ParamValue::U64)
+            .map_err(|e| format!("'{orig}': parameter '{}': {e}", spec.name)),
+        ParamKind::F64 => {
+            let v = tok
+                .parse::<f64>()
+                .map_err(|e| format!("'{orig}': parameter '{}': {e}", spec.name))?;
+            if !v.is_finite() {
+                return Err(format!(
+                    "'{orig}': parameter '{}' must be finite",
+                    spec.name
+                ));
+            }
+            Ok(ParamValue::F64(v))
+        }
+    }
+}
+
+/// Canonical label of an open entry: the registered name plus exactly
+/// the parameter values that were provided.
+fn open_label(name: &str, values: &[ParamValue]) -> String {
+    let mut s = name.to_string();
+    for v in values {
+        s.push(',');
+        s.push_str(&v.render());
+    }
+    s
+}
+
+/// Helpers shared by the builtin label parsers (1-based positions in
+/// error messages, matching the historic `ScheduleSpec::parse` shape).
+fn num(orig: &str, rest: &[&str], i: usize) -> Result<u64, String> {
+    rest.get(i)
+        .ok_or_else(|| format!("'{orig}': missing parameter {}", i + 1))?
+        .parse::<u64>()
+        .map_err(|e| format!("'{orig}': {e}"))
+}
+
+fn fnum(orig: &str, rest: &[&str], i: usize) -> Result<f64, String> {
+    let v = rest
+        .get(i)
+        .ok_or_else(|| format!("'{orig}': missing parameter {}", i + 1))?
+        .parse::<f64>()
+        .map_err(|e| format!("'{orig}': {e}"))?;
+    if v.is_finite() {
+        Ok(v)
+    } else {
+        Err(format!("'{orig}': parameter {} must be finite", i + 1))
+    }
+}
+
+fn at_most(orig: &str, rest: &[&str], max: usize) -> Result<(), String> {
+    if rest.len() > max {
+        return Err(format!("'{orig}': too many parameters (at most {max})"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::history::LoopRecord;
+    use crate::coordinator::loop_spec::{LoopSpec, TeamSpec};
+    use crate::coordinator::scheduler::{drain_chunks, FnFactory};
+    use crate::schedules;
+
+    fn factory_for(name: &str) -> Arc<dyn ScheduleFactory> {
+        Arc::new(FnFactory::new(name.to_string(), || schedules::fac2()))
+    }
+
+    #[test]
+    fn builtins_resolve_with_aliases() {
+        let reg = ScheduleRegistry::with_builtins();
+        assert!(reg.contains("static"));
+        assert!(reg.contains("GSS"), "lookup is case-insensitive");
+        assert_eq!(
+            reg.parse("gss").unwrap(),
+            ScheduleSpec::Guided { min_chunk: 1 }
+        );
+        assert_eq!(
+            reg.parse("cyclic").unwrap(),
+            ScheduleSpec::Static { chunk: Some(1) }
+        );
+        assert!(reg.names().contains(&"dynamic".to_string()));
+        assert!(reg.build("dynamic,16").is_ok());
+    }
+
+    #[test]
+    fn roster_matches_legacy_shape() {
+        let reg = ScheduleRegistry::with_builtins();
+        let roster = reg.roster();
+        assert_eq!(roster.len(), 18);
+        assert_eq!(roster[0], ScheduleSpec::Static { chunk: None });
+        assert_eq!(
+            roster[10],
+            ScheduleSpec::Rand { bounds: None, seed: DEFAULT_RAND_SEED }
+        );
+        assert_eq!(roster[17], ScheduleSpec::Tuned { k0: 8 });
+        // Labels identify roster entries unambiguously.
+        let mut labels: Vec<String> = roster.iter().map(|s| s.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 18, "duplicate roster labels");
+    }
+
+    #[test]
+    fn open_factory_registers_and_resolves() {
+        let reg = ScheduleRegistry::with_builtins();
+        reg.register_factory("myuds", factory_for("myuds"), "test factory")
+            .unwrap();
+        let spec = reg.parse("myuds").unwrap();
+        assert_eq!(spec, ScheduleSpec::Registered { label: "myuds".into() });
+        assert_eq!(spec.label(), "myuds");
+        assert!(reg.build("myuds").is_ok());
+        // Zero-parameter entries reject a parameter tail.
+        assert!(reg.parse("myuds,3").is_err());
+        // Redeclaration of a taken head is rejected.
+        assert!(reg.register_factory("myuds", factory_for("myuds"), "dup").is_err());
+        assert!(reg
+            .register_factory("static", factory_for("static"), "collides")
+            .is_err());
+        assert!(reg.register_factory("gss", factory_for("gss"), "alias").is_err());
+    }
+
+    #[test]
+    fn open_entry_with_typed_params() {
+        let reg = ScheduleRegistry::with_builtins();
+        reg.register(
+            registration("stepper")
+                .optional("k", ParamKind::U64)
+                .summary("dynamic twin with a default chunk")
+                .open(|values| {
+                    let k = values.first().and_then(ParamValue::as_u64).unwrap_or(4);
+                    if k == 0 {
+                        return Err("chunk must be >= 1".into());
+                    }
+                    Ok(Arc::new(FnFactory::new(format!("stepper,{k}"), move || {
+                        schedules::dynamic_chunk(k)
+                    })) as Arc<dyn ScheduleFactory>)
+                }),
+        )
+        .unwrap();
+        let spec = reg.parse("stepper,6").unwrap();
+        assert_eq!(spec.label(), "stepper,6");
+        assert_eq!(reg.parse("stepper").unwrap().label(), "stepper");
+        assert!(reg.parse("stepper,nope").is_err());
+        assert!(reg.parse("stepper,1,2").is_err());
+        // Constructor-level rejections surface at parse time, not as a
+        // panic inside a later build().
+        assert!(reg.parse("stepper,0").unwrap_err().contains("chunk must be >= 1"));
+
+        // The constructed scheduler behaves exactly like its native twin.
+        let spec_loop = LoopSpec::upto(500);
+        let team = TeamSpec::uniform(3);
+        let mut uds = reg.build("stepper,6").unwrap();
+        let a = drain_chunks(&mut *uds, &spec_loop, &team, &mut LoopRecord::default());
+        let mut native = schedules::dynamic_chunk(6);
+        let b =
+            drain_chunks(&mut *native, &spec_loop, &team, &mut LoopRecord::default());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn invalid_names_rejected() {
+        let reg = ScheduleRegistry::new();
+        for bad in ["", "Bad", "has space", "semi;colon", "com,ma", "ütf"] {
+            assert!(
+                reg.register_factory(bad, factory_for("x"), "bad").is_err(),
+                "name '{bad}' accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_labels_rejected_at_parse_time() {
+        let reg = ScheduleRegistry::with_builtins();
+        for bad in [
+            "quantum",      // unknown head
+            "awf-q",        // unknown AWF variant head
+            "fac2,9",       // parameterless strategy given a parameter
+            "tss,100",      // half of a both-or-none pair
+            "fac,5",        // half of a both-or-none pair
+            "rand,0,5",     // lo must be >= 1
+            "rand,9,3",     // hi must be >= lo
+            "rand,1,2,3,4", // too many parameters
+            "dynamic,abc",  // non-numeric parameter
+            "fsc,inf",      // non-finite parameter
+            "static,",      // empty parameter
+        ] {
+            assert!(reg.parse(bad).is_err(), "'{bad}' accepted");
+        }
+    }
+
+    #[test]
+    fn build_open_rejects_builtin_heads() {
+        let reg = ScheduleRegistry::with_builtins();
+        assert!(reg.build_open("static").is_err());
+        assert!(reg.build_open("not-there").is_err());
+    }
+
+    #[test]
+    fn signature_and_introspection() {
+        let reg = ScheduleRegistry::with_builtins();
+        let entries = reg.entries();
+        let rand = entries.iter().find(|e| e.name() == "rand").unwrap();
+        // Coupled arities carry an explicit usage override...
+        assert_eq!(rand.signature(), "rand[,seed|,lo,hi[,seed]]");
+        assert!(rand.is_builtin());
+        assert_eq!(rand.aliases(), &["random".to_string()]);
+        assert_eq!(rand.params().len(), 3);
+        assert!(!rand.summary().is_empty());
+        assert_eq!(
+            entries.iter().find(|e| e.name() == "tss").unwrap().signature(),
+            "tss[,first,last]"
+        );
+        // ...independent optionals derive theirs from the descriptors.
+        assert_eq!(
+            entries.iter().find(|e| e.name() == "dynamic").unwrap().signature(),
+            "dynamic[,chunk]"
+        );
+    }
+
+    /// The satellite concurrency pin: the service's worker pool resolves
+    /// schedules concurrently while embedders may still be registering;
+    /// both directions must be safe from scoped threads.
+    #[test]
+    fn concurrent_register_and_resolve() {
+        let reg = ScheduleRegistry::with_builtins();
+        let reg = &reg;
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                s.spawn(move || {
+                    for i in 0..25 {
+                        let name = format!("uds-t{t}-{i}");
+                        reg.register_factory(&name, factory_for(&name), "concurrent")
+                            .unwrap();
+                        // Immediately resolvable by the registering thread.
+                        assert!(reg.parse(&name).is_ok(), "{name}");
+                    }
+                });
+            }
+            for _ in 0..4 {
+                s.spawn(move || {
+                    for _ in 0..200 {
+                        let spec = reg.parse("dynamic,16").unwrap();
+                        assert_eq!(spec.label(), "dynamic,16");
+                        assert!(reg.parse("never-registered").is_err());
+                    }
+                });
+            }
+        });
+        for t in 0..4 {
+            for i in 0..25 {
+                let name = format!("uds-t{t}-{i}");
+                let spec = reg.parse(&name).unwrap();
+                assert_eq!(spec.label(), name);
+                assert!(reg.build(&name).is_ok());
+            }
+        }
+        assert_eq!(reg.entries().iter().filter(|e| !e.is_builtin()).count(), 100);
+    }
+}

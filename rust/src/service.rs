@@ -33,6 +33,13 @@
 //! `bad_mean`, `empty_grid`, `grid_too_large`, `bad_workers`); details
 //! are human-oriented and may change.
 //!
+//! Schedule labels — in `schedule=` and in a `BATCH` `schedules=` list —
+//! resolve through the open schedule registry
+//! ([`crate::schedules::registry::ScheduleRegistry::global`]): builtin
+//! names and user-defined schedules registered by the embedding process
+//! (e.g. published §4.1/§4.2 UDS definitions) are equally valid, and
+//! unknown names answer `ERR bad_schedule`.
+//!
 //! ## Request-path architecture (EXPERIMENTS.md §Sim-throughput)
 //!
 //! * **Workload cache** — a [`Service`] holds an LRU cache of prefix-sum
@@ -322,10 +329,15 @@ impl Service {
             &SimConfig { dequeue_overhead_ns: req.h_ns, trace: false },
             arena,
         );
+        // Echo the canonical registry label (lossless, whitespace-free),
+        // not the built scheduler instance's display name.  Aliases and
+        // defaults normalize: 'gss' answers 'schedule=guided', 'rand'
+        // answers 'schedule=rand,24301' — the same canonical labels
+        // sweep records carry.
         Ok(format!(
             "ok schedule={} makespan_ns={} chunks={} dequeues={} \
 imbalance_pct={:.4} efficiency={:.4}",
-            stats.schedule.replace(' ', "_"),
+            spec.label(),
             stats.makespan_ns,
             stats.chunks,
             stats.total_dequeues(),
@@ -559,6 +571,36 @@ mod tests {
         assert_eq!(parts.next(), Some("ERR"));
         let code = parts.next().unwrap();
         assert!(!code.is_empty() && code.chars().all(|c| c.is_ascii_lowercase() || c == '_'));
+    }
+
+    #[test]
+    fn registered_uds_schedule_served_by_name() {
+        use crate::coordinator::scheduler::FnFactory;
+        use crate::schedules::registry::ScheduleRegistry;
+        ScheduleRegistry::global()
+            .register_factory(
+                "svc_uds_dyn16",
+                Arc::new(FnFactory::new("svc_uds_dyn16", || {
+                    crate::schedules::dynamic_chunk(16)
+                })),
+                "service-test twin of dynamic,16",
+            )
+            .unwrap();
+        let svc = Service::new();
+        let mut arena = SimArena::new();
+        let req = |sched: &str| {
+            JobRequest::parse(&format!(
+                "schedule={sched} n=4000 threads=4 workload=lognormal seed=9"
+            ))
+            .unwrap()
+        };
+        let uds = svc.handle(&req("svc_uds_dyn16"), &mut arena);
+        let native = svc.handle(&req("dynamic,16"), &mut arena);
+        assert!(uds.starts_with("ok schedule=svc_uds_dyn16 "), "{uds}");
+        assert!(native.starts_with("ok schedule=dynamic,16 "), "{native}");
+        // Identical physics: everything after the schedule token matches.
+        let tail = |s: &str| s.splitn(3, ' ').nth(2).unwrap().to_string();
+        assert_eq!(tail(&uds), tail(&native));
     }
 
     #[test]

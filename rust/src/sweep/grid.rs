@@ -18,6 +18,12 @@
 //! expansion order is fixed (workload-major, threads innermost) so a
 //! grid's scenario ids — and therefore the result stream — are
 //! independent of how many workers execute it.
+//!
+//! Schedule labels resolve through the open registry behind
+//! [`ScheduleSpec::parse`], so a grid can name user-defined schedules
+//! (registered in
+//! [`crate::schedules::registry::ScheduleRegistry::global`]) exactly
+//! like builtins; unknown labels fail parsing with `bad_schedule`.
 
 use crate::schedules::ScheduleSpec;
 use crate::util::CodedError;
@@ -393,6 +399,35 @@ lognormal,bimodal,sawtooth schedules=fac2 n={ns} seeds={seeds}"
         assert_eq!(scenarios[0].threads, 2);
         assert_eq!(scenarios[1].threads, 4);
         assert_eq!(scenarios[8].workload, WorkloadClass::Gaussian);
+    }
+
+    #[test]
+    fn registered_schedule_names_expand_in_grids() {
+        use crate::coordinator::scheduler::FnFactory;
+        use crate::schedules::registry::ScheduleRegistry;
+        use std::sync::Arc;
+        ScheduleRegistry::global()
+            .register_factory(
+                "grid_uds_gss",
+                Arc::new(FnFactory::new("grid_uds_gss", || crate::schedules::gss(1))),
+                "grid-test twin of gss",
+            )
+            .unwrap();
+        let g = SweepGrid::parse_batch_line(
+            "BATCH schedules=grid_uds_gss;gss n=100 threads=2",
+        )
+        .unwrap();
+        assert_eq!(g.schedules[0].label(), "grid_uds_gss");
+        let scenarios = g.expand();
+        assert_eq!(scenarios.len(), 2);
+        // The canonical wire line embeds the user-defined name and
+        // roundtrips through parse.
+        let line = g.to_batch_line();
+        assert!(line.contains("grid_uds_gss"), "{line}");
+        assert_eq!(
+            SweepGrid::parse_batch_line(&line).unwrap().to_batch_line(),
+            line
+        );
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use uds::coordinator::{
     parallel_for, ExecOptions, HistoryArena, LoopRecord, LoopSpec, TeamSpec,
 };
-use uds::schedules::ScheduleSpec;
+use uds::schedules::{AwfVariant, ScheduleSpec};
 use uds::sim::{simulate, Heterogeneous, NoVariability, NoiseBursts, SimConfig};
 use uds::workload::{CostModel, TraceCost, WorkloadClass};
 
@@ -141,7 +141,7 @@ fn awf_adapts_to_heterogeneity() {
         last
     };
 
-    let awf = run_seq(ScheduleSpec::Awf { variant: "b".into() }, 5);
+    let awf = run_seq(ScheduleSpec::Awf { variant: AwfVariant::B }, 5);
     let static_ms = run_seq(ScheduleSpec::Static { chunk: None }, 5);
     // Static block gives every thread n/4; the slow threads dominate.
     // AWF should be at least 1.5x better.

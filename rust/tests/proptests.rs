@@ -368,6 +368,76 @@ fn prop_sweep_worker_count_invariant() {
     });
 }
 
+/// Registry labels roundtrip: for every registered head — builtin
+/// canonical names, their aliases, and freshly registered user-defined
+/// names — the bare head and randomly parameterized labels all parse to
+/// specs whose canonical label is a fixed point (`parse(label()) ==
+/// spec` and `parse(label()).label() == label()`).
+#[test]
+fn prop_registry_label_roundtrip() {
+    use std::sync::Arc;
+    use uds::coordinator::FnFactory;
+    use uds::schedules::registry::{ParamKind, ScheduleRegistry};
+
+    let reg = ScheduleRegistry::global();
+    // Seed user-defined names into the shared namespace (idempotent:
+    // the global registry persists across tests in this binary).
+    for name in ["prop-uds-a", "prop-uds-b"] {
+        let _ = reg.register_factory(
+            name,
+            Arc::new(FnFactory::new(name, || uds::schedules::fac2())),
+            "proptest uds",
+        );
+    }
+
+    fn roundtrip(label: &str) {
+        let spec =
+            ScheduleSpec::parse(label).unwrap_or_else(|e| panic!("'{label}': {e}"));
+        let canon = spec.label();
+        let back = ScheduleSpec::parse(&canon)
+            .unwrap_or_else(|e| panic!("canonical '{canon}' of '{label}': {e}"));
+        assert_eq!(back, spec, "label '{label}' canonical '{canon}'");
+        assert_eq!(back.label(), canon, "'{canon}' must be a parse→label fixed point");
+    }
+
+    cases("registry_label_roundtrip", 40, |rng| {
+        for entry in reg.entries() {
+            // Bare heads: canonical name and every alias.
+            roundtrip(entry.name());
+            for alias in entry.aliases() {
+                roundtrip(alias);
+            }
+            if entry.params().is_empty() {
+                continue;
+            }
+            // Fully parameterized label with random values.  u64 values
+            // are generated nondecreasing so constrained pairs (rand's
+            // 1 <= lo <= hi) stay valid; f64 values are finite positives.
+            let mut vals: Vec<String> = Vec::new();
+            let mut last_u = rng.range_u64(1, 8);
+            for p in entry.params() {
+                match p.kind {
+                    ParamKind::U64 => {
+                        last_u += rng.range_u64(0, 8);
+                        vals.push(last_u.to_string());
+                    }
+                    ParamKind::F64 => {
+                        let v = 0.5 + rng.f64() * 1000.0;
+                        vals.push(format!("{v}"));
+                    }
+                }
+            }
+            roundtrip(&format!("{},{}", entry.name(), vals.join(",")));
+        }
+    });
+
+    // Roster labels are canonical and lossless.
+    for spec in ScheduleSpec::roster() {
+        let label = spec.label();
+        assert_eq!(ScheduleSpec::parse(&label).unwrap(), spec, "{label}");
+    }
+}
+
 /// History-carrying schedules (AWF/AF/auto/tuned) still exact-cover on
 /// every invocation of a multi-invocation sequence.
 #[test]

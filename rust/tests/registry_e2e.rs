@@ -1,0 +1,188 @@
+//! ISSUE 4 acceptance: a declare-registered user-defined schedule runs
+//! end-to-end **by name** — through a local sweep (the `uds sweep`
+//! engine) and through a `BATCH` request over TCP — producing chunk
+//! sequences and simulation results bit-identical to its native builtin
+//! counterpart (`static,16`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Mutex, OnceLock};
+
+use uds::coordinator::declare::{Args, DeclarationBuilder, Registry};
+use uds::coordinator::{drain_chunks, LoopRecord, LoopSpec, TeamSpec};
+use uds::eval::report::{parse_flat, ScenarioResult};
+use uds::schedules::registry::ScheduleRegistry;
+use uds::schedules::ScheduleSpec;
+use uds::service::{serve_on, Service};
+use uds::sweep::{run_sweep, SweepGrid};
+
+/// The published name of the user-defined schedule under test.
+const UDS_NAME: &str = "mystatic16";
+/// Its native builtin twin.
+const NATIVE: &str = "static,16";
+const CHUNK: i64 = 16;
+
+/// The paper's Fig. 2 `loop_record_t`: all scheduling state lives in the
+/// user arguments, built fresh per scheduler instance by the publish
+/// argument maker.
+#[derive(Default)]
+struct LoopRecordT {
+    lb: i64,
+    ub: i64,
+    incr: i64,
+    chunksz: i64,
+    next_lb: Vec<i64>,
+}
+
+/// Declare `mystatic16` (§4.2 style) and publish it into the global
+/// schedule registry, once per process.
+fn register_uds() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        let decl = Registry::new();
+        decl.declare(
+            DeclarationBuilder::schedule(UDS_NAME)
+                .arguments(2)
+                .init(|lb, ub, incr, _chunk, nthreads, args| {
+                    let lr = args.arg::<Mutex<LoopRecordT>>(0);
+                    let chunksz = *args.arg::<i64>(1);
+                    let mut lr = lr.lock().unwrap();
+                    lr.lb = lb;
+                    lr.ub = ub;
+                    lr.incr = incr;
+                    lr.chunksz = chunksz;
+                    lr.next_lb = (0..nthreads as i64)
+                        .map(|t| lb + t * chunksz * incr)
+                        .collect();
+                })
+                .next(|lower, upper, incr, tid, _fb, args| {
+                    let lr = args.arg::<Mutex<LoopRecordT>>(0);
+                    let mut lr = lr.lock().unwrap();
+                    if lr.next_lb[tid] >= lr.ub {
+                        return false;
+                    }
+                    *lower = lr.next_lb[tid];
+                    let step = lr.chunksz * lr.incr;
+                    *upper = (lr.next_lb[tid] + step).min(lr.ub);
+                    *incr = lr.incr;
+                    let p = lr.next_lb.len() as i64;
+                    lr.next_lb[tid] += p * step;
+                    true
+                })
+                .build(),
+        )
+        .unwrap();
+        decl.publish(
+            ScheduleRegistry::global(),
+            UDS_NAME,
+            "declare-style twin of static,16 (ISSUE 4 acceptance)",
+            || Args::new().with(Mutex::new(LoopRecordT::default())).with(CHUNK),
+        )
+        .unwrap();
+    });
+}
+
+/// A scenario result reduced to its physics: identity fields cleared so
+/// a user-defined schedule row compares bit-for-bit against its native
+/// twin row.
+fn physics(r: &ScenarioResult) -> ScenarioResult {
+    let mut r = r.clone();
+    r.id = 0;
+    r.schedule = String::new();
+    r
+}
+
+#[test]
+fn declared_uds_resolves_by_name_and_matches_native_chunks() {
+    register_uds();
+    let uds = ScheduleSpec::parse(UDS_NAME).unwrap();
+    assert_eq!(uds.label(), UDS_NAME);
+    let native = ScheduleSpec::parse(NATIVE).unwrap();
+    for (n, p) in [(1000u64, 4usize), (333, 3), (37, 5)] {
+        let drain = |spec: &ScheduleSpec| {
+            let mut s = spec.build();
+            drain_chunks(
+                &mut *s,
+                &LoopSpec::upto(n),
+                &TeamSpec::uniform(p),
+                &mut LoopRecord::default(),
+            )
+        };
+        assert_eq!(drain(&uds), drain(&native), "n={n} p={p}");
+    }
+}
+
+#[test]
+fn declared_uds_sweeps_by_name_bit_identical_to_native() {
+    register_uds();
+    let line = format!(
+        "BATCH workloads=uniform,lognormal schedules={UDS_NAME};{NATIVE} \
+n=500,1000 threads=2,4 seeds=1 workers=4"
+    );
+    let grid = SweepGrid::parse_batch_line(&line).unwrap();
+    assert!(grid.to_batch_line().contains(UDS_NAME));
+    let scenarios = grid.expand();
+    assert_eq!(scenarios.len(), 16);
+    let (results, summary) = run_sweep(&Service::new(), &scenarios, 4);
+    assert_eq!(summary.scenarios, 16);
+    assert_eq!(results.len(), 16);
+    // Expansion order is workloads x n x seeds x schedules x threads
+    // (threads innermost): in each block of 4, rows 0..2 are the UDS
+    // schedule and rows 2..4 its native twin at the same thread counts.
+    for block in results.chunks(4) {
+        assert_eq!(block[0].schedule, UDS_NAME);
+        assert_eq!(block[2].schedule, NATIVE);
+        assert_eq!(physics(&block[0]), physics(&block[2]), "threads=2 pair");
+        assert_eq!(physics(&block[1]), physics(&block[3]), "threads=4 pair");
+    }
+}
+
+#[test]
+fn declared_uds_runs_over_tcp_batch_by_name() {
+    register_uds();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || serve_on(listener, 2));
+
+    let mut c = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(c.try_clone().unwrap());
+    writeln!(
+        c,
+        "BATCH workloads=gaussian schedules={UDS_NAME};{NATIVE} n=700 threads=3 seeds=2"
+    )
+    .unwrap();
+    let mut lines = Vec::new();
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "connection closed before the summary record: {lines:?}");
+        let done = line.contains("\"type\":\"summary\"") || line.starts_with("ERR");
+        lines.push(line.trim().to_string());
+        if done {
+            break;
+        }
+    }
+    assert_eq!(lines.len(), 3, "{lines:?}");
+    let uds = ScenarioResult::from_flat(&parse_flat(&lines[0]).unwrap()).unwrap();
+    let native = ScenarioResult::from_flat(&parse_flat(&lines[1]).unwrap()).unwrap();
+    assert_eq!(uds.schedule, UDS_NAME);
+    assert_eq!(native.schedule, NATIVE);
+    assert_eq!(physics(&uds), physics(&native), "wire results bit-identical");
+
+    // The same connection answers single jobs by UDS name...
+    writeln!(c, "schedule={UDS_NAME} n=400 threads=2 workload=uniform").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let expect = format!("ok schedule={UDS_NAME} ");
+    assert!(line.starts_with(&expect), "{line}");
+
+    // ...and unknown names keep the stable error surface.
+    writeln!(c, "BATCH schedules=never_registered n=100").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR bad_schedule"), "{line}");
+    writeln!(c, "schedule=never_registered n=100").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR bad_schedule"), "{line}");
+}
