@@ -19,8 +19,7 @@ use crate::eval::table::{fmt_ns, Table};
 use crate::metrics::RunStats;
 use crate::schedules::{AwfVariant, ScheduleSpec};
 use crate::sim::{
-    simulate, simulate_indexed, Heterogeneous, NoVariability, NoiseBursts, SimArena,
-    SimConfig,
+    simulate, simulate_indexed, NoVariability, SimArena, SimConfig, VariabilitySpec,
 };
 use crate::workload::{CostIndex, WorkloadClass};
 
@@ -317,9 +316,19 @@ pub fn e5(cfg: &EvalConfig) -> Vec<Table> {
         ScheduleSpec::Awf { variant: AwfVariant::C },
         ScheduleSpec::Af { min_chunk: 1 },
     ];
-    let probs = [0.0, 0.1, 0.25, 0.5];
+    // Each column is a canonical VariabilitySpec label — paste any of
+    // them into `uds run/sweep --variability` to reproduce that machine.
+    let specs: Vec<VariabilitySpec> = [0.0, 0.1, 0.25, 0.5]
+        .iter()
+        .map(|&prob| VariabilitySpec::Noise {
+            prob,
+            slow: 0.25,
+            seed: cfg.seed ^ 0xA5,
+            window_ns: (cfg.mean_ns as u64 * 200).max(1),
+        })
+        .collect();
     let mut headers: Vec<String> = vec!["schedule".into()];
-    headers.extend(probs.iter().map(|p| format!("noise={p}")));
+    headers.extend(specs.iter().map(VariabilitySpec::label));
     let mut t = Table::new(
         "e5_noise",
         format!(
@@ -330,6 +339,7 @@ pub fn e5(cfg: &EvalConfig) -> Vec<Table> {
     );
     let index = WorkloadClass::Gaussian.index(cfg.n, cfg.mean_ns, cfg.seed);
     let index_ref = &index;
+    let specs_ref = &specs;
     let invocations = 6usize;
     // One scoped thread per schedule row; invocations within a row stay
     // sequential (the adaptives learn through the shared LoopRecord).
@@ -341,13 +351,8 @@ pub fn e5(cfg: &EvalConfig) -> Vec<Table> {
                 s.spawn(move || {
                     let mut arena = SimArena::new();
                     let mut cells = vec![spec.label()];
-                    for &prob in &probs {
-                        let noise = NoiseBursts::new(
-                            (cfg.mean_ns as u64 * 200).max(1),
-                            prob,
-                            0.25,
-                            cfg.seed ^ 0xA5,
-                        );
+                    for vspec in specs_ref {
+                        let noise = vspec.build(cfg.p);
                         let mut rec = LoopRecord::default();
                         let mut last = Vec::new();
                         for inv in 0..invocations {
@@ -356,7 +361,7 @@ pub fn e5(cfg: &EvalConfig) -> Vec<Table> {
                                 &TeamSpec::uniform(cfg.p),
                                 &*spec.factory(),
                                 index_ref,
-                                &noise,
+                                &*noise,
                                 &mut rec,
                                 &SimConfig {
                                     dequeue_overhead_ns: cfg.h_ns,
@@ -494,14 +499,12 @@ impl ScheduleFactory for ArcFactory {
 /// E7: heterogeneous team (speeds 1,1,2,4 pattern): weight-aware
 /// schedules vs oblivious ones.
 pub fn e7(cfg: &EvalConfig) -> Vec<Table> {
-    let speeds: Vec<f64> = (0..cfg.p)
-        .map(|t| match t % 4 {
-            0 | 1 => 1.0,
-            2 => 2.0,
-            _ => 4.0,
-        })
-        .collect();
-    let het = Heterogeneous::new(speeds.clone());
+    // The canonical sweep-axis label of this machine: the same model is
+    // reachable via `--variability hetero:1,1,2,4` everywhere.
+    let base = [1.0, 1.0, 2.0, 4.0];
+    let vspec = VariabilitySpec::Hetero { speeds: base.to_vec() };
+    let het = vspec.build(cfg.p);
+    let speeds: Vec<f64> = (0..cfg.p).map(|t| base[t % base.len()]).collect();
     let team_weighted = TeamSpec::weighted(&speeds);
     let team_uniform = TeamSpec::uniform(cfg.p);
     let index = WorkloadClass::Uniform.index(cfg.n, cfg.mean_ns, cfg.seed);
@@ -510,8 +513,8 @@ pub fn e7(cfg: &EvalConfig) -> Vec<Table> {
     let mut t = Table::new(
         "e7_heterogeneous",
         format!(
-            "heterogeneous cores (speeds {:?}...), N={}, P={}",
-            &speeds[..4.min(speeds.len())],
+            "heterogeneous cores ({} cycled), N={}, P={}",
+            vspec.label(),
             cfg.n,
             cfg.p
         ),

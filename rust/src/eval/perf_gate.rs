@@ -151,6 +151,36 @@ impl GateOutcome {
     pub fn passed(&self) -> bool {
         self.failures.is_empty()
     }
+
+    /// Machine-readable outcome document — what CI uploads as an
+    /// artifact when the gate fails, so a regression is diagnosable
+    /// from the workflow page without rerunning the bench.
+    pub fn json_report(&self, threshold_pct: f64) -> String {
+        let failures = json_array(
+            self.failures
+                .iter()
+                .map(|f| format!("\"{}\"", crate::eval::report::escape(f))),
+        );
+        JsonObj::new()
+            .bool("passed", self.passed())
+            .bool("calibrated", self.calibrated)
+            .bool("provisional", self.provisional)
+            .f64("threshold_pct", threshold_pct)
+            .raw("failures", &failures)
+            .raw("table", &self.table.json())
+            .finish()
+    }
+
+    /// Write [`GateOutcome::json_report`] to `path` (creating parent
+    /// directories).
+    pub fn save_report(&self, path: &Path, threshold_pct: f64) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.json_report(threshold_pct))
+    }
 }
 
 /// Compare `current` against `baseline`; a benchmark fails when its
@@ -375,4 +405,20 @@ mod tests {
         assert!(BenchDoc::parse("not json").is_err());
     }
 
+    #[test]
+    fn outcome_report_is_machine_readable() {
+        let base = doc(false, &[("g/a", 100.0)]);
+        let degraded = degrade(&base, 2.0);
+        let out = compare(&base, &degraded, 15.0);
+        let report = out.json_report(15.0);
+        assert!(report.contains("\"passed\":false"), "{report}");
+        assert!(report.contains("\"failures\":[\""), "{report}");
+        assert!(report.contains("\"table\":{"), "{report}");
+
+        let dir = std::env::temp_dir()
+            .join(format!("uds_gate_report_test_{}", std::process::id()));
+        let path = dir.join("report.json");
+        out.save_report(&path, 15.0).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), report);
+    }
 }

@@ -265,6 +265,9 @@ pub struct ScenarioResult {
     pub id: u64,
     pub schedule: String,
     pub workload: String,
+    /// Canonical [`crate::sim::VariabilitySpec`] label of the machine
+    /// model the scenario ran under (`calm` on an undisturbed machine).
+    pub variability: String,
     pub n: u64,
     pub threads: u64,
     pub mean_ns: f64,
@@ -278,8 +281,8 @@ pub struct ScenarioResult {
 }
 
 impl ScenarioResult {
-    pub const CSV_HEADER: &str = "id,schedule,workload,n,threads,mean_ns,\
-h_ns,seed,makespan_ns,chunks,dequeues,imbalance_pct,efficiency";
+    pub const CSV_HEADER: &str = "id,schedule,workload,variability,n,threads,\
+mean_ns,h_ns,seed,makespan_ns,chunks,dequeues,imbalance_pct,efficiency";
 
     /// The newline-delimited wire/report form: `{"type":"result",...}`.
     pub fn json_line(&self) -> String {
@@ -288,6 +291,7 @@ h_ns,seed,makespan_ns,chunks,dequeues,imbalance_pct,efficiency";
             .u64("id", self.id)
             .str("schedule", &self.schedule)
             .str("workload", &self.workload)
+            .str("variability", &self.variability)
             .u64("n", self.n)
             .u64("threads", self.threads)
             .f64("mean_ns", self.mean_ns)
@@ -310,10 +314,11 @@ h_ns,seed,makespan_ns,chunks,dequeues,imbalance_pct,efficiency";
             }
         };
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             self.id,
             esc(&self.schedule),
             esc(&self.workload),
+            esc(&self.variability),
             self.n,
             self.threads,
             fmt_f64(self.mean_ns),
@@ -328,11 +333,17 @@ h_ns,seed,makespan_ns,chunks,dequeues,imbalance_pct,efficiency";
     }
 
     /// Rebuild from a parsed wire line (the remote sweep client path).
+    /// `variability` is a newer optional field: records from an older
+    /// server default to `calm`.
     pub fn from_flat(map: &BTreeMap<String, String>) -> Result<Self, String> {
         Ok(Self {
             id: flat_parse(map, "id")?,
             schedule: flat_get(map, "schedule")?.to_string(),
             workload: flat_get(map, "workload")?.to_string(),
+            variability: map
+                .get("variability")
+                .cloned()
+                .unwrap_or_else(|| "calm".to_string()),
             n: flat_parse(map, "n")?,
             threads: flat_parse(map, "threads")?,
             mean_ns: flat_parse(map, "mean_ns")?,
@@ -455,6 +466,7 @@ mod tests {
             id: 3,
             schedule: "dynamic,16".into(),
             workload: "lognormal".into(),
+            variability: "hetero:1,1,2,4".into(),
             n: 1000,
             threads: 8,
             mean_ns: 1000.5,
@@ -479,6 +491,16 @@ mod tests {
         // Re-rendering the parsed record is byte-identical: the property
         // that makes remote and local artifacts indistinguishable.
         assert_eq!(back.json_line(), line);
+    }
+
+    #[test]
+    fn scenario_without_variability_defaults_to_calm() {
+        // Wire compatibility: records from a pre-variability server
+        // still parse.
+        let r = sample();
+        let line = r.json_line().replace(",\"variability\":\"hetero:1,1,2,4\"", "");
+        let back = ScenarioResult::from_flat(&parse_flat(&line).unwrap()).unwrap();
+        assert_eq!(back.variability, "calm");
     }
 
     #[test]
@@ -520,14 +542,16 @@ mod tests {
     }
 
     #[test]
-    fn csv_quotes_schedule_labels() {
+    fn csv_quotes_comma_bearing_labels() {
         let r = sample();
         let row = r.csv_row();
         assert!(row.contains("\"dynamic,16\""), "{row}");
+        assert!(row.contains("\"hetero:1,1,2,4\""), "{row}");
+        // schedule embeds 1 comma, variability 3: 4 extra splits.
         assert_eq!(
             row.split(',').count(),
-            ScenarioResult::CSV_HEADER.split(',').count() + 1,
-            "quoted comma adds one split"
+            ScenarioResult::CSV_HEADER.split(',').count() + 4,
+            "quoted commas add splits"
         );
     }
 

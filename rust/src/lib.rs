@@ -15,10 +15,14 @@
 //!   [`schedules::registry::ScheduleRegistry`]: the single namespace
 //!   resolving schedule labels (builtin or user-registered) for the CLI,
 //!   the wire protocol, sweeps and the eval roster.
-//! * [`workload`] — per-iteration cost models (the evaluation's workload
-//!   classes).
+//! * [`workload`] — per-iteration cost models plus the open
+//!   [`workload::registry::WorkloadRegistry`]: the evaluation's builtin
+//!   classes, composite/nonstationary heads (`mix:`/`phased:`/`burst:`/
+//!   `trace:`) and user-registered workloads resolve from one label
+//!   namespace.
 //! * [`sim`] — a deterministic virtual-time executor plus system-noise /
-//!   heterogeneity models (the testbed substitute).
+//!   heterogeneity models (the testbed substitute), sweepable by label
+//!   through [`sim::VariabilitySpec`].
 //! * [`runtime`] — PJRT-backed execution of AOT-compiled JAX/Pallas
 //!   compute artifacts on the request path (Python never runs here).
 //! * [`eval`] — the E1–E8 experiment harness regenerating the evaluation
@@ -65,3 +69,5 @@ pub use coordinator::{
 };
 pub use metrics::RunStats;
 pub use schedules::{ScheduleRegistry, ScheduleSpec};
+pub use sim::VariabilitySpec;
+pub use workload::{WorkloadRegistry, WorkloadSpec};

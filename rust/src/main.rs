@@ -9,6 +9,10 @@
 //! * `list-schedules` — every name in the schedule registry (builtins
 //!                      plus registered user-defined schedules) and the
 //!                      eval roster
+//! * `list-workloads` — every head in the workload registry (builtin
+//!                      classes, composite heads, user-registered heads)
+//!                      plus the registered traces and the variability
+//!                      grammar
 //! * `calibrate`      — measure this host's dequeue overhead `h`
 //! * `serve`          — JSON-lines-style scheduling service over TCP
 //!
@@ -26,26 +30,30 @@ use uds::eval::report::{parse_flat, Report, ScenarioResult, SweepSummary};
 use uds::eval::{self, EvalConfig};
 use uds::schedules::{ScheduleRegistry, ScheduleSpec};
 use uds::service;
-use uds::sim::{simulate_indexed, NoVariability, SimArena, SimConfig};
+use uds::sim::{simulate_indexed, SimArena, SimConfig, VariabilitySpec};
 use uds::sweep::{run_sweep, SweepGrid};
-use uds::workload::{CostIndex, CostModel, WorkloadClass};
+use uds::workload::{CostIndex, CostModel, WorkloadRegistry, WorkloadSpec};
 
 const USAGE: &str = "\
 uds — user-defined loop scheduling runtime
 
 USAGE:
   uds run   [--schedule S] [--n N] [--threads P] [--workload W]
-            [--mean-ns X] [--h-ns H] [--seed S] [--invocations K] [--real]
+            [--variability V] [--mean-ns X] [--h-ns H] [--seed S]
+            [--invocations K] [--real]
   uds eval  [EXP] [--n N] [--threads P] [--mean-ns X] [--h-ns H]
             [--seed S] [--out DIR] [--artifacts DIR]
             EXP: e1..e8 | all (default all)
-  uds sweep --schedules S1;S2 --n N1,N2 [--workloads W1,W2] [--threads P1,P2]
-            [--seeds K1,K2] [--mean-ns X] [--h-ns H] [--workers W]
+  uds sweep --schedules S1;S2 --n N1,N2 [--workloads W1;W2]
+            [--variability V1;V2] [--threads P1,P2] [--seeds K1,K2]
+            [--mean-ns X] [--h-ns H] [--workers W]
             [--out DIR] [--remote HOST:PORT]
-            (schedule list is ';'-separated: labels embed commas)
+            (schedule/workload/variability lists are ';'-separated:
+            labels embed commas)
   uds perf-gate [--baseline FILE] [--current FILE] [--threshold-pct T]
-            [--update-baseline] [--self-test]
+            [--report FILE] [--update-baseline] [--self-test]
   uds list-schedules
+  uds list-workloads
   uds calibrate [--n N] [--threads P]
   uds serve [--addr HOST:PORT]
 
@@ -54,8 +62,16 @@ SCHEDULES (--schedule): static[,k] dynamic[,k] guided[,min] tss[,f,l]
   static_steal[,k] awf-b|c|d|e af[,min] hybrid[,f[,k]] auto tuned[,k0]
   — plus any user-defined schedule registered in the schedule registry
   (run `uds list-schedules` for the live namespace)
-WORKLOADS (--workload): uniform increasing decreasing gaussian
-  exponential lognormal bimodal sawtooth";
+WORKLOADS (--workload): the open workload registry — builtin classes
+  (uniform increasing decreasing gaussian exponential lognormal bimodal
+  sawtooth, each with optional key=value params, e.g.
+  gaussian,mean=5000,cv=0.3), composites (mix:<a>:<b>[,frac=F]
+  phased:<a>:<b>[,switch=F] burst:<base>[,period=U][,amp=F]
+  trace:<name>) and user-registered heads
+  (run `uds list-workloads` for the live namespace)
+VARIABILITY (--variability): calm | hetero:s1,s2,... |
+  noise:<prob>,<slow>,<seed>[,<window_ns>] | atoms joined with '+'
+  (simulated runs only)";
 
 /// Flags that take no value.
 const BOOL_FLAGS: [&str; 3] = ["real", "self-test", "update-baseline"];
@@ -147,6 +163,35 @@ fn main() {
             }
             Ok(())
         }
+        "list-workloads" => {
+            let reg = WorkloadRegistry::global();
+            let entries = reg.entries();
+            println!("workload registry ({} entries):", entries.len());
+            for e in &entries {
+                let aliases = if e.aliases().is_empty() {
+                    String::new()
+                } else {
+                    format!("  [aliases: {}]", e.aliases().join(", "))
+                };
+                let kind = if e.is_composite() { "composite" } else { "simple" };
+                println!(
+                    "  {:<44} {:<9} {}{}",
+                    e.signature(),
+                    kind,
+                    e.summary(),
+                    aliases
+                );
+            }
+            println!("registered traces (replay as trace:<name>):");
+            for name in reg.trace_names() {
+                println!("  {name}");
+            }
+            println!(
+                "variability specs (--variability): calm | hetero:s1,s2,... | \
+noise:<prob>,<slow>,<seed>[,<window_ns>] | atoms joined with '+'"
+            );
+            Ok(())
+        }
         "calibrate" => cmd_calibrate(&rest),
         "serve" => {
             let flags = Flags::parse(&rest).unwrap_or_else(die);
@@ -172,6 +217,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let n: u64 = flags.get("n", 100_000)?;
     let threads: usize = flags.get("threads", 8)?;
     let workload = flags.get_str("workload", "lognormal");
+    let variability = flags.get_str("variability", "calm");
     let mean_ns: f64 = flags.get("mean-ns", 1000.0)?;
     let h_ns: u64 = flags.get("h-ns", 250)?;
     let seed: u64 = flags.get("seed", 42)?;
@@ -179,13 +225,23 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let real = flags.has("real");
 
     let spec = ScheduleSpec::parse(&schedule)?;
-    let class = WorkloadClass::parse(&workload)
-        .ok_or_else(|| format!("unknown workload '{workload}'"))?;
-    let costs = class.model(n, mean_ns, seed);
+    // Workload labels resolve through the open workload registry —
+    // builtin classes, composite heads and user-registered heads alike.
+    let wspec = WorkloadSpec::parse(&workload).map_err(|e| format!("--workload: {e}"))?;
+    let vspec = VariabilitySpec::parse(&variability)
+        .map_err(|e| format!("--variability: {e}"))?;
+    if real && !vspec.is_calm() {
+        eprintln!(
+            "note: --variability models simulated machines; real-thread runs \
+ignore it"
+        );
+    }
+    let costs = wspec.model(n, mean_ns, seed);
+    let var = vspec.build(threads);
     // One O(n) index build shared by every simulated invocation; the
     // arena makes repeat invocations allocation-free (hot-path twin of
     // the service cache).
-    let index = if real { None } else { Some(CostIndex::build(&costs)) };
+    let index = if real { None } else { Some(CostIndex::build(&*costs)) };
     let mut arena = SimArena::new();
     let loop_spec = LoopSpec::upto(n);
     let team = TeamSpec::uniform(threads);
@@ -207,7 +263,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 &team,
                 &*spec.factory(),
                 index.as_ref().expect("index built for simulated runs"),
-                &NoVariability,
+                &*var,
                 &mut rec,
                 &SimConfig { dequeue_overhead_ns: h_ns, trace: false },
                 &mut arena,
@@ -290,6 +346,7 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     let mut pairs: Vec<(&str, &str)> = Vec::new();
     for (flag, key) in [
         ("workloads", "workloads"),
+        ("variability", "variability"),
         ("schedules", "schedules"),
         ("n", "n"),
         ("threads", "threads"),
@@ -434,6 +491,13 @@ fn cmd_perf_gate(args: &[String]) -> Result<(), String> {
     let current = BenchDoc::load(&current_path)?;
     let outcome = perf_gate::compare(&baseline, &current, threshold);
     println!("{}", outcome.table.markdown());
+    // Write the machine-readable outcome *before* the pass/fail exit so
+    // CI can upload it as an artifact on failure.
+    if let Some(report) = flags.named.get("report") {
+        let path = PathBuf::from(report);
+        outcome.save_report(&path, threshold).map_err(|e| e.to_string())?;
+        println!("saved {}", path.display());
+    }
     if !outcome.calibrated {
         println!("note: no calibration entry on both sides; comparing raw ns");
     }

@@ -8,7 +8,8 @@
 //!
 //! ```text
 //! schedule=fac2 n=100000 threads=8 workload=lognormal mean_ns=1000 h_ns=250 seed=42
-//! BATCH schedules=fac2;gss n=1000,10000 workloads=lognormal,uniform seeds=1,2
+//! schedule=gss n=50000 workload=phased:increasing:uniform,0.5 variability=hetero:1,1,2,4
+//! BATCH schedules=fac2;gss n=1000,10000 workloads=lognormal;mix:gaussian:uniform seeds=1,2
 //! ```
 //!
 //! A single job answers with one line:
@@ -29,16 +30,26 @@
 //! ```
 //!
 //! Error codes are stable protocol surface (`bad_request`, `bad_field`,
-//! `bad_value`, `bad_schedule`, `bad_workload`, `bad_n`, `bad_threads`,
-//! `bad_mean`, `empty_grid`, `grid_too_large`, `bad_workers`); details
-//! are human-oriented and may change.
+//! `bad_value`, `bad_schedule`, `bad_workload`, `bad_variability`,
+//! `bad_n`, `bad_threads`, `bad_mean`, `empty_grid`, `grid_too_large`,
+//! `bad_workers`); details are human-oriented and may change.
+//! Duplicate keys in a request line answer `bad_request`.
 //!
 //! Schedule labels — in `schedule=` and in a `BATCH` `schedules=` list —
 //! resolve through the open schedule registry
 //! ([`crate::schedules::registry::ScheduleRegistry::global`]): builtin
 //! names and user-defined schedules registered by the embedding process
 //! (e.g. published §4.1/§4.2 UDS definitions) are equally valid, and
-//! unknown names answer `ERR bad_schedule`.
+//! unknown names answer `ERR bad_schedule`.  Workload labels
+//! (`workload=` / `workloads=`) symmetrically resolve through the open
+//! workload registry
+//! ([`crate::workload::registry::WorkloadRegistry::global`]) — builtin
+//! classes, composite heads (`mix:`, `phased:`, `burst:`, `trace:`) and
+//! user-registered heads alike; unknown or malformed labels answer
+//! `ERR bad_workload` with the parse detail preserved.  The optional
+//! `variability=` field (a [`crate::sim::VariabilitySpec`] label;
+//! default `calm`) injects heterogeneous/noisy machine models and
+//! answers `ERR bad_variability` on garbage.
 //!
 //! ## Request-path architecture (EXPERIMENTS.md §Sim-throughput)
 //!
@@ -67,11 +78,11 @@ use std::sync::{mpsc, Arc, Mutex, OnceLock};
 
 use crate::coordinator::{LoopRecord, LoopSpec, TeamSpec};
 use crate::schedules::ScheduleSpec;
-use crate::sim::{simulate_indexed, NoVariability, SimArena, SimConfig};
+use crate::sim::{simulate_indexed, SimArena, SimConfig, VariabilitySpec};
 use crate::sweep::grid::{MAX_N, MAX_THREADS};
 use crate::sweep::SweepGrid;
 use crate::util::CodedError;
-use crate::workload::{CostIndex, WorkloadClass};
+use crate::workload::{CostIndex, WorkloadSpec};
 
 /// A parsed job request.
 #[derive(Debug, Clone)]
@@ -80,33 +91,44 @@ pub struct JobRequest {
     pub n: u64,
     pub threads: usize,
     pub workload: String,
+    pub variability: String,
     pub mean_ns: f64,
     pub h_ns: u64,
     pub seed: u64,
 }
 
 impl JobRequest {
-    /// Parse a `key=value`-pairs request line.
+    /// Parse a `key=value`-pairs request line.  Duplicate keys are
+    /// rejected (`bad_request`).
     pub fn parse(line: &str) -> Result<Self, CodedError> {
         let mut req = JobRequest {
             schedule: String::new(),
             n: 0,
             threads: 8,
             workload: "lognormal".into(),
+            variability: "calm".into(),
             mean_ns: 1000.0,
             h_ns: 250,
             seed: 0,
         };
         let bad = |k: &str, v: &str| CodedError::new("bad_value", format!("{k}: '{v}'"));
+        let mut seen = std::collections::HashSet::new();
         for tok in line.split_whitespace() {
             let (k, v) = tok.split_once('=').ok_or_else(|| {
                 CodedError::new("bad_request", format!("expected key=value, got '{tok}'"))
             })?;
+            if !seen.insert(k.to_string()) {
+                return Err(CodedError::new(
+                    "bad_request",
+                    format!("duplicate key '{k}'"),
+                ));
+            }
             match k {
                 "schedule" => req.schedule = v.to_string(),
                 "n" => req.n = v.parse().map_err(|_| bad(k, v))?,
                 "threads" => req.threads = v.parse().map_err(|_| bad(k, v))?,
                 "workload" => req.workload = v.to_string(),
+                "variability" => req.variability = v.to_string(),
                 "mean_ns" => req.mean_ns = v.parse().map_err(|_| bad(k, v))?,
                 "h_ns" => req.h_ns = v.parse().map_err(|_| bad(k, v))?,
                 "seed" => req.seed = v.parse().map_err(|_| bad(k, v))?,
@@ -132,10 +154,14 @@ impl JobRequest {
 }
 
 /// Cache key: everything that determines the per-iteration cost vector.
-/// `mean_ns` participates as its bit pattern so the key stays `Eq`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// The workload participates as its canonical lossless label (two specs
+/// with equal labels sample identical costs); `mean_ns` participates as
+/// its bit pattern so the key stays `Eq`.  Variability is deliberately
+/// *not* part of the key — it scales thread speeds at simulation time,
+/// never the cached cost table.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 struct CacheKey {
-    class: WorkloadClass,
+    workload: WorkloadSpec,
     n: u64,
     mean_bits: u64,
     seed: u64,
@@ -199,9 +225,9 @@ impl Service {
     /// Peek at the cached index for a request without touching LRU
     /// state; `None` on miss or unknown workload.
     pub fn cached_index(&self, req: &JobRequest) -> Option<Arc<CostIndex>> {
-        let class = WorkloadClass::parse(&req.workload)?;
+        let workload = WorkloadSpec::parse(&req.workload).ok()?;
         let key = CacheKey {
-            class,
+            workload,
             n: req.n,
             mean_bits: req.mean_ns.to_bits(),
             seed: req.seed,
@@ -219,12 +245,12 @@ impl Service {
     /// workload.
     pub(crate) fn index_for(
         &self,
-        class: WorkloadClass,
+        workload: &WorkloadSpec,
         n: u64,
         mean_ns: f64,
         seed: u64,
     ) -> Arc<CostIndex> {
-        self.index_for_counted(class, n, mean_ns, seed).0
+        self.index_for_counted(workload, n, mean_ns, seed).0
     }
 
     /// As [`Self::index_for`], also reporting whether this call paid
@@ -233,12 +259,17 @@ impl Service {
     /// which concurrent clients advance too.
     pub(crate) fn index_for_counted(
         &self,
-        class: WorkloadClass,
+        workload: &WorkloadSpec,
         n: u64,
         mean_ns: f64,
         seed: u64,
     ) -> (Arc<CostIndex>, bool) {
-        let key = CacheKey { class, n, mean_bits: mean_ns.to_bits(), seed };
+        let key = CacheKey {
+            workload: workload.clone(),
+            n,
+            mean_bits: mean_ns.to_bits(),
+            seed,
+        };
         {
             let mut map = self.cache.lock().unwrap();
             if let Some(e) = map.get_mut(&key) {
@@ -253,7 +284,7 @@ impl Service {
         // the first insert wins and both share it afterwards.  (The
         // sweep engine sidesteps the race by prefetching each distinct
         // key from exactly one thread.)
-        let index = Arc::new(CostIndex::build(&class.model(n, mean_ns, seed)));
+        let index = Arc::new(workload.index(n, mean_ns, seed));
         self.builds.fetch_add(1, Ordering::Relaxed);
         let mut map = self.cache.lock().unwrap();
         let stamp = self.tick.fetch_add(1, Ordering::Relaxed);
@@ -284,7 +315,7 @@ impl Service {
             let oldest = map
                 .iter()
                 .min_by_key(|(_, e)| e.stamp)
-                .map(|(k, _)| *k)
+                .map(|(k, _)| k.clone())
                 .expect("non-empty map");
             map.remove(&oldest);
         }
@@ -307,8 +338,13 @@ impl Service {
     ) -> Result<String, CodedError> {
         let spec = ScheduleSpec::parse(&req.schedule)
             .map_err(|e| CodedError::new("bad_schedule", e))?;
-        let class = WorkloadClass::parse(&req.workload)
-            .ok_or_else(|| CodedError::new("bad_workload", format!("'{}'", req.workload)))?;
+        // Registry parse errors carry the detail (unknown head vs. bad
+        // parameter vs. unknown trace), and both the single-job path
+        // and the BATCH grid preserve it symmetrically.
+        let workload = WorkloadSpec::parse(&req.workload)
+            .map_err(|e| CodedError::new("bad_workload", e))?;
+        let variability = VariabilitySpec::parse(&req.variability)
+            .map_err(|e| CodedError::new("bad_variability", e))?;
         if req.n > MAX_N {
             return Err(CodedError::new("bad_n", format!("n must be 1..={MAX_N}")));
         }
@@ -318,13 +354,14 @@ impl Service {
                 format!("threads must be 1..={MAX_THREADS}"),
             ));
         }
-        let index = self.index_for(class, req.n, req.mean_ns, req.seed);
+        let index = self.index_for(&workload, req.n, req.mean_ns, req.seed);
+        let var = variability.build(req.threads);
         let stats = simulate_indexed(
             &LoopSpec::upto(req.n),
             &TeamSpec::uniform(req.threads),
             &*spec.factory(),
             &index,
-            &NoVariability,
+            &*var,
             &mut LoopRecord::default(),
             &SimConfig { dequeue_overhead_ns: req.h_ns, trace: false },
             arena,
@@ -560,6 +597,109 @@ mod tests {
         let mut req = JobRequest::parse("schedule=fac2 n=10").unwrap();
         req.threads = 0;
         assert!(handle(&req).starts_with("ERR bad_threads"));
+    }
+
+    /// The satellite error-path table: malformed workload/variability
+    /// fields, duplicate keys and out-of-range parameters each answer
+    /// their stable `ERR <code>`, on the single-job and BATCH paths
+    /// alike.
+    #[test]
+    fn workload_and_variability_error_paths_are_table_stable() {
+        // Single-job lines that parse but fail handling.
+        for (line, code) in [
+            ("schedule=fac2 n=10 workload=bogus", "ERR bad_workload"),
+            ("schedule=fac2 n=10 workload=gaussian,cv=abc", "ERR bad_workload"),
+            ("schedule=fac2 n=10 workload=gaussian,wat=3", "ERR bad_workload"),
+            ("schedule=fac2 n=10 workload=mix:gaussian:nope", "ERR bad_workload"),
+            ("schedule=fac2 n=10 workload=mix:gaussian:uniform,frac=1.5", "ERR bad_workload"),
+            ("schedule=fac2 n=10 workload=bimodal,ratio=-3", "ERR bad_workload"),
+            ("schedule=fac2 n=10 workload=trace:absent-trace", "ERR bad_workload"),
+            ("schedule=fac2 n=10 variability=warp", "ERR bad_variability"),
+            ("schedule=fac2 n=10 variability=hetero:0", "ERR bad_variability"),
+            ("schedule=fac2 n=10 variability=noise:2,0.5,1", "ERR bad_variability"),
+            ("schedule=fac2 n=10 variability=noise:0.5", "ERR bad_variability"),
+            ("schedule=fac2 n=10 variability=calm+warp", "ERR bad_variability"),
+        ] {
+            let req = JobRequest::parse(line).unwrap();
+            let resp = handle(&req);
+            assert!(resp.starts_with(code), "{line}: {resp}");
+        }
+        // Parse-level rejections: duplicate keys answer bad_request.
+        for line in [
+            "schedule=fac2 n=10 n=20",
+            "schedule=fac2 schedule=gss n=10",
+            "schedule=fac2 n=10 workload=uniform workload=gaussian",
+            "schedule=fac2 n=10 variability=calm variability=calm",
+        ] {
+            let err = JobRequest::parse(line).unwrap_err();
+            assert_eq!(err.code, "bad_request", "{line}");
+            assert!(err.detail.contains("duplicate"), "{line}: {}", err.detail);
+        }
+        // The BATCH grid answers the same codes on one error line.
+        let svc = Service::new();
+        for (line, code) in [
+            ("BATCH schedules=fac2 n=100 workloads=nope", "ERR bad_workload"),
+            ("BATCH schedules=fac2 n=100 workloads=gaussian,cv=nope", "ERR bad_workload"),
+            ("BATCH schedules=fac2 n=100 workloads=bimodal,ratio=-3", "ERR bad_workload"),
+            ("BATCH schedules=fac2 n=100 variability=warp", "ERR bad_variability"),
+            ("BATCH schedules=fac2 n=100 variability=noise:0.5", "ERR bad_variability"),
+            ("BATCH schedules=fac2 n=100 n=200", "ERR bad_request"),
+            ("BATCH schedules=fac2 n=100 workloads=uniform workloads=gaussian", "ERR bad_request"),
+        ] {
+            let mut out = Vec::new();
+            svc.handle_batch(line, &mut out);
+            let text = String::from_utf8(out).unwrap();
+            assert_eq!(text.lines().count(), 1, "{line}: {text}");
+            assert!(text.starts_with(code), "{line}: {text}");
+        }
+        // No scenario ever ran on the error paths.
+        assert_eq!(svc.cache_stats().0, 0);
+    }
+
+    /// Both rejection sites preserve the registry's parse detail — the
+    /// historic asymmetry where the single-job path dropped it is gone.
+    #[test]
+    fn workload_errors_preserve_parse_detail_on_both_paths() {
+        let svc = Service::new();
+        let mut arena = SimArena::new();
+        let req = JobRequest::parse("schedule=fac2 n=10 workload=gaussian,cv=-1")
+            .unwrap();
+        let single = svc.handle(&req, &mut arena);
+        assert!(single.starts_with("ERR bad_workload"), "{single}");
+        assert!(single.contains("cv"), "detail dropped: {single}");
+
+        let mut out = Vec::new();
+        svc.handle_batch(
+            "BATCH schedules=fac2 n=10 workloads=gaussian,cv=-1",
+            &mut out,
+        );
+        let batch = String::from_utf8(out).unwrap();
+        assert!(batch.starts_with("ERR bad_workload"), "{batch}");
+        assert!(batch.contains("cv"), "detail dropped: {batch}");
+    }
+
+    #[test]
+    fn composite_workload_and_variability_served_by_label() {
+        let svc = Service::new();
+        let mut arena = SimArena::new();
+        let calm = JobRequest::parse(
+            "schedule=fac2 n=4000 threads=4 workload=phased:increasing:uniform,0.5 seed=3",
+        )
+        .unwrap();
+        let r_calm = svc.handle(&calm, &mut arena);
+        assert!(r_calm.starts_with("ok schedule=fac2 "), "{r_calm}");
+        assert_eq!(svc.cache_stats().0, 1, "composite index built once");
+
+        // Same scenario on a heterogeneous machine: cache hit (the
+        // workload key ignores variability), different physics.
+        let mut hetero = calm.clone();
+        hetero.variability = "hetero:1,1,2,4".into();
+        let r_hetero = svc.handle(&hetero, &mut arena);
+        assert!(r_hetero.starts_with("ok "), "{r_hetero}");
+        let (builds, hits) = svc.cache_stats();
+        assert_eq!(builds, 1, "variability must not rebuild the index");
+        assert!(hits >= 1);
+        assert_ne!(r_calm, r_hetero, "variability must reach the simulator");
     }
 
     #[test]

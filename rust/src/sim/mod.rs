@@ -12,4 +12,7 @@ pub mod variability;
 pub use executor::{
     simulate, simulate_indexed, SimArena, SimConfig, FLAT_SCAN_MAX_THREADS,
 };
-pub use variability::{Compose, Heterogeneous, NoVariability, NoiseBursts, Variability};
+pub use variability::{
+    Compose, Heterogeneous, NoVariability, NoiseBursts, Product, Variability,
+    VariabilitySpec, DEFAULT_NOISE_WINDOW_NS,
+};

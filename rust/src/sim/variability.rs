@@ -12,6 +12,15 @@
 //!   scenario).
 //! * [`Compose`] — product of two models.
 //! * [`NoVariability`] — the calm baseline.
+//!
+//! [`VariabilitySpec`] makes variability a first-class *sweep axis*: a
+//! parseable, lossless label grammar (`calm`, `hetero:1,1,2,4`,
+//! `noise:<prob>,<slow>,<seed>[,<window_ns>]`, `'+'`-joined products)
+//! accepted by `uds run`/`uds sweep`, sweep grids and the `BATCH` wire
+//! protocol, so the same scenario can be swept on a calm, heterogeneous
+//! or noisy machine by name.
+
+use std::sync::Arc;
 
 use crate::util::rng::Pcg;
 
@@ -96,6 +105,215 @@ impl<A: Variability, B: Variability> Variability for Compose<A, B> {
     }
 }
 
+/// Product of arbitrarily many variability models — the dynamic twin of
+/// [`Compose`], built from `'+'`-joined [`VariabilitySpec`] labels.
+pub struct Product {
+    pub parts: Vec<Arc<dyn Variability>>,
+}
+
+impl Variability for Product {
+    fn speed(&self, tid: usize, at_ns: u64) -> f64 {
+        self.parts.iter().map(|p| p.speed(tid, at_ns)).product()
+    }
+}
+
+/// Default [`NoiseBursts::window_ns`] when a `noise:` label omits it.
+pub const DEFAULT_NOISE_WINDOW_NS: u64 = 200_000;
+
+/// A parseable, serializable variability description — the sweep-axis
+/// form of the models above.
+///
+/// Grammar (one whitespace-free token; atoms joined with `'+'` compose
+/// as a product):
+///
+/// ```text
+/// spec   := atom ("+" atom)*
+/// atom   := "calm"
+///         | "hetero:" speed ("," speed)*           ; per-thread factors,
+///                                                  ;   cycled over the team
+///         | "noise:" prob "," slow "," seed ["," window_ns]
+/// ```
+///
+/// Labels are **lossless**: [`VariabilitySpec::label`] is a canonical
+/// fixed point that parses back to an equal spec (`noise` always
+/// renders its window, so two labels naming the same spec render
+/// identically).
+#[derive(Clone, Debug, PartialEq)]
+pub enum VariabilitySpec {
+    /// Every thread at nominal speed always.
+    Calm,
+    /// Static per-thread speed factors, cycled over the team size at
+    /// build time (`hetero:1,1,2,4` on 8 threads ⇒ speeds
+    /// `1,1,2,4,1,1,2,4`).
+    Hetero { speeds: Vec<f64> },
+    /// Pseudo-random per-thread slowdown windows (see [`NoiseBursts`]).
+    Noise { prob: f64, slow: f64, seed: u64, window_ns: u64 },
+    /// Product of the parts (each part is a non-compose atom).
+    Product { parts: Vec<VariabilitySpec> },
+}
+
+impl VariabilitySpec {
+    /// Parse a variability label.  Unknown heads and out-of-range
+    /// parameters are rejected here — a parse-accepted spec always
+    /// builds.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err("empty variability spec".into());
+        }
+        let atoms: Vec<&str> = s.split('+').map(str::trim).collect();
+        if atoms.len() == 1 {
+            return Self::parse_atom(atoms[0]);
+        }
+        let parts = atoms
+            .iter()
+            .map(|a| Self::parse_atom(a))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(VariabilitySpec::Product { parts })
+    }
+
+    fn parse_atom(s: &str) -> Result<Self, String> {
+        if s.is_empty() {
+            return Err("empty variability atom".into());
+        }
+        let (head, args) = match s.split_once(':') {
+            Some((h, a)) => (h.trim().to_ascii_lowercase(), Some(a.trim())),
+            None => (s.trim().to_ascii_lowercase(), None),
+        };
+        match head.as_str() {
+            "calm" => match args {
+                None => Ok(VariabilitySpec::Calm),
+                Some(_) => Err(format!("'{s}': calm takes no parameters")),
+            },
+            "hetero" => {
+                let args = args
+                    .filter(|a| !a.is_empty())
+                    .ok_or_else(|| format!("'{s}': hetero needs speeds, e.g. hetero:1,1,2,4"))?;
+                let speeds = args
+                    .split(',')
+                    .map(|t| {
+                        let v: f64 = t.trim().parse().map_err(|_| {
+                            format!("'{s}': bad speed '{}'", t.trim())
+                        })?;
+                        if !v.is_finite() || v <= 0.0 {
+                            return Err(format!(
+                                "'{s}': speeds must be finite and > 0, got {v}"
+                            ));
+                        }
+                        Ok(v)
+                    })
+                    .collect::<Result<Vec<f64>, String>>()?;
+                if speeds.len() > 1024 {
+                    return Err(format!("'{s}': at most 1024 speeds"));
+                }
+                Ok(VariabilitySpec::Hetero { speeds })
+            }
+            "noise" => {
+                let args = args
+                    .filter(|a| !a.is_empty())
+                    .ok_or_else(|| {
+                        format!("'{s}': noise needs prob,slow,seed[,window_ns]")
+                    })?;
+                let toks: Vec<&str> = args.split(',').map(str::trim).collect();
+                if toks.len() < 3 || toks.len() > 4 {
+                    return Err(format!(
+                        "'{s}': noise takes prob,slow,seed[,window_ns]"
+                    ));
+                }
+                let prob: f64 = toks[0]
+                    .parse()
+                    .map_err(|_| format!("'{s}': bad prob '{}'", toks[0]))?;
+                if !prob.is_finite() || !(0.0..=1.0).contains(&prob) {
+                    return Err(format!("'{s}': prob must be in [0, 1], got {prob}"));
+                }
+                let slow: f64 = toks[1]
+                    .parse()
+                    .map_err(|_| format!("'{s}': bad slow '{}'", toks[1]))?;
+                if !slow.is_finite() || slow <= 0.0 || slow > 1.0 {
+                    return Err(format!(
+                        "'{s}': slow must be in (0, 1], got {slow}"
+                    ));
+                }
+                let seed: u64 = toks[2]
+                    .parse()
+                    .map_err(|_| format!("'{s}': bad seed '{}'", toks[2]))?;
+                let window_ns: u64 = match toks.get(3) {
+                    Some(t) => {
+                        let w: u64 = t
+                            .parse()
+                            .map_err(|_| format!("'{s}': bad window_ns '{t}'"))?;
+                        if w == 0 {
+                            return Err(format!("'{s}': window_ns must be >= 1"));
+                        }
+                        w
+                    }
+                    None => DEFAULT_NOISE_WINDOW_NS,
+                };
+                Ok(VariabilitySpec::Noise { prob, slow, seed, window_ns })
+            }
+            other => Err(format!(
+                "unknown variability '{other}' (expected calm, hetero:<speeds>, \
+noise:<prob>,<slow>,<seed>[,<window_ns>], or '+'-joined atoms)"
+            )),
+        }
+    }
+
+    /// Canonical lossless label: a fixed point of `parse(..).label()`.
+    pub fn label(&self) -> String {
+        match self {
+            VariabilitySpec::Calm => "calm".into(),
+            VariabilitySpec::Hetero { speeds } => format!(
+                "hetero:{}",
+                speeds
+                    .iter()
+                    .map(|v| format!("{v}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+            VariabilitySpec::Noise { prob, slow, seed, window_ns } => {
+                format!("noise:{prob},{slow},{seed},{window_ns}")
+            }
+            VariabilitySpec::Product { parts } => parts
+                .iter()
+                .map(VariabilitySpec::label)
+                .collect::<Vec<_>>()
+                .join("+"),
+        }
+    }
+
+    /// Whether this is the calm baseline.
+    pub fn is_calm(&self) -> bool {
+        matches!(self, VariabilitySpec::Calm)
+    }
+
+    /// Instantiate for a team of `threads`.  `hetero` speeds are cycled
+    /// to the team size (the E7 big.LITTLE pattern); specs from
+    /// [`VariabilitySpec::parse`] never panic here.
+    pub fn build(&self, threads: usize) -> Arc<dyn Variability> {
+        match self {
+            VariabilitySpec::Calm => Arc::new(NoVariability),
+            VariabilitySpec::Hetero { speeds } => {
+                let expanded: Vec<f64> = (0..threads.max(1))
+                    .map(|t| speeds[t % speeds.len()])
+                    .collect();
+                Arc::new(Heterogeneous::new(expanded))
+            }
+            VariabilitySpec::Noise { prob, slow, seed, window_ns } => {
+                Arc::new(NoiseBursts::new(*window_ns, *prob, *slow, *seed))
+            }
+            VariabilitySpec::Product { parts } => Arc::new(Product {
+                parts: parts.iter().map(|p| p.build(threads)).collect(),
+            }),
+        }
+    }
+}
+
+impl std::fmt::Display for VariabilitySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +367,96 @@ mod tests {
     fn compose_multiplies() {
         let c = Compose(Heterogeneous::new(vec![0.5]), Heterogeneous::new(vec![0.5]));
         assert_eq!(c.speed(0, 0), 0.25);
+    }
+
+    fn roundtrip(label: &str) -> VariabilitySpec {
+        let spec =
+            VariabilitySpec::parse(label).unwrap_or_else(|e| panic!("'{label}': {e}"));
+        let canon = spec.label();
+        let back = VariabilitySpec::parse(&canon)
+            .unwrap_or_else(|e| panic!("canonical '{canon}' of '{label}': {e}"));
+        assert_eq!(back, spec, "label '{label}' canonical '{canon}'");
+        assert_eq!(back.label(), canon, "'{canon}' must be a fixed point");
+        spec
+    }
+
+    #[test]
+    fn spec_labels_roundtrip_losslessly() {
+        assert_eq!(roundtrip("calm"), VariabilitySpec::Calm);
+        assert_eq!(
+            roundtrip("hetero:1,1,2,4"),
+            VariabilitySpec::Hetero { speeds: vec![1.0, 1.0, 2.0, 4.0] }
+        );
+        assert_eq!(roundtrip("hetero:1,1,2,4").label(), "hetero:1,1,2,4");
+        // The window is always rendered, so the canonical label of a
+        // window-less spec is its explicit form.
+        assert_eq!(
+            roundtrip("noise:0.25,0.5,7"),
+            VariabilitySpec::Noise {
+                prob: 0.25,
+                slow: 0.5,
+                seed: 7,
+                window_ns: DEFAULT_NOISE_WINDOW_NS
+            }
+        );
+        assert_eq!(roundtrip("noise:0.25,0.5,7").label(), "noise:0.25,0.5,7,200000");
+        let composed = roundtrip("hetero:0.5,2+noise:0.1,0.25,3,1000");
+        assert_eq!(composed.label(), "hetero:0.5,2+noise:0.1,0.25,3,1000");
+        // Case/whitespace normalize.
+        assert_eq!(roundtrip(" CALM "), VariabilitySpec::Calm);
+    }
+
+    #[test]
+    fn spec_parse_rejects_garbage() {
+        for bad in [
+            "",
+            "warp",
+            "calm:1",
+            "hetero",
+            "hetero:",
+            "hetero:0",
+            "hetero:-1",
+            "hetero:abc",
+            "hetero:1,inf",
+            "noise",
+            "noise:0.5",
+            "noise:0.5,0.25",
+            "noise:2,0.25,1",
+            "noise:0.5,0,1",
+            "noise:0.5,1.5,1",
+            "noise:0.5,0.25,abc",
+            "noise:0.5,0.25,1,0",
+            "noise:0.5,0.25,1,2,3",
+            "calm+warp",
+            "+calm",
+        ] {
+            assert!(VariabilitySpec::parse(bad).is_err(), "'{bad}' accepted");
+        }
+    }
+
+    #[test]
+    fn spec_builds_expected_models() {
+        assert_eq!(VariabilitySpec::Calm.build(4).speed(2, 999), 1.0);
+        // hetero speeds cycle over the team.
+        let h = VariabilitySpec::parse("hetero:1,2").unwrap().build(5);
+        assert_eq!(h.speed(0, 0), 1.0);
+        assert_eq!(h.speed(1, 0), 2.0);
+        assert_eq!(h.speed(2, 0), 1.0);
+        assert_eq!(h.speed(4, 0), 1.0);
+        // noise builds the same model as direct construction.
+        let spec = VariabilitySpec::parse("noise:0.3,0.25,7,1000").unwrap();
+        let built = spec.build(4);
+        let direct = NoiseBursts::new(1000, 0.3, 0.25, 7);
+        for tid in 0..4 {
+            for t in [0u64, 500, 1500, 10_000] {
+                assert_eq!(built.speed(tid, t), direct.speed(tid, t));
+            }
+        }
+        // products multiply.
+        let p = VariabilitySpec::parse("hetero:0.5+hetero:0.5").unwrap().build(1);
+        assert_eq!(p.speed(0, 0), 0.25);
+        assert!(VariabilitySpec::parse("calm").unwrap().is_calm());
+        assert!(!spec.is_calm());
+        assert_eq!(format!("{spec}"), "noise:0.3,0.25,7,1000");
     }
 }

@@ -1,33 +1,38 @@
 //! Scenario grids: the cartesian product
-//! `workloads x n x seeds x schedules x threads` that a `BATCH` request
-//! or `uds sweep` invocation expands into individually simulated
-//! scenarios.
+//! `variability x workloads x n x seeds x schedules x threads` that a
+//! `BATCH` request or `uds sweep` invocation expands into individually
+//! simulated scenarios.
 //!
 //! Grammar (one line, whitespace-separated `key=value` pairs, list
-//! values comma-separated):
+//! values comma-separated; duplicate keys are rejected):
 //!
 //! ```text
-//! BATCH schedules=fac2;gss n=1000,10000 [workloads=lognormal,...]
-//!       [threads=4,8] [seeds=0,1] [mean_ns=1000] [h_ns=250] [workers=0]
+//! BATCH schedules=fac2;gss n=1000,10000 [workloads=lognormal;mix:gaussian:uniform,frac=0.2]
+//!       [variability=calm;hetero:1,1,2,4] [threads=4,8] [seeds=0,1]
+//!       [mean_ns=1000] [h_ns=250] [workers=0]
 //! ```
 //!
-//! (The schedules separator is ';' because schedule labels themselves
-//! embed commas, e.g. `dynamic,16`.)
+//! (Schedule, workload and variability labels embed commas, so those
+//! three lists separate on ';'.  For backward compatibility, bare-head
+//! workload lists still split on ',' — see
+//! [`crate::workload::registry::split_list`].)
 //!
 //! `schedules` and `n` are required; everything else defaults.  The
-//! expansion order is fixed (workload-major, threads innermost) so a
-//! grid's scenario ids — and therefore the result stream — are
-//! independent of how many workers execute it.
+//! expansion order is fixed (variability-major, then workload, threads
+//! innermost) so a grid's scenario ids — and therefore the result
+//! stream — are independent of how many workers execute it.
 //!
 //! Schedule labels resolve through the open registry behind
-//! [`ScheduleSpec::parse`], so a grid can name user-defined schedules
-//! (registered in
-//! [`crate::schedules::registry::ScheduleRegistry::global`]) exactly
-//! like builtins; unknown labels fail parsing with `bad_schedule`.
+//! [`ScheduleSpec::parse`] and workload labels through the one behind
+//! [`WorkloadSpec::parse`], so a grid can name user-defined schedules
+//! *and* workloads exactly like builtins; unknown labels fail parsing
+//! with `bad_schedule` / `bad_workload`, malformed variability with
+//! `bad_variability`.
 
 use crate::schedules::ScheduleSpec;
+use crate::sim::VariabilitySpec;
 use crate::util::CodedError;
-use crate::workload::WorkloadClass;
+use crate::workload::{registry as workload_registry, WorkloadClass, WorkloadSpec};
 
 /// Largest accepted iteration count per scenario (bounds one index build).
 pub const MAX_N: u64 = 50_000_000;
@@ -48,7 +53,8 @@ pub struct Scenario {
     /// Position in the grid's fixed expansion order.
     pub id: u64,
     pub schedule: ScheduleSpec,
-    pub workload: WorkloadClass,
+    pub workload: WorkloadSpec,
+    pub variability: VariabilitySpec,
     pub n: u64,
     pub threads: usize,
     pub mean_ns: f64,
@@ -59,7 +65,8 @@ pub struct Scenario {
 /// A parsed, validated scenario grid.
 #[derive(Clone, Debug)]
 pub struct SweepGrid {
-    pub workloads: Vec<WorkloadClass>,
+    pub workloads: Vec<WorkloadSpec>,
+    pub variability: Vec<VariabilitySpec>,
     pub schedules: Vec<ScheduleSpec>,
     pub ns: Vec<u64>,
     pub threads: Vec<u64>,
@@ -83,12 +90,15 @@ fn parse_list<T: std::str::FromStr>(k: &'static str, v: &str) -> Result<Vec<T>, 
 
 impl SweepGrid {
     /// Parse from `(key, value)` pairs — the shared backend of the
-    /// `BATCH` wire line and the `uds sweep` CLI flags.
+    /// `BATCH` wire line and the `uds sweep` CLI flags.  Duplicate keys
+    /// are rejected (`bad_request`): a silently-ignored half of a grid
+    /// is worse than an error.
     pub fn from_pairs<'a>(
         pairs: impl IntoIterator<Item = (&'a str, &'a str)>,
     ) -> Result<Self, CodedError> {
         let mut grid = SweepGrid {
             workloads: Vec::new(),
+            variability: Vec::new(),
             schedules: Vec::new(),
             ns: Vec::new(),
             threads: Vec::new(),
@@ -97,14 +107,32 @@ impl SweepGrid {
             h_ns: 250,
             workers: 0,
         };
+        let mut seen = std::collections::HashSet::new();
         for (k, v) in pairs {
+            if !seen.insert(k.to_string()) {
+                return Err(CodedError::new(
+                    "bad_request",
+                    format!("duplicate key '{k}'"),
+                ));
+            }
             match k {
+                // Workload labels embed commas (gaussian,cv=0.3): ';'
+                // separates, with bare-head ',' lists still accepted.
                 "workloads" => {
-                    for name in v.split(',').filter(|s| !s.trim().is_empty()) {
-                        let class = WorkloadClass::parse(name.trim()).ok_or_else(|| {
-                            CodedError::new("bad_workload", format!("'{name}'"))
+                    for label in workload_registry::split_list(v) {
+                        let spec = WorkloadSpec::parse(&label).map_err(|e| {
+                            CodedError::new("bad_workload", e)
                         })?;
-                        grid.workloads.push(class);
+                        grid.workloads.push(spec);
+                    }
+                }
+                // Variability labels embed commas and '+': ';' separates.
+                "variability" => {
+                    for tok in v.split(';').filter(|s| !s.trim().is_empty()) {
+                        let spec = VariabilitySpec::parse(tok).map_err(|e| {
+                            CodedError::new("bad_variability", e)
+                        })?;
+                        grid.variability.push(spec);
                     }
                 }
                 // Schedule labels embed commas (`dynamic,16`), so the
@@ -165,7 +193,19 @@ impl SweepGrid {
         let join_u64 = |xs: &[u64]| {
             xs.iter().map(u64::to_string).collect::<Vec<_>>().join(",")
         };
-        // ';'-joined: schedule labels embed commas (`dynamic,16`).
+        // ';'-joined lists: these labels embed commas.
+        let workloads = self
+            .workloads
+            .iter()
+            .map(|w| w.label().to_string())
+            .collect::<Vec<_>>()
+            .join(";");
+        let variability = self
+            .variability
+            .iter()
+            .map(VariabilitySpec::label)
+            .collect::<Vec<_>>()
+            .join(";");
         let schedules = self
             .schedules
             .iter()
@@ -173,10 +213,8 @@ impl SweepGrid {
             .collect::<Vec<_>>()
             .join(";");
         format!(
-            "BATCH workloads={} schedules={} n={} threads={} seeds={} \
-mean_ns={} h_ns={} workers={}",
-            self.workloads.iter().map(|w| w.name()).collect::<Vec<_>>().join(","),
-            schedules,
+            "BATCH workloads={workloads} variability={variability} \
+schedules={schedules} n={} threads={} seeds={} mean_ns={} h_ns={} workers={}",
             join_u64(&self.ns),
             join_u64(&self.threads),
             join_u64(&self.seeds),
@@ -188,7 +226,10 @@ mean_ns={} h_ns={} workers={}",
 
     fn apply_defaults_and_validate(&mut self) -> Result<(), CodedError> {
         if self.workloads.is_empty() {
-            self.workloads.push(WorkloadClass::Lognormal);
+            self.workloads.push(WorkloadSpec::from_class(WorkloadClass::Lognormal));
+        }
+        if self.variability.is_empty() {
+            self.variability.push(VariabilitySpec::Calm);
         }
         if self.threads.is_empty() {
             self.threads.push(8);
@@ -240,6 +281,7 @@ mean_ns={} h_ns={} workers={}",
     /// before materialization).
     pub fn size(&self) -> u64 {
         [
+            self.variability.len(),
             self.workloads.len(),
             self.ns.len(),
             self.seeds.len(),
@@ -254,22 +296,25 @@ mean_ns={} h_ns={} workers={}",
     pub fn expand(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.size() as usize);
         let mut id = 0u64;
-        for &workload in &self.workloads {
-            for &n in &self.ns {
-                for &seed in &self.seeds {
-                    for schedule in &self.schedules {
-                        for &threads in &self.threads {
-                            out.push(Scenario {
-                                id,
-                                schedule: schedule.clone(),
-                                workload,
-                                n,
-                                threads: threads as usize,
-                                mean_ns: self.mean_ns,
-                                h_ns: self.h_ns,
-                                seed,
-                            });
-                            id += 1;
+        for variability in &self.variability {
+            for workload in &self.workloads {
+                for &n in &self.ns {
+                    for &seed in &self.seeds {
+                        for schedule in &self.schedules {
+                            for &threads in &self.threads {
+                                out.push(Scenario {
+                                    id,
+                                    schedule: schedule.clone(),
+                                    workload: workload.clone(),
+                                    variability: variability.clone(),
+                                    n,
+                                    threads: threads as usize,
+                                    mean_ns: self.mean_ns,
+                                    h_ns: self.h_ns,
+                                    seed,
+                                });
+                                id += 1;
+                            }
                         }
                     }
                 }
@@ -292,6 +337,7 @@ threads=4,8 seeds=1,2,3 mean_ns=500 h_ns=100 workers=4",
         .unwrap();
         assert_eq!(g.workloads.len(), 2);
         assert_eq!(g.schedules.len(), 2);
+        assert_eq!(g.variability, vec![VariabilitySpec::Calm]);
         assert_eq!(g.size(), 2 * 2 * 2 * 3 * 2);
         assert_eq!(g.expand().len() as u64, g.size());
         assert_eq!(g.mean_ns, 500.0);
@@ -301,7 +347,8 @@ threads=4,8 seeds=1,2,3 mean_ns=500 h_ns=100 workers=4",
     #[test]
     fn defaults_applied() {
         let g = SweepGrid::parse_batch_line("BATCH schedules=fac2 n=100").unwrap();
-        assert_eq!(g.workloads, vec![WorkloadClass::Lognormal]);
+        assert_eq!(g.workloads, vec![WorkloadSpec::from_class(WorkloadClass::Lognormal)]);
+        assert_eq!(g.variability, vec![VariabilitySpec::Calm]);
         assert_eq!(g.threads, vec![8]);
         assert_eq!(g.seeds, vec![0]);
         assert_eq!(g.size(), 1);
@@ -315,6 +362,45 @@ threads=4,8 seeds=1,2,3 mean_ns=500 h_ns=100 workers=4",
         .unwrap();
         assert_eq!(g.schedules.len(), 3);
         assert_eq!(g.schedules[0].label(), "dynamic,16");
+    }
+
+    #[test]
+    fn parameterized_and_composite_workload_labels() {
+        let g = SweepGrid::parse_batch_line(
+            "BATCH schedules=fac2 n=100 \
+workloads=gaussian,mean=5000,cv=0.3;phased:increasing:uniform,0.5;trace:stairs",
+        )
+        .unwrap();
+        assert_eq!(g.workloads.len(), 3);
+        assert_eq!(g.workloads[0].label(), "gaussian,mean=5000,cv=0.3");
+        assert_eq!(g.workloads[1].label(), "phased:increasing:uniform,switch=0.5");
+        assert_eq!(g.workloads[2].label(), "trace:stairs");
+        // Legacy comma-separated bare heads still work alongside.
+        let g2 = SweepGrid::parse_batch_line(
+            "BATCH schedules=fac2 n=100 workloads=uniform,gaussian,cv=0.5",
+        )
+        .unwrap();
+        assert_eq!(g2.workloads.len(), 2);
+        assert_eq!(g2.workloads[1].label(), "gaussian,cv=0.5");
+    }
+
+    #[test]
+    fn variability_is_a_sweep_axis() {
+        let g = SweepGrid::parse_batch_line(
+            "BATCH schedules=fac2 n=100 threads=4 \
+variability=calm;hetero:1,1,2,4;noise:0.1,0.25,7+hetero:2",
+        )
+        .unwrap();
+        assert_eq!(g.variability.len(), 3);
+        assert_eq!(g.variability[1].label(), "hetero:1,1,2,4");
+        assert_eq!(g.size(), 3);
+        let scenarios = g.expand();
+        assert_eq!(scenarios[0].variability, VariabilitySpec::Calm);
+        assert_eq!(scenarios[1].variability.label(), "hetero:1,1,2,4");
+        assert_eq!(
+            scenarios[2].variability.label(),
+            "noise:0.1,0.25,7,200000+hetero:2"
+        );
     }
 
     #[test]
@@ -342,6 +428,36 @@ threads=4,8 seeds=1,2,3 mean_ns=500 h_ns=100 workers=4",
         let err = SweepGrid::parse_batch_line("BATCH schedules=fac2 n=100 workloads=x")
             .unwrap_err();
         assert_eq!(err.code, "bad_workload");
+        let err = SweepGrid::parse_batch_line(
+            "BATCH schedules=fac2 n=100 workloads=gaussian,cv=nope",
+        )
+        .unwrap_err();
+        assert_eq!(err.code, "bad_workload");
+        assert!(err.detail.contains("cv"), "detail preserved: {}", err.detail);
+        let err = SweepGrid::parse_batch_line(
+            "BATCH schedules=fac2 n=100 variability=warp",
+        )
+        .unwrap_err();
+        assert_eq!(err.code, "bad_variability");
+        let err = SweepGrid::parse_batch_line(
+            "BATCH schedules=fac2 n=100 variability=noise:0.5",
+        )
+        .unwrap_err();
+        assert_eq!(err.code, "bad_variability");
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        for line in [
+            "BATCH schedules=fac2 n=100 n=200",
+            "BATCH schedules=fac2 schedules=gss n=100",
+            "BATCH schedules=fac2 n=100 workloads=uniform workloads=gaussian",
+            "BATCH schedules=fac2 n=100 variability=calm variability=calm",
+        ] {
+            let err = SweepGrid::parse_batch_line(line).unwrap_err();
+            assert_eq!(err.code, "bad_request", "{line}");
+            assert!(err.detail.contains("duplicate"), "{line}: {}", err.detail);
+        }
     }
 
     #[test]
@@ -395,10 +511,10 @@ lognormal,bimodal,sawtooth schedules=fac2 n={ns} seeds={seeds}"
             assert_eq!(s.id, i as u64);
         }
         // workload-major, threads innermost.
-        assert_eq!(scenarios[0].workload, WorkloadClass::Uniform);
+        assert_eq!(scenarios[0].workload.label(), "uniform");
         assert_eq!(scenarios[0].threads, 2);
         assert_eq!(scenarios[1].threads, 4);
-        assert_eq!(scenarios[8].workload, WorkloadClass::Gaussian);
+        assert_eq!(scenarios[8].workload.label(), "gaussian");
     }
 
     #[test]
@@ -434,7 +550,8 @@ lognormal,bimodal,sawtooth schedules=fac2 n={ns} seeds={seeds}"
     fn batch_line_roundtrip() {
         let g = SweepGrid::parse_batch_line(
             "BATCH workloads=uniform schedules=dynamic,16;fac2 n=10,20 threads=2 \
-seeds=5 mean_ns=750.5 h_ns=10 workers=2",
+seeds=5 mean_ns=750.5 h_ns=10 workers=2 \
+variability=hetero:1,2;noise:0.1,0.25,3",
         )
         .unwrap();
         let line = g.to_batch_line();
@@ -442,5 +559,15 @@ seeds=5 mean_ns=750.5 h_ns=10 workers=2",
         assert_eq!(g2.to_batch_line(), line);
         assert_eq!(g2.size(), g.size());
         assert_eq!(g2.schedules[0].label(), "dynamic,16");
+        assert_eq!(g2.variability.len(), 2);
+        // Composite workload labels survive the wire roundtrip too.
+        let g3 = SweepGrid::parse_batch_line(
+            "BATCH workloads=mix:gaussian:lognormal,frac=0.25;uniform \
+schedules=fac2 n=50",
+        )
+        .unwrap();
+        let line3 = g3.to_batch_line();
+        assert!(line3.contains("mix:gaussian:lognormal,frac=0.25;uniform"), "{line3}");
+        assert_eq!(SweepGrid::parse_batch_line(&line3).unwrap().to_batch_line(), line3);
     }
 }

@@ -23,8 +23,8 @@ use std::sync::mpsc;
 use crate::coordinator::{LoopRecord, LoopSpec, TeamSpec};
 use crate::eval::report::{ScenarioResult, SweepSummary};
 use crate::service::Service;
-use crate::sim::{simulate_indexed, NoVariability, SimArena, SimConfig};
-use crate::workload::WorkloadClass;
+use crate::sim::{simulate_indexed, SimArena, SimConfig};
+use crate::workload::WorkloadSpec;
 
 pub use grid::{Scenario, SweepGrid, MAX_SCENARIOS, MAX_WORKERS};
 
@@ -49,12 +49,12 @@ impl SweepCounters {
     fn fetch(
         &self,
         svc: &Service,
-        class: WorkloadClass,
+        workload: &WorkloadSpec,
         n: u64,
         mean_ns: f64,
         seed: u64,
     ) -> std::sync::Arc<crate::workload::CostIndex> {
-        let (index, built) = svc.index_for_counted(class, n, mean_ns, seed);
+        let (index, built) = svc.index_for_counted(workload, n, mean_ns, seed);
         if built {
             self.builds.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -71,13 +71,17 @@ fn run_one(
     arena: &mut SimArena,
     counters: &SweepCounters,
 ) -> ScenarioResult {
-    let index = counters.fetch(svc, sc.workload, sc.n, sc.mean_ns, sc.seed);
+    let index = counters.fetch(svc, &sc.workload, sc.n, sc.mean_ns, sc.seed);
+    // Variability scales thread *speeds*, not iteration costs, so it
+    // lives outside the cached CostIndex; building the model per
+    // scenario is O(spec), not O(n).
+    let variability = sc.variability.build(sc.threads);
     let stats = simulate_indexed(
         &LoopSpec::upto(sc.n),
         &TeamSpec::uniform(sc.threads),
         &*sc.schedule.factory(),
         &index,
-        &NoVariability,
+        &*variability,
         &mut LoopRecord::default(),
         &SimConfig { dequeue_overhead_ns: sc.h_ns, trace: false },
         arena,
@@ -85,7 +89,8 @@ fn run_one(
     ScenarioResult {
         id: sc.id,
         schedule: sc.schedule.label(),
-        workload: sc.workload.name().to_string(),
+        workload: sc.workload.label().to_string(),
+        variability: sc.variability.label(),
         n: sc.n,
         threads: sc.threads as u64,
         mean_ns: sc.mean_ns,
@@ -100,13 +105,13 @@ fn run_one(
 }
 
 /// The distinct workload keys of a scenario list, first-seen order.
-fn distinct_workloads(scenarios: &[Scenario]) -> Vec<(WorkloadClass, u64, f64, u64)> {
+fn distinct_workloads(scenarios: &[Scenario]) -> Vec<(WorkloadSpec, u64, f64, u64)> {
     let mut seen = HashSet::new();
     let mut out = Vec::new();
     for sc in scenarios {
-        let key = (sc.workload, sc.n, sc.mean_ns.to_bits(), sc.seed);
+        let key = (sc.workload.clone(), sc.n, sc.mean_ns.to_bits(), sc.seed);
         if seen.insert(key) {
-            out.push((sc.workload, sc.n, sc.mean_ns, sc.seed));
+            out.push((sc.workload.clone(), sc.n, sc.mean_ns, sc.seed));
         }
     }
     out
@@ -149,8 +154,8 @@ pub fn run_sweep_with(
                 if i >= prefetch {
                     break;
                 }
-                let (class, n, mean_ns, seed) = distinct[i];
-                counters.fetch(svc, class, n, mean_ns, seed);
+                let (workload, n, mean_ns, seed) = &distinct[i];
+                counters.fetch(svc, workload, *n, *mean_ns, *seed);
             });
         }
     });
@@ -324,10 +329,50 @@ n=200,400 threads=2 seeds=1,2",
         let scenarios =
             grid("BATCH workloads=uniform,gaussian schedules=fac2 n=500 threads=2");
         // Pollute the global counters with unrelated traffic first.
-        svc.index_for(crate::workload::WorkloadClass::Lognormal, 900, 1000.0, 5);
-        svc.index_for(crate::workload::WorkloadClass::Lognormal, 900, 1000.0, 5);
+        let lognormal = WorkloadSpec::parse("lognormal").unwrap();
+        svc.index_for(&lognormal, 900, 1000.0, 5);
+        svc.index_for(&lognormal, 900, 1000.0, 5);
         let (_, summary) = run_sweep(&svc, &scenarios, 2);
         assert_eq!(summary.index_builds, 2, "only this sweep's builds counted");
         assert_eq!(summary.cache_hits, 2, "only this sweep's hits counted");
+    }
+
+    #[test]
+    fn variability_axis_shares_one_index_and_changes_physics() {
+        let svc = Service::new();
+        // Same workload under three machine models: the CostIndex is
+        // built once (variability is not part of the workload key)...
+        let scenarios = grid(
+            "BATCH workloads=uniform schedules=fac2 n=2000 threads=4 \
+variability=calm;hetero:1,1,2,4;noise:0.3,0.25,7",
+        );
+        assert_eq!(scenarios.len(), 3);
+        let (results, summary) = run_sweep(&svc, &scenarios, 2);
+        assert_eq!(summary.distinct_workloads, 1);
+        assert_eq!(summary.index_builds, 1);
+        // ...and the records carry the variability label.
+        assert_eq!(results[0].variability, "calm");
+        assert_eq!(results[1].variability, "hetero:1,1,2,4");
+        // Non-calm machines simulate different physics.
+        assert_ne!(results[0].makespan_ns, results[1].makespan_ns);
+        assert_ne!(results[0].makespan_ns, results[2].makespan_ns);
+        // Faster-than-nominal threads finish sooner than the calm run.
+        assert!(results[1].makespan_ns < results[0].makespan_ns);
+    }
+
+    #[test]
+    fn composite_workloads_sweep_deterministically() {
+        let scenarios = grid(
+            "BATCH workloads=phased:increasing:uniform,0.5;mix:gaussian:lognormal \
+schedules=fac2;gss n=700 threads=3 seeds=1 variability=calm;hetero:1,2",
+        );
+        assert_eq!(scenarios.len(), 8);
+        let (one, _) = run_sweep(&Service::new(), &scenarios, 1);
+        let (eight, _) = run_sweep(&Service::new(), &scenarios, 8);
+        let lines = |rs: &[crate::eval::report::ScenarioResult]| {
+            rs.iter().map(|r| r.json_line()).collect::<Vec<_>>()
+        };
+        assert_eq!(lines(&one), lines(&eight));
+        assert_eq!(one[0].workload, "phased:increasing:uniform,switch=0.5");
     }
 }

@@ -1,0 +1,213 @@
+//! Composite and nonstationary cost models — the open half of the
+//! workload namespace (see [`crate::workload::registry`]).
+//!
+//! The companion evaluation's eight [`crate::workload::WorkloadClass`]
+//! shapes are all *stationary*: one distribution over the whole
+//! iteration space.  Real loops blend populations (branchy kernels),
+//! change regime mid-loop (adaptive refinement kicking in), or carry
+//! periodic interference (a co-scheduled phase touching every k-th
+//! iteration).  These models build those shapes out of any two base
+//! models while preserving the property the whole simulator stack
+//! relies on: `cost_ns(i)` is a pure function of `(seed, i)`, so the
+//! prefix-sum [`crate::workload::CostIndex`] fast path (and with it the
+//! zero-alloc simulator loop) works for every composite exactly as it
+//! does for the builtins.
+
+use crate::util::rng::splitmix64;
+use crate::workload::cost_model::CostModel;
+
+/// Derive a decorrelated sub-stream seed for component `k` of a
+/// composite workload, so `mix:gaussian:gaussian` still blends two
+/// *different* populations.
+pub fn sub_seed(seed: u64, k: u64) -> u64 {
+    splitmix64(seed ^ (k + 1).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+/// Uniform in `[0, 1)` as a pure function of `(seed, i)` — the
+/// stateless twin of `Pcg::f64` used for per-iteration population
+/// picks.
+#[inline]
+fn unit_f64(seed: u64, i: u64) -> f64 {
+    let z = splitmix64(seed ^ i.wrapping_mul(0x9E3779B97F4A7C15));
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Two-population blend: iteration `i` draws its cost from `b` with
+/// probability `frac_b` (decided by a pure `(seed, i)` hash), from `a`
+/// otherwise.  `mix:<a>:<b>[,frac=F]` in the registry grammar.
+pub struct MixCost {
+    n: u64,
+    a: Box<dyn CostModel>,
+    b: Box<dyn CostModel>,
+    frac_b: f64,
+    seed: u64,
+}
+
+impl MixCost {
+    pub fn new(
+        n: u64,
+        a: Box<dyn CostModel>,
+        b: Box<dyn CostModel>,
+        frac_b: f64,
+        seed: u64,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&frac_b));
+        assert!(a.len() >= n && b.len() >= n, "sub-models must cover 0..n");
+        Self { n, a, b, frac_b, seed }
+    }
+}
+
+impl CostModel for MixCost {
+    fn cost_ns(&self, i: u64) -> u64 {
+        if unit_f64(self.seed, i) < self.frac_b {
+            self.b.cost_ns(i)
+        } else {
+            self.a.cost_ns(i)
+        }
+    }
+
+    fn len(&self) -> u64 {
+        self.n
+    }
+}
+
+/// Mid-loop regime change: iterations before `switch_at` cost like `a`,
+/// the rest like `b`.  `phased:<a>:<b>[,switch=F]` in the registry
+/// grammar (`switch_at = round(F * n)`).
+pub struct PhasedCost {
+    n: u64,
+    switch_at: u64,
+    a: Box<dyn CostModel>,
+    b: Box<dyn CostModel>,
+}
+
+impl PhasedCost {
+    pub fn new(n: u64, switch_at: u64, a: Box<dyn CostModel>, b: Box<dyn CostModel>) -> Self {
+        assert!(switch_at <= n);
+        assert!(a.len() >= n && b.len() >= n, "sub-models must cover 0..n");
+        Self { n, switch_at, a, b }
+    }
+}
+
+impl CostModel for PhasedCost {
+    fn cost_ns(&self, i: u64) -> u64 {
+        if i < self.switch_at {
+            self.a.cost_ns(i)
+        } else {
+            self.b.cost_ns(i)
+        }
+    }
+
+    fn len(&self) -> u64 {
+        self.n
+    }
+}
+
+/// Periodic spikes on top of a base model: within every `period`
+/// iterations, the first `burst_len` cost `amp` times their base cost.
+/// `burst:<base>[,period=U][,amp=F]` in the registry grammar
+/// (`burst_len = max(1, period / 8)`).
+pub struct BurstCost {
+    n: u64,
+    base: Box<dyn CostModel>,
+    period: u64,
+    burst_len: u64,
+    amp: f64,
+}
+
+impl BurstCost {
+    pub fn new(n: u64, base: Box<dyn CostModel>, period: u64, amp: f64) -> Self {
+        assert!(period >= 1);
+        assert!(amp.is_finite() && amp > 0.0);
+        assert!(base.len() >= n, "base model must cover 0..n");
+        Self { n, base, period, burst_len: (period / 8).max(1), amp }
+    }
+}
+
+impl CostModel for BurstCost {
+    fn cost_ns(&self, i: u64) -> u64 {
+        let c = self.base.cost_ns(i);
+        if i % self.period < self.burst_len {
+            ((c as f64) * self.amp).round().max(1.0) as u64
+        } else {
+            c
+        }
+    }
+
+    fn len(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::cost_model::{Dist, SyntheticCost};
+
+    fn base(n: u64, mean: f64, seed: u64) -> Box<dyn CostModel> {
+        Box::new(SyntheticCost::new(n, mean, Dist::Constant, seed))
+    }
+
+    fn noisy(n: u64, mean: f64, seed: u64) -> Box<dyn CostModel> {
+        Box::new(SyntheticCost::new(n, mean, Dist::Lognormal { sigma: 1.0 }, seed))
+    }
+
+    #[test]
+    fn mix_blends_two_populations() {
+        let n = 20_000;
+        let m = MixCost::new(n, base(n, 100.0, 1), base(n, 1_000.0, 2), 0.25, 9);
+        let heavy = (0..n).filter(|&i| m.cost_ns(i) == 1_000).count();
+        let frac = heavy as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "heavy fraction {frac}");
+        // Pure (seed, i): random access equals sequential.
+        let seq: Vec<u64> = (0..100).map(|i| m.cost_ns(i)).collect();
+        for &i in &[99u64, 0, 42, 7] {
+            assert_eq!(m.cost_ns(i), seq[i as usize]);
+        }
+    }
+
+    #[test]
+    fn mix_extremes_degenerate_to_components() {
+        let n = 500;
+        let all_a = MixCost::new(n, base(n, 100.0, 1), base(n, 900.0, 2), 0.0, 3);
+        assert!((0..n).all(|i| all_a.cost_ns(i) == 100));
+        let all_b = MixCost::new(n, base(n, 100.0, 1), base(n, 900.0, 2), 1.0, 3);
+        assert!((0..n).all(|i| all_b.cost_ns(i) == 900));
+    }
+
+    #[test]
+    fn phased_switches_regime_exactly_once() {
+        let n = 1_000;
+        let m = PhasedCost::new(n, 400, base(n, 50.0, 1), base(n, 500.0, 2));
+        assert!((0..400).all(|i| m.cost_ns(i) == 50));
+        assert!((400..n).all(|i| m.cost_ns(i) == 500));
+    }
+
+    #[test]
+    fn burst_amplifies_periodically() {
+        let n = 1_000;
+        let m = BurstCost::new(n, base(n, 100.0, 1), 100, 8.0);
+        // burst_len = 100/8 = 12 amplified iterations per period.
+        for i in 0..n {
+            let want = if i % 100 < 12 { 800 } else { 100 };
+            assert_eq!(m.cost_ns(i), want, "i={i}");
+        }
+    }
+
+    #[test]
+    fn composites_are_deterministic_in_seed() {
+        let n = 2_000;
+        let a1 = MixCost::new(n, noisy(n, 300.0, 1), noisy(n, 300.0, 2), 0.5, 7);
+        let a2 = MixCost::new(n, noisy(n, 300.0, 1), noisy(n, 300.0, 2), 0.5, 7);
+        let b = MixCost::new(n, noisy(n, 300.0, 1), noisy(n, 300.0, 2), 0.5, 8);
+        assert_eq!(a1.materialize(), a2.materialize());
+        assert_ne!(a1.materialize(), b.materialize());
+    }
+
+    #[test]
+    fn sub_seed_decorrelates_components() {
+        let s = 42;
+        assert_ne!(sub_seed(s, 0), sub_seed(s, 1));
+        assert_ne!(sub_seed(s, 0), s);
+    }
+}

@@ -7,12 +7,23 @@
 //! cost of iteration `i` is a pure function of `(seed, i)`, so simulator
 //! runs, real runs and property tests all observe the same workload
 //! regardless of scheduling order.
+//!
+//! Workload *names* live in one open namespace, the
+//! [`registry::WorkloadRegistry`]: the eight [`WorkloadClass`] builtins
+//! self-register there, composite/nonstationary heads
+//! (`mix:`, `phased:`, `burst:`, `trace:` — see [`composite`]) join the
+//! same map, and [`WorkloadSpec::parse`] resolves any registered label
+//! for the CLI, sweep grids and the `BATCH` wire protocol.
 
+pub mod composite;
 pub mod cost_index;
 pub mod cost_model;
+pub mod registry;
 
+pub use composite::{BurstCost, MixCost, PhasedCost};
 pub use cost_index::CostIndex;
 pub use cost_model::{CostModel, Dist, SyntheticCost, TraceCost};
+pub use registry::{WorkloadRegistry, WorkloadSpec};
 
 
 /// The named workload classes the evaluation sweeps (E2/E3).  Parameters

@@ -1,0 +1,1243 @@
+//! The open workload registry — one namespace for every workload name.
+//!
+//! PR 4 opened the *schedule* namespace
+//! ([`crate::schedules::registry::ScheduleRegistry`]); this module is
+//! the symmetric move for workloads.  The evaluation's scenario space
+//! used to be the closed 8-variant [`WorkloadClass`] enum; the
+//! companion study ("OpenMP Loop Scheduling Revisited") shows schedule
+//! rankings *flip* with workload shape, so a sweep surface that cannot
+//! name new shapes cannot answer the paper's central question.  Here a
+//! [`WorkloadRegistry`] maps canonical heads (plus aliases) to
+//! parameterized [`CostModel`] constructors with typed parameter
+//! descriptors; every builtin class self-registers, and composite /
+//! nonstationary heads join the same namespace:
+//!
+//! ```text
+//! label    := head (":" component)* ("," param)*
+//! param    := name "=" value | value          ; positional fills in order
+//! head     := uniform | increasing | decreasing | gaussian | exponential
+//!           | lognormal | bimodal | sawtooth  ; the 8 builtin classes
+//!           | mix    ":" a ":" b   [,frac=F]  ; two-population blend
+//!           | phased ":" a ":" b   [,switch=F]; mid-loop regime change
+//!           | burst  ":" base [,period=U][,amp=F] ; periodic spikes
+//!           | trace  ":" name                 ; registered-trace replay
+//!           | <any user-registered head>
+//! ```
+//!
+//! Labels are **lossless**: [`WorkloadSpec::label`] is a canonical
+//! fixed point (`gaussian,mean=5000,cv=0.3`,
+//! `phased:increasing:uniform,switch=0.5`) that parses back to an equal
+//! spec, so sweep reports and cache keys identify workloads
+//! unambiguously.  Every constructor keeps the contract the simulator
+//! stack relies on: `cost_ns(i)` is a pure function of `(seed, i)`, so
+//! the prefix-sum [`CostIndex`] fast path and the zero-alloc simulator
+//! loop work for user-defined heads exactly as for builtins.
+//!
+//! [`WorkloadSpec::parse`] resolves against [`WorkloadRegistry::global`]
+//! — registering a head makes it immediately sweepable by name from the
+//! CLI (`uds run`/`uds sweep --workloads`), the `BATCH` wire protocol,
+//! and local sweep grids; unknown or malformed labels answer
+//! `ERR bad_workload` with the parse detail preserved.
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::workload::composite::{sub_seed, BurstCost, MixCost, PhasedCost};
+use crate::workload::cost_model::{CostModel, Dist, SyntheticCost, TraceCost};
+use crate::workload::{CostIndex, WorkloadClass};
+
+/// Geometry used to probe constructors at parse time (value-level
+/// rejections must surface in `parse`, never in a later build).
+const PROBE_N: u64 = 64;
+
+/// The type of one workload parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    U64,
+    F64,
+}
+
+/// A typed, named workload parameter.  All workload parameters are
+/// optional — defaults live in the constructor; `default` is the
+/// human-oriented description printed by `uds list-workloads`.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamSpec {
+    pub name: &'static str,
+    pub kind: ParamKind,
+    pub default: &'static str,
+}
+
+/// One parsed parameter value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ParamValue {
+    U64(u64),
+    F64(f64),
+}
+
+impl ParamValue {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            ParamValue::U64(v) => Some(*v),
+            ParamValue::F64(_) => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ParamValue::U64(v) => Some(*v as f64),
+            ParamValue::F64(v) => Some(*v),
+        }
+    }
+
+    /// Canonical rendering (u64 digits; f64 shortest-roundtrip).
+    fn render(&self) -> String {
+        match self {
+            ParamValue::U64(v) => v.to_string(),
+            ParamValue::F64(v) => format!("{v}"),
+        }
+    }
+}
+
+/// How a ':'-separated component of a label is interpreted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubKind {
+    /// A simple (non-composite) workload head resolved in the registry.
+    Workload,
+    /// An opaque token interpreted by the constructor (e.g. a trace
+    /// name).
+    Token,
+}
+
+/// Descriptor of one ':'-separated label component.
+#[derive(Clone, Copy, Debug)]
+pub struct SubSpec {
+    pub name: &'static str,
+    pub kind: SubKind,
+}
+
+/// A resolved label component.
+#[derive(Clone, Debug)]
+pub enum SubValue {
+    Workload(WorkloadSpec),
+    Token(String),
+}
+
+/// Everything a workload constructor sees: the scenario geometry plus
+/// the label's resolved components and parameters.
+pub struct BuildCtx<'a> {
+    /// Iteration count the model must cover.
+    pub n: u64,
+    /// The grid/scenario mean cost (heads with a `mean` parameter may
+    /// override it).
+    pub mean_ns: f64,
+    /// Workload RNG seed.
+    pub seed: u64,
+    subs: &'a [SubValue],
+    params: &'a [Option<ParamValue>],
+    registry: &'a WorkloadRegistry,
+}
+
+impl BuildCtx<'_> {
+    /// The provided value of parameter `i`, if any.
+    pub fn param(&self, i: usize) -> Option<ParamValue> {
+        self.params.get(i).copied().flatten()
+    }
+
+    pub fn f64_param(&self, i: usize, default: f64) -> f64 {
+        self.param(i).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn u64_param(&self, i: usize, default: u64) -> u64 {
+        self.param(i).and_then(|v| v.as_u64()).unwrap_or(default)
+    }
+
+    /// The effective mean cost for heads whose parameter 0 is `mean`
+    /// (the builtin convention): the override if given, else the grid
+    /// mean — validated finite and positive.
+    pub fn mean(&self) -> Result<f64, String> {
+        let m = self.f64_param(0, self.mean_ns);
+        if m.is_finite() && m > 0.0 {
+            Ok(m)
+        } else {
+            Err(format!("mean must be finite and > 0, got {m}"))
+        }
+    }
+
+    /// Build component `k` as a cost model covering `0..n`, with a
+    /// decorrelated per-component seed.
+    pub fn sub_model(&self, k: usize) -> Result<Box<dyn CostModel>, String> {
+        match self.subs.get(k) {
+            Some(SubValue::Workload(spec)) => self.registry.build_model(
+                spec.label(),
+                self.n,
+                self.mean_ns,
+                sub_seed(self.seed, k as u64 + 1),
+            ),
+            Some(SubValue::Token(t)) => {
+                Err(format!("component '{t}' is not a workload"))
+            }
+            None => Err(format!("missing component {k}")),
+        }
+    }
+
+    /// The raw token of component `k` (for [`SubKind::Token`] heads).
+    pub fn sub_token(&self, k: usize) -> Result<&str, String> {
+        match self.subs.get(k) {
+            Some(SubValue::Token(t)) => Ok(t),
+            Some(SubValue::Workload(w)) => Ok(w.label()),
+            None => Err(format!("missing component {k}")),
+        }
+    }
+
+    /// The registered trace named `name` (for `trace:`-style heads).
+    pub fn trace(&self, name: &str) -> Option<Arc<Vec<u64>>> {
+        self.registry.trace(name)
+    }
+}
+
+/// Constructs the cost model of one head from a resolved label.
+pub type WorkloadCtor =
+    dyn Fn(&BuildCtx) -> Result<Box<dyn CostModel>, String> + Send + Sync;
+
+/// One named registry entry: canonical name, aliases, component and
+/// parameter descriptors, and the constructor.
+pub struct Registration {
+    name: String,
+    aliases: Vec<String>,
+    subs: Vec<SubSpec>,
+    params: Vec<ParamSpec>,
+    summary: String,
+    ctor: Arc<WorkloadCtor>,
+}
+
+impl Registration {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn aliases(&self) -> &[String] {
+        &self.aliases
+    }
+
+    pub fn subs(&self) -> &[SubSpec] {
+        &self.subs
+    }
+
+    pub fn params(&self) -> &[ParamSpec] {
+        &self.params
+    }
+
+    pub fn summary(&self) -> &str {
+        &self.summary
+    }
+
+    /// Whether this head takes ':'-separated components (i.e. is
+    /// composite).
+    pub fn is_composite(&self) -> bool {
+        !self.subs.is_empty()
+    }
+
+    /// `head:<a>:<b>[,p=default]` usage string for `uds list-workloads`
+    /// and docs.
+    pub fn signature(&self) -> String {
+        let mut s = self.name.clone();
+        for sub in &self.subs {
+            s.push_str(":<");
+            s.push_str(sub.name);
+            s.push('>');
+        }
+        for p in &self.params {
+            s.push_str("[,");
+            s.push_str(p.name);
+            s.push('=');
+            s.push_str(p.default);
+            s.push(']');
+        }
+        s
+    }
+}
+
+/// Builder for a [`Registration`] — see [`registration`].
+pub struct RegistrationBuilder {
+    name: String,
+    aliases: Vec<String>,
+    subs: Vec<SubSpec>,
+    params: Vec<ParamSpec>,
+    summary: String,
+}
+
+/// Start a [`Registration`] for `name`.
+pub fn registration(name: impl Into<String>) -> RegistrationBuilder {
+    RegistrationBuilder {
+        name: name.into(),
+        aliases: Vec::new(),
+        subs: Vec::new(),
+        params: Vec::new(),
+        summary: String::new(),
+    }
+}
+
+impl RegistrationBuilder {
+    pub fn alias(mut self, a: &str) -> Self {
+        self.aliases.push(a.to_string());
+        self
+    }
+
+    /// Append a ':'-separated component resolved as a simple workload.
+    pub fn sub(mut self, name: &'static str) -> Self {
+        self.subs.push(SubSpec { name, kind: SubKind::Workload });
+        self
+    }
+
+    /// Append a ':'-separated component passed to the constructor as an
+    /// opaque token (e.g. a trace name).
+    pub fn token_sub(mut self, name: &'static str) -> Self {
+        self.subs.push(SubSpec { name, kind: SubKind::Token });
+        self
+    }
+
+    /// Append a named parameter (all workload parameters are optional;
+    /// `default` is the human-oriented description of the default).
+    pub fn param(mut self, name: &'static str, kind: ParamKind, default: &'static str) -> Self {
+        self.params.push(ParamSpec { name, kind, default });
+        self
+    }
+
+    pub fn summary(mut self, s: impl Into<String>) -> Self {
+        self.summary = s.into();
+        self
+    }
+
+    /// Finish with the constructor.
+    pub fn build<F>(self, ctor: F) -> Registration
+    where
+        F: Fn(&BuildCtx) -> Result<Box<dyn CostModel>, String> + Send + Sync + 'static,
+    {
+        Registration {
+            name: self.name,
+            aliases: self.aliases,
+            subs: self.subs,
+            params: self.params,
+            summary: self.summary,
+            ctor: Arc::new(ctor),
+        }
+    }
+}
+
+/// A parsed workload description, carried as its canonical lossless
+/// label.  `Eq`/`Hash` are label equality, which is exactly the cache /
+/// dedup identity the sweep engine and the service need.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct WorkloadSpec {
+    label: String,
+}
+
+impl WorkloadSpec {
+    /// Parse a workload label through [`WorkloadRegistry::global`].
+    /// Unknown heads, malformed or out-of-range parameters and unknown
+    /// components are all rejected here — never deferred to build time.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        WorkloadRegistry::global().parse(s)
+    }
+
+    /// The canonical lossless label: a fixed point of
+    /// `parse(..).label()`.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// The spec of a builtin [`WorkloadClass`] (bare canonical head).
+    pub fn from_class(class: WorkloadClass) -> Self {
+        Self { label: class.name().to_string() }
+    }
+
+    /// Instantiate against [`WorkloadRegistry::global`].
+    ///
+    /// # Panics
+    ///
+    /// Panics if the label does not resolve in the global registry.
+    /// Specs from [`WorkloadSpec::parse`] always resolve there (global
+    /// entries are never removed); specs parsed from an *instance*
+    /// registry should build through
+    /// [`WorkloadRegistry::build_model`] on that instance instead.
+    pub fn model(&self, n: u64, mean_ns: f64, seed: u64) -> Box<dyn CostModel> {
+        WorkloadRegistry::global()
+            .build_model(&self.label, n, mean_ns, seed)
+            .unwrap_or_else(|e| panic!("registered workload '{}': {e}", self.label))
+    }
+
+    /// Instantiate and build the prefix-sum [`CostIndex`] in one pass —
+    /// the form the simulator hot path consumes.
+    pub fn index(&self, n: u64, mean_ns: f64, seed: u64) -> CostIndex {
+        CostIndex::build(&*self.model(n, mean_ns, seed))
+    }
+}
+
+impl From<WorkloadClass> for WorkloadSpec {
+    fn from(class: WorkloadClass) -> Self {
+        Self::from_class(class)
+    }
+}
+
+impl std::fmt::Display for WorkloadSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label)
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Every head token (canonical names and aliases, lowercase) →
+    /// index into `order`.
+    by_head: HashMap<String, usize>,
+    /// Registration order — fixes listing order.
+    order: Vec<Arc<Registration>>,
+}
+
+/// The workload-name registry: a concurrent map from labels to
+/// parameterized cost-model constructors, plus the named-trace table
+/// behind `trace:<name>` heads.  See the module docs.
+pub struct WorkloadRegistry {
+    inner: RwLock<Inner>,
+    traces: RwLock<HashMap<String, Arc<Vec<u64>>>>,
+}
+
+impl Default for WorkloadRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkloadRegistry {
+    /// An empty registry (no builtins) — for scoped embedding and tests.
+    pub fn new() -> Self {
+        Self {
+            inner: RwLock::new(Inner::default()),
+            traces: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// A registry pre-populated with the 8 builtin classes, the
+    /// composite heads (`mix`, `phased`, `burst`, `trace`) and the
+    /// builtin demo traces.
+    pub fn with_builtins() -> Self {
+        let reg = Self::new();
+        reg.install_builtins();
+        reg
+    }
+
+    /// The process-wide namespace behind [`WorkloadSpec::parse`]: the
+    /// CLI, the TCP service (single jobs and `BATCH`) and sweep grids
+    /// all resolve workload labels here.
+    pub fn global() -> &'static WorkloadRegistry {
+        static GLOBAL: OnceLock<WorkloadRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(WorkloadRegistry::with_builtins)
+    }
+
+    /// Register an entry.  Canonical names and aliases share one
+    /// namespace; a taken head is an error, and entries are never
+    /// removed.
+    pub fn register(&self, reg: Registration) -> Result<(), String> {
+        validate_name(&reg.name)?;
+        for a in &reg.aliases {
+            validate_name(a)?;
+        }
+        let mut heads = Vec::with_capacity(1 + reg.aliases.len());
+        heads.push(reg.name.clone());
+        heads.extend(reg.aliases.iter().cloned());
+        let mut inner = self.inner.write().unwrap();
+        for h in &heads {
+            if inner.by_head.contains_key(h) {
+                return Err(format!("workload name '{h}' is already registered"));
+            }
+        }
+        let idx = inner.order.len();
+        inner.order.push(Arc::new(reg));
+        for h in heads {
+            inner.by_head.insert(h, idx);
+        }
+        Ok(())
+    }
+
+    /// Register a named cost trace, replayable as `trace:<name>`
+    /// (tiled cyclically over the scenario's iteration space).  Costs
+    /// must be nonempty and >= 1ns each; a taken name is an error.
+    pub fn register_trace(&self, name: &str, costs: Vec<u64>) -> Result<(), String> {
+        validate_name(name)?;
+        if costs.is_empty() {
+            return Err(format!("trace '{name}': costs must be non-empty"));
+        }
+        if costs.iter().any(|&c| c == 0) {
+            return Err(format!("trace '{name}': costs must be >= 1ns"));
+        }
+        let mut traces = self.traces.write().unwrap();
+        if traces.contains_key(name) {
+            return Err(format!("trace '{name}' is already registered"));
+        }
+        traces.insert(name.to_string(), Arc::new(costs));
+        Ok(())
+    }
+
+    /// The registered trace named `name`.
+    pub fn trace(&self, name: &str) -> Option<Arc<Vec<u64>>> {
+        self.traces.read().unwrap().get(name).cloned()
+    }
+
+    /// Sorted names of the registered traces.
+    pub fn trace_names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.traces.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Whether `head` (canonical name or alias, case-insensitive)
+    /// resolves.
+    pub fn contains(&self, head: &str) -> bool {
+        self.inner
+            .read()
+            .unwrap()
+            .by_head
+            .contains_key(&head.to_ascii_lowercase())
+    }
+
+    /// Sorted canonical names.
+    pub fn names(&self) -> Vec<String> {
+        let inner = self.inner.read().unwrap();
+        let mut v: Vec<String> = inner.order.iter().map(|r| r.name.clone()).collect();
+        v.sort();
+        v
+    }
+
+    /// Every entry, registration order.
+    pub fn entries(&self) -> Vec<Arc<Registration>> {
+        self.inner.read().unwrap().order.clone()
+    }
+
+    fn entry_for(&self, head: &str) -> Option<Arc<Registration>> {
+        let inner = self.inner.read().unwrap();
+        inner.by_head.get(head).map(|&i| inner.order[i].clone())
+    }
+
+    /// Resolve a label into its entry, components, parameter values and
+    /// canonical rendering.
+    #[allow(clippy::type_complexity)]
+    fn canonicalize(
+        &self,
+        s: &str,
+    ) -> Result<(Arc<Registration>, Vec<SubValue>, Vec<Option<ParamValue>>, String), String>
+    {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err("empty workload label".into());
+        }
+        let mut tokens = s.split(',');
+        let path = tokens.next().unwrap_or_default().trim();
+        let ptoks: Vec<&str> = tokens.collect();
+        let mut comps = path.split(':');
+        let head = comps.next().unwrap_or_default().trim().to_ascii_lowercase();
+        let sub_toks: Vec<String> =
+            comps.map(|c| c.trim().to_ascii_lowercase()).collect();
+        let entry = self
+            .entry_for(&head)
+            .ok_or_else(|| format!("unknown workload '{s}'"))?;
+        if sub_toks.len() != entry.subs.len() {
+            return Err(format!(
+                "'{s}': '{}' takes {} ':'-separated component(s), got {}",
+                entry.name,
+                entry.subs.len(),
+                sub_toks.len()
+            ));
+        }
+        let mut subs = Vec::with_capacity(sub_toks.len());
+        for (tok, spec) in sub_toks.iter().zip(&entry.subs) {
+            if tok.is_empty() {
+                return Err(format!("'{s}': empty '{}' component", spec.name));
+            }
+            match spec.kind {
+                SubKind::Workload => {
+                    let sub_entry = self.entry_for(tok).ok_or_else(|| {
+                        format!("'{s}': unknown component workload '{tok}'")
+                    })?;
+                    if sub_entry.is_composite() {
+                        return Err(format!(
+                            "'{s}': composite workloads cannot nest \
+('{}' is itself composite)",
+                            sub_entry.name
+                        ));
+                    }
+                    subs.push(SubValue::Workload(WorkloadSpec {
+                        label: sub_entry.name.clone(),
+                    }));
+                }
+                SubKind::Token => {
+                    validate_name(tok).map_err(|e| format!("'{s}': {e}"))?;
+                    subs.push(SubValue::Token(tok.clone()));
+                }
+            }
+        }
+        let params = parse_params(s, &entry.params, &ptoks)?;
+        let label = canonical_label(&entry, &subs, &params);
+        Ok((entry, subs, params, label))
+    }
+
+    /// Resolve a label into a [`WorkloadSpec`].  The constructor is
+    /// probed against a tiny dummy geometry so value-level rejections
+    /// (out-of-range `frac`, unknown trace, ...) surface here — a
+    /// parse-accepted label must always build.
+    pub fn parse(&self, s: &str) -> Result<WorkloadSpec, String> {
+        let (entry, subs, params, label) = self.canonicalize(s)?;
+        let ctx = BuildCtx {
+            n: PROBE_N,
+            mean_ns: 1000.0,
+            seed: 0,
+            subs: &subs,
+            params: &params,
+            registry: self,
+        };
+        entry.ctor.as_ref()(&ctx).map_err(|e| format!("'{}': {e}", s.trim()))?;
+        Ok(WorkloadSpec { label })
+    }
+
+    /// Instantiate a label as a concrete cost model covering `0..n`.
+    pub fn build_model(
+        &self,
+        label: &str,
+        n: u64,
+        mean_ns: f64,
+        seed: u64,
+    ) -> Result<Box<dyn CostModel>, String> {
+        let (entry, subs, params, _) = self.canonicalize(label)?;
+        let ctx =
+            BuildCtx { n, mean_ns, seed, subs: &subs, params: &params, registry: self };
+        entry.ctor.as_ref()(&ctx).map_err(|e| format!("'{label}': {e}"))
+    }
+
+    /// Register the 8 builtin classes, the composite heads and the demo
+    /// traces.  Bare builtin labels are constructor-identical to
+    /// [`WorkloadClass::model`], so the legacy enum and the registry
+    /// name the same workloads.
+    fn install_builtins(&self) {
+        let reg = |r: Registration| {
+            self.register(r).expect("builtin workload registration");
+        };
+
+        reg(registration("uniform")
+            .param("mean", ParamKind::F64, "grid mean_ns")
+            .summary("identical iterations (matrix ops, regular stencils)")
+            .build(|ctx| {
+                Ok(Box::new(SyntheticCost::new(
+                    ctx.n,
+                    ctx.mean()?,
+                    Dist::Constant,
+                    ctx.seed,
+                )))
+            }));
+
+        reg(registration("increasing")
+            .param("mean", ParamKind::F64, "grid mean_ns")
+            .summary("linearly increasing cost (triangular loops, Mandelbrot rows)")
+            .build(|ctx| {
+                Ok(Box::new(SyntheticCost::new(
+                    ctx.n,
+                    ctx.mean()?,
+                    Dist::Linear { rising: true },
+                    ctx.seed,
+                )))
+            }));
+
+        reg(registration("decreasing")
+            .param("mean", ParamKind::F64, "grid mean_ns")
+            .summary("linearly decreasing cost")
+            .build(|ctx| {
+                Ok(Box::new(SyntheticCost::new(
+                    ctx.n,
+                    ctx.mean()?,
+                    Dist::Linear { rising: false },
+                    ctx.seed,
+                )))
+            }));
+
+        reg(registration("gaussian")
+            .param("mean", ParamKind::F64, "grid mean_ns")
+            .param("cv", ParamKind::F64, "0.3")
+            .summary("normal around the mean with coefficient of variation cv")
+            .build(|ctx| {
+                let cv = ctx.f64_param(1, 0.3);
+                if !cv.is_finite() || cv < 0.0 {
+                    return Err(format!("cv must be finite and >= 0, got {cv}"));
+                }
+                Ok(Box::new(SyntheticCost::new(
+                    ctx.n,
+                    ctx.mean()?,
+                    Dist::Gaussian { cv },
+                    ctx.seed,
+                )))
+            }));
+
+        reg(registration("exponential")
+            .param("mean", ParamKind::F64, "grid mean_ns")
+            .summary("exponential (many cheap, few expensive — adaptive mesh codes)")
+            .build(|ctx| {
+                Ok(Box::new(SyntheticCost::new(
+                    ctx.n,
+                    ctx.mean()?,
+                    Dist::Exponential,
+                    ctx.seed,
+                )))
+            }));
+
+        reg(registration("lognormal")
+            .param("mean", ParamKind::F64, "grid mean_ns")
+            .param("sigma", ParamKind::F64, "1")
+            .summary("lognormal heavy tail with log-stddev sigma (N-body leaf costs)")
+            .build(|ctx| {
+                let sigma = ctx.f64_param(1, 1.0);
+                if !sigma.is_finite() || sigma < 0.0 {
+                    return Err(format!("sigma must be finite and >= 0, got {sigma}"));
+                }
+                Ok(Box::new(SyntheticCost::new(
+                    ctx.n,
+                    ctx.mean()?,
+                    Dist::Lognormal { sigma },
+                    ctx.seed,
+                )))
+            }));
+
+        reg(registration("bimodal")
+            .param("mean", ParamKind::F64, "grid mean_ns")
+            .param("frac", ParamKind::F64, "0.1")
+            .param("ratio", ParamKind::F64, "10")
+            .summary("frac of iterations cost ratio x the rest (branchy kernels)")
+            .build(|ctx| {
+                let frac = ctx.f64_param(1, 0.1);
+                let ratio = ctx.f64_param(2, 10.0);
+                if !frac.is_finite() || !(0.0..=1.0).contains(&frac) {
+                    return Err(format!("frac must be in [0, 1], got {frac}"));
+                }
+                if !ratio.is_finite() || ratio <= 0.0 {
+                    return Err(format!("ratio must be finite and > 0, got {ratio}"));
+                }
+                Ok(Box::new(SyntheticCost::new(
+                    ctx.n,
+                    ctx.mean()?,
+                    Dist::Bimodal { frac_heavy: frac, ratio },
+                    ctx.seed,
+                )))
+            }));
+
+        reg(registration("sawtooth")
+            .param("mean", ParamKind::F64, "grid mean_ns")
+            .param("period", ParamKind::U64, "max(n/16, 2)")
+            .summary("periodic ramp with the given period (wavefront sweeps)")
+            .build(|ctx| {
+                let period = ctx.u64_param(1, (ctx.n / 16).max(2));
+                if period == 0 {
+                    return Err("period must be >= 1".into());
+                }
+                Ok(Box::new(SyntheticCost::new(
+                    ctx.n,
+                    ctx.mean()?,
+                    Dist::Sawtooth { period },
+                    ctx.seed,
+                )))
+            }));
+
+        reg(registration("mix")
+            .sub("a")
+            .sub("b")
+            .param("frac", ParamKind::F64, "0.5")
+            .summary("two-population blend: each iteration draws from <b> with probability frac")
+            .build(|ctx| {
+                let frac = ctx.f64_param(0, 0.5);
+                if !frac.is_finite() || !(0.0..=1.0).contains(&frac) {
+                    return Err(format!("frac must be in [0, 1], got {frac}"));
+                }
+                let a = ctx.sub_model(0)?;
+                let b = ctx.sub_model(1)?;
+                Ok(Box::new(MixCost::new(ctx.n, a, b, frac, sub_seed(ctx.seed, 0))))
+            }));
+
+        reg(registration("phased")
+            .sub("a")
+            .sub("b")
+            .param("switch", ParamKind::F64, "0.5")
+            .summary("mid-loop regime change: <a> below switch*n, <b> after")
+            .build(|ctx| {
+                let switch = ctx.f64_param(0, 0.5);
+                if !switch.is_finite() || !(0.0..=1.0).contains(&switch) {
+                    return Err(format!("switch must be in [0, 1], got {switch}"));
+                }
+                let at = ((switch * ctx.n as f64).round() as u64).min(ctx.n);
+                let a = ctx.sub_model(0)?;
+                let b = ctx.sub_model(1)?;
+                Ok(Box::new(PhasedCost::new(ctx.n, at, a, b)))
+            }));
+
+        reg(registration("burst")
+            .sub("base")
+            .param("period", ParamKind::U64, "max(n/16, 2)")
+            .param("amp", ParamKind::F64, "8")
+            .summary("periodic spikes: first period/8 iterations of every period cost amp x base")
+            .build(|ctx| {
+                let period = ctx.u64_param(0, (ctx.n / 16).max(2));
+                if period == 0 {
+                    return Err("period must be >= 1".into());
+                }
+                let amp = ctx.f64_param(1, 8.0);
+                if !amp.is_finite() || amp <= 0.0 {
+                    return Err(format!("amp must be finite and > 0, got {amp}"));
+                }
+                let base = ctx.sub_model(0)?;
+                Ok(Box::new(BurstCost::new(ctx.n, base, period, amp)))
+            }));
+
+        reg(registration("trace")
+            .token_sub("name")
+            .summary("replay a registered cost trace, tiled cyclically over 0..n")
+            .build(|ctx| {
+                let name = ctx.sub_token(0)?.to_string();
+                let costs = ctx.trace(&name).ok_or_else(|| {
+                    format!(
+                        "unknown trace '{name}' (register via \
+WorkloadRegistry::register_trace)"
+                    )
+                })?;
+                let len = costs.len() as u64;
+                let tiled: Vec<u64> =
+                    (0..ctx.n).map(|i| costs[(i % len) as usize]).collect();
+                Ok(Box::new(TraceCost::new(tiled)))
+            }));
+
+        // Demo traces so `trace:` is usable out of the box; embedders
+        // register application profiles next to these.
+        self.register_trace("stairs", vec![250, 250, 250, 250, 500, 500, 1000, 2000])
+            .expect("builtin trace");
+        let mut spike = vec![200u64; 15];
+        spike.push(5000);
+        self.register_trace("spike", spike).expect("builtin trace");
+    }
+}
+
+/// Split a workload *list* value into labels.  `';'` always separates;
+/// for backward compatibility with bare-head lists
+/// (`workloads=lognormal,uniform`), a ','-separated token *continues*
+/// the previous label when it is a parameter (`key=value` or a bare
+/// number) and starts a new label otherwise — which is unambiguous
+/// because workload heads may not be numeric (see name validation).
+pub fn split_list(v: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for seg in v.split(';') {
+        let mut cur = String::new();
+        for tok in seg.split(',') {
+            let t = tok.trim();
+            if t.is_empty() {
+                continue;
+            }
+            let continuation =
+                !cur.is_empty() && (t.contains('=') || t.parse::<f64>().is_ok());
+            if continuation {
+                cur.push(',');
+                cur.push_str(t);
+            } else {
+                if !cur.is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+                cur.push_str(t);
+            }
+        }
+        if !cur.is_empty() {
+            out.push(cur);
+        }
+    }
+    out
+}
+
+/// Names must survive every label surface: ':'-joined composite paths,
+/// ','-separated parameter tails, ';'-separated grid lists and
+/// whitespace-tokenized wire lines — and must not look like numbers,
+/// which [`split_list`] treats as positional parameters.
+fn validate_name(name: &str) -> Result<(), String> {
+    if name.is_empty() {
+        return Err("workload names must be non-empty".into());
+    }
+    if !name.chars().next().unwrap().is_ascii_lowercase() {
+        return Err(format!(
+            "invalid workload name '{name}': must start with a lowercase ASCII letter"
+        ));
+    }
+    let ok = name
+        .chars()
+        .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || matches!(c, '_' | '-' | '.'));
+    if !ok {
+        return Err(format!(
+            "invalid workload name '{name}': use lowercase ASCII letters, digits, \
+'_', '-' or '.'"
+        ));
+    }
+    if name.parse::<f64>().is_ok() {
+        return Err(format!(
+            "invalid workload name '{name}': numeric-looking names collide with \
+positional parameters"
+        ));
+    }
+    Ok(())
+}
+
+fn parse_params(
+    orig: &str,
+    specs: &[ParamSpec],
+    toks: &[&str],
+) -> Result<Vec<Option<ParamValue>>, String> {
+    if !toks.is_empty() && specs.is_empty() {
+        return Err(format!("'{orig}': takes no parameters"));
+    }
+    let mut out: Vec<Option<ParamValue>> = vec![None; specs.len()];
+    let mut next_pos = 0usize;
+    let mut named_seen = false;
+    for tok in toks {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            return Err(format!("'{orig}': empty parameter"));
+        }
+        if let Some((key, val)) = tok.split_once('=') {
+            named_seen = true;
+            let key = key.trim().to_ascii_lowercase();
+            let idx = specs.iter().position(|p| p.name == key).ok_or_else(|| {
+                format!(
+                    "'{orig}': unknown parameter '{key}' (expected one of: {})",
+                    specs.iter().map(|p| p.name).collect::<Vec<_>>().join(", ")
+                )
+            })?;
+            if out[idx].is_some() {
+                return Err(format!("'{orig}': duplicate parameter '{key}'"));
+            }
+            out[idx] = Some(parse_value(orig, &specs[idx], val.trim())?);
+        } else {
+            if named_seen {
+                return Err(format!(
+                    "'{orig}': positional parameter '{tok}' after a named one"
+                ));
+            }
+            if next_pos >= specs.len() {
+                return Err(format!(
+                    "'{orig}': too many parameters (at most {})",
+                    specs.len()
+                ));
+            }
+            out[next_pos] = Some(parse_value(orig, &specs[next_pos], tok)?);
+            next_pos += 1;
+        }
+    }
+    Ok(out)
+}
+
+fn parse_value(orig: &str, spec: &ParamSpec, tok: &str) -> Result<ParamValue, String> {
+    match spec.kind {
+        ParamKind::U64 => tok
+            .parse::<u64>()
+            .map(ParamValue::U64)
+            .map_err(|e| format!("'{orig}': parameter '{}': {e}", spec.name)),
+        ParamKind::F64 => {
+            let v = tok
+                .parse::<f64>()
+                .map_err(|e| format!("'{orig}': parameter '{}': {e}", spec.name))?;
+            if !v.is_finite() {
+                return Err(format!(
+                    "'{orig}': parameter '{}' must be finite",
+                    spec.name
+                ));
+            }
+            Ok(ParamValue::F64(v))
+        }
+    }
+}
+
+/// Canonical label: canonical head, canonical components, provided
+/// parameters in descriptor order as `name=value`.
+fn canonical_label(
+    entry: &Registration,
+    subs: &[SubValue],
+    params: &[Option<ParamValue>],
+) -> String {
+    let mut s = entry.name.clone();
+    for sub in subs {
+        s.push(':');
+        match sub {
+            SubValue::Workload(w) => s.push_str(w.label()),
+            SubValue::Token(t) => s.push_str(t),
+        }
+    }
+    for (spec, v) in entry.params.iter().zip(params) {
+        if let Some(v) = v {
+            s.push(',');
+            s.push_str(spec.name);
+            s.push('=');
+            s.push_str(&v.render());
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(reg: &WorkloadRegistry, label: &str) -> WorkloadSpec {
+        let spec = reg.parse(label).unwrap_or_else(|e| panic!("'{label}': {e}"));
+        let canon = spec.label().to_string();
+        let back = reg
+            .parse(&canon)
+            .unwrap_or_else(|e| panic!("canonical '{canon}' of '{label}': {e}"));
+        assert_eq!(back, spec, "label '{label}' canonical '{canon}'");
+        assert_eq!(back.label(), canon, "'{canon}' must be a parse→label fixed point");
+        spec
+    }
+
+    #[test]
+    fn builtins_resolve_and_match_legacy_enum() {
+        let reg = WorkloadRegistry::with_builtins();
+        for class in WorkloadClass::ALL {
+            let spec = roundtrip(&reg, class.name());
+            assert_eq!(spec.label(), class.name());
+            // The bare canonical head is constructor-identical to the
+            // legacy enum: same cost for every iteration.
+            let via_reg = reg
+                .build_model(class.name(), 500, 750.0, 9)
+                .unwrap();
+            let via_enum = class.model(500, 750.0, 9);
+            assert_eq!(
+                via_reg.materialize(),
+                via_enum.materialize(),
+                "{}",
+                class.name()
+            );
+        }
+    }
+
+    #[test]
+    fn parameterized_labels_canonicalize_losslessly() {
+        let reg = WorkloadRegistry::with_builtins();
+        assert_eq!(
+            roundtrip(&reg, "gaussian,mean=5000,cv=0.3").label(),
+            "gaussian,mean=5000,cv=0.3"
+        );
+        // Positional parameters canonicalize to named form.
+        assert_eq!(
+            roundtrip(&reg, "phased:increasing:uniform,0.5").label(),
+            "phased:increasing:uniform,switch=0.5"
+        );
+        assert_eq!(
+            roundtrip(&reg, "mix:gaussian:lognormal,frac=0.25").label(),
+            "mix:gaussian:lognormal,frac=0.25"
+        );
+        assert_eq!(
+            roundtrip(&reg, "burst:uniform,period=128,amp=4").label(),
+            "burst:uniform,period=128,amp=4"
+        );
+        assert_eq!(roundtrip(&reg, "trace:stairs").label(), "trace:stairs");
+        // Case and whitespace normalize.
+        assert_eq!(
+            roundtrip(&reg, "  MIX:Gaussian:Uniform , frac=0.5 ").label(),
+            "mix:gaussian:uniform,frac=0.5"
+        );
+    }
+
+    #[test]
+    fn composite_models_cover_and_blend() {
+        let reg = WorkloadRegistry::with_builtins();
+        let n = 4_000;
+        let m = reg
+            .build_model("phased:uniform:uniform,switch=0.25", n, 100.0, 1)
+            .unwrap();
+        assert_eq!(m.len(), n);
+        // Both phases are uniform at the grid mean, so every iteration
+        // costs exactly 100.
+        assert!((0..n).all(|i| m.cost_ns(i) == 100));
+
+        // Sub-populations get decorrelated seeds: mixing a class with
+        // itself still samples two distinct streams.
+        let mx = reg.build_model("mix:lognormal:lognormal", n, 500.0, 7).unwrap();
+        let a = reg.build_model("lognormal", n, 500.0, 7).unwrap();
+        assert_ne!(mx.materialize(), a.materialize());
+    }
+
+    #[test]
+    fn trace_head_replays_registered_costs() {
+        let reg = WorkloadRegistry::with_builtins();
+        reg.register_trace("mytrace", vec![10, 20, 30]).unwrap();
+        let m = reg.build_model("trace:mytrace", 7, 1000.0, 0).unwrap();
+        assert_eq!(m.materialize(), vec![10, 20, 30, 10, 20, 30, 10]);
+        // Unknown traces are rejected at parse time.
+        assert!(reg.parse("trace:absent").unwrap_err().contains("unknown trace"));
+        // Trace registration rejects duplicates and bad costs.
+        assert!(reg.register_trace("mytrace", vec![1]).is_err());
+        assert!(reg.register_trace("zeros", vec![0]).is_err());
+        assert!(reg.register_trace("empty", vec![]).is_err());
+        assert!(reg.trace_names().contains(&"mytrace".to_string()));
+    }
+
+    #[test]
+    fn malformed_labels_rejected_at_parse_time() {
+        let reg = WorkloadRegistry::with_builtins();
+        for bad in [
+            "",                                  // empty
+            "nope",                              // unknown head
+            "uniform:extra",                     // simple head given a component
+            "mix:gaussian",                      // missing component
+            "mix:gaussian:nope",                 // unknown component
+            "mix:gaussian:mix",                  // component count mismatch (mix is composite)
+            "mix:mix:gaussian:uniform",          // nesting (count mismatch)
+            "gaussian,cv=abc",                   // non-numeric parameter
+            "gaussian,cv=inf",                   // non-finite parameter
+            "gaussian,wat=3",                    // unknown parameter
+            "gaussian,cv=0.3,cv=0.4",            // duplicate parameter
+            "gaussian,mean=0",                   // out-of-range mean
+            "uniform,1,2",                       // too many positionals
+            "uniform,",                          // empty parameter
+            "mix:gaussian:uniform,frac=1.5",     // out-of-range frac
+            "phased:uniform:uniform,switch=-1",  // out-of-range switch
+            "burst:uniform,period=0",            // zero period
+            "burst:uniform,amp=0",               // zero amp
+            "bimodal,ratio=-3",                  // out-of-range ratio
+            "sawtooth,period=abc",               // u64 parameter type error
+            "trace:nope",                        // unknown trace
+            "trace:",                            // empty component
+            "mix:gaussian:uniform,0.2,0.3",      // too many positionals
+            "mix:gaussian:uniform,0.2,frac=0.3", // positional + named duplicate
+        ] {
+            assert!(reg.parse(bad).is_err(), "'{bad}' accepted");
+        }
+        // Positional-after-named is rejected.
+        assert!(reg.parse("bimodal,frac=0.2,5").is_err());
+    }
+
+    #[test]
+    fn user_registered_head_resolves_everywhere() {
+        let reg = WorkloadRegistry::with_builtins();
+        reg.register(
+            registration("steps")
+                .alias("staircase")
+                .param("levels", ParamKind::U64, "4")
+                .summary("step function with the given number of levels")
+                .build(|ctx| {
+                    let levels = ctx.u64_param(0, 4).max(1);
+                    let mean = ctx.mean_ns;
+                    let n = ctx.n;
+                    let costs: Vec<u64> = (0..n)
+                        .map(|i| {
+                            let level = (i * levels / n.max(1)).min(levels - 1);
+                            ((mean * (level + 1) as f64).round() as u64).max(1)
+                        })
+                        .collect();
+                    Ok(Box::new(TraceCost::new(costs)))
+                }),
+        )
+        .unwrap();
+        let spec = roundtrip(&reg, "steps,levels=3");
+        assert_eq!(spec.label(), "steps,levels=3");
+        assert_eq!(roundtrip(&reg, "staircase").label(), "steps");
+        let m = reg.build_model("steps,levels=2", 100, 100.0, 0).unwrap();
+        assert_eq!(m.cost_ns(0), 100);
+        assert_eq!(m.cost_ns(99), 200);
+        // Redeclaration of a taken head/alias is rejected.
+        assert!(reg
+            .register(registration("steps").build(|_| Err("x".into())))
+            .is_err());
+        assert!(reg
+            .register(registration("staircase").build(|_| Err("x".into())))
+            .is_err());
+        assert!(reg
+            .register(registration("uniform").build(|_| Err("x".into())))
+            .is_err());
+    }
+
+    #[test]
+    fn invalid_names_rejected() {
+        let reg = WorkloadRegistry::new();
+        for bad in ["", "Bad", "9lives", "has space", "com,ma", "co:lon", "inf", "nan"] {
+            assert!(
+                reg.register(registration(bad).build(|_| Err("x".into()))).is_err(),
+                "name '{bad}' accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn split_list_handles_bare_heads_params_and_semicolons() {
+        // Legacy bare-head comma list.
+        assert_eq!(split_list("lognormal,uniform"), vec!["lognormal", "uniform"]);
+        // Parameter tails stay attached to their label.
+        assert_eq!(
+            split_list("gaussian,mean=5000,cv=0.3,uniform"),
+            vec!["gaussian,mean=5000,cv=0.3", "uniform"]
+        );
+        // Positional parameters (bare numbers) stay attached too.
+        assert_eq!(
+            split_list("phased:increasing:uniform,0.5,lognormal"),
+            vec!["phased:increasing:uniform,0.5", "lognormal"]
+        );
+        // ';' always separates.
+        assert_eq!(
+            split_list("mix:gaussian:uniform,frac=0.2;bimodal,ratio=4"),
+            vec!["mix:gaussian:uniform,frac=0.2", "bimodal,ratio=4"]
+        );
+        // Empty segments vanish.
+        assert_eq!(split_list(" ; uniform ;; "), vec!["uniform"]);
+        assert!(split_list("").is_empty());
+    }
+
+    #[test]
+    fn global_registry_serves_workload_spec() {
+        let spec = WorkloadSpec::parse("mix:gaussian:lognormal,frac=0.25").unwrap();
+        assert_eq!(spec.label(), "mix:gaussian:lognormal,frac=0.25");
+        let idx = spec.index(1_000, 800.0, 3);
+        assert_eq!(idx.len(), 1_000);
+        let model = spec.model(1_000, 800.0, 3);
+        assert_eq!(idx.total_ns(), model.total_ns());
+        assert_eq!(WorkloadSpec::from_class(WorkloadClass::Uniform).label(), "uniform");
+        assert_eq!(format!("{}", WorkloadSpec::from(WorkloadClass::Bimodal)), "bimodal");
+    }
+
+    #[test]
+    fn concurrent_register_and_resolve() {
+        let reg = WorkloadRegistry::with_builtins();
+        let reg = &reg;
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                s.spawn(move || {
+                    for i in 0..25 {
+                        let name = format!("wl-t{t}-{i}");
+                        reg.register(
+                            registration(name.as_str())
+                                .summary("concurrent")
+                                .build(|ctx| {
+                                    Ok(Box::new(SyntheticCost::new(
+                                        ctx.n,
+                                        ctx.mean_ns,
+                                        Dist::Constant,
+                                        ctx.seed,
+                                    )))
+                                }),
+                        )
+                        .unwrap();
+                        assert!(reg.parse(&name).is_ok(), "{name}");
+                    }
+                });
+            }
+            for _ in 0..4 {
+                s.spawn(move || {
+                    for _ in 0..200 {
+                        assert!(reg.parse("mix:gaussian:uniform").is_ok());
+                        assert!(reg.parse("never-there").is_err());
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            reg.entries().len(),
+            12 + 100,
+            "8 builtins + 4 composite heads + 100 user heads"
+        );
+    }
+}

@@ -4,18 +4,26 @@
 //! Offline substitution for `proptest`: a seeded-PRNG case generator
 //! (`cases`) runs each property over N random configurations and reports
 //! the failing seed, so any failure is reproducible by fixing `BASE_SEED`.
+//! The `PROPTEST_CASES` environment variable overrides every property's
+//! case count (the nightly CI workflow runs with `PROPTEST_CASES=2048`;
+//! PR-time CI stays on the quick per-test defaults).
 
 use uds::coordinator::{drain_chunks, verify_cover, LoopRecord, LoopSpec, ScheduleFactory, TeamSpec};
 use uds::schedules::ScheduleSpec;
-use uds::sim::{simulate, simulate_indexed, NoVariability, SimArena, SimConfig};
+use uds::sim::{simulate, simulate_indexed, NoVariability, SimArena, SimConfig, VariabilitySpec};
 use uds::util::rng::Pcg;
-use uds::workload::{CostIndex, CostModel, Dist, SyntheticCost};
+use uds::workload::{CostIndex, CostModel, Dist, SyntheticCost, WorkloadRegistry, WorkloadSpec};
 
 const BASE_SEED: u64 = 0xC0FFEE;
 
-/// Run `prop` over `n_cases` PRNG-derived cases; panic with the case seed
-/// on failure so it can be replayed.
+/// Run `prop` over `n_cases` PRNG-derived cases (or `PROPTEST_CASES`
+/// when set — the nightly deep profile); panic with the case seed on
+/// failure so it can be replayed.
 fn cases(name: &str, n_cases: u64, mut prop: impl FnMut(&mut Pcg)) {
+    let n_cases = std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(n_cases);
     for case in 0..n_cases {
         let seed = BASE_SEED ^ case.wrapping_mul(0x9E3779B97F4A7C15);
         let mut rng = Pcg::seed_from_u64(seed);
@@ -436,6 +444,227 @@ fn prop_registry_label_roundtrip() {
         let label = spec.label();
         assert_eq!(ScheduleSpec::parse(&label).unwrap(), spec, "{label}");
     }
+}
+
+/// The ISSUE-5 workload-registry property: for every registered head —
+/// the 8 builtin classes, the composite heads (`mix`/`phased`/`burst`/
+/// `trace`) and freshly registered user heads — randomly parameterized
+/// labels (1) roundtrip `parse → label → parse` to an equal spec with a
+/// canonical fixed point, and (2) build models whose prefix-sum
+/// `CostIndex::range_ns` equals direct per-iteration `cost_ns`
+/// summation, with pure `(seed, i)` random access.
+#[test]
+fn prop_workload_registry_roundtrip_and_prefix_sums() {
+    use uds::workload::registry::{registration, ParamKind, SubKind};
+    use uds::workload::TraceCost;
+
+    let reg = WorkloadRegistry::global();
+    // Seed a user-defined trace and head into the shared namespace
+    // (idempotent: the global registry persists across tests).
+    let _ = reg.register_trace("prop-trace", vec![100, 900, 100, 250]);
+    let _ = reg.register(
+        registration("prop-steps")
+            .param("levels", ParamKind::U64, "4")
+            .summary("proptest user head: step function")
+            .build(|ctx| {
+                let levels = ctx.u64_param(0, 4).max(1);
+                let n = ctx.n;
+                let costs: Vec<u64> = (0..n)
+                    .map(|i| 100 * (1 + (i * levels / n.max(1)).min(levels - 1)))
+                    .collect();
+                Ok(Box::new(TraceCost::new(costs)))
+            }),
+    );
+
+    const SIMPLE: [&str; 8] = [
+        "uniform",
+        "increasing",
+        "decreasing",
+        "gaussian",
+        "exponential",
+        "lognormal",
+        "bimodal",
+        "sawtooth",
+    ];
+
+    fn roundtrip(label: &str) -> WorkloadSpec {
+        let spec =
+            WorkloadSpec::parse(label).unwrap_or_else(|e| panic!("'{label}': {e}"));
+        let canon = spec.label().to_string();
+        let back = WorkloadSpec::parse(&canon)
+            .unwrap_or_else(|e| panic!("canonical '{canon}' of '{label}': {e}"));
+        assert_eq!(back, spec, "label '{label}' canonical '{canon}'");
+        assert_eq!(back.label(), canon, "'{canon}' must be a parse→label fixed point");
+        spec
+    }
+
+    fn check_prefix_sums(spec: &WorkloadSpec, rng: &mut Pcg) {
+        let n = rng.range_u64(1, 1_200);
+        let mean = 50.0 + rng.f64() * 2_000.0;
+        let seed = rng.next_u64();
+        let model = spec.model(n, mean, seed);
+        assert_eq!(model.len(), n, "{}", spec.label());
+        let index = CostIndex::build(&*model);
+        assert_eq!(index.len(), n);
+        assert_eq!(index.total_ns(), model.total_ns(), "{}", spec.label());
+        for _ in 0..6 {
+            let lo = rng.range_u64(0, n);
+            let hi = rng.range_u64(lo, n);
+            let direct: u64 = (lo..hi).map(|i| model.cost_ns(i)).sum();
+            assert_eq!(
+                index.range_ns(lo, hi),
+                direct,
+                "{} n={n} [{lo},{hi})",
+                spec.label()
+            );
+        }
+        // Pure (seed, i): out-of-order access and an independently built
+        // model agree with the sequential enumeration.
+        let twin = spec.model(n, mean, seed);
+        for _ in 0..4 {
+            let i = rng.range_u64(0, n - 1);
+            assert_eq!(model.cost_ns(i), twin.cost_ns(i), "{} i={i}", spec.label());
+            assert_eq!(index.cost_ns(i), model.cost_ns(i), "{} i={i}", spec.label());
+        }
+    }
+
+    // Random valid parameterized labels per head; heads introduced later
+    // must extend this table (the coverage assertion below enforces it).
+    fn param_labels(head: &str, rng: &mut Pcg) -> Vec<String> {
+        let pick = |rng: &mut Pcg| SIMPLE[rng.range_u64(0, 7) as usize];
+        let mean = 100 + rng.range_u64(0, 5_000);
+        match head {
+            "uniform" | "increasing" | "decreasing" | "exponential" => {
+                vec![format!("{head},mean={mean}")]
+            }
+            "gaussian" => {
+                vec![format!("gaussian,mean={mean},cv={}", 0.05 + rng.f64() * 0.6)]
+            }
+            "lognormal" => {
+                vec![format!("lognormal,sigma={}", 0.2 + rng.f64() * 1.5)]
+            }
+            "bimodal" => vec![format!(
+                "bimodal,frac={},ratio={}",
+                rng.f64() * 0.5,
+                2.0 + rng.f64() * 20.0
+            )],
+            "sawtooth" => vec![format!("sawtooth,period={}", 2 + rng.range_u64(0, 200))],
+            "mix" => vec![format!(
+                "mix:{}:{},frac={}",
+                pick(rng),
+                pick(rng),
+                rng.f64()
+            )],
+            // Positional form: canonicalizes to switch=<v>.
+            "phased" => vec![format!(
+                "phased:{}:{},{}",
+                pick(rng),
+                pick(rng),
+                rng.f64()
+            )],
+            "burst" => vec![format!(
+                "burst:{},period={},amp={}",
+                pick(rng),
+                1 + rng.range_u64(0, 300),
+                1.0 + rng.f64() * 15.0
+            )],
+            "trace" => vec![
+                "trace:stairs".into(),
+                "trace:spike".into(),
+                "trace:prop-trace".into(),
+            ],
+            "prop-steps" => {
+                vec![format!("prop-steps,levels={}", 1 + rng.range_u64(0, 6))]
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    cases("workload_registry_roundtrip", 12, |rng| {
+        for entry in reg.entries() {
+            // Every head: a generically constructed base label...
+            let mut base = entry.name().to_string();
+            for sub in entry.subs() {
+                base.push(':');
+                match sub.kind {
+                    SubKind::Workload => base.push_str(SIMPLE[rng.range_u64(0, 7) as usize]),
+                    SubKind::Token => base.push_str("stairs"),
+                }
+            }
+            let spec = roundtrip(&base);
+            check_prefix_sums(&spec, rng);
+            for alias in entry.aliases() {
+                roundtrip(alias);
+            }
+            // ...plus head-specific randomly parameterized labels.
+            for label in param_labels(entry.name(), rng) {
+                let spec = roundtrip(&label);
+                check_prefix_sums(&spec, rng);
+            }
+        }
+    });
+
+    // Coverage pin: the parameter-template table above must know every
+    // *shipped* head (user heads registered by other tests are covered
+    // by their generic base label only).
+    for head in SIMPLE
+        .iter()
+        .copied()
+        .chain(["mix", "phased", "burst", "trace", "prop-steps"])
+    {
+        assert!(
+            reg.contains(head),
+            "head '{head}' expected in the global workload registry"
+        );
+    }
+}
+
+/// Variability specs: random atoms and products roundtrip
+/// `parse → label → parse` to equal specs, and built models are
+/// deterministic functions of `(tid, t)`.
+#[test]
+fn prop_variability_spec_roundtrip() {
+    fn random_atom(rng: &mut Pcg) -> VariabilitySpec {
+        match rng.range_u64(0, 2) {
+            0 => VariabilitySpec::Calm,
+            1 => VariabilitySpec::Hetero {
+                speeds: (0..1 + rng.range_u64(0, 5))
+                    .map(|_| 0.25 + rng.f64() * 4.0)
+                    .collect(),
+            },
+            _ => VariabilitySpec::Noise {
+                prob: rng.f64(),
+                slow: 0.05 + rng.f64() * 0.9,
+                seed: rng.next_u64(),
+                window_ns: 1 + rng.range_u64(0, 1_000_000),
+            },
+        }
+    }
+    cases("variability_spec_roundtrip", 60, |rng| {
+        let spec = if rng.f64() < 0.3 {
+            VariabilitySpec::Product {
+                parts: (0..2 + rng.range_u64(0, 2)).map(|_| random_atom(rng)).collect(),
+            }
+        } else {
+            random_atom(rng)
+        };
+        let label = spec.label();
+        let back = VariabilitySpec::parse(&label)
+            .unwrap_or_else(|e| panic!("'{label}': {e}"));
+        assert_eq!(back, spec, "label '{label}'");
+        assert_eq!(back.label(), label, "'{label}' must be a fixed point");
+        // Built models are deterministic and positive.
+        let threads = 1 + rng.range_u64(0, 7) as usize;
+        let a = spec.build(threads);
+        let b = spec.build(threads);
+        for tid in 0..threads {
+            for t in [0u64, 1_000, 123_456] {
+                let s = a.speed(tid, t);
+                assert!(s > 0.0, "{label} tid={tid} t={t}: speed {s}");
+                assert_eq!(s, b.speed(tid, t), "{label} tid={tid} t={t}");
+            }
+        }
+    });
 }
 
 /// History-carrying schedules (AWF/AF/auto/tuned) still exact-cover on

@@ -1,0 +1,207 @@
+//! ISSUE 5 acceptance: a registry-resolved **composite workload**
+//! (`phased:increasing:uniform,0.5`) and a non-calm **variability
+//! spec** (`hetero:1,1,2,4`, plus a noise model) run *by label* through
+//! a local sweep, a `BATCH` request over TCP, and the `uds` CLI —
+//! producing bit-identical result streams for 1 vs 8 sweep workers.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use uds::eval::report::{parse_flat, ScenarioResult};
+use uds::service::{serve_on, Service};
+use uds::sweep::{run_sweep, SweepGrid};
+
+/// The acceptance grid: 3 variability x 2 workloads x 2 n x 2 seeds x
+/// 3 schedules x 1 thread count = 72 scenarios.
+const GRID: &str = "BATCH \
+workloads=phased:increasing:uniform,0.5;mix:gaussian:lognormal,frac=0.25 \
+variability=calm;hetero:1,1,2,4;noise:0.2,0.25,7 \
+schedules=fac2;gss;dynamic,16 n=600,1200 threads=4 seeds=1,2 workers=1";
+
+const PHASED: &str = "phased:increasing:uniform,switch=0.5";
+
+fn wire(results: &[ScenarioResult]) -> Vec<String> {
+    results.iter().map(|r| r.json_line()).collect()
+}
+
+#[test]
+fn composite_workloads_and_variability_sweep_locally_worker_invariant() {
+    let grid = SweepGrid::parse_batch_line(GRID).unwrap();
+    let scenarios = grid.expand();
+    assert_eq!(scenarios.len(), 72);
+
+    let (one, s1) = run_sweep(&Service::new(), &scenarios, 1);
+    let (eight, _) = run_sweep(&Service::new(), &scenarios, 8);
+    assert_eq!(s1.scenarios, 72);
+    assert_eq!(
+        wire(&one),
+        wire(&eight),
+        "1 vs 8 workers must stream bit-identical results"
+    );
+
+    // Records carry the canonical registry labels.
+    assert!(one.iter().any(|r| r.workload == PHASED), "phased label missing");
+    assert!(
+        one.iter().any(|r| r.workload == "mix:gaussian:lognormal,frac=0.25"),
+        "mix label missing"
+    );
+    assert!(
+        one.iter().any(|r| r.variability == "hetero:1,1,2,4"),
+        "hetero label missing"
+    );
+    assert!(
+        one.iter().any(|r| r.variability == "noise:0.2,0.25,7,200000"),
+        "noise label missing"
+    );
+
+    // Variability reaches the physics: the same (workload, schedule, n,
+    // seed) scenario differs between calm and hetero machines, and the
+    // 2x/4x threads make the hetero run finish sooner.
+    let calm = one
+        .iter()
+        .find(|r| r.variability == "calm" && r.workload == PHASED)
+        .unwrap();
+    let hetero = one
+        .iter()
+        .find(|r| {
+            r.variability == "hetero:1,1,2,4"
+                && r.workload == calm.workload
+                && r.schedule == calm.schedule
+                && r.n == calm.n
+                && r.seed == calm.seed
+        })
+        .unwrap();
+    assert!(
+        hetero.makespan_ns < calm.makespan_ns,
+        "hetero {} !< calm {}",
+        hetero.makespan_ns,
+        calm.makespan_ns
+    );
+
+    // The distinct-workload cache dedups across the variability axis:
+    // 2 workloads x 2 n x 2 seeds = 8 indexes for 72 scenarios.
+    assert_eq!(s1.distinct_workloads, 8);
+    assert_eq!(s1.index_builds, 8);
+}
+
+#[test]
+fn composite_workloads_and_variability_run_over_tcp_batch() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || serve_on(listener, 2));
+
+    let mut c = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(c.try_clone().unwrap());
+    writeln!(c, "{GRID}").unwrap();
+    let mut lines = Vec::new();
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "connection closed early: {} lines", lines.len());
+        let done = line.contains("\"type\":\"summary\"") || line.starts_with("ERR");
+        lines.push(line.trim().to_string());
+        if done {
+            break;
+        }
+    }
+    assert_eq!(lines.len(), 73, "72 results + summary: {:?}", lines.last());
+
+    // The TCP stream is bit-identical to the local sweep's wire form.
+    let grid = SweepGrid::parse_batch_line(GRID).unwrap();
+    let (local, _) = run_sweep(&Service::new(), &grid.expand(), 8);
+    assert_eq!(lines[..72], wire(&local)[..], "TCP stream != local sweep");
+
+    // Records parse back with the composite/variability labels intact.
+    let rec = ScenarioResult::from_flat(&parse_flat(&lines[0]).unwrap()).unwrap();
+    assert_eq!(rec.workload, PHASED);
+    assert_eq!(rec.variability, "calm");
+
+    // The same connection serves a single composite job under noise...
+    writeln!(
+        c,
+        "schedule=gss n=500 threads=4 workload={PHASED} variability=noise:0.2,0.25,7"
+    )
+    .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ok schedule=guided "), "{line}");
+
+    // ...and malformed labels keep the stable error surface.
+    writeln!(c, "schedule=gss n=500 workload=phased:increasing").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR bad_workload"), "{line}");
+    writeln!(c, "schedule=gss n=500 variability=hetero:").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR bad_variability"), "{line}");
+}
+
+#[test]
+fn composite_workloads_and_variability_run_through_the_cli() {
+    let uds = env!("CARGO_BIN_EXE_uds");
+
+    // `uds run` executes a composite workload on a heterogeneous
+    // simulated machine by label.
+    let out = std::process::Command::new(uds)
+        .args([
+            "run",
+            "--schedule",
+            "fac2",
+            "--n",
+            "4000",
+            "--threads",
+            "4",
+            "--workload",
+            "phased:increasing:uniform,0.5",
+            "--variability",
+            "hetero:1,1,2,4",
+            "--seed",
+            "7",
+        ])
+        .output()
+        .expect("spawn uds run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("schedule=fac2"), "{stdout}");
+    assert!(stdout.contains("makespan="), "{stdout}");
+
+    // Unknown labels fail with the parse detail on stderr.
+    let bad = std::process::Command::new(uds)
+        .args(["run", "--workload", "phased:increasing", "--n", "100"])
+        .output()
+        .expect("spawn uds run");
+    assert!(!bad.status.success());
+    let stderr = String::from_utf8_lossy(&bad.stderr);
+    assert!(stderr.contains("workload"), "{stderr}");
+
+    // `uds sweep` writes report artifacts carrying the canonical labels.
+    let out_dir = std::env::temp_dir()
+        .join(format!("uds_workload_e2e_sweep_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let out = std::process::Command::new(uds)
+        .args([
+            "sweep",
+            "--schedules",
+            "fac2;gss",
+            "--n",
+            "500",
+            "--workloads",
+            "phased:increasing:uniform,0.5",
+            "--variability",
+            "calm;hetero:1,1,2,4",
+            "--threads",
+            "4",
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn uds sweep");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let csv = std::fs::read_to_string(out_dir.join("report.csv")).unwrap();
+    assert!(csv.contains(PHASED), "{csv}");
+    assert!(csv.contains("hetero:1,1,2,4"), "{csv}");
+    assert_eq!(csv.lines().count(), 1 + 4, "header + 2 schedules x 2 variability");
+    let json = std::fs::read_to_string(out_dir.join("report.json")).unwrap();
+    assert!(json.contains("\"variability\":\"hetero:1,1,2,4\""), "{json}");
+}
