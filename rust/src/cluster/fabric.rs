@@ -1,0 +1,392 @@
+//! The cluster coordinator: dispatch contiguous shards of a
+//! [`SweepGrid`] to N remote `uds` services over the `BATCH` wire
+//! protocol and merge the streamed results back into canonical grid
+//! order.
+//!
+//! Architecture (one level up from [`crate::sweep::run_sweep_with`],
+//! same discipline):
+//!
+//! * a [`Planner`] owns the contiguous shard work-units and requeues a
+//!   failed shard (dead/wedged node, bounded retries) for any healthy
+//!   worker;
+//! * one worker thread per node claims shards, sends
+//!   `BATCH ... shard=OFFSET,LEN`, validates the streamed records (ids
+//!   dense, count matches) and forwards them to the coordinator;
+//! * a reorder buffer on the calling thread releases whole shards
+//!   strictly in offset order, so the emitted scenario stream — and
+//!   therefore `report.csv` — is **bit-identical to a local sweep of
+//!   the same grid** for any node count, any shard size, and any
+//!   interleaving of node failures;
+//! * a node is retired after consecutive failures; a shard that fails
+//!   past its retry budget fails the whole sweep with a stable
+//!   `shard_failed` coded error instead of a silent partial result.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::eval::report::{parse_flat, ScenarioResult, SweepSummary};
+use crate::sweep::{SweepGrid, MAX_SCENARIOS};
+use crate::util::CodedError;
+
+use super::planner::{plan_shards, Planner, Shard};
+use super::status::{ClusterSummary, NodeStatus};
+
+/// Coordinator tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ClusterOptions {
+    /// Planned scenarios per shard (clamped to the per-request cap;
+    /// the last shard is ragged).  Smaller shards spread better across
+    /// heterogeneous nodes and bound the work lost to a node death;
+    /// larger shards amortize connection and stream-parsing overhead.
+    pub shard_size: u64,
+    /// How many times one shard may be requeued after a failed
+    /// dispatch before the sweep fails terminally.
+    pub max_retries: u32,
+    /// Consecutive failures after which a node's worker retires (its
+    /// remaining work migrates to healthy nodes).
+    pub node_failures: u32,
+    /// Per-connection I/O timeout: a wedged node that stops streaming
+    /// forfeits its shard after this long and the shard is requeued.
+    pub io_timeout: Duration,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        Self {
+            shard_size: 4096,
+            max_retries: 2,
+            node_failures: 2,
+            io_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// A completed cluster sweep: per-scenario records in canonical grid
+/// order plus the ordinary sweep summary and the cluster extension.
+#[derive(Clone, Debug)]
+pub struct ClusterOutcome {
+    pub results: Vec<ScenarioResult>,
+    pub summary: SweepSummary,
+    pub cluster: ClusterSummary,
+}
+
+/// Exact distinct-workload count of a grid without expanding scenarios:
+/// the key space is `workloads x n x seeds` (schedules/threads/
+/// variability never change the cost table).
+fn distinct_workload_count(grid: &SweepGrid) -> u64 {
+    let mut seen = std::collections::HashSet::new();
+    for w in &grid.workloads {
+        for &n in &grid.ns {
+            for &seed in &grid.seeds {
+                seen.insert((w.clone(), n, seed));
+            }
+        }
+    }
+    seen.len() as u64
+}
+
+/// Stream one shard from one node, validating the protocol as it goes:
+/// records must be in-order, dense from the shard's global offset, and
+/// the terminal summary must account for exactly the shard's length.
+fn run_shard(
+    addr: &str,
+    base_line: &str,
+    shard: &Shard,
+    io_timeout: Duration,
+) -> Result<(Vec<ScenarioResult>, SweepSummary), CodedError> {
+    let node_err = |what: String| CodedError::new("node_error", format!("{addr}: {what}"));
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| node_err(format!("resolve: {e}")))?
+        .next()
+        .ok_or_else(|| node_err("resolve: no addresses".to_string()))?;
+    let stream = TcpStream::connect_timeout(&sock, io_timeout)
+        .map_err(|e| node_err(format!("connect: {e}")))?;
+    stream
+        .set_read_timeout(Some(io_timeout))
+        .map_err(|e| node_err(format!("set_read_timeout: {e}")))?;
+    let _ = stream.set_write_timeout(Some(io_timeout));
+    let mut writer = stream.try_clone().map_err(|e| node_err(format!("clone: {e}")))?;
+    writeln!(writer, "{base_line} shard={},{}", shard.offset, shard.len)
+        .map_err(|e| node_err(format!("send: {e}")))?;
+
+    let reader = BufReader::new(stream);
+    let mut results: Vec<ScenarioResult> = Vec::with_capacity(shard.len as usize);
+    for line in reader.lines() {
+        let line = line.map_err(|e| node_err(format!("read: {e}")))?;
+        if line.starts_with("ERR ") {
+            return Err(node_err(format!("rejected shard: {line}")));
+        }
+        let map = parse_flat(&line).map_err(node_err)?;
+        match map.get("type").map(String::as_str) {
+            Some("result") => {
+                let r = ScenarioResult::from_flat(&map).map_err(node_err)?;
+                let expect = shard.offset + results.len() as u64;
+                if r.id != expect {
+                    return Err(node_err(format!(
+                        "result id {} out of order (expected {expect})",
+                        r.id
+                    )));
+                }
+                results.push(r);
+            }
+            Some("summary") => {
+                let summary = SweepSummary::from_flat(&map).map_err(node_err)?;
+                if results.len() as u64 != shard.len || summary.scenarios != shard.len {
+                    return Err(node_err(format!(
+                        "shard [{}, {}) streamed {} results, summary says {}",
+                        shard.offset,
+                        shard.offset + shard.len,
+                        results.len(),
+                        summary.scenarios
+                    )));
+                }
+                return Ok((results, summary));
+            }
+            _ => return Err(node_err(format!("unexpected line: {line}"))),
+        }
+    }
+    Err(node_err("connection closed before the shard summary".to_string()))
+}
+
+/// One node's worker: claim shards until the plan drains, the sweep is
+/// cancelled, or this node retires after consecutive failures.
+fn node_worker(
+    addr: &str,
+    base_line: &str,
+    planner: &Planner,
+    cancelled: &AtomicBool,
+    opts: &ClusterOptions,
+    tx: &mpsc::Sender<(u64, Vec<ScenarioResult>, SweepSummary)>,
+) -> NodeStatus {
+    let mut status = NodeStatus::new(addr);
+    let mut consecutive = 0u32;
+    loop {
+        if cancelled.load(Ordering::Relaxed) {
+            break;
+        }
+        let Some(shard) = planner.next() else { break };
+        if cancelled.load(Ordering::Relaxed) {
+            // Claimed during cancellation: account it as done (the
+            // consumer is gone) so waiting workers can drain out.
+            planner.complete(&shard);
+            break;
+        }
+        let t0 = Instant::now();
+        match run_shard(addr, base_line, &shard, opts.io_timeout) {
+            Ok((results, summary)) => {
+                consecutive = 0;
+                status.shards += 1;
+                status.scenarios += results.len() as u64;
+                status.busy_ms += t0.elapsed().as_millis() as u64;
+                planner.complete(&shard);
+                if tx.send((shard.offset, results, summary)).is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                status.failures += 1;
+                consecutive += 1;
+                planner.fail(shard, e);
+                if consecutive >= opts.node_failures {
+                    status.retired = true;
+                    break;
+                }
+            }
+        }
+    }
+    status
+}
+
+/// Run `grid` across `nodes`, streaming merged results to `emit` in
+/// canonical grid (id) order — the cluster twin of
+/// [`crate::sweep::run_sweep_with`].  `emit` returning `false` cancels
+/// the sweep.  The grid must be unsharded (the fabric shards it) and
+/// may exceed the single-request scenario cap: the cap is re-applied
+/// per shard.
+pub fn run_cluster_sweep_with(
+    grid: &SweepGrid,
+    nodes: &[String],
+    opts: &ClusterOptions,
+    mut emit: impl FnMut(ScenarioResult) -> bool,
+) -> Result<(SweepSummary, ClusterSummary), CodedError> {
+    if nodes.is_empty() {
+        return Err(CodedError::new("cluster_no_nodes", "pass at least one host:port"));
+    }
+    if grid.shard.is_some() {
+        return Err(CodedError::new(
+            "bad_shard",
+            "cluster sweeps take an unsharded grid (the fabric shards it)",
+        ));
+    }
+    let total = grid.size();
+    let shard_size = opts.shard_size.clamp(1, MAX_SCENARIOS);
+    let shards = plan_shards(total, shard_size);
+    let shard_count = shards.len() as u64;
+    let planner = Planner::new(shards, opts.max_retries);
+    let base_line = grid.to_batch_line();
+    let t0 = Instant::now();
+    let cancelled = AtomicBool::new(false);
+
+    let mut index_builds = 0u64;
+    let mut cache_hits = 0u64;
+    let mut merged = 0u64;
+    let mut node_status: Vec<NodeStatus> = Vec::new();
+
+    std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<(u64, Vec<ScenarioResult>, SweepSummary)>();
+        let mut handles = Vec::new();
+        for addr in nodes {
+            let tx = tx.clone();
+            let planner = &planner;
+            let cancelled = &cancelled;
+            let base_line = base_line.as_str();
+            handles.push(scope.spawn(move || {
+                node_worker(addr, base_line, planner, cancelled, opts, &tx)
+            }));
+        }
+        drop(tx);
+        // Reorder buffer: shards complete in any order across nodes;
+        // release them strictly by offset so the emitted stream follows
+        // the canonical expansion order.  After cancellation keep
+        // draining (cheap) without emitting.
+        let mut pending = std::collections::BTreeMap::new();
+        for (offset, results, summary) in rx {
+            if cancelled.load(Ordering::Relaxed) {
+                continue;
+            }
+            index_builds += summary.index_builds;
+            cache_hits += summary.cache_hits;
+            pending.insert(offset, results);
+            'release: while let Some(results) = pending.remove(&merged) {
+                merged += results.len() as u64;
+                for r in results {
+                    if !emit(r) {
+                        cancelled.store(true, Ordering::Relaxed);
+                        break 'release;
+                    }
+                }
+            }
+        }
+        node_status = handles
+            .into_iter()
+            .map(|h| h.join().expect("node worker panicked"))
+            .collect();
+    });
+
+    // Terminal failure surfaces: a shard out of retries, or every node
+    // dead with work left.  Both are stable coded errors — a cluster
+    // sweep never resolves to a silent partial result.
+    if let Some(err) = planner.failure() {
+        return Err(err);
+    }
+    if !cancelled.load(Ordering::Relaxed) {
+        if planner.unfinished() > 0 {
+            return Err(CodedError::new(
+                "cluster_failed",
+                format!(
+                    "all {} nodes retired with {} shards unfinished",
+                    nodes.len(),
+                    planner.unfinished()
+                ),
+            ));
+        }
+        if merged != total {
+            return Err(CodedError::new(
+                "cluster_failed",
+                format!("merged {merged} of {total} scenarios"),
+            ));
+        }
+    }
+
+    let summary = SweepSummary {
+        scenarios: total,
+        distinct_workloads: distinct_workload_count(grid),
+        index_builds,
+        cache_hits,
+    };
+    let cluster = ClusterSummary {
+        nodes: node_status,
+        shards: shard_count,
+        shard_size,
+        retries: planner.retries(),
+        wall_ms: t0.elapsed().as_millis() as u64,
+    };
+    Ok((summary, cluster))
+}
+
+/// Collecting wrapper over [`run_cluster_sweep_with`].
+pub fn run_cluster_sweep(
+    grid: &SweepGrid,
+    nodes: &[String],
+    opts: &ClusterOptions,
+) -> Result<ClusterOutcome, CodedError> {
+    let mut results = Vec::with_capacity(grid.size().min(1 << 20) as usize);
+    let (summary, cluster) = run_cluster_sweep_with(grid, nodes, opts, |r| {
+        results.push(r);
+        true
+    })?;
+    Ok(ClusterOutcome { results, summary, cluster })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_node_list_is_a_coded_error() {
+        let grid = SweepGrid::parse_batch_line("BATCH schedules=fac2 n=100").unwrap();
+        let err = run_cluster_sweep(&grid, &[], &ClusterOptions::default()).unwrap_err();
+        assert_eq!(err.code, "cluster_no_nodes");
+    }
+
+    #[test]
+    fn pre_sharded_grid_rejected() {
+        let grid =
+            SweepGrid::parse_batch_line("BATCH schedules=fac2 n=100,200 shard=0,1")
+                .unwrap();
+        let err = run_cluster_sweep(
+            &grid,
+            &["127.0.0.1:1".to_string()],
+            &ClusterOptions::default(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, "bad_shard");
+    }
+
+    #[test]
+    fn unreachable_nodes_fail_terminally_with_coded_error() {
+        // Port 1 on loopback refuses immediately; with one node and a
+        // zero retry budget the first shard failure is terminal.
+        let grid = SweepGrid::parse_batch_line("BATCH schedules=fac2 n=100").unwrap();
+        let opts = ClusterOptions {
+            max_retries: 0,
+            io_timeout: Duration::from_millis(500),
+            ..ClusterOptions::default()
+        };
+        let err = run_cluster_sweep(&grid, &["127.0.0.1:1".to_string()], &opts)
+            .unwrap_err();
+        assert_eq!(err.code, "shard_failed");
+        assert!(err.detail.contains("127.0.0.1:1"), "{}", err.detail);
+    }
+
+    #[test]
+    fn distinct_workloads_counted_without_expansion() {
+        let grid = SweepGrid::parse_batch_line(
+            "BATCH workloads=uniform;gaussian schedules=fac2;gss n=100,200 \
+seeds=1,2 threads=2,4",
+        )
+        .unwrap();
+        // 2 workloads x 2 n x 2 seeds, schedules/threads irrelevant.
+        assert_eq!(distinct_workload_count(&grid), 8);
+        // Duplicate axis values do not double-count.
+        let dup = SweepGrid::parse_batch_line(
+            "BATCH workloads=uniform;uniform schedules=fac2 n=100,100 seeds=3,3",
+        )
+        .unwrap();
+        assert_eq!(distinct_workload_count(&dup), 1);
+    }
+}

@@ -1,0 +1,34 @@
+//! Cluster sweep fabric: fan a scenario grid out across N remote `uds`
+//! services and merge the results deterministically.
+//!
+//! The local sweep engine ([`crate::sweep`]) is bounded by one worker
+//! pool and the 100k-scenario `BATCH` cap.  This module lifts the
+//! fan-out one level: a [`fabric`] coordinator partitions a
+//! [`crate::sweep::SweepGrid`] into contiguous shard work-units
+//! ([`planner`]), dispatches them concurrently to remote services over
+//! the existing `BATCH` wire protocol (`shard=OFFSET,LEN`), and merges
+//! the streamed records back in canonical grid order with the same
+//! in-order reorder-buffer discipline the local engine uses — so a
+//! cluster sweep's `report.csv` is **bit-identical** to a local sweep
+//! of the same grid, for any node count, shard size, or failure
+//! interleaving.
+//!
+//! Fault model: a dead or wedged node times out its shard, the shard is
+//! requeued on a healthy node (bounded retries), and exhaustion
+//! surfaces as a stable `shard_failed` / `cluster_failed`
+//! [`crate::util::CodedError`] — never a silent partial result.
+//! Per-node throughput, retries and wall time land in the
+//! [`status::ClusterSummary`] section of `report.json` ([`status`]).
+//!
+//! Everything is std-only (scoped threads + `TcpStream`), matching the
+//! offline-build constraint.
+
+pub mod fabric;
+pub mod planner;
+pub mod status;
+
+pub use fabric::{
+    run_cluster_sweep, run_cluster_sweep_with, ClusterOptions, ClusterOutcome,
+};
+pub use planner::{plan_shards, Planner, Shard};
+pub use status::{ClusterSummary, NodeStatus};

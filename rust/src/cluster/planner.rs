@@ -1,0 +1,215 @@
+//! Shard planning: turn a grid's scenario range into contiguous
+//! work-units and hand them to node workers with bounded retry.
+//!
+//! The planner is the cluster fabric's single source of truth for "what
+//! is left to run".  Node workers claim shards through [`Planner::next`]
+//! (blocking while everything is in flight), report them back through
+//! [`Planner::complete`] / [`Planner::fail`], and a failed shard is
+//! requeued for any healthy worker until its bounded retry budget is
+//! exhausted — at which point the whole sweep resolves to one stable
+//! [`CodedError`] instead of a silent partial result.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::util::CodedError;
+
+/// One contiguous work-unit: scenarios `[offset, offset+len)` of the
+/// grid's fixed expansion order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Dense shard index (offset / shard_size) — display only.
+    pub id: u64,
+    pub offset: u64,
+    pub len: u64,
+    /// Dispatch attempts so far (0 on the first claim).
+    pub attempts: u32,
+}
+
+/// Cut `total` scenarios into contiguous shards of at most
+/// `shard_size`, last shard ragged.  `shard_size` is clamped to 1.
+pub fn plan_shards(total: u64, shard_size: u64) -> Vec<Shard> {
+    let shard_size = shard_size.max(1);
+    let mut out = Vec::new();
+    let mut offset = 0u64;
+    while offset < total {
+        let len = shard_size.min(total - offset);
+        out.push(Shard { id: offset / shard_size, offset, len, attempts: 0 });
+        offset += len;
+    }
+    out
+}
+
+struct PlannerState {
+    pending: VecDeque<Shard>,
+    inflight: usize,
+    /// Total requeues performed (a shard retried twice counts 2).
+    retries: u64,
+    /// Terminal failure: set once a shard exhausts its retry budget;
+    /// every subsequent `next` returns `None` immediately.
+    failed: Option<CodedError>,
+}
+
+/// Thread-safe shard queue with requeue-on-failure semantics.
+pub struct Planner {
+    state: Mutex<PlannerState>,
+    wake: Condvar,
+    max_retries: u32,
+}
+
+impl Planner {
+    pub fn new(shards: Vec<Shard>, max_retries: u32) -> Self {
+        Self {
+            state: Mutex::new(PlannerState {
+                pending: shards.into(),
+                inflight: 0,
+                retries: 0,
+                failed: None,
+            }),
+            wake: Condvar::new(),
+            max_retries,
+        }
+    }
+
+    /// Claim the next shard.  Blocks while the queue is empty but work
+    /// is still in flight (a failing shard may be requeued); returns
+    /// `None` once everything completed or the sweep failed terminally.
+    pub fn next(&self) -> Option<Shard> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.failed.is_some() {
+                return None;
+            }
+            if let Some(shard) = st.pending.pop_front() {
+                st.inflight += 1;
+                return Some(shard);
+            }
+            if st.inflight == 0 {
+                return None;
+            }
+            st = self.wake.wait(st).unwrap();
+        }
+    }
+
+    /// Report a successfully streamed shard.
+    pub fn complete(&self, _shard: &Shard) {
+        let mut st = self.state.lock().unwrap();
+        st.inflight -= 1;
+        // Waiters only ever wait for requeues; an empty queue with zero
+        // inflight means "done", which they must observe too.
+        self.wake.notify_all();
+    }
+
+    /// Report a failed shard: requeue it (bounded) for another worker,
+    /// or mark the sweep terminally failed once the budget is spent.
+    pub fn fail(&self, mut shard: Shard, err: CodedError) {
+        let mut st = self.state.lock().unwrap();
+        st.inflight -= 1;
+        shard.attempts += 1;
+        if shard.attempts > self.max_retries {
+            st.failed.get_or_insert_with(|| {
+                CodedError::new(
+                    "shard_failed",
+                    format!(
+                        "shard {} [{}, {}) failed {} times, last error: {}",
+                        shard.id,
+                        shard.offset,
+                        shard.offset + shard.len,
+                        shard.attempts,
+                        err
+                    ),
+                )
+            });
+        } else {
+            st.retries += 1;
+            st.pending.push_back(shard);
+        }
+        self.wake.notify_all();
+    }
+
+    /// Terminal failure, if any shard exhausted its retries.
+    pub fn failure(&self) -> Option<CodedError> {
+        self.state.lock().unwrap().failed.clone()
+    }
+
+    /// Total requeues performed across the sweep.
+    pub fn retries(&self) -> u64 {
+        self.state.lock().unwrap().retries
+    }
+
+    /// Shards never run to completion (pending or in flight) — nonzero
+    /// after all workers exited means every node died with work left.
+    pub fn unfinished(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.pending.len() + st.inflight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_tile_the_range_contiguously() {
+        let shards = plan_shards(10, 4);
+        assert_eq!(shards.len(), 3);
+        assert_eq!(
+            shards.iter().map(|s| (s.offset, s.len)).collect::<Vec<_>>(),
+            vec![(0, 4), (4, 4), (8, 2)],
+        );
+        assert_eq!(shards[2].id, 2);
+        assert!(plan_shards(0, 4).is_empty());
+        // Degenerate shard size still makes progress.
+        assert_eq!(plan_shards(3, 0).len(), 3);
+    }
+
+    #[test]
+    fn completed_plan_drains_to_none() {
+        let planner = Planner::new(plan_shards(5, 2), 1);
+        let mut got = Vec::new();
+        while let Some(s) = planner.next() {
+            got.push(s.offset);
+            planner.complete(&s);
+        }
+        assert_eq!(got, vec![0, 2, 4]);
+        assert!(planner.failure().is_none());
+        assert_eq!(planner.unfinished(), 0);
+        assert_eq!(planner.retries(), 0);
+    }
+
+    #[test]
+    fn failed_shard_is_requeued_then_terminal() {
+        let planner = Planner::new(plan_shards(2, 2), 1);
+        let s = planner.next().unwrap();
+        assert_eq!(s.attempts, 0);
+        planner.fail(s, CodedError::new("node_error", "boom"));
+        // Requeued once (budget 1 retry)...
+        let s = planner.next().unwrap();
+        assert_eq!(s.attempts, 1);
+        assert_eq!(planner.retries(), 1);
+        // ...second failure exhausts the budget: terminal.
+        planner.fail(s, CodedError::new("node_error", "boom again"));
+        assert!(planner.next().is_none());
+        let err = planner.failure().expect("terminal failure");
+        assert_eq!(err.code, "shard_failed");
+        assert!(err.detail.contains("boom again"), "{}", err.detail);
+    }
+
+    #[test]
+    fn waiting_worker_picks_up_a_requeued_shard() {
+        let planner = Planner::new(plan_shards(2, 2), 3);
+        let held = planner.next().unwrap();
+        std::thread::scope(|scope| {
+            let t = scope.spawn(|| planner.next());
+            // The helper blocks (queue empty, one inflight); failing the
+            // held shard requeues it and wakes the helper.
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            planner.fail(held, CodedError::new("node_error", "dead node"));
+            let retried = t.join().unwrap().expect("requeued shard handed over");
+            assert_eq!(retried.attempts, 1);
+            planner.complete(&retried);
+        });
+        assert!(planner.next().is_none());
+        assert!(planner.failure().is_none());
+    }
+}

@@ -1,0 +1,151 @@
+//! Cluster-level progress accounting: per-node throughput/retry stats
+//! and the [`ClusterSummary`] record embedded in `report.json`.
+//!
+//! The summary deliberately lives *next to* the ordinary
+//! [`crate::eval::report::SweepSummary`], not inside it: the
+//! per-scenario records and `report.csv` stay byte-identical to a local
+//! run of the same grid (the fabric's core guarantee), while the
+//! cluster topology, per-node scenarios/sec, shard retries and wall
+//! time are additional provenance only a distributed run has.
+
+use crate::eval::report::{json_array, JsonObj};
+
+/// What one node contributed to a cluster sweep.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeStatus {
+    /// `host:port` of the remote `uds` service.
+    pub addr: String,
+    /// Shards this node streamed to completion.
+    pub shards: u64,
+    /// Scenario results this node produced (completed shards only).
+    pub scenarios: u64,
+    /// Failed shard dispatches attributed to this node (each one was
+    /// requeued or terminated the sweep).
+    pub failures: u64,
+    /// Wall time this node's worker spent streaming completed shards.
+    pub busy_ms: u64,
+    /// Whether the coordinator retired the node after consecutive
+    /// failures (its remaining work went to healthy nodes).
+    pub retired: bool,
+}
+
+impl NodeStatus {
+    pub fn new(addr: &str) -> Self {
+        Self { addr: addr.to_string(), ..Default::default() }
+    }
+
+    /// Completed-scenario throughput over this node's busy time.
+    pub fn scenarios_per_sec(&self) -> f64 {
+        if self.busy_ms == 0 {
+            0.0
+        } else {
+            self.scenarios as f64 * 1000.0 / self.busy_ms as f64
+        }
+    }
+
+    fn json(&self) -> String {
+        JsonObj::new()
+            .str("addr", &self.addr)
+            .u64("shards", self.shards)
+            .u64("scenarios", self.scenarios)
+            .u64("failures", self.failures)
+            .u64("busy_ms", self.busy_ms)
+            .f64("scenarios_per_sec", self.scenarios_per_sec())
+            .bool("retired", self.retired)
+            .finish()
+    }
+}
+
+/// The cluster extension of a sweep summary: topology + shard plan +
+/// retry accounting, rendered into `report.json` under `"cluster"`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClusterSummary {
+    pub nodes: Vec<NodeStatus>,
+    /// Shards the plan was cut into.
+    pub shards: u64,
+    /// Planned scenarios per shard (last shard may be shorter).
+    pub shard_size: u64,
+    /// Shard dispatches that failed and were requeued on another
+    /// (or the same, once healthy) node.
+    pub retries: u64,
+    /// End-to-end coordinator wall time.
+    pub wall_ms: u64,
+}
+
+impl ClusterSummary {
+    /// Aggregate scenarios/sec across the cluster, by coordinator wall
+    /// time (what a user actually waited).
+    pub fn scenarios_per_sec(&self) -> f64 {
+        let scenarios: u64 = self.nodes.iter().map(|n| n.scenarios).sum();
+        if self.wall_ms == 0 {
+            0.0
+        } else {
+            scenarios as f64 * 1000.0 / self.wall_ms as f64
+        }
+    }
+
+    /// The `report.json` fragment: a nested object with one record per
+    /// node (the only nested structure a report carries; the flat wire
+    /// records stay flat).
+    pub fn json(&self) -> String {
+        let nodes = json_array(self.nodes.iter().map(|n| n.json()));
+        JsonObj::new()
+            .u64("nodes_total", self.nodes.len() as u64)
+            .u64("shards", self.shards)
+            .u64("shard_size", self.shard_size)
+            .u64("retries", self.retries)
+            .u64("wall_ms", self.wall_ms)
+            .f64("scenarios_per_sec", self.scenarios_per_sec())
+            .raw("nodes", &nodes)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_throughput_is_busy_time_based() {
+        let mut n = NodeStatus::new("127.0.0.1:7411");
+        assert_eq!(n.scenarios_per_sec(), 0.0, "no division by zero");
+        n.scenarios = 500;
+        n.busy_ms = 2000;
+        assert!((n.scenarios_per_sec() - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_renders_nested_node_records() {
+        let summary = ClusterSummary {
+            nodes: vec![
+                NodeStatus {
+                    addr: "a:1".into(),
+                    shards: 3,
+                    scenarios: 30,
+                    failures: 0,
+                    busy_ms: 10,
+                    retired: false,
+                },
+                NodeStatus {
+                    addr: "b:2".into(),
+                    shards: 0,
+                    scenarios: 0,
+                    failures: 2,
+                    busy_ms: 0,
+                    retired: true,
+                },
+            ],
+            shards: 3,
+            shard_size: 10,
+            retries: 2,
+            wall_ms: 20,
+        };
+        let json = summary.json();
+        assert!(json.contains("\"nodes_total\":2"), "{json}");
+        assert!(json.contains("\"retries\":2"), "{json}");
+        assert!(json.contains("\"addr\":\"a:1\""), "{json}");
+        assert!(json.contains("\"retired\":true"), "{json}");
+        // 30 scenarios over 20ms of wall time.
+        assert!(json.contains("\"scenarios_per_sec\":1500"), "{json}");
+    }
+}

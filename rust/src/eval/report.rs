@@ -402,6 +402,12 @@ pub struct Report {
     /// Free-form provenance (grid spec, mode, target address, ...).
     pub meta: Vec<(String, String)>,
     pub summary: SweepSummary,
+    /// Cluster-sweep provenance (topology, per-node throughput, shard
+    /// retries) — only a distributed run has one.  It lands in
+    /// `report.json` under `"cluster"`; `report.csv` carries scenario
+    /// rows only, so cluster and local artifacts for the same grid stay
+    /// byte-identical.
+    pub cluster: Option<crate::cluster::ClusterSummary>,
     pub results: Vec<ScenarioResult>,
 }
 
@@ -413,11 +419,12 @@ impl Report {
         }
         let meta = meta.finish();
         let results = json_array(self.results.iter().map(|r| r.json_line()));
-        JsonObj::new()
-            .raw("meta", &meta)
-            .raw("summary", &self.summary.json_line())
-            .raw("results", &results)
-            .finish()
+        let mut doc = JsonObj::new();
+        doc.raw("meta", &meta).raw("summary", &self.summary.json_line());
+        if let Some(cluster) = &self.cluster {
+            doc.raw("cluster", &cluster.json());
+        }
+        doc.raw("results", &results).finish()
     }
 
     pub fn csv(&self) -> String {
@@ -561,15 +568,39 @@ mod tests {
         let rep = Report {
             meta: vec![("mode".into(), "local".into())],
             summary: SweepSummary { scenarios: 1, ..Default::default() },
+            cluster: None,
             results: vec![sample()],
         };
         let (j, c) = rep.save(&dir).unwrap();
         let jtext = std::fs::read_to_string(j).unwrap();
         assert!(jtext.contains("\"results\":[{"));
         assert!(jtext.contains("\"mode\":\"local\""));
+        assert!(!jtext.contains("\"cluster\""), "local reports have no cluster section");
         let ctext = std::fs::read_to_string(c).unwrap();
         assert!(ctext.starts_with("id,schedule"));
         assert_eq!(ctext.lines().count(), 2);
+    }
+
+    #[test]
+    fn cluster_section_rendered_when_present() {
+        let rep = Report {
+            meta: vec![("mode".into(), "cluster".into())],
+            summary: SweepSummary { scenarios: 1, ..Default::default() },
+            cluster: Some(crate::cluster::ClusterSummary {
+                nodes: vec![crate::cluster::NodeStatus::new("127.0.0.1:7411")],
+                shards: 4,
+                shard_size: 16,
+                retries: 1,
+                wall_ms: 12,
+            }),
+            results: vec![sample()],
+        };
+        let json = rep.json();
+        assert!(json.contains("\"cluster\":{"), "{json}");
+        assert!(json.contains("\"shards\":4"), "{json}");
+        assert!(json.contains("\"addr\":\"127.0.0.1:7411\""), "{json}");
+        // The CSV is unchanged by the cluster section: scenario rows only.
+        assert_eq!(rep.csv().lines().count(), 2);
     }
 
     #[test]

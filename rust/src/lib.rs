@@ -33,6 +33,9 @@
 //!   bounded worker pool, and the `BATCH` scenario-sweep protocol.
 //! * [`sweep`] — scenario grids and the deterministic batch sweep
 //!   engine shared by the service and the `uds sweep` CLI.
+//! * [`cluster`] — the cluster sweep fabric: shard grids across N
+//!   remote services with deterministic merge and shard retry
+//!   (`uds sweep --cluster`), lifting the single-service scenario cap.
 //!
 //! ## Quickstart
 //!
@@ -52,6 +55,7 @@
 //! assert_eq!(stats.iterations, 1_000);
 //! ```
 
+pub mod cluster;
 pub mod coordinator;
 pub mod eval;
 pub mod metrics;

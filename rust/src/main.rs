@@ -3,8 +3,9 @@
 //! Subcommands:
 //! * `run`            — execute one scheduled loop (simulated or real threads)
 //! * `eval`           — regenerate the E1–E8 evaluation tables (EXPERIMENTS.md)
-//! * `sweep`          — run a scenario grid (locally or against a remote
-//!                      service) and write report.json/report.csv
+//! * `sweep`          — run a scenario grid (locally, against a remote
+//!                      service, or sharded across a `--cluster` of
+//!                      services) and write report.json/report.csv
 //! * `perf-gate`      — compare a bench JSON against the committed baseline
 //! * `list-schedules` — every name in the schedule registry (builtins
 //!                      plus registered user-defined schedules) and the
@@ -22,6 +23,7 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
+use uds::cluster::{self, ClusterOptions};
 use uds::coordinator::{
     parallel_for, ExecOptions, HistoryArena, LoopRecord, LoopSpec, TeamSpec,
 };
@@ -48,8 +50,14 @@ USAGE:
             [--variability V1;V2] [--threads P1,P2] [--seeds K1,K2]
             [--mean-ns X] [--h-ns H] [--workers W]
             [--out DIR] [--remote HOST:PORT]
+            [--cluster HOST:PORT,HOST:PORT[,...]] [--shard-size K]
+            [--shard-retries R] [--io-timeout-secs T]
             (schedule/workload/variability lists are ';'-separated:
-            labels embed commas)
+            labels embed commas.  --cluster shards the grid across the
+            listed uds services with deterministic merge — report.csv is
+            byte-identical to a local run — and lifts the 100k scenario
+            cap to per-shard; a dead node's shard is requeued with
+            bounded retries)
   uds perf-gate [--baseline FILE] [--current FILE] [--threshold-pct T]
             [--report FILE] [--update-baseline] [--self-test]
   uds list-schedules
@@ -360,23 +368,25 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
         }
     }
     let out = PathBuf::from(flags.get_str("out", "results/sweep"));
-    let report = match flags.named.get("remote") {
-        Some(addr) => {
-            // Remote grids are validated by the *server's* schedule
-            // registry: user-defined schedules registered in the server
-            // process must be sweepable by name even when this client
-            // doesn't know them, so the raw flag values are forwarded
-            // verbatim and a bad grid surfaces as the server's ERR line.
-            let line = std::iter::once("BATCH".to_string())
-                .chain(pairs.iter().map(|(k, v)| format!("{k}={v}")))
-                .collect::<Vec<_>>()
-                .join(" ");
-            sweep_remote(&line, addr)?
-        }
-        None => {
-            let grid = SweepGrid::from_pairs(pairs).map_err(|e| e.to_string())?;
-            sweep_local(&grid)
-        }
+    if flags.has("remote") && flags.has("cluster") {
+        return Err("--remote and --cluster are mutually exclusive".into());
+    }
+    let report = if let Some(addr) = flags.named.get("remote") {
+        // Remote grids are validated by the *server's* schedule
+        // registry: user-defined schedules registered in the server
+        // process must be sweepable by name even when this client
+        // doesn't know them, so the raw flag values are forwarded
+        // verbatim and a bad grid surfaces as the server's ERR line.
+        let line = std::iter::once("BATCH".to_string())
+            .chain(pairs.iter().map(|(k, v)| format!("{k}={v}")))
+            .collect::<Vec<_>>()
+            .join(" ");
+        sweep_remote(&line, addr)?
+    } else if let Some(nodes) = flags.named.get("cluster") {
+        sweep_cluster(&flags, pairs, nodes)?
+    } else {
+        let grid = SweepGrid::from_pairs(pairs).map_err(|e| e.to_string())?;
+        sweep_local(&grid)
     };
     let (jpath, cpath) = report.save(&out).map_err(|e| e.to_string())?;
     let s = &report.summary;
@@ -384,9 +394,65 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
         "sweep: {} scenarios, {} distinct workloads, {} index builds, {} cache hits",
         s.scenarios, s.distinct_workloads, s.index_builds, s.cache_hits
     );
+    if let Some(c) = &report.cluster {
+        println!(
+            "cluster: {} nodes, {} shards (size {}), {} retries, {} ms wall, \
+{:.0} scenarios/sec",
+            c.nodes.len(),
+            c.shards,
+            c.shard_size,
+            c.retries,
+            c.wall_ms,
+            c.scenarios_per_sec()
+        );
+        for node in &c.nodes {
+            println!(
+                "  {:<24} shards={} scenarios={} failures={} {:.0} scenarios/sec{}",
+                node.addr,
+                node.shards,
+                node.scenarios,
+                node.failures,
+                node.scenarios_per_sec(),
+                if node.retired { " [retired]" } else { "" }
+            );
+        }
+    }
     println!("saved {}", jpath.display());
     println!("saved {}", cpath.display());
     Ok(())
+}
+
+/// Shard the grid across a comma-separated node list via the cluster
+/// fabric.  The grid is parsed *uncapped*: the coordinator re-applies
+/// the scenario cap per shard, which is how >100k-scenario grids run.
+fn sweep_cluster(
+    flags: &Flags,
+    pairs: Vec<(&str, &str)>,
+    nodes: &str,
+) -> Result<Report, String> {
+    let nodes: Vec<String> = nodes
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    let grid = SweepGrid::from_pairs_uncapped(pairs).map_err(|e| e.to_string())?;
+    let opts = ClusterOptions {
+        shard_size: flags.get("shard-size", 4096u64)?,
+        max_retries: flags.get("shard-retries", 2u32)?,
+        io_timeout: std::time::Duration::from_secs(flags.get("io-timeout-secs", 60u64)?),
+        ..ClusterOptions::default()
+    };
+    let outcome = cluster::run_cluster_sweep(&grid, &nodes, &opts)
+        .map_err(|e| format!("cluster sweep: {e}"))?;
+    let mut meta = sweep_meta(&grid.to_batch_line(), "cluster", None);
+    meta.push(("nodes".to_string(), nodes.join(",")));
+    Ok(Report {
+        meta,
+        summary: outcome.summary,
+        cluster: Some(outcome.cluster),
+        results: outcome.results,
+    })
 }
 
 fn sweep_meta(batch_line: &str, mode: &str, addr: Option<&str>) -> Vec<(String, String)> {
@@ -406,7 +472,12 @@ fn sweep_local(grid: &SweepGrid) -> Report {
     let svc = service::Service::new();
     let scenarios = grid.expand();
     let (results, summary) = run_sweep(&svc, &scenarios, grid.workers);
-    Report { meta: sweep_meta(&grid.to_batch_line(), "local", None), summary, results }
+    Report {
+        meta: sweep_meta(&grid.to_batch_line(), "local", None),
+        summary,
+        cluster: None,
+        results,
+    }
 }
 
 /// Send one `BATCH` line to a remote service and collect the streamed
@@ -444,7 +515,12 @@ fn sweep_remote(batch_line: &str, addr: &str) -> Result<Report, String> {
             results.len()
         ));
     }
-    Ok(Report { meta: sweep_meta(batch_line, "remote", Some(addr)), summary, results })
+    Ok(Report {
+        meta: sweep_meta(batch_line, "remote", Some(addr)),
+        summary,
+        cluster: None,
+        results,
+    })
 }
 
 fn cmd_perf_gate(args: &[String]) -> Result<(), String> {

@@ -29,11 +29,20 @@
 //! {"type":"summary","scenarios":N,"distinct_workloads":D,"index_builds":B,"cache_hits":H}
 //! ```
 //!
+//! An optional `shard=OFFSET,LEN` field restricts a `BATCH` to the
+//! contiguous scenario range `[OFFSET, OFFSET+LEN)` of the full grid
+//! while keeping **global** scenario ids — the building block of the
+//! [`crate::cluster`] fabric, which shards huge grids across many
+//! services and merges the streams back in id order.  The 100k
+//! per-request scenario cap applies to the shard length, not the full
+//! grid size, so sharded grids of any size are servable; malformed or
+//! out-of-range shards answer `ERR bad_shard`.
+//!
 //! Error codes are stable protocol surface (`bad_request`, `bad_field`,
 //! `bad_value`, `bad_schedule`, `bad_workload`, `bad_variability`,
 //! `bad_n`, `bad_threads`, `bad_mean`, `empty_grid`, `grid_too_large`,
-//! `bad_workers`); details are human-oriented and may change.
-//! Duplicate keys in a request line answer `bad_request`.
+//! `bad_workers`, `bad_shard`); details are human-oriented and may
+//! change.  Duplicate keys in a request line answer `bad_request`.
 //!
 //! Schedule labels — in `schedule=` and in a `BATCH` `schedules=` list —
 //! resolve through the open schedule registry

@@ -9,7 +9,7 @@
 //! ```text
 //! BATCH schedules=fac2;gss n=1000,10000 [workloads=lognormal;mix:gaussian:uniform,frac=0.2]
 //!       [variability=calm;hetero:1,1,2,4] [threads=4,8] [seeds=0,1]
-//!       [mean_ns=1000] [h_ns=250] [workers=0]
+//!       [mean_ns=1000] [h_ns=250] [workers=0] [shard=OFFSET,LEN]
 //! ```
 //!
 //! (Schedule, workload and variability labels embed commas, so those
@@ -28,6 +28,13 @@
 //! *and* workloads exactly like builtins; unknown labels fail parsing
 //! with `bad_schedule` / `bad_workload`, malformed variability with
 //! `bad_variability`.
+//!
+//! `shard=OFFSET,LEN` restricts a request to the contiguous scenario
+//! range `[OFFSET, OFFSET+LEN)` of the grid's fixed expansion order
+//! while keeping *global* scenario ids — the wire unit of the cluster
+//! sweep fabric ([`crate::cluster`]).  The 100k scenario cap then
+//! applies to the shard's length, not the full grid, so a coordinator
+//! can drive arbitrarily large grids through capped per-node requests.
 
 use crate::schedules::ScheduleSpec;
 use crate::sim::VariabilitySpec;
@@ -75,6 +82,11 @@ pub struct SweepGrid {
     pub h_ns: u64,
     /// Requested sweep parallelism; 0 = runner default.
     pub workers: usize,
+    /// Optional `(offset, len)` restriction to a contiguous scenario
+    /// range of the fixed expansion order.  `expand` then materializes
+    /// only that range (with global ids) and the scenario cap applies
+    /// to `len` instead of the full grid size.
+    pub shard: Option<(u64, u64)>,
 }
 
 fn parse_list<T: std::str::FromStr>(k: &'static str, v: &str) -> Result<Vec<T>, CodedError> {
@@ -96,6 +108,23 @@ impl SweepGrid {
     pub fn from_pairs<'a>(
         pairs: impl IntoIterator<Item = (&'a str, &'a str)>,
     ) -> Result<Self, CodedError> {
+        Self::from_pairs_capped(pairs, Some(MAX_SCENARIOS))
+    }
+
+    /// As [`Self::from_pairs`] but without the whole-grid scenario cap
+    /// — the cluster coordinator's entry point: it lifts the cap one
+    /// level up and re-enforces it per dispatched shard, so a >100k
+    /// grid that a single `BATCH` refuses still runs via sharding.
+    pub fn from_pairs_uncapped<'a>(
+        pairs: impl IntoIterator<Item = (&'a str, &'a str)>,
+    ) -> Result<Self, CodedError> {
+        Self::from_pairs_capped(pairs, None)
+    }
+
+    fn from_pairs_capped<'a>(
+        pairs: impl IntoIterator<Item = (&'a str, &'a str)>,
+        cap: Option<u64>,
+    ) -> Result<Self, CodedError> {
         let mut grid = SweepGrid {
             workloads: Vec::new(),
             variability: Vec::new(),
@@ -106,6 +135,7 @@ impl SweepGrid {
             mean_ns: 1000.0,
             h_ns: 250,
             workers: 0,
+            shard: None,
         };
         let mut seen = std::collections::HashSet::new();
         for (k, v) in pairs {
@@ -165,12 +195,26 @@ impl SweepGrid {
                         .parse()
                         .map_err(|_| CodedError::new("bad_value", format!("workers: '{v}'")))?;
                 }
+                // A contiguous scenario range `offset,len` of the fixed
+                // expansion order — the cluster fabric's wire unit.
+                "shard" => {
+                    let bad = || {
+                        CodedError::new(
+                            "bad_shard",
+                            format!("shard must be 'offset,len', got '{v}'"),
+                        )
+                    };
+                    let (off, len) = v.split_once(',').ok_or_else(bad)?;
+                    let off: u64 = off.trim().parse().map_err(|_| bad())?;
+                    let len: u64 = len.trim().parse().map_err(|_| bad())?;
+                    grid.shard = Some((off, len));
+                }
                 other => {
                     return Err(CodedError::new("bad_field", format!("'{other}'")));
                 }
             }
         }
-        grid.apply_defaults_and_validate()?;
+        grid.apply_defaults_and_validate(cap)?;
         Ok(grid)
     }
 
@@ -212,9 +256,13 @@ impl SweepGrid {
             .map(|s| s.label())
             .collect::<Vec<_>>()
             .join(";");
+        let shard = match self.shard {
+            Some((off, len)) => format!(" shard={off},{len}"),
+            None => String::new(),
+        };
         format!(
             "BATCH workloads={workloads} variability={variability} \
-schedules={schedules} n={} threads={} seeds={} mean_ns={} h_ns={} workers={}",
+schedules={schedules} n={} threads={} seeds={} mean_ns={} h_ns={} workers={}{shard}",
             join_u64(&self.ns),
             join_u64(&self.threads),
             join_u64(&self.seeds),
@@ -224,7 +272,7 @@ schedules={schedules} n={} threads={} seeds={} mean_ns={} h_ns={} workers={}",
         )
     }
 
-    fn apply_defaults_and_validate(&mut self) -> Result<(), CodedError> {
+    fn apply_defaults_and_validate(&mut self, cap: Option<u64>) -> Result<(), CodedError> {
         if self.workloads.is_empty() {
             self.workloads.push(WorkloadSpec::from_class(WorkloadClass::Lognormal));
         }
@@ -268,11 +316,50 @@ schedules={schedules} n={} threads={} seeds={} mean_ns={} h_ns={} workers={}",
                 format!("workers must be 0..={MAX_WORKERS}"),
             ));
         }
-        if self.size() > MAX_SCENARIOS {
-            return Err(CodedError::new(
-                "grid_too_large",
-                format!("{} scenarios > cap {MAX_SCENARIOS}", self.size()),
-            ));
+        match self.shard {
+            // A sharded request: the cap applies to the shard's length
+            // (the work this node actually performs), never the full
+            // grid — that is the fan-out contract of the cluster fabric.
+            Some((offset, len)) => {
+                if len == 0 {
+                    return Err(CodedError::new("bad_shard", "shard len must be > 0"));
+                }
+                let end = offset.checked_add(len).ok_or_else(|| {
+                    CodedError::new("bad_shard", "shard offset+len overflows")
+                })?;
+                if end > self.size() {
+                    return Err(CodedError::new(
+                        "bad_shard",
+                        format!(
+                            "shard [{offset}, {end}) exceeds the grid's {} scenarios",
+                            self.size()
+                        ),
+                    ));
+                }
+                if len > MAX_SCENARIOS {
+                    return Err(CodedError::new(
+                        "grid_too_large",
+                        format!("shard of {len} scenarios > cap {MAX_SCENARIOS} per request"),
+                    ));
+                }
+            }
+            None => {
+                // The over-cap reply must name the offending scenario
+                // count so a client can size its shards without
+                // re-deriving the product (pinned by tests).
+                if let Some(cap) = cap {
+                    if self.size() > cap {
+                        return Err(CodedError::new(
+                            "grid_too_large",
+                            format!(
+                                "grid expands to {} scenarios > cap {cap} per request; \
+shard it (shard=OFFSET,LEN) or run a cluster sweep (uds sweep --cluster)",
+                                self.size()
+                            ),
+                        ));
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -292,35 +379,63 @@ schedules={schedules} n={} threads={} seeds={} mean_ns={} h_ns={} workers={}",
         .fold(1u64, |acc, &len| acc.saturating_mul(len as u64))
     }
 
-    /// Materialize the grid in its fixed expansion order.
-    pub fn expand(&self) -> Vec<Scenario> {
-        let mut out = Vec::with_capacity(self.size() as usize);
-        let mut id = 0u64;
-        for variability in &self.variability {
-            for workload in &self.workloads {
-                for &n in &self.ns {
-                    for &seed in &self.seeds {
-                        for schedule in &self.schedules {
-                            for &threads in &self.threads {
-                                out.push(Scenario {
-                                    id,
-                                    schedule: schedule.clone(),
-                                    workload: workload.clone(),
-                                    variability: variability.clone(),
-                                    n,
-                                    threads: threads as usize,
-                                    mean_ns: self.mean_ns,
-                                    h_ns: self.h_ns,
-                                    seed,
-                                });
-                                id += 1;
-                            }
-                        }
-                    }
-                }
-            }
+    /// Scenarios this request will actually simulate: the shard's
+    /// length when restricted, the full grid size otherwise.
+    pub fn effective_len(&self) -> u64 {
+        match self.shard {
+            Some((_, len)) => len,
+            None => self.size(),
+        }
+    }
+
+    /// The scenario at global grid index `id` — a mixed-radix decode of
+    /// the fixed expansion order (variability-major, threads innermost),
+    /// so any contiguous range of a grid can be materialized without
+    /// expanding everything before it.
+    ///
+    /// Panics if `id >= self.size()` (validated grids never do).
+    pub fn scenario_at(&self, id: u64) -> Scenario {
+        let mut rem = id;
+        let mut digit = |len: usize| -> usize {
+            let d = (rem % len as u64) as usize;
+            rem /= len as u64;
+            d
+        };
+        let ti = digit(self.threads.len());
+        let si = digit(self.schedules.len());
+        let ki = digit(self.seeds.len());
+        let ni = digit(self.ns.len());
+        let wi = digit(self.workloads.len());
+        let vi = digit(self.variability.len());
+        assert!(rem == 0, "scenario id {id} out of range");
+        Scenario {
+            id,
+            schedule: self.schedules[si].clone(),
+            workload: self.workloads[wi].clone(),
+            variability: self.variability[vi].clone(),
+            n: self.ns[ni],
+            threads: self.threads[ti] as usize,
+            mean_ns: self.mean_ns,
+            h_ns: self.h_ns,
+            seed: self.seeds[ki],
+        }
+    }
+
+    /// Materialize the contiguous range `[offset, offset+len)` of the
+    /// grid's expansion order, ids staying global.
+    pub fn expand_range(&self, offset: u64, len: u64) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(len as usize);
+        for id in offset..offset.saturating_add(len) {
+            out.push(self.scenario_at(id));
         }
         out
+    }
+
+    /// Materialize the grid in its fixed expansion order — restricted
+    /// to the request's shard when one is set (global ids preserved).
+    pub fn expand(&self) -> Vec<Scenario> {
+        let (offset, len) = self.shard.unwrap_or((0, self.size()));
+        self.expand_range(offset, len)
     }
 }
 
@@ -496,6 +611,94 @@ lognormal,bimodal,sawtooth schedules=fac2 n={ns} seeds={seeds}"
         );
         let err = SweepGrid::parse_batch_line(&line).unwrap_err();
         assert_eq!(err.code, "grid_too_large");
+        // The reply names the offending scenario count: 8 x 1000 x 20.
+        assert!(err.detail.contains("160000"), "count missing: {}", err.detail);
+        assert!(err.detail.contains("100000"), "cap missing: {}", err.detail);
+        // The uncapped (coordinator) parse accepts the same grid.
+        let body = line.trim().strip_prefix("BATCH").unwrap().trim();
+        let pairs: Vec<(&str, &str)> = body
+            .split_whitespace()
+            .map(|tok| tok.split_once('=').unwrap())
+            .collect();
+        let g = SweepGrid::from_pairs_uncapped(pairs).unwrap();
+        assert_eq!(g.size(), 160_000);
+    }
+
+    #[test]
+    fn shard_restricts_expansion_with_global_ids() {
+        let full = SweepGrid::parse_batch_line(
+            "BATCH workloads=uniform,gaussian schedules=fac2;gss n=10,20 threads=2,4",
+        )
+        .unwrap();
+        let all = full.expand();
+        assert_eq!(all.len(), 16);
+        let sharded = SweepGrid::parse_batch_line(
+            "BATCH workloads=uniform,gaussian schedules=fac2;gss n=10,20 \
+threads=2,4 shard=5,7",
+        )
+        .unwrap();
+        assert_eq!(sharded.effective_len(), 7);
+        let part = sharded.expand();
+        assert_eq!(part.len(), 7);
+        for (i, sc) in part.iter().enumerate() {
+            let twin = &all[5 + i];
+            assert_eq!(sc.id, twin.id, "global ids preserved");
+            assert_eq!(sc.schedule.label(), twin.schedule.label());
+            assert_eq!(sc.workload.label(), twin.workload.label());
+            assert_eq!(sc.variability.label(), twin.variability.label());
+            assert_eq!((sc.n, sc.threads, sc.seed), (twin.n, twin.threads, twin.seed));
+        }
+        // scenario_at is a faithful random-access decode of expand().
+        for sc in &all {
+            let direct = full.scenario_at(sc.id);
+            assert_eq!(direct.id, sc.id);
+            assert_eq!(direct.schedule.label(), sc.schedule.label());
+            assert_eq!(direct.workload.label(), sc.workload.label());
+            assert_eq!((direct.n, direct.threads, direct.seed), (sc.n, sc.threads, sc.seed));
+        }
+        // The wire line roundtrips the shard field.
+        let line = sharded.to_batch_line();
+        assert!(line.ends_with("shard=5,7"), "{line}");
+        assert_eq!(SweepGrid::parse_batch_line(&line).unwrap().to_batch_line(), line);
+    }
+
+    #[test]
+    fn shard_bounds_validated() {
+        for (line, code) in [
+            ("BATCH schedules=fac2 n=10,20 shard=0,0", "bad_shard"),
+            ("BATCH schedules=fac2 n=10,20 shard=2,1", "bad_shard"),
+            ("BATCH schedules=fac2 n=10,20 shard=1", "bad_shard"),
+            ("BATCH schedules=fac2 n=10,20 shard=a,b", "bad_shard"),
+            (
+                "BATCH schedules=fac2 n=10,20 shard=18446744073709551615,2",
+                "bad_shard",
+            ),
+        ] {
+            let err = SweepGrid::parse_batch_line(line).unwrap_err();
+            assert_eq!(err.code, code, "{line}: {}", err.detail);
+        }
+        // In-bounds shards are fine, including the ragged tail.
+        let g = SweepGrid::parse_batch_line("BATCH schedules=fac2 n=10,20 shard=1,1")
+            .unwrap();
+        assert_eq!(g.expand()[0].id, 1);
+        // A shard larger than the cap is refused with the count named,
+        // even when the full grid is legal for a coordinator.
+        let seeds: String =
+            (0..20).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+        let ns: String =
+            (1..=1000).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+        let line = format!(
+            "BATCH workloads=uniform,increasing,decreasing,gaussian,exponential,\
+lognormal,bimodal,sawtooth schedules=fac2 n={ns} seeds={seeds} shard=0,150000"
+        );
+        let err = SweepGrid::parse_batch_line(&line).unwrap_err();
+        assert_eq!(err.code, "grid_too_large");
+        assert!(err.detail.contains("150000"), "{}", err.detail);
+        // ...while a capped shard over the same over-cap grid is served.
+        let ok = SweepGrid::parse_batch_line(&line.replace("shard=0,150000", "shard=155000,5000"))
+            .unwrap();
+        assert_eq!(ok.effective_len(), 5000);
+        assert_eq!(ok.size(), 160_000);
     }
 
     #[test]

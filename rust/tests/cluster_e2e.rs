@@ -1,0 +1,199 @@
+//! End-to-end cluster sweep fabric over loopback TCP: the acceptance
+//! criteria of the cluster subsystem (ISSUE 6).
+//!
+//! * a 3-node cluster sweep's `report.csv` is byte-identical to a local
+//!   sweep of the same grid, including with a ragged shard plan;
+//! * killing a node mid-sweep (truncated stream, then connection
+//!   refused) requeues its shards on healthy nodes and the merged
+//!   artifact is still byte-identical;
+//! * a >100k-scenario grid that a single-service `BATCH` refuses
+//!   (`grid_too_large`, count named) completes through the coordinator,
+//!   which re-applies the cap per shard.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use uds::cluster::{run_cluster_sweep, ClusterOptions};
+use uds::eval::report::{Report, ScenarioResult, SweepSummary};
+use uds::service::{serve_on, Service};
+use uds::sweep::{run_sweep, SweepGrid};
+
+fn spawn_service(pool_workers: usize) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || serve_on(listener, pool_workers));
+    addr.to_string()
+}
+
+/// A node that dies mid-sweep: it serves exactly one connection with a
+/// truncated result stream (two records, no summary), then refuses all
+/// further connects — the coordinator must requeue its shards.
+fn spawn_flaky_node() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        // Refuse everything after the first victim immediately.
+        drop(listener);
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        let _ = reader.read_line(&mut line);
+        let svc = Service::new();
+        let mut full = Vec::new();
+        svc.handle_batch(line.trim(), &mut full);
+        // Stream the first two genuine records, then drop the socket.
+        let cut = full
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b == b'\n')
+            .map(|(i, _)| i + 1)
+            .nth(1)
+            .unwrap_or(full.len());
+        let _ = stream.write_all(&full[..cut]);
+    });
+    addr.to_string()
+}
+
+/// The byte artifact under test: `report.csv` carries scenario rows
+/// only, so cluster and local runs of one grid must render identically.
+fn csv_of(results: Vec<ScenarioResult>) -> String {
+    Report {
+        meta: Vec::new(),
+        summary: SweepSummary::default(),
+        cluster: None,
+        results,
+    }
+    .csv()
+}
+
+fn local_results(grid: &SweepGrid) -> (Vec<ScenarioResult>, SweepSummary) {
+    run_sweep(&Service::new(), &grid.expand(), 2)
+}
+
+const GRID: &str = "BATCH workloads=lognormal;uniform \
+schedules=fac2;gss;dynamic,16 n=500,1000 threads=2,4 seeds=1,2 workers=2";
+
+#[test]
+fn three_node_cluster_matches_local_byte_for_byte() {
+    let grid = SweepGrid::parse_batch_line(GRID).unwrap();
+    assert_eq!(grid.size(), 48);
+    let nodes = vec![spawn_service(2), spawn_service(2), spawn_service(2)];
+    let opts = ClusterOptions {
+        // Ragged plan: 48 scenarios over shards of 7 (6 full + tail of 6).
+        shard_size: 7,
+        ..ClusterOptions::default()
+    };
+    let outcome = run_cluster_sweep(&grid, &nodes, &opts).unwrap();
+
+    let (local, local_summary) = local_results(&grid);
+    assert_eq!(
+        csv_of(outcome.results),
+        csv_of(local),
+        "cluster report.csv must be byte-identical to the local sweep"
+    );
+    assert_eq!(outcome.summary.scenarios, 48);
+    assert_eq!(
+        outcome.summary.distinct_workloads,
+        local_summary.distinct_workloads
+    );
+
+    let c = &outcome.cluster;
+    assert_eq!(c.shards, 7);
+    assert_eq!(c.shard_size, 7);
+    assert_eq!(c.nodes.len(), 3);
+    assert_eq!(c.retries, 0);
+    assert_eq!(c.nodes.iter().map(|n| n.scenarios).sum::<u64>(), 48);
+    assert_eq!(c.nodes.iter().map(|n| n.shards).sum::<u64>(), 7);
+    assert!(c.nodes.iter().all(|n| !n.retired));
+
+    // The cluster extension lands in report.json (and only there).
+    let report = Report {
+        meta: vec![("mode".into(), "cluster".into())],
+        summary: outcome.summary,
+        cluster: Some(outcome.cluster),
+        results: Vec::new(),
+    };
+    let json = report.json();
+    assert!(json.contains("\"cluster\":{"), "{json}");
+    assert!(json.contains("\"nodes_total\":3"), "{json}");
+}
+
+#[test]
+fn node_killed_mid_sweep_requeues_and_stays_byte_identical() {
+    let grid = SweepGrid::parse_batch_line(GRID).unwrap();
+    let flaky = spawn_flaky_node();
+    let nodes = vec![spawn_service(2), spawn_service(2), flaky.clone()];
+    let opts = ClusterOptions {
+        shard_size: 7,
+        max_retries: 2,
+        // Retire on the first failure so the `retired` flag is
+        // deterministic regardless of how fast the healthy nodes drain
+        // the plan.
+        node_failures: 1,
+        io_timeout: Duration::from_secs(10),
+    };
+    let outcome = run_cluster_sweep(&grid, &nodes, &opts).unwrap();
+
+    let (local, _) = local_results(&grid);
+    assert_eq!(
+        csv_of(outcome.results),
+        csv_of(local),
+        "a mid-sweep node death must not change the merged artifact"
+    );
+    let c = &outcome.cluster;
+    assert!(c.retries >= 1, "the dead node's shard was requeued: {c:?}");
+    let dead = c.nodes.iter().find(|n| n.addr == flaky).unwrap();
+    assert!(dead.failures >= 1, "{dead:?}");
+    assert!(dead.retired, "{dead:?}");
+    assert_eq!(c.nodes.iter().map(|n| n.scenarios).sum::<u64>(), 48);
+}
+
+#[test]
+fn over_cap_grid_refused_by_one_service_but_completes_via_cluster() {
+    // 201 n-values x 501 seeds = 100,701 scenarios: over the 100k
+    // single-request cap.
+    let ns: String =
+        (10..211).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+    let seeds: String =
+        (0..501).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+    let line = format!(
+        "BATCH workloads=uniform schedules=fac2 n={ns} seeds={seeds} \
+threads=2 workers=2"
+    );
+    let nodes = vec![spawn_service(2), spawn_service(2), spawn_service(2)];
+
+    // A single service refuses the whole grid, naming the count.
+    let mut c = TcpStream::connect(&nodes[0]).unwrap();
+    writeln!(c, "{line}").unwrap();
+    c.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut resp = String::new();
+    BufReader::new(c).read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("ERR grid_too_large"), "{resp}");
+    assert!(resp.contains("100701"), "count named in the refusal: {resp}");
+
+    // The coordinator parses the same grid uncapped and shards it.
+    let body = line.strip_prefix("BATCH").unwrap().trim();
+    let pairs: Vec<(&str, &str)> = body
+        .split_whitespace()
+        .map(|tok| tok.split_once('=').unwrap())
+        .collect();
+    let grid = SweepGrid::from_pairs_uncapped(pairs).unwrap();
+    assert_eq!(grid.size(), 100_701);
+    let opts = ClusterOptions { shard_size: 25_000, ..ClusterOptions::default() };
+    let outcome = run_cluster_sweep(&grid, &nodes, &opts).unwrap();
+
+    assert_eq!(outcome.summary.scenarios, 100_701);
+    assert_eq!(outcome.results.len(), 100_701);
+    for (i, r) in outcome.results.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "merged ids dense and ordered");
+    }
+    assert_eq!(outcome.cluster.shards, 5, "ceil(100701 / 25000)");
+
+    // Spot-check merged records against direct local simulation.
+    let svc = Service::new();
+    for id in [0u64, 1, 25_000, 99_999, 100_700] {
+        let (one, _) = run_sweep(&svc, &[grid.scenario_at(id)], 1);
+        assert_eq!(one[0], outcome.results[id as usize], "scenario {id}");
+    }
+}
