@@ -14,8 +14,17 @@
 //!   workload cache and the sweep drivers), the `SimArena` is reused,
 //!   and each run is O(chunks).
 //!
+//! A third axis measures the batched SoA kernel: `batch/k{1,8,32}`
+//! entries time one `simulate_batch` call over K lanes of the
+//! cached-index sweep case (one shared `CostIndex`, fresh per-lane
+//! records), so `mean_ns / K` is the per-scenario cost and the printed
+//! scenarios/sec compares K values directly.  `uds perf-gate
+//! --batch-min-speedup` enforces the K=32-vs-K=1 ratio.
+//!
 //! Run: `cargo bench --bench sim_throughput` (full: n=1e6, P=8) or
-//! `cargo bench --bench sim_throughput -- --smoke` (CI-sized n=20k).
+//! `cargo bench --bench sim_throughput -- --smoke` (CI-sized n=20k);
+//! `--batch` restricts the run to calibration + the batch axis (the
+//! quick kernel-only smoke case).
 //! `--json PATH` additionally writes the measurements as a perf-gate
 //! document (`uds perf-gate` compares it against `bench_baseline.json`);
 //! the `calibration` entry is a fixed PRNG churn the gate uses to
@@ -24,7 +33,10 @@
 
 use uds::coordinator::{LoopRecord, LoopSpec, TeamSpec};
 use uds::schedules::ScheduleSpec;
-use uds::sim::{simulate, simulate_indexed, NoVariability, SimArena, SimConfig};
+use uds::sim::{
+    simulate, simulate_batch, simulate_indexed, BatchArena, BatchLane,
+    NoVariability, SimArena, SimConfig,
+};
 use uds::util::rng::Pcg;
 use uds::util::Bench;
 use uds::workload::{CostIndex, WorkloadClass};
@@ -32,6 +44,7 @@ use uds::workload::{CostIndex, WorkloadClass};
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
+    let batch_only = args.iter().any(|a| a == "--batch");
     let json_path: Option<String> = args
         .iter()
         .position(|a| a == "--json")
@@ -68,7 +81,8 @@ fn main() {
     });
 
     let mut pairs: Vec<(String, f64, f64)> = Vec::new();
-    for name in ["fac2", "gss"] {
+    let schedules: &[&str] = if batch_only { &[] } else { &["fac2", "gss"] };
+    for &name in schedules {
         let spec = ScheduleSpec::parse(name).unwrap();
         let factory = spec.factory();
 
@@ -134,14 +148,96 @@ fn main() {
         ));
     }
 
-    println!("\n== sims/second (n={n}, P={p}, lognormal, h=250ns) ==");
-    for (name, before_s, after_s) in &pairs {
-        let before_rate = 1.0 / before_s.max(1e-12);
-        let after_rate = 1.0 / after_s.max(1e-12);
-        let speedup = after_rate / before_rate.max(1e-12);
-        println!(
-            "{name:<6} before={before_rate:>12.1}/s  after={after_rate:>12.1}/s  \
+    // Batched SoA kernel axis: one simulate_batch call over K lanes of
+    // the cached-index sweep case (fac2, shared index, fresh per-lane
+    // records — what the sweep engine dispatches per seed block).
+    let batch_spec = ScheduleSpec::parse("fac2").unwrap();
+    let batch_factory = batch_spec.factory();
+    let index = CostIndex::build(&model);
+    let mut batch_arena = BatchArena::new();
+    let mut batch_rates: Vec<(usize, f64)> = Vec::new();
+    for k in [1usize, 8, 32] {
+        let lanes: Vec<BatchLane> = (0..k)
+            .map(|_| BatchLane { index: &index, var: &NoVariability })
+            .collect();
+        let m = g
+            .bench(&format!("batch/k{k}"), || {
+                let mut records: Vec<LoopRecord> =
+                    (0..k).map(|_| LoopRecord::default()).collect();
+                simulate_batch(
+                    &LoopSpec::upto(n),
+                    &TeamSpec::uniform(p),
+                    &*batch_factory,
+                    &lanes,
+                    &mut records,
+                    &cfg,
+                    &mut batch_arena,
+                )
+                .last()
+                .map(|s| s.makespan_ns)
+                .unwrap_or(0)
+            })
+            .clone();
+        batch_rates.push((k, k as f64 / m.mean.as_secs_f64().max(1e-12)));
+    }
+
+    // Sanity: every batch lane simulates the identical physics to the
+    // scalar cached-index path.
+    let mut sanity_arena = SimArena::new();
+    let scalar_ref = simulate_indexed(
+        &LoopSpec::upto(n),
+        &TeamSpec::uniform(p),
+        &*batch_factory,
+        &index,
+        &NoVariability,
+        &mut LoopRecord::default(),
+        &cfg,
+        &mut sanity_arena,
+    );
+    let lanes = vec![BatchLane { index: &index, var: &NoVariability }; 4];
+    let mut records: Vec<LoopRecord> =
+        (0..4).map(|_| LoopRecord::default()).collect();
+    let batch_ref = simulate_batch(
+        &LoopSpec::upto(n),
+        &TeamSpec::uniform(p),
+        &*batch_factory,
+        &lanes,
+        &mut records,
+        &cfg,
+        &mut batch_arena,
+    );
+    for (l, s) in batch_ref.iter().enumerate() {
+        assert_eq!(
+            s.makespan_ns, scalar_ref.makespan_ns,
+            "batch lane {l} diverged from scalar"
+        );
+    }
+
+    if !pairs.is_empty() {
+        println!("\n== sims/second (n={n}, P={p}, lognormal, h=250ns) ==");
+        for (name, before_s, after_s) in &pairs {
+            let before_rate = 1.0 / before_s.max(1e-12);
+            let after_rate = 1.0 / after_s.max(1e-12);
+            let speedup = after_rate / before_rate.max(1e-12);
+            println!(
+                "{name:<6} before={before_rate:>12.1}/s  after={after_rate:>12.1}/s  \
 speedup={speedup:.1}x"
+            );
+        }
+    }
+    println!(
+        "\n== batched kernel: scenarios/second (n={n}, P={p}, shared index, fac2) =="
+    );
+    for (k, rate) in &batch_rates {
+        println!("k={k:<3} {rate:>12.1} scenarios/s");
+    }
+    if let (Some((_, r1)), Some((kmax, rmax))) = (
+        batch_rates.iter().find(|(k, _)| *k == 1),
+        batch_rates.last(),
+    ) {
+        println!(
+            "batch k{kmax} vs k1 per-scenario speedup: {:.2}x",
+            rmax / r1.max(1e-12)
         );
     }
     let _ = g.save_csv();

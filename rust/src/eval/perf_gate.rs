@@ -274,6 +274,81 @@ pub fn compare(baseline: &BenchDoc, current: &BenchDoc, threshold_pct: f64) -> G
     }
 }
 
+/// The batched-kernel axis of a bench document: entries named
+/// `…/batch/k<K>` record the mean time of one `simulate_batch` call
+/// over K lanes, so per-scenario time is `mean_ns / K`.  Returns
+/// `(largest K, per-scenario speedup of that K over K=1)` when the doc
+/// carries both ends of the axis, else `None`.
+pub fn batch_speedup(doc: &BenchDoc) -> Option<(u64, f64)> {
+    let mut k1: Option<f64> = None;
+    let mut best: Option<(u64, f64)> = None;
+    for e in &doc.entries {
+        let Some(at) = e.name.rfind("/batch/k") else { continue };
+        let Ok(k) = e.name[at + "/batch/k".len()..].parse::<u64>() else {
+            continue;
+        };
+        if k == 0 || e.mean_ns <= 0.0 {
+            continue;
+        }
+        let per_scenario = e.mean_ns / k as f64;
+        if k == 1 {
+            k1 = Some(per_scenario);
+        }
+        let larger = match best {
+            Some((bk, _)) => k > bk,
+            None => true,
+        };
+        if larger {
+            best = Some((k, per_scenario));
+        }
+    }
+    let (k, per_scenario) = best?;
+    if k <= 1 {
+        return None;
+    }
+    Some((k, k1? / per_scenario))
+}
+
+/// Fold the batched-kernel axis verdict into a gate outcome: the
+/// current run's largest `batch/k<K>` entry must deliver at least
+/// `min_speedup`× the per-scenario throughput of its `batch/k1` entry.
+/// An absent axis is reported but never fails (the committed baseline
+/// may predate the batch bench), and — like every other axis — a
+/// provisional baseline reports without failing, so offline-authored
+/// numbers can't block CI; freezing the baseline arms the check.
+pub fn apply_batch_axis(outcome: &mut GateOutcome, current: &BenchDoc, min_speedup: f64) {
+    if min_speedup <= 0.0 {
+        return;
+    }
+    match batch_speedup(current) {
+        None => {
+            outcome.table.row(vec![
+                "batch axis (per-scenario, kmax vs k1)".into(),
+                format!("≥{min_speedup:.2}x"),
+                "-".into(),
+                "-".into(),
+                "missing".into(),
+            ]);
+        }
+        Some((k, speedup)) => {
+            let fails = speedup < min_speedup && !outcome.provisional;
+            if fails {
+                outcome.failures.push(format!(
+                    "batch/k{k}: {speedup:.2}x per-scenario speedup over batch/k1 \
+(limit {min_speedup:.2}x)"
+                ));
+            }
+            outcome.table.row(vec![
+                format!("batch axis (per-scenario, k{k} vs k1)"),
+                format!("≥{min_speedup:.2}x"),
+                format!("{speedup:.2}x"),
+                "-".into(),
+                if fails { "FAIL".into() } else { "ok".into() },
+            ]);
+        }
+    }
+}
+
 /// Synthesize a uniformly slowed copy of `doc` (calibration entries
 /// untouched): the self-test input that must trip the gate.
 pub fn degrade(doc: &BenchDoc, slowdown: f64) -> BenchDoc {
@@ -403,6 +478,82 @@ mod tests {
     fn parse_rejects_garbage() {
         assert!(BenchDoc::parse("{}").is_err());
         assert!(BenchDoc::parse("not json").is_err());
+    }
+
+    #[test]
+    fn batch_speedup_normalizes_per_scenario() {
+        // k32 mean is per *call* over 32 lanes: 32 scenarios in 80µs →
+        // 2.4x the per-scenario rate of k1's 6µs.
+        let d = doc(
+            false,
+            &[
+                ("g/batch/k1", 6000.0),
+                ("g/batch/k8", 24000.0),
+                ("g/batch/k32", 80000.0),
+            ],
+        );
+        let (k, speedup) = batch_speedup(&d).unwrap();
+        assert_eq!(k, 32);
+        assert!((speedup - 2.4).abs() < 1e-9, "{speedup}");
+        // Axis needs both ends: k1 alone or k>1 alone is no axis.
+        assert!(batch_speedup(&doc(false, &[("g/batch/k1", 6000.0)])).is_none());
+        assert!(batch_speedup(&doc(false, &[("g/batch/k32", 80000.0)])).is_none());
+        assert!(batch_speedup(&doc(false, &[("g/a", 100.0)])).is_none());
+    }
+
+    #[test]
+    fn batch_axis_enforced_against_armed_baseline() {
+        let base = doc(false, &[("g/a", 100.0)]);
+        // 32 lanes only 1.5x the per-scenario rate: under the 2x floor.
+        let cur = doc(
+            false,
+            &[("g/batch/k1", 6000.0), ("g/batch/k32", 128000.0)],
+        );
+        let mut out = compare(&base, &cur, 15.0);
+        apply_batch_axis(&mut out, &cur, 2.0);
+        assert!(!out.passed());
+        assert!(
+            out.failures.iter().any(|f| f.contains("batch/k32")),
+            "{:?}",
+            out.failures
+        );
+        // A fast-enough axis passes and lands an "ok" row.
+        let cur = doc(
+            false,
+            &[("g/batch/k1", 6000.0), ("g/batch/k32", 64000.0)],
+        );
+        let mut out = compare(&base, &cur, 15.0);
+        apply_batch_axis(&mut out, &cur, 2.0);
+        assert!(out.passed(), "{:?}", out.failures);
+        let last = out.table.rows.last().unwrap();
+        assert!(last[0].contains("k32 vs k1"), "{last:?}");
+        assert_eq!(last[4], "ok");
+        // min_speedup 0 disables the axis entirely.
+        let rows = out.table.rows.len();
+        apply_batch_axis(&mut out, &cur, 0.0);
+        assert_eq!(out.table.rows.len(), rows);
+    }
+
+    #[test]
+    fn batch_axis_reports_only_under_provisional_baseline() {
+        let base = doc(true, &[("g/a", 100.0)]);
+        let cur = doc(
+            false,
+            &[("g/batch/k1", 6000.0), ("g/batch/k32", 192000.0)],
+        );
+        let mut out = compare(&base, &cur, 15.0);
+        apply_batch_axis(&mut out, &cur, 2.0);
+        assert!(out.provisional);
+        assert!(out.passed(), "{:?}", out.failures);
+        // The undershoot is still visible in the table.
+        let last = out.table.rows.last().unwrap();
+        assert_eq!(last[2], "1.00x", "{last:?}");
+        // An absent axis is reported, never failed.
+        let no_axis = doc(false, &[("g/a", 100.0)]);
+        let mut out = compare(&base, &no_axis, 15.0);
+        apply_batch_axis(&mut out, &no_axis, 2.0);
+        assert!(out.passed());
+        assert_eq!(out.table.rows.last().unwrap()[4], "missing");
     }
 
     #[test]

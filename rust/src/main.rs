@@ -32,7 +32,10 @@ use uds::eval::report::{parse_flat, Report, ScenarioResult, SweepSummary};
 use uds::eval::{self, EvalConfig};
 use uds::schedules::{ScheduleRegistry, ScheduleSpec};
 use uds::service;
-use uds::sim::{simulate_indexed, SimArena, SimConfig, VariabilitySpec};
+use uds::sim::{
+    simulate_batch, simulate_indexed, BatchArena, BatchLane, SimArena,
+    SimConfig, VariabilitySpec, MAX_BATCH_LANES,
+};
 use uds::sweep::{run_sweep, SweepGrid};
 use uds::workload::{CostIndex, CostModel, WorkloadRegistry, WorkloadSpec};
 
@@ -42,7 +45,9 @@ uds — user-defined loop scheduling runtime
 USAGE:
   uds run   [--schedule S] [--n N] [--threads P] [--workload W]
             [--variability V] [--mean-ns X] [--h-ns H] [--seed S]
-            [--invocations K] [--real]
+            [--seeds K] [--invocations K] [--real]
+            (--seeds K simulates seeds S..S+K of the scenario in one
+            lockstep SoA batch per invocation; simulated runs only)
   uds eval  [EXP] [--n N] [--threads P] [--mean-ns X] [--h-ns H]
             [--seed S] [--out DIR] [--artifacts DIR]
             EXP: e1..e8 | all (default all)
@@ -59,7 +64,12 @@ USAGE:
             cap to per-shard; a dead node's shard is requeued with
             bounded retries)
   uds perf-gate [--baseline FILE] [--current FILE] [--threshold-pct T]
-            [--report FILE] [--update-baseline] [--self-test]
+            [--batch-min-speedup X] [--report FILE] [--update-baseline]
+            [--self-test]
+            (--batch-min-speedup enforces the batched-kernel axis: the
+            current run's largest batch/k<K> entry must be at least X
+            times the per-scenario throughput of batch/k1; 0 disables.
+            Report-only while the baseline is provisional)
   uds list-schedules
   uds list-workloads
   uds calibrate [--n N] [--threads P]
@@ -229,8 +239,15 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let mean_ns: f64 = flags.get("mean-ns", 1000.0)?;
     let h_ns: u64 = flags.get("h-ns", 250)?;
     let seed: u64 = flags.get("seed", 42)?;
+    let seeds: u64 = flags.get("seeds", 1)?;
     let invocations: u32 = flags.get("invocations", 1)?;
     let real = flags.has("real");
+    if seeds == 0 {
+        return Err("--seeds must be >= 1".into());
+    }
+    if real && seeds > 1 {
+        return Err("--seeds batches simulated runs; drop --real or --seeds".into());
+    }
 
     let spec = ScheduleSpec::parse(&schedule)?;
     // Workload labels resolve through the open workload registry —
@@ -242,6 +259,12 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         eprintln!(
             "note: --variability models simulated machines; real-thread runs \
 ignore it"
+        );
+    }
+    if seeds > 1 {
+        return run_seed_batch(
+            &spec, &wspec, &vspec, n, threads, mean_ns, h_ns, seed, seeds,
+            invocations,
         );
     }
     let costs = wspec.model(n, mean_ns, seed);
@@ -286,6 +309,81 @@ imbalance={:.2}% efficiency={:.3}",
             stats.total_dequeues(),
             stats.percent_imbalance(),
             stats.efficiency(),
+        );
+    }
+    Ok(())
+}
+
+/// Simulated multi-seed run (`uds run --seeds K`): seeds
+/// `base..base+K` of one scenario advanced in lockstep by the batched
+/// SoA kernel, in blocks of at most [`MAX_BATCH_LANES`] lanes, with
+/// per-seed `LoopRecord`s persisting across invocations exactly as a
+/// scalar per-seed loop would keep them.
+#[allow(clippy::too_many_arguments)]
+fn run_seed_batch(
+    spec: &ScheduleSpec,
+    wspec: &WorkloadSpec,
+    vspec: &VariabilitySpec,
+    n: u64,
+    threads: usize,
+    mean_ns: f64,
+    h_ns: u64,
+    base_seed: u64,
+    seeds: u64,
+    invocations: u32,
+) -> Result<(), String> {
+    let var = vspec.build(threads);
+    // One O(n) index build per seed, shared by every invocation.
+    let indexes: Vec<CostIndex> = (0..seeds)
+        .map(|s| {
+            let costs = wspec.model(n, mean_ns, base_seed.wrapping_add(s));
+            CostIndex::build(&*costs)
+        })
+        .collect();
+    let mut records: Vec<LoopRecord> =
+        (0..seeds).map(|_| LoopRecord::default()).collect();
+    let mut arena = BatchArena::new();
+    let loop_spec = LoopSpec::upto(n);
+    let team = TeamSpec::uniform(threads);
+    let cfg = SimConfig { dequeue_overhead_ns: h_ns, trace: false };
+    for inv in 0..invocations {
+        let mut makespans: Vec<u64> = Vec::with_capacity(seeds as usize);
+        for (block, chunk) in indexes.chunks(MAX_BATCH_LANES).enumerate() {
+            let start = block * MAX_BATCH_LANES;
+            let lanes: Vec<BatchLane> = chunk
+                .iter()
+                .map(|index| BatchLane { index, var: &*var })
+                .collect();
+            let stats = simulate_batch(
+                &loop_spec,
+                &team,
+                &*spec.factory(),
+                &lanes,
+                &mut records[start..start + chunk.len()],
+                &cfg,
+                &mut arena,
+            );
+            for (off, st) in stats.iter().enumerate() {
+                println!(
+                    "[inv {inv} seed {}] schedule={} makespan={} chunks={} \
+dequeues={} imbalance={:.2}% efficiency={:.3}",
+                    base_seed.wrapping_add((start + off) as u64),
+                    st.schedule,
+                    eval::fmt_ns(st.makespan_ns),
+                    st.chunks,
+                    st.total_dequeues(),
+                    st.percent_imbalance(),
+                    st.efficiency(),
+                );
+                makespans.push(st.makespan_ns);
+            }
+        }
+        let mean = makespans.iter().sum::<u64>() as f64 / makespans.len() as f64;
+        println!(
+            "[inv {inv}] {seeds} seeds: makespan mean={} min={} max={}",
+            eval::fmt_ns(mean.round() as u64),
+            eval::fmt_ns(makespans.iter().copied().min().unwrap_or(0)),
+            eval::fmt_ns(makespans.iter().copied().max().unwrap_or(0)),
         );
     }
     Ok(())
@@ -565,7 +663,9 @@ fn cmd_perf_gate(args: &[String]) -> Result<(), String> {
     let current_path =
         PathBuf::from(flags.get_str("current", "results/bench_smoke.json"));
     let current = BenchDoc::load(&current_path)?;
-    let outcome = perf_gate::compare(&baseline, &current, threshold);
+    let mut outcome = perf_gate::compare(&baseline, &current, threshold);
+    let min_speedup: f64 = flags.get("batch-min-speedup", 2.0)?;
+    perf_gate::apply_batch_axis(&mut outcome, &current, min_speedup);
     println!("{}", outcome.table.markdown());
     // Write the machine-readable outcome *before* the pass/fail exit so
     // CI can upload it as an artifact on failure.

@@ -1,0 +1,609 @@
+//! Batched SoA simulation kernel: advance K *lanes* — seeds of the same
+//! (workload, schedule, threads, variability) scenario — in lockstep
+//! over shared prefix-sum cost state.
+//!
+//! The scalar [`simulate_indexed`](crate::sim::simulate_indexed) path is
+//! a serial dependency chain per scenario: min-scan → virtual `next` →
+//! clock update, each step waiting on the last.  A sweep with
+//! `seeds=0..31` runs 32 such chains back to back.  This kernel runs
+//! them *interleaved*: one dequeue-execute step per live lane per round,
+//! over structure-of-arrays K×P slabs (`clock/busy/finish/iters/
+//! dequeues`, lane-major, so one lane's block is contiguous and the
+//! whole batch stays cache-resident — 32 lanes × 8 threads × 5 slabs is
+//! ~10KB).  K independent chains in flight give the core real
+//! instruction-level parallelism where the scalar path stalls, and the
+//! shared `CostIndex` / schedule-factory / team state is touched once
+//! per batch instead of once per seed.
+//!
+//! **Bit-identity**: every lane owns its scheduler instance (built from
+//! the one shared factory), its slab block, its feedback slot row and
+//! its [`LoopRecord`] — the lockstep loop literally calls the scalar
+//! path's `sim_step` on per-lane state, so interleaving cannot leak
+//! between lanes and each lane's [`RunStats`] is field-for-field
+//! identical to a scalar `simulate_indexed` call
+//! (`tests/proptests.rs::prop_batch_matches_scalar` pins this across
+//! every registered schedule and workload head).
+//!
+//! Teams wider than [`FLAT_SCAN_MAX_THREADS`] fall back to the scalar
+//! heap dispatcher, lane by lane — still bit-identical, just without
+//! the lockstep interleave (the SoA win targets the ≤64-thread blocks
+//! the flat min-scan serves).
+
+use std::cmp::Reverse;
+
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::{ScheduleFactory, Scheduler};
+use crate::metrics::{ChunkLog, RunStats};
+use crate::sim::executor::{sim_step, SimConfig, FLAT_SCAN_MAX_THREADS};
+use crate::sim::variability::Variability;
+use crate::workload::CostIndex;
+
+/// Widest lane block the sweep engine batches (and the largest K on the
+/// bench's scenarios/sec axis).  Beyond this the SoA slabs outgrow L1
+/// and the lockstep win flattens; callers with more seeds chunk them.
+pub const MAX_BATCH_LANES: usize = 32;
+
+/// Per-lane inputs of a batch: the cost oracle and machine model this
+/// lane simulates against.  Lanes of one seed block share the same
+/// `index` when the workload is seed-invariant (the cached-index sweep
+/// case the bench measures); seeded workloads point each lane at its
+/// own `Arc<CostIndex>` from the service cache.
+#[derive(Clone, Copy)]
+pub struct BatchLane<'a> {
+    pub index: &'a CostIndex,
+    pub var: &'a dyn Variability,
+}
+
+/// Reusable K×P lane-major scratch slabs for [`simulate_batch`] — the
+/// batch twin of [`SimArena`](crate::sim::SimArena).  Reset, never
+/// reallocated, between batches, so a long-lived arena makes repeated
+/// batch runs allocation-free apart from the per-lane vectors cloned
+/// into the returned [`RunStats`].
+#[derive(Debug, Default)]
+pub struct BatchArena {
+    clock: Vec<u64>,
+    busy: Vec<u64>,
+    finish: Vec<u64>,
+    iters: Vec<u64>,
+    dequeues: Vec<u64>,
+    fb: Vec<Option<crate::coordinator::feedback::ChunkFeedback>>,
+    /// One active-thread bitmask per lane (flat dispatcher only).
+    active: Vec<u64>,
+    /// Per-lane dispatched-chunk counters.
+    chunks: Vec<u64>,
+    /// Live-lane worklist for the lockstep rounds.
+    live: Vec<usize>,
+    /// Scalar heap dispatcher scratch for teams > FLAT_SCAN_MAX_THREADS.
+    heap: std::collections::BinaryHeap<Reverse<(u64, usize)>>,
+}
+
+impl BatchArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, k: usize, p: usize) {
+        let slab = k * p;
+        for v in [
+            &mut self.clock,
+            &mut self.busy,
+            &mut self.finish,
+            &mut self.iters,
+            &mut self.dequeues,
+        ] {
+            v.clear();
+            v.resize(slab, 0);
+        }
+        self.fb.clear();
+        self.fb.resize(slab, None);
+        let mask = if p >= 64 { u64::MAX } else { (1u64 << p) - 1 };
+        self.active.clear();
+        self.active.resize(k, mask);
+        self.chunks.clear();
+        self.chunks.resize(k, 0);
+        self.live.clear();
+        self.heap.clear();
+    }
+}
+
+/// Simulate K lanes of one scenario in lockstep; `out[l]` is what a
+/// scalar `simulate_indexed` call with `lanes[l]`'s inputs and
+/// `records[l]` would have returned.  All lanes share `spec`, `team`,
+/// the schedule `factory` and `cfg`; each lane gets its own scheduler
+/// instance and scratch block.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_batch(
+    spec: &LoopSpec,
+    team: &TeamSpec,
+    factory: &dyn ScheduleFactory,
+    lanes: &[BatchLane],
+    records: &mut [LoopRecord],
+    cfg: &SimConfig,
+    arena: &mut BatchArena,
+) -> Vec<RunStats> {
+    let k = lanes.len();
+    assert_eq!(records.len(), k, "one LoopRecord per lane");
+    let n = spec.iter_count();
+    for lane in lanes {
+        assert_eq!(
+            lane.index.len(),
+            n,
+            "cost model must cover the iteration space"
+        );
+    }
+    if k == 0 {
+        return Vec::new();
+    }
+    let p = team.nthreads;
+
+    // Per-lane start protocol, in lane order — exactly the scalar
+    // preamble, K times.
+    let mut scheds: Vec<Box<dyn Scheduler>> = Vec::with_capacity(k);
+    for record in records.iter_mut() {
+        let mut sched = factory.build();
+        record.ensure_team(p);
+        sched.start(spec, team, record);
+        scheds.push(sched);
+    }
+
+    arena.reset(k, p);
+    let mut traces: Vec<Vec<ChunkLog>> = (0..k).map(|_| Vec::new()).collect();
+    let BatchArena { clock, busy, finish, iters, dequeues, fb, active, chunks, live, heap } =
+        arena;
+
+    if p <= FLAT_SCAN_MAX_THREADS {
+        // Lockstep rounds: one dequeue-execute step per live lane per
+        // pass, so K independent simulation chains stay in flight at
+        // once.  Each step reads and writes only its lane's block, so
+        // the per-lane step sequence is exactly the scalar flat loop's.
+        live.extend(0..k);
+        while !live.is_empty() {
+            live.retain(|&l| {
+                let base = l * p;
+                let lane_clock = &clock[base..base + p];
+                let mut tid = usize::MAX;
+                let mut best = u64::MAX;
+                let mut m = active[l];
+                while m != 0 {
+                    let t = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    if lane_clock[t] < best {
+                        best = lane_clock[t];
+                        tid = t;
+                    }
+                }
+                let alive = sim_step(
+                    tid,
+                    &*scheds[l],
+                    lanes[l].index,
+                    lanes[l].var,
+                    cfg,
+                    &mut clock[base..base + p],
+                    &mut busy[base..base + p],
+                    &mut finish[base..base + p],
+                    &mut iters[base..base + p],
+                    &mut dequeues[base..base + p],
+                    &mut fb[base..base + p],
+                    &mut traces[l],
+                    &mut chunks[l],
+                );
+                if !alive {
+                    active[l] &= !(1u64 << tid);
+                }
+                active[l] != 0
+            });
+        }
+    } else {
+        // Wide teams: the scalar heap dispatcher, lane by lane.
+        for l in 0..k {
+            let base = l * p;
+            heap.clear();
+            heap.extend((0..p).map(|t| Reverse((0u64, t))));
+            while let Some(Reverse((t_now, tid))) = heap.pop() {
+                debug_assert_eq!(t_now, clock[base + tid]);
+                let alive = sim_step(
+                    tid,
+                    &*scheds[l],
+                    lanes[l].index,
+                    lanes[l].var,
+                    cfg,
+                    &mut clock[base..base + p],
+                    &mut busy[base..base + p],
+                    &mut finish[base..base + p],
+                    &mut iters[base..base + p],
+                    &mut dequeues[base..base + p],
+                    &mut fb[base..base + p],
+                    &mut traces[l],
+                    &mut chunks[l],
+                );
+                if alive {
+                    heap.push(Reverse((clock[base + tid], tid)));
+                }
+            }
+        }
+    }
+
+    // Per-lane finish protocol + stats assembly, in lane order —
+    // exactly the scalar epilogue, K times.
+    let mut out = Vec::with_capacity(k);
+    for (l, record) in records.iter_mut().enumerate() {
+        let base = l * p;
+        let makespan = clock[base..base + p].iter().copied().max().unwrap_or(0);
+        scheds[l].finish(team, record);
+        let busy_f: Vec<f64> =
+            busy[base..base + p].iter().map(|&b| b as f64).collect();
+        record.record_invocation(&busy_f, &iters[base..base + p], makespan);
+        let mut trace = std::mem::take(&mut traces[l]);
+        trace.sort_by_key(|c| c.start_ns);
+        out.push(RunStats {
+            schedule: scheds[l].name(),
+            nthreads: p,
+            iterations: n,
+            makespan_ns: makespan,
+            busy_ns: busy[base..base + p].to_vec(),
+            finish_ns: finish[base..base + p].to_vec(),
+            iters: iters[base..base + p].to_vec(),
+            dequeues: dequeues[base..base + p].to_vec(),
+            chunks: chunks[l],
+            trace,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedules::ScheduleSpec;
+    use crate::sim::executor::{simulate_indexed, SimArena};
+    use crate::sim::variability::{Heterogeneous, NoVariability};
+    use crate::workload::{CostIndex, TraceCost, WorkloadClass};
+
+    /// Scalar reference for one lane with a fresh record.
+    fn scalar(
+        n: u64,
+        p: usize,
+        spec: &ScheduleSpec,
+        index: &CostIndex,
+        var: &dyn Variability,
+        cfg: &SimConfig,
+    ) -> RunStats {
+        simulate_indexed(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &*spec.factory(),
+            index,
+            var,
+            &mut LoopRecord::default(),
+            cfg,
+            &mut SimArena::new(),
+        )
+    }
+
+    fn assert_same(a: &RunStats, b: &RunStats, ctx: &str) {
+        assert_eq!(a.schedule, b.schedule, "{ctx}: schedule");
+        assert_eq!(a.makespan_ns, b.makespan_ns, "{ctx}: makespan");
+        assert_eq!(a.busy_ns, b.busy_ns, "{ctx}: busy");
+        assert_eq!(a.finish_ns, b.finish_ns, "{ctx}: finish");
+        assert_eq!(a.iters, b.iters, "{ctx}: iters");
+        assert_eq!(a.dequeues, b.dequeues, "{ctx}: dequeues");
+        assert_eq!(a.chunks, b.chunks, "{ctx}: chunks");
+    }
+
+    #[test]
+    fn per_lane_seeds_match_scalar() {
+        // Five lanes with *distinct* seeded indexes (the general sweep
+        // seed-block case), three schedules including an adaptive one.
+        let n = 1_500u64;
+        let p = 6usize;
+        let cfg = SimConfig { dequeue_overhead_ns: 120, trace: false };
+        let indexes: Vec<CostIndex> = (0..5)
+            .map(|seed| CostIndex::build(&WorkloadClass::Lognormal.model(n, 700.0, seed)))
+            .collect();
+        for label in ["fac2", "gss", "awf-b"] {
+            let spec = ScheduleSpec::parse(label).unwrap();
+            let lanes: Vec<BatchLane> = indexes
+                .iter()
+                .map(|index| BatchLane { index, var: &NoVariability })
+                .collect();
+            let mut records: Vec<LoopRecord> =
+                (0..lanes.len()).map(|_| LoopRecord::default()).collect();
+            let got = simulate_batch(
+                &LoopSpec::upto(n),
+                &TeamSpec::uniform(p),
+                &*spec.factory(),
+                &lanes,
+                &mut records,
+                &cfg,
+                &mut BatchArena::new(),
+            );
+            assert_eq!(got.len(), 5);
+            for (l, (stats, index)) in got.iter().zip(&indexes).enumerate() {
+                let want = scalar(n, p, &spec, index, &NoVariability, &cfg);
+                assert_same(stats, &want, &format!("{label} lane {l}"));
+            }
+        }
+    }
+
+    #[test]
+    fn shared_index_lanes_are_identical() {
+        // One shared CostIndex (seed-invariant workload): every lane is
+        // the same scenario, so all K results must be identical to each
+        // other and to the scalar run.
+        let n = 2_000u64;
+        let index = CostIndex::build(&WorkloadClass::Uniform.model(n, 300.0, 0));
+        let cfg = SimConfig { dequeue_overhead_ns: 50, trace: false };
+        let spec = ScheduleSpec::parse("fac2").unwrap();
+        let lanes = vec![BatchLane { index: &index, var: &NoVariability }; 4];
+        let mut records: Vec<LoopRecord> =
+            (0..4).map(|_| LoopRecord::default()).collect();
+        let got = simulate_batch(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(8),
+            &*spec.factory(),
+            &lanes,
+            &mut records,
+            &cfg,
+            &mut BatchArena::new(),
+        );
+        let want = scalar(n, 8, &spec, &index, &NoVariability, &cfg);
+        for (l, stats) in got.iter().enumerate() {
+            assert_same(stats, &want, &format!("lane {l}"));
+        }
+    }
+
+    #[test]
+    fn batch_of_one_matches_scalar() {
+        let n = 800u64;
+        let index = CostIndex::build(&WorkloadClass::Bimodal.model(n, 900.0, 7));
+        let cfg = SimConfig { dequeue_overhead_ns: 250, trace: false };
+        let spec = ScheduleSpec::parse("tss").unwrap();
+        let got = simulate_batch(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(4),
+            &*spec.factory(),
+            &[BatchLane { index: &index, var: &NoVariability }],
+            &mut [LoopRecord::default()],
+            &cfg,
+            &mut BatchArena::new(),
+        );
+        assert_same(
+            &got[0],
+            &scalar(n, 4, &spec, &index, &NoVariability, &cfg),
+            "k=1",
+        );
+    }
+
+    #[test]
+    fn variability_lanes_match_scalar() {
+        let n = 1_000u64;
+        let index = CostIndex::build(&WorkloadClass::Gaussian.model(n, 400.0, 3));
+        let var = Heterogeneous::new(vec![1.0, 2.0, 0.5]);
+        let cfg = SimConfig { dequeue_overhead_ns: 80, trace: false };
+        let spec = ScheduleSpec::parse("gss").unwrap();
+        let lanes = vec![BatchLane { index: &index, var: &var }; 3];
+        let mut records: Vec<LoopRecord> =
+            (0..3).map(|_| LoopRecord::default()).collect();
+        let got = simulate_batch(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(3),
+            &*spec.factory(),
+            &lanes,
+            &mut records,
+            &cfg,
+            &mut BatchArena::new(),
+        );
+        let want = scalar(n, 3, &spec, &index, &var, &cfg);
+        for (l, stats) in got.iter().enumerate() {
+            assert_same(stats, &want, &format!("lane {l}"));
+        }
+    }
+
+    #[test]
+    fn wide_team_heap_path_matches_scalar() {
+        // P > FLAT_SCAN_MAX_THREADS exercises the per-lane heap
+        // fallback.
+        let n = 600u64;
+        let p = FLAT_SCAN_MAX_THREADS + 1;
+        let cfg = SimConfig { dequeue_overhead_ns: 10, trace: false };
+        let spec = ScheduleSpec::parse("gss").unwrap();
+        let indexes: Vec<CostIndex> = (0..2)
+            .map(|seed| {
+                CostIndex::build(&WorkloadClass::Exponential.model(n, 250.0, seed))
+            })
+            .collect();
+        let lanes: Vec<BatchLane> = indexes
+            .iter()
+            .map(|index| BatchLane { index, var: &NoVariability })
+            .collect();
+        let mut records: Vec<LoopRecord> =
+            (0..2).map(|_| LoopRecord::default()).collect();
+        let got = simulate_batch(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &*spec.factory(),
+            &lanes,
+            &mut records,
+            &cfg,
+            &mut BatchArena::new(),
+        );
+        for (l, (stats, index)) in got.iter().zip(&indexes).enumerate() {
+            let want = scalar(n, p, &spec, index, &NoVariability, &cfg);
+            assert_same(stats, &want, &format!("wide lane {l}"));
+        }
+    }
+
+    #[test]
+    fn records_accumulate_per_lane_across_invocations() {
+        // Adaptive schedules read LoopRecord history; batched
+        // invocation sequences must feed each lane's record exactly as
+        // the scalar path would.
+        let n = 1_200u64;
+        let p = 4usize;
+        let cfg = SimConfig { dequeue_overhead_ns: 100, trace: false };
+        let spec = ScheduleSpec::parse("awf-b").unwrap();
+        let indexes: Vec<CostIndex> = (0..3)
+            .map(|seed| CostIndex::build(&WorkloadClass::Lognormal.model(n, 500.0, seed)))
+            .collect();
+        let lanes: Vec<BatchLane> = indexes
+            .iter()
+            .map(|index| BatchLane { index, var: &NoVariability })
+            .collect();
+        let mut records: Vec<LoopRecord> =
+            (0..3).map(|_| LoopRecord::default()).collect();
+        let mut arena = BatchArena::new();
+        let mut batch_rounds = Vec::new();
+        for _ in 0..2 {
+            batch_rounds.push(simulate_batch(
+                &LoopSpec::upto(n),
+                &TeamSpec::uniform(p),
+                &*spec.factory(),
+                &lanes,
+                &mut records,
+                &cfg,
+                &mut arena,
+            ));
+        }
+        for (l, index) in indexes.iter().enumerate() {
+            let mut rec = LoopRecord::default();
+            let mut sarena = SimArena::new();
+            for (round, batch) in batch_rounds.iter().enumerate() {
+                let want = simulate_indexed(
+                    &LoopSpec::upto(n),
+                    &TeamSpec::uniform(p),
+                    &*spec.factory(),
+                    index,
+                    &NoVariability,
+                    &mut rec,
+                    &cfg,
+                    &mut sarena,
+                );
+                assert_same(&batch[l], &want, &format!("lane {l} round {round}"));
+            }
+            assert_eq!(records[l].invocations, rec.invocations, "lane {l}");
+            assert_eq!(records[l].last_makespan_ns, rec.last_makespan_ns, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn trace_mode_covers_space_per_lane() {
+        let n = 200u64;
+        let index = CostIndex::from_costs(&[15; 200]);
+        let cfg = SimConfig { dequeue_overhead_ns: 5, trace: true };
+        let spec = ScheduleSpec::parse("gss").unwrap();
+        let lanes = vec![BatchLane { index: &index, var: &NoVariability }; 3];
+        let mut records: Vec<LoopRecord> =
+            (0..3).map(|_| LoopRecord::default()).collect();
+        let got = simulate_batch(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(4),
+            &*spec.factory(),
+            &lanes,
+            &mut records,
+            &cfg,
+            &mut BatchArena::new(),
+        );
+        for stats in &got {
+            let total: u64 = stats.trace.iter().map(|c| c.chunk.len).sum();
+            assert_eq!(total, n);
+            assert_eq!(stats.chunks as usize, stats.trace.len());
+        }
+    }
+
+    #[test]
+    fn arena_reuse_leaves_no_state_behind() {
+        // A big batch followed by a smaller one on the same arena must
+        // equal a fresh-arena run (reset correctness across K changes).
+        let n = 700u64;
+        let cfg = SimConfig { dequeue_overhead_ns: 60, trace: false };
+        let spec = ScheduleSpec::parse("fac2").unwrap();
+        let index = CostIndex::build(&WorkloadClass::Sawtooth.model(n, 200.0, 1));
+        let mut arena = BatchArena::new();
+        for k in [5usize, 2, 4] {
+            let lanes = vec![BatchLane { index: &index, var: &NoVariability }; k];
+            let mut records: Vec<LoopRecord> =
+                (0..k).map(|_| LoopRecord::default()).collect();
+            let got = simulate_batch(
+                &LoopSpec::upto(n),
+                &TeamSpec::uniform(5),
+                &*spec.factory(),
+                &lanes,
+                &mut records,
+                &cfg,
+                &mut arena,
+            );
+            let want = scalar(n, 5, &spec, &index, &NoVariability, &cfg);
+            for (l, stats) in got.iter().enumerate() {
+                assert_same(stats, &want, &format!("k={k} lane {l}"));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_empty_loop() {
+        let cfg = SimConfig::default();
+        let spec = ScheduleSpec::parse("static").unwrap();
+        let index = CostIndex::from_costs(&[]);
+        let got = simulate_batch(
+            &LoopSpec::upto(0),
+            &TeamSpec::uniform(3),
+            &*spec.factory(),
+            &[],
+            &mut [],
+            &cfg,
+            &mut BatchArena::new(),
+        );
+        assert!(got.is_empty());
+        // n = 0 with live lanes: every thread pays one failed dequeue.
+        let lanes = vec![BatchLane { index: &index, var: &NoVariability }; 2];
+        let mut records: Vec<LoopRecord> =
+            (0..2).map(|_| LoopRecord::default()).collect();
+        let got = simulate_batch(
+            &LoopSpec::upto(0),
+            &TeamSpec::uniform(3),
+            &*spec.factory(),
+            &lanes,
+            &mut records,
+            &cfg,
+            &mut BatchArena::new(),
+        );
+        for stats in &got {
+            assert_eq!(stats.chunks, 0);
+            assert_eq!(stats.dequeues, vec![1; 3]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cost model must cover")]
+    fn mismatched_index_panics() {
+        let index = CostIndex::from_costs(&[10; 5]);
+        let spec = ScheduleSpec::parse("static").unwrap();
+        simulate_batch(
+            &LoopSpec::upto(10),
+            &TeamSpec::uniform(2),
+            &*spec.factory(),
+            &[BatchLane { index: &index, var: &NoVariability }],
+            &mut [LoopRecord::default()],
+            &SimConfig::default(),
+            &mut BatchArena::new(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "one LoopRecord per lane")]
+    fn mismatched_records_panic() {
+        let costs = TraceCost::new(vec![10; 8]);
+        let index = CostIndex::build(&costs);
+        let spec = ScheduleSpec::parse("static").unwrap();
+        simulate_batch(
+            &LoopSpec::upto(8),
+            &TeamSpec::uniform(2),
+            &*spec.factory(),
+            &[BatchLane { index: &index, var: &NoVariability }],
+            &mut [],
+            &SimConfig::default(),
+            &mut BatchArena::new(),
+        );
+    }
+}

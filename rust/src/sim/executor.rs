@@ -23,7 +23,12 @@
 //!   that is reset, never reallocated, between runs;
 //! * the earliest-free-thread selection is a flat min-scan over at most
 //!   [`FLAT_SCAN_MAX_THREADS`] clocks (cache-friendly, branch-cheap)
-//!   and only falls back to a binary heap for larger teams.
+//!   and only falls back to a binary heap for larger teams;
+//! * multi-seed runs of one scenario go through the batched SoA kernel
+//!   ([`crate::sim::simulate_batch`]): K lanes advanced in lockstep
+//!   over K×P lane-major slabs, amortizing index walks and keeping the
+//!   whole seed block cache-resident (EXPERIMENTS.md §Sim-throughput,
+//!   "Batched kernel").
 //!
 //! [`simulate`] remains as the convenience wrapper that builds a fresh
 //! index + arena per call — correct, but O(n) per run; use
@@ -99,9 +104,13 @@ impl SimArena {
 
 /// One dequeue-execute step for thread `tid`.  Returns `false` when the
 /// thread leaves the team (its scheduler returned `None`).
+///
+/// Shared with the batched kernel ([`crate::sim::simulate_batch`]),
+/// which calls it on per-lane slab blocks — keeping the two paths
+/// bit-identical by construction, not by parallel maintenance.
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn sim_step(
+pub(crate) fn sim_step(
     tid: usize,
     sched: &dyn Scheduler,
     index: &CostIndex,

@@ -6,9 +6,11 @@
 //! [`simulate_indexed`] with a reused [`SimArena`]; see
 //! EXPERIMENTS.md §Sim-throughput for the measured difference.
 
+pub mod batch;
 pub mod executor;
 pub mod variability;
 
+pub use batch::{simulate_batch, BatchArena, BatchLane, MAX_BATCH_LANES};
 pub use executor::{
     simulate, simulate_indexed, SimArena, SimConfig, FLAT_SCAN_MAX_THREADS,
 };

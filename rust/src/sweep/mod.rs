@@ -12,18 +12,33 @@
 //!   into the service cache before the fan-out, each by exactly one
 //!   thread, so a sweep performs at most one O(n) `CostIndex` build per
 //!   distinct `(workload, n, mean_ns, seed)` (cache capacity
-//!   permitting) no matter how many scenarios share it.
+//!   permitting) no matter how many scenarios share it.  Variability
+//!   models are hoisted the same way: one build per distinct
+//!   `(variability, threads)`, shared by `Arc` across every scenario
+//!   and every lane of a seed block.
+//! * **Batched seed blocks** — maximal contiguous runs of scenarios
+//!   that differ only in `seed` (at most [`MAX_BATCH_LANES`] long) are
+//!   dispatched as one [`simulate_batch`] call, advancing the whole
+//!   block in lockstep over SoA slabs.  Workers claim whole blocks;
+//!   results still enter the reorder buffer under their original slice
+//!   positions, so the emitted stream — and report.csv, local or
+//!   `--cluster` — is byte-identical to the scalar path.
 
 pub mod grid;
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 
 use crate::coordinator::{LoopRecord, LoopSpec, TeamSpec};
 use crate::eval::report::{ScenarioResult, SweepSummary};
+use crate::metrics::RunStats;
 use crate::service::Service;
-use crate::sim::{simulate_indexed, SimArena, SimConfig};
+use crate::sim::{
+    simulate_batch, simulate_indexed, BatchArena, BatchLane, SimArena,
+    SimConfig, Variability, MAX_BATCH_LANES,
+};
 use crate::workload::WorkloadSpec;
 
 pub use grid::{Scenario, SweepGrid, MAX_SCENARIOS, MAX_WORKERS};
@@ -64,28 +79,8 @@ impl SweepCounters {
     }
 }
 
-/// Simulate one scenario against the service's shared index cache.
-fn run_one(
-    svc: &Service,
-    sc: &Scenario,
-    arena: &mut SimArena,
-    counters: &SweepCounters,
-) -> ScenarioResult {
-    let index = counters.fetch(svc, &sc.workload, sc.n, sc.mean_ns, sc.seed);
-    // Variability scales thread *speeds*, not iteration costs, so it
-    // lives outside the cached CostIndex; building the model per
-    // scenario is O(spec), not O(n).
-    let variability = sc.variability.build(sc.threads);
-    let stats = simulate_indexed(
-        &LoopSpec::upto(sc.n),
-        &TeamSpec::uniform(sc.threads),
-        &*sc.schedule.factory(),
-        &index,
-        &*variability,
-        &mut LoopRecord::default(),
-        &SimConfig { dequeue_overhead_ns: sc.h_ns, trace: false },
-        arena,
-    );
+/// Assemble the wire record for one simulated scenario.
+fn scenario_result(sc: &Scenario, stats: &RunStats) -> ScenarioResult {
     ScenarioResult {
         id: sc.id,
         schedule: sc.schedule.label(),
@@ -102,6 +97,122 @@ fn run_one(
         imbalance_pct: stats.percent_imbalance(),
         efficiency: stats.efficiency(),
     }
+}
+
+/// Simulate one scenario against the service's shared index cache.
+fn run_one(
+    svc: &Service,
+    sc: &Scenario,
+    var: &dyn Variability,
+    arena: &mut SimArena,
+    counters: &SweepCounters,
+) -> ScenarioResult {
+    let index = counters.fetch(svc, &sc.workload, sc.n, sc.mean_ns, sc.seed);
+    let stats = simulate_indexed(
+        &LoopSpec::upto(sc.n),
+        &TeamSpec::uniform(sc.threads),
+        &*sc.schedule.factory(),
+        &index,
+        var,
+        &mut LoopRecord::default(),
+        &SimConfig { dequeue_overhead_ns: sc.h_ns, trace: false },
+        arena,
+    );
+    scenario_result(sc, &stats)
+}
+
+/// Simulate one contiguous seed block (≥ 2 scenarios identical except
+/// for `seed`) with the batched SoA kernel.  Per-lane results are
+/// bit-identical to `run_one` on each scenario, so callers may mix the
+/// two paths freely without perturbing the emitted stream.
+fn run_block(
+    svc: &Service,
+    scenarios: &[Scenario],
+    vars: &[Arc<dyn Variability>],
+    arena: &mut BatchArena,
+    counters: &SweepCounters,
+) -> Vec<ScenarioResult> {
+    let first = &scenarios[0];
+    // Seed-invariant workloads resolve every lane to the same cached
+    // Arc; seeded ones get one index per lane — the kernel takes both.
+    let indexes: Vec<_> = scenarios
+        .iter()
+        .map(|sc| counters.fetch(svc, &sc.workload, sc.n, sc.mean_ns, sc.seed))
+        .collect();
+    let lanes: Vec<BatchLane> = indexes
+        .iter()
+        .zip(vars)
+        .map(|(index, var)| BatchLane { index, var: &**var })
+        .collect();
+    let mut records: Vec<LoopRecord> =
+        (0..scenarios.len()).map(|_| LoopRecord::default()).collect();
+    let stats = simulate_batch(
+        &LoopSpec::upto(first.n),
+        &TeamSpec::uniform(first.threads),
+        &*first.schedule.factory(),
+        &lanes,
+        &mut records,
+        &SimConfig { dequeue_overhead_ns: first.h_ns, trace: false },
+        arena,
+    );
+    scenarios
+        .iter()
+        .zip(&stats)
+        .map(|(sc, st)| scenario_result(sc, st))
+        .collect()
+}
+
+/// True when two grid points are the same scenario up to the workload
+/// seed — the batching unit of [`simulate_batch`].
+fn batch_compatible(a: &Scenario, b: &Scenario) -> bool {
+    a.threads == b.threads
+        && a.n == b.n
+        && a.h_ns == b.h_ns
+        && a.mean_ns.to_bits() == b.mean_ns.to_bits()
+        && a.schedule == b.schedule
+        && a.workload == b.workload
+        && a.variability == b.variability
+}
+
+/// Partition the scenario slice into maximal contiguous runs of
+/// batch-compatible scenarios, capped at [`MAX_BATCH_LANES`] lanes —
+/// `(start, len)` pairs covering the slice exactly.  Grid expansion
+/// puts a grid's seed axis in contiguous runs whenever the inner axes
+/// (schedules, threads) are singletons, which is precisely the
+/// many-seeds sweep the batched kernel accelerates; everything else
+/// degenerates to singleton blocks and the scalar path.
+fn seed_blocks(scenarios: &[Scenario]) -> Vec<(usize, usize)> {
+    let mut blocks = Vec::new();
+    let mut start = 0;
+    while start < scenarios.len() {
+        let mut len = 1;
+        while start + len < scenarios.len()
+            && len < MAX_BATCH_LANES
+            && batch_compatible(&scenarios[start], &scenarios[start + len])
+        {
+            len += 1;
+        }
+        blocks.push((start, len));
+        start += len;
+    }
+    blocks
+}
+
+/// One variability model per scenario, built once per distinct
+/// `(variability, threads)` and shared by `Arc` — scenarios and seed
+/// blocks never rebuild identical machine state.  (`VariabilitySpec`
+/// carries `f64`s, so the dedup key is the lossless canonical label.)
+fn hoist_variability(scenarios: &[Scenario]) -> Vec<Arc<dyn Variability>> {
+    let mut cache: HashMap<(String, usize), Arc<dyn Variability>> = HashMap::new();
+    scenarios
+        .iter()
+        .map(|sc| {
+            cache
+                .entry((sc.variability.label(), sc.threads))
+                .or_insert_with(|| sc.variability.build(sc.threads))
+                .clone()
+        })
+        .collect()
 }
 
 /// The distinct workload keys of a scenario list, first-seen order.
@@ -160,6 +271,10 @@ pub fn run_sweep_with(
         }
     });
 
+    // Claim unit: whole seed blocks.  Singleton blocks run the scalar
+    // path; longer runs go through the batched SoA kernel in one call.
+    let blocks = seed_blocks(scenarios);
+    let vars = hoist_variability(scenarios);
     let cursor = AtomicUsize::new(0);
     let cancelled = AtomicBool::new(false);
     std::thread::scope(|s| {
@@ -169,20 +284,40 @@ pub fn run_sweep_with(
             let cursor = &cursor;
             let cancelled = &cancelled;
             let counters = &counters;
+            let blocks = &blocks;
+            let vars = &vars;
             s.spawn(move || {
                 let mut arena = SimArena::new();
-                loop {
+                let mut batch_arena = BatchArena::new();
+                'claim: loop {
                     if cancelled.load(Ordering::Relaxed) {
                         break;
                     }
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    let Some(sc) = scenarios.get(i) else { break };
-                    let result = run_one(svc, sc, &mut arena, counters);
-                    // Keyed by slice position (not sc.id) so emission
-                    // order follows the caller's slice even for
-                    // hand-built scenario lists.
-                    if tx.send((i as u64, result)).is_err() {
-                        break;
+                    let b = cursor.fetch_add(1, Ordering::Relaxed);
+                    let Some(&(start, len)) = blocks.get(b) else { break };
+                    // Results are keyed by slice position (not sc.id)
+                    // so emission order follows the caller's slice even
+                    // for hand-built scenario lists.
+                    if len == 1 {
+                        let sc = &scenarios[start];
+                        let result =
+                            run_one(svc, sc, &*vars[start], &mut arena, counters);
+                        if tx.send((start as u64, result)).is_err() {
+                            break;
+                        }
+                    } else {
+                        let results = run_block(
+                            svc,
+                            &scenarios[start..start + len],
+                            &vars[start..start + len],
+                            &mut batch_arena,
+                            counters,
+                        );
+                        for (off, result) in results.into_iter().enumerate() {
+                            if tx.send(((start + off) as u64, result)).is_err() {
+                                break 'claim;
+                            }
+                        }
                     }
                 }
             });
@@ -296,11 +431,95 @@ threads=2 seeds=7,8",
             grid("BATCH workloads=gaussian schedules=fac2 n=1000 threads=4 seeds=3");
         let (results, _) = run_sweep(&svc, &scenarios, 2);
         let mut arena = SimArena::new();
-        let direct =
-            run_one(&svc, &scenarios[0], &mut arena, &SweepCounters::default());
+        let var = scenarios[0].variability.build(scenarios[0].threads);
+        let direct = run_one(
+            &svc,
+            &scenarios[0],
+            &*var,
+            &mut arena,
+            &SweepCounters::default(),
+        );
         assert_eq!(results[0], direct);
         assert!(direct.makespan_ns > 0);
         assert!(direct.efficiency > 0.0 && direct.efficiency <= 1.0);
+    }
+
+    #[test]
+    fn seed_blocks_partition_and_cap() {
+        // seeds innermost-contiguous: single schedule+thread grid with
+        // 40 seeds → blocks of MAX_BATCH_LANES then the 8-lane tail.
+        let line = format!(
+            "BATCH workloads=uniform schedules=fac2 n=300 threads=2 seeds={}",
+            (0..40).map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+        );
+        let scenarios = grid(&line);
+        assert_eq!(scenarios.len(), 40);
+        let blocks = seed_blocks(&scenarios);
+        assert_eq!(blocks, vec![(0, MAX_BATCH_LANES), (MAX_BATCH_LANES, 8)]);
+        // Multiple schedules break seed adjacency: all singleton blocks
+        // covering the slice exactly, in order.
+        let scenarios = grid(
+            "BATCH workloads=uniform schedules=fac2;gss n=300 threads=2 \
+seeds=1,2,3",
+        );
+        let blocks = seed_blocks(&scenarios);
+        assert_eq!(blocks.len(), scenarios.len());
+        let mut at = 0;
+        for (start, len) in blocks {
+            assert_eq!((start, len), (at, 1));
+            at += 1;
+        }
+    }
+
+    #[test]
+    fn batched_seed_sweep_matches_scalar_sweep() {
+        // A pure seed sweep (batched blocks) must be bit-identical to
+        // the same grid evaluated scenario-by-scenario on the scalar
+        // path — on the wire, not just logically.
+        let line = "BATCH workloads=lognormal schedules=awf-b n=600 threads=4 \
+seeds=1,2,3,4,5,6,7,8,9,10 variability=hetero:1,2";
+        let scenarios = grid(line);
+        assert_eq!(scenarios.len(), 10);
+        assert_eq!(seed_blocks(&scenarios), vec![(0, 10)]);
+        let (batched, summary) = run_sweep(&Service::new(), &scenarios, 3);
+        let svc = Service::new();
+        let counters = SweepCounters::default();
+        let vars = hoist_variability(&scenarios);
+        let mut arena = SimArena::new();
+        let scalar: Vec<_> = scenarios
+            .iter()
+            .zip(&vars)
+            .map(|(sc, var)| run_one(&svc, sc, &**var, &mut arena, &counters))
+            .collect();
+        let wire = |rs: &[ScenarioResult]| {
+            rs.iter().map(|r| r.json_line()).collect::<Vec<_>>()
+        };
+        assert_eq!(wire(&batched), wire(&scalar));
+        // Seeded workload: every lane still resolves its own index.
+        assert_eq!(summary.distinct_workloads, 10);
+    }
+
+    #[test]
+    fn variability_hoist_builds_once_per_distinct_pair() {
+        let scenarios = grid(
+            "BATCH workloads=uniform schedules=fac2 n=200 threads=2,3 \
+seeds=1,2 variability=calm;hetero:1,2",
+        );
+        let vars = hoist_variability(&scenarios);
+        assert_eq!(vars.len(), scenarios.len());
+        // 2 variability specs x 2 thread counts = 4 distinct models;
+        // every other scenario shares one of those Arcs.
+        let mut distinct: Vec<usize> =
+            vars.iter().map(|v| Arc::as_ptr(v) as *const () as usize).collect();
+        distinct.sort();
+        distinct.dedup();
+        assert_eq!(distinct.len(), 4);
+        for (sc, var) in scenarios.iter().zip(&vars) {
+            let fresh = sc.variability.build(sc.threads);
+            for tid in 0..sc.threads {
+                assert_eq!(var.speed(tid, 12_345), fresh.speed(tid, 12_345));
+            }
+        }
     }
 
     #[test]

@@ -305,6 +305,100 @@ fn prop_indexed_sim_equals_wrapper() {
     });
 }
 
+/// The batched SoA kernel is bit-identical to the scalar path: for
+/// random (workload label, roster schedule, threads, variability,
+/// K ≤ 32, seed block), every `simulate_batch` lane result is
+/// field-for-field equal to a scalar `simulate_indexed` call with the
+/// same inputs — whether the lanes share one `CostIndex` (the
+/// cached-index sweep case) or carry per-seed indexes.
+#[test]
+fn prop_batch_matches_scalar() {
+    use uds::sim::{simulate_batch, BatchArena, BatchLane};
+
+    let workloads = [
+        "uniform",
+        "increasing",
+        "decreasing",
+        "gaussian",
+        "exponential",
+        "lognormal",
+        "bimodal",
+        "sawtooth",
+        "mix:gaussian:lognormal",
+        "phased:increasing:uniform,0.5",
+        "burst:uniform",
+        "trace:stairs",
+    ];
+    cases("batch_matches_scalar", 14, |rng| {
+        let spec = random_roster_spec(rng);
+        let wl = workloads[rng.range_u64(0, workloads.len() as u64 - 1) as usize];
+        let wspec = WorkloadSpec::parse(wl).unwrap();
+        let n = rng.range_u64(1, 1_200);
+        let p = rng.range_u64(1, 9) as usize;
+        let h = rng.range_u64(0, 400);
+        let k = rng.range_u64(1, 32);
+        let vspec = match rng.range_u64(0, 2) {
+            0 => VariabilitySpec::Calm,
+            1 => VariabilitySpec::parse("hetero:1,2,0.5").unwrap(),
+            _ => VariabilitySpec::parse(&format!("noise:0.2,0.5,{}", rng.next_u64()))
+                .unwrap(),
+        };
+        let var = vspec.build(p);
+        let base_seed = rng.next_u64();
+        // Half the cases share one index across every lane (the
+        // cached-index sweep case); half seed each lane independently.
+        let shared = rng.f64() < 0.5;
+        let mean = 100.0 + rng.f64() * 900.0;
+        let indexes: Vec<CostIndex> = (0..k)
+            .map(|l| {
+                let seed =
+                    if shared { base_seed } else { base_seed.wrapping_add(l) };
+                CostIndex::build(&*wspec.model(n, mean, seed))
+            })
+            .collect();
+        let lanes: Vec<BatchLane> = indexes
+            .iter()
+            .map(|index| BatchLane { index, var: &*var })
+            .collect();
+        let mut records: Vec<LoopRecord> =
+            (0..k).map(|_| LoopRecord::default()).collect();
+        let cfg = SimConfig { dequeue_overhead_ns: h, trace: false };
+        let got = simulate_batch(
+            &LoopSpec::upto(n),
+            &TeamSpec::uniform(p),
+            &*spec.factory(),
+            &lanes,
+            &mut records,
+            &cfg,
+            &mut BatchArena::new(),
+        );
+        let mut arena = SimArena::new();
+        for (l, index) in indexes.iter().enumerate() {
+            let want = simulate_indexed(
+                &LoopSpec::upto(n),
+                &TeamSpec::uniform(p),
+                &*spec.factory(),
+                index,
+                &*var,
+                &mut LoopRecord::default(),
+                &cfg,
+                &mut arena,
+            );
+            let ctx = format!(
+                "{} wl={wl} vl={} n={n} p={p} h={h} k={k} shared={shared} lane {l}",
+                spec.label(),
+                vspec.label()
+            );
+            assert_eq!(got[l].makespan_ns, want.makespan_ns, "{ctx}: makespan");
+            assert_eq!(got[l].busy_ns, want.busy_ns, "{ctx}: busy");
+            assert_eq!(got[l].finish_ns, want.finish_ns, "{ctx}: finish");
+            assert_eq!(got[l].iters, want.iters, "{ctx}: iters");
+            assert_eq!(got[l].dequeues, want.dequeues, "{ctx}: dequeues");
+            assert_eq!(got[l].chunks, want.chunks, "{ctx}: chunks");
+        }
+    });
+}
+
 /// Workload generators: requested mean is hit within tolerance.
 #[test]
 fn prop_workload_means() {
