@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 
 use crate::eval::report::{parse_flat, ScenarioResult, SweepSummary};
 use crate::sweep::{SweepGrid, MAX_SCENARIOS};
-use crate::util::CodedError;
+use crate::util::{CodedError, ErrorCode};
 
 use super::planner::{plan_shards, Planner, Shard};
 use super::status::{ClusterSummary, NodeStatus};
@@ -75,8 +75,10 @@ pub struct ClusterOutcome {
 
 /// Exact distinct-workload count of a grid without expanding scenarios:
 /// the key space is `workloads x n x seeds` (schedules/threads/
-/// variability never change the cost table).
-fn distinct_workload_count(grid: &SweepGrid) -> u64 {
+/// variability never change the cost table).  Public so the CLI's
+/// store-warm short-circuit can synthesize the same summary a real
+/// cluster sweep would report.
+pub fn distinct_workload_count(grid: &SweepGrid) -> u64 {
     let mut seen = std::collections::HashSet::new();
     for w in &grid.workloads {
         for &n in &grid.ns {
@@ -97,7 +99,7 @@ fn run_shard(
     shard: &Shard,
     io_timeout: Duration,
 ) -> Result<(Vec<ScenarioResult>, SweepSummary), CodedError> {
-    let node_err = |what: String| CodedError::new("node_error", format!("{addr}: {what}"));
+    let node_err = |what: String| CodedError::new(ErrorCode::NodeError, format!("{addr}: {what}"));
     let sock = addr
         .to_socket_addrs()
         .map_err(|e| node_err(format!("resolve: {e}")))?
@@ -214,11 +216,11 @@ pub fn run_cluster_sweep_with(
     mut emit: impl FnMut(ScenarioResult) -> bool,
 ) -> Result<(SweepSummary, ClusterSummary), CodedError> {
     if nodes.is_empty() {
-        return Err(CodedError::new("cluster_no_nodes", "pass at least one host:port"));
+        return Err(CodedError::new(ErrorCode::ClusterNoNodes, "pass at least one host:port"));
     }
     if grid.shard.is_some() {
         return Err(CodedError::new(
-            "bad_shard",
+            ErrorCode::BadShard,
             "cluster sweeps take an unsharded grid (the fabric shards it)",
         ));
     }
@@ -286,7 +288,7 @@ pub fn run_cluster_sweep_with(
     if !cancelled.load(Ordering::Relaxed) {
         if planner.unfinished() > 0 {
             return Err(CodedError::new(
-                "cluster_failed",
+                ErrorCode::ClusterFailed,
                 format!(
                     "all {} nodes retired with {} shards unfinished",
                     nodes.len(),
@@ -296,7 +298,7 @@ pub fn run_cluster_sweep_with(
         }
         if merged != total {
             return Err(CodedError::new(
-                "cluster_failed",
+                ErrorCode::ClusterFailed,
                 format!("merged {merged} of {total} scenarios"),
             ));
         }

@@ -28,7 +28,8 @@ pub mod planner;
 pub mod status;
 
 pub use fabric::{
-    run_cluster_sweep, run_cluster_sweep_with, ClusterOptions, ClusterOutcome,
+    distinct_workload_count, run_cluster_sweep, run_cluster_sweep_with,
+    ClusterOptions, ClusterOutcome,
 };
 pub use planner::{plan_shards, Planner, Shard};
 pub use status::{ClusterSummary, NodeStatus};

@@ -12,7 +12,7 @@
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
-use crate::util::CodedError;
+use crate::util::{CodedError, ErrorCode};
 
 /// One contiguous work-unit: scenarios `[offset, offset+len)` of the
 /// grid's fixed expansion order.
@@ -109,7 +109,7 @@ impl Planner {
         if shard.attempts > self.max_retries {
             st.failed.get_or_insert_with(|| {
                 CodedError::new(
-                    "shard_failed",
+                    ErrorCode::ShardFailed,
                     format!(
                         "shard {} [{}, {}) failed {} times, last error: {}",
                         shard.id,
@@ -182,13 +182,13 @@ mod tests {
         let planner = Planner::new(plan_shards(2, 2), 1);
         let s = planner.next().unwrap();
         assert_eq!(s.attempts, 0);
-        planner.fail(s, CodedError::new("node_error", "boom"));
+        planner.fail(s, CodedError::new(ErrorCode::NodeError, "boom"));
         // Requeued once (budget 1 retry)...
         let s = planner.next().unwrap();
         assert_eq!(s.attempts, 1);
         assert_eq!(planner.retries(), 1);
         // ...second failure exhausts the budget: terminal.
-        planner.fail(s, CodedError::new("node_error", "boom again"));
+        planner.fail(s, CodedError::new(ErrorCode::NodeError, "boom again"));
         assert!(planner.next().is_none());
         let err = planner.failure().expect("terminal failure");
         assert_eq!(err.code, "shard_failed");
@@ -204,7 +204,7 @@ mod tests {
             // The helper blocks (queue empty, one inflight); failing the
             // held shard requeues it and wakes the helper.
             std::thread::sleep(std::time::Duration::from_millis(50));
-            planner.fail(held, CodedError::new("node_error", "dead node"));
+            planner.fail(held, CodedError::new(ErrorCode::NodeError, "dead node"));
             let retried = t.join().unwrap().expect("requeued shard handed over");
             assert_eq!(retried.attempts, 1);
             planner.complete(&retried);

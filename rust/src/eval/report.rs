@@ -18,242 +18,15 @@
 //! need.  It is not a general JSON parser.
 
 use std::collections::BTreeMap;
-use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
 
 use crate::eval::table::Table;
+use crate::util::json::{flat_get, flat_parse};
 
-/// Escape a string for inclusion in a JSON document (quotes excluded).
-pub fn escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
-            }
-            c => out.push(c),
-        }
-    }
-    out
-}
-
-/// Render an `f64` as a JSON number.  Uses Rust's shortest-roundtrip
-/// `Display`, so `parse::<f64>()` recovers the exact bits — the property
-/// that makes remote and local sweep artifacts byte-identical.
-pub fn fmt_f64(v: f64) -> String {
-    if v.is_finite() {
-        format!("{v}")
-    } else {
-        "null".into()
-    }
-}
-
-/// Incremental flat-object writer: `{"a":1,"b":"x"}`.
-#[derive(Debug)]
-pub struct JsonObj {
-    buf: String,
-    first: bool,
-}
-
-impl Default for JsonObj {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl JsonObj {
-    pub fn new() -> Self {
-        Self { buf: String::from("{"), first: true }
-    }
-
-    fn key(&mut self, k: &str) {
-        if !self.first {
-            self.buf.push(',');
-        }
-        self.first = false;
-        let _ = write!(self.buf, "\"{}\":", escape(k));
-    }
-
-    pub fn str(&mut self, k: &str, v: &str) -> &mut Self {
-        self.key(k);
-        let _ = write!(self.buf, "\"{}\"", escape(v));
-        self
-    }
-
-    pub fn u64(&mut self, k: &str, v: u64) -> &mut Self {
-        self.key(k);
-        let _ = write!(self.buf, "{v}");
-        self
-    }
-
-    pub fn f64(&mut self, k: &str, v: f64) -> &mut Self {
-        self.key(k);
-        self.buf.push_str(&fmt_f64(v));
-        self
-    }
-
-    pub fn bool(&mut self, k: &str, v: bool) -> &mut Self {
-        self.key(k);
-        self.buf.push_str(if v { "true" } else { "false" });
-        self
-    }
-
-    /// Insert a pre-rendered JSON value (object, array, ...) verbatim.
-    pub fn raw(&mut self, k: &str, v: &str) -> &mut Self {
-        self.key(k);
-        self.buf.push_str(v);
-        self
-    }
-
-    pub fn finish(&mut self) -> String {
-        let mut out = std::mem::take(&mut self.buf);
-        out.push('}');
-        out
-    }
-}
-
-/// Render pre-rendered JSON values as an array.
-pub fn json_array<I>(items: I) -> String
-where
-    I: IntoIterator,
-    I::Item: AsRef<str>,
-{
-    let mut out = String::from("[");
-    for (i, item) in items.into_iter().enumerate() {
-        if i > 0 {
-            out.push(',');
-        }
-        out.push_str(item.as_ref());
-    }
-    out.push(']');
-    out
-}
-
-/// Parse one flat JSON object (`{"k":"v","n":1.5,"b":true}`) into raw
-/// string values: string values are unescaped, numbers/booleans kept as
-/// their literal text.  Nested objects/arrays are rejected — the wire
-/// protocol never emits them inside a record.
-pub fn parse_flat(line: &str) -> Result<BTreeMap<String, String>, String> {
-    let mut map = BTreeMap::new();
-    let bytes: Vec<char> = line.trim().chars().collect();
-    let mut i = 0usize;
-    let err = |what: &str, at: usize| format!("json: {what} at char {at}");
-    let skip_ws = |i: &mut usize| {
-        while bytes.get(*i).is_some_and(|c| c.is_whitespace()) {
-            *i += 1;
-        }
-    };
-    // Parse a quoted string starting at `*i` (which must be '"').
-    let parse_str = |i: &mut usize| -> Result<String, String> {
-        if bytes.get(*i) != Some(&'"') {
-            return Err(err("expected '\"'", *i));
-        }
-        *i += 1;
-        let mut out = String::new();
-        loop {
-            match bytes.get(*i) {
-                None => return Err(err("unterminated string", *i)),
-                Some('"') => {
-                    *i += 1;
-                    return Ok(out);
-                }
-                Some('\\') => {
-                    *i += 1;
-                    match bytes.get(*i) {
-                        Some('"') => out.push('"'),
-                        Some('\\') => out.push('\\'),
-                        Some('/') => out.push('/'),
-                        Some('n') => out.push('\n'),
-                        Some('r') => out.push('\r'),
-                        Some('t') => out.push('\t'),
-                        Some('u') => {
-                            let hex: String =
-                                bytes.get(*i + 1..*i + 5).unwrap_or(&[]).iter().collect();
-                            let code = u32::from_str_radix(&hex, 16)
-                                .map_err(|_| err("bad \\u escape", *i))?;
-                            out.push(
-                                char::from_u32(code).ok_or_else(|| err("bad codepoint", *i))?,
-                            );
-                            *i += 4;
-                        }
-                        _ => return Err(err("bad escape", *i)),
-                    }
-                    *i += 1;
-                }
-                Some(&c) => {
-                    out.push(c);
-                    *i += 1;
-                }
-            }
-        }
-    };
-
-    skip_ws(&mut i);
-    if bytes.get(i) != Some(&'{') {
-        return Err(err("expected '{'", i));
-    }
-    i += 1;
-    skip_ws(&mut i);
-    if bytes.get(i) == Some(&'}') {
-        return Ok(map);
-    }
-    loop {
-        skip_ws(&mut i);
-        let key = parse_str(&mut i)?;
-        skip_ws(&mut i);
-        if bytes.get(i) != Some(&':') {
-            return Err(err("expected ':'", i));
-        }
-        i += 1;
-        skip_ws(&mut i);
-        let val = match bytes.get(i) {
-            Some('"') => parse_str(&mut i)?,
-            Some('{') | Some('[') => return Err(err("nested values unsupported", i)),
-            Some(_) => {
-                let start = i;
-                while bytes
-                    .get(i)
-                    .is_some_and(|&c| c != ',' && c != '}' && !c.is_whitespace())
-                {
-                    i += 1;
-                }
-                bytes[start..i].iter().collect()
-            }
-            None => return Err(err("unexpected end", i)),
-        };
-        map.insert(key, val);
-        skip_ws(&mut i);
-        match bytes.get(i) {
-            Some(',') => i += 1,
-            Some('}') => {
-                i += 1;
-                break;
-            }
-            _ => return Err(err("expected ',' or '}'", i)),
-        }
-    }
-    skip_ws(&mut i);
-    if i != bytes.len() {
-        return Err(err("trailing characters", i));
-    }
-    Ok(map)
-}
-
-fn flat_get<'m>(map: &'m BTreeMap<String, String>, k: &str) -> Result<&'m str, String> {
-    map.get(k).map(String::as_str).ok_or_else(|| format!("missing field '{k}'"))
-}
-
-fn flat_parse<T: std::str::FromStr>(
-    map: &BTreeMap<String, String>,
-    k: &str,
-) -> Result<T, String> {
-    flat_get(map, k)?.parse().map_err(|_| format!("bad field '{k}'"))
-}
+// The JSON primitives grew a second consumer (the result store), so
+// they live in `util::json` now; re-exported here because the wire
+// protocol call sites address them through the report layer.
+pub use crate::util::json::{escape, fmt_f64, json_array, parse_flat, JsonObj};
 
 // -----------------------------------------------------------------------
 // Scenario records (the BATCH / sweep payload)
@@ -408,6 +181,11 @@ pub struct Report {
     /// rows only, so cluster and local artifacts for the same grid stay
     /// byte-identical.
     pub cluster: Option<crate::cluster::ClusterSummary>,
+    /// Result-store accounting (hits/misses/appended) — only a
+    /// store-backed sweep has one.  Like `cluster`, it lands in
+    /// `report.json` only; `report.csv` is unaffected, so warm and cold
+    /// artifacts for the same grid stay byte-identical.
+    pub store: Option<crate::store::StoreSummary>,
     pub results: Vec<ScenarioResult>,
 }
 
@@ -423,6 +201,9 @@ impl Report {
         doc.raw("meta", &meta).raw("summary", &self.summary.json_line());
         if let Some(cluster) = &self.cluster {
             doc.raw("cluster", &cluster.json());
+        }
+        if let Some(store) = &self.store {
+            doc.raw("store", &store.json());
         }
         doc.raw("results", &results).finish()
     }
@@ -522,31 +303,8 @@ mod tests {
         assert_eq!(back, s);
     }
 
-    #[test]
-    fn escape_special_chars() {
-        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
-        let line = JsonObj::new().str("k", "a\"b\\c\nd").finish();
-        let map = parse_flat(&line).unwrap();
-        assert_eq!(map.get("k").unwrap(), "a\"b\\c\nd");
-    }
 
-    #[test]
-    fn f64_shortest_roundtrip() {
-        for v in [0.1, 1000.0, 1.0 / 3.0, 123456.789] {
-            let s = fmt_f64(v);
-            assert_eq!(s.parse::<f64>().unwrap().to_bits(), v.to_bits(), "{s}");
-        }
-        assert_eq!(fmt_f64(f64::NAN), "null");
-    }
 
-    #[test]
-    fn parse_flat_rejects_malformed() {
-        assert!(parse_flat("not json").is_err());
-        assert!(parse_flat("{\"a\":1").is_err());
-        assert!(parse_flat("{\"a\":{\"nested\":1}}").is_err());
-        assert!(parse_flat("{\"a\":1} trailing").is_err());
-        assert!(parse_flat("{}").unwrap().is_empty());
-    }
 
     #[test]
     fn csv_quotes_comma_bearing_labels() {
@@ -569,6 +327,7 @@ mod tests {
             meta: vec![("mode".into(), "local".into())],
             summary: SweepSummary { scenarios: 1, ..Default::default() },
             cluster: None,
+            store: None,
             results: vec![sample()],
         };
         let (j, c) = rep.save(&dir).unwrap();
@@ -593,6 +352,7 @@ mod tests {
                 retries: 1,
                 wall_ms: 12,
             }),
+            store: None,
             results: vec![sample()],
         };
         let json = rep.json();
@@ -604,8 +364,20 @@ mod tests {
     }
 
     #[test]
-    fn json_array_renders() {
-        assert_eq!(json_array(["1", "2"]), "[1,2]");
-        assert_eq!(json_array(Vec::<String>::new()), "[]");
+    fn store_section_rendered_when_present() {
+        let rep = Report {
+            meta: vec![("mode".into(), "local".into())],
+            summary: SweepSummary { scenarios: 1, ..Default::default() },
+            cluster: None,
+            store: Some(crate::store::StoreSummary { hits: 5, misses: 1, appended: 1 }),
+            results: vec![sample()],
+        };
+        let json = rep.json();
+        assert!(
+            json.contains("\"store\":{\"hits\":5,\"misses\":1,\"appended\":1}"),
+            "{json}"
+        );
+        // The CSV is unchanged by the store section: scenario rows only.
+        assert_eq!(rep.csv().lines().count(), 2);
     }
 }

@@ -36,6 +36,11 @@
 //! * [`cluster`] — the cluster sweep fabric: shard grids across N
 //!   remote services with deterministic merge and shard retry
 //!   (`uds sweep --cluster`), lifting the single-service scenario cap.
+//! * [`store`] — the persistent sweep-history store: an embedded
+//!   append-only columnar [`store::ResultStore`] keyed by canonical
+//!   scenario labels, the incremental hit/miss sweep path, and the
+//!   [`store::query`] layer behind `uds query` and the `QUERY` wire
+//!   verb.
 //!
 //! ## Quickstart
 //!
@@ -63,6 +68,7 @@ pub mod runtime;
 pub mod schedules;
 pub mod service;
 pub mod sim;
+pub mod store;
 pub mod sweep;
 pub mod util;
 pub mod workload;
@@ -74,4 +80,5 @@ pub use coordinator::{
 pub use metrics::RunStats;
 pub use schedules::{ScheduleRegistry, ScheduleSpec};
 pub use sim::VariabilitySpec;
+pub use store::ResultStore;
 pub use workload::{WorkloadRegistry, WorkloadSpec};

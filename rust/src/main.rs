@@ -5,38 +5,53 @@
 //! * `eval`           — regenerate the E1–E8 evaluation tables (EXPERIMENTS.md)
 //! * `sweep`          — run a scenario grid (locally, against a remote
 //!                      service, or sharded across a `--cluster` of
-//!                      services) and write report.json/report.csv
+//!                      services) and write report.json/report.csv;
+//!                      `--store DIR` makes the sweep incremental
+//!                      against a persistent result store
+//! * `query`          — interrogate a result store (local `--store DIR`
+//!                      or a served store via `--remote`): filters plus
+//!                      best-schedule / regret aggregations
 //! * `perf-gate`      — compare a bench JSON against the committed baseline
 //! * `list-schedules` — every name in the schedule registry (builtins
 //!                      plus registered user-defined schedules) and the
-//!                      eval roster
+//!                      eval roster; `--json` emits typed descriptors
 //! * `list-workloads` — every head in the workload registry (builtin
 //!                      classes, composite heads, user-registered heads)
 //!                      plus the registered traces and the variability
-//!                      grammar
+//!                      grammar; `--json` emits typed descriptors
+//! * `list-errors`    — the stable wire error-code table (generated
+//!                      from [`uds::util::ErrorCode`])
 //! * `calibrate`      — measure this host's dequeue overhead `h`
-//! * `serve`          — JSON-lines-style scheduling service over TCP
+//! * `serve`          — JSON-lines-style scheduling service over TCP;
+//!                      `--store DIR` attaches a persistent result
+//!                      store (incremental `BATCH`, `QUERY` verb)
 //!
 //! Argument parsing is a small std-only implementation (offline clap
 //! substitution; this build has no crates.io access).
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use uds::cluster::{self, ClusterOptions};
+use uds::cluster::{self, ClusterOptions, ClusterSummary, NodeStatus};
 use uds::coordinator::{
     parallel_for, ExecOptions, HistoryArena, LoopRecord, LoopSpec, TeamSpec,
 };
 use uds::eval::perf_gate::{self, BenchDoc};
 use uds::eval::report::{parse_flat, Report, ScenarioResult, SweepSummary};
 use uds::eval::{self, EvalConfig};
+use uds::schedules::registry::ParamKind as SchedParamKind;
 use uds::schedules::{ScheduleRegistry, ScheduleSpec};
 use uds::service;
 use uds::sim::{
     simulate_batch, simulate_indexed, BatchArena, BatchLane, SimArena,
     SimConfig, VariabilitySpec, MAX_BATCH_LANES,
 };
-use uds::sweep::{run_sweep, SweepGrid};
+use uds::store::query::Query;
+use uds::store::{ResultStore, ScenarioKey, StoreSummary};
+use uds::sweep::{run_sweep, run_sweep_stored, SweepGrid};
+use uds::util::json::{escape, json_array, JsonObj};
+use uds::util::ErrorCode;
+use uds::workload::registry::{ParamKind as WlParamKind, SubKind};
 use uds::workload::{CostIndex, CostModel, WorkloadRegistry, WorkloadSpec};
 
 const USAGE: &str = "\
@@ -54,7 +69,7 @@ USAGE:
   uds sweep --schedules S1;S2 --n N1,N2 [--workloads W1;W2]
             [--variability V1;V2] [--threads P1,P2] [--seeds K1,K2]
             [--mean-ns X] [--h-ns H] [--workers W]
-            [--out DIR] [--remote HOST:PORT]
+            [--out DIR] [--store DIR] [--remote HOST:PORT]
             [--cluster HOST:PORT,HOST:PORT[,...]] [--shard-size K]
             [--shard-retries R] [--io-timeout-secs T]
             (schedule/workload/variability lists are ';'-separated:
@@ -62,7 +77,20 @@ USAGE:
             listed uds services with deterministic merge — report.csv is
             byte-identical to a local run — and lifts the 100k scenario
             cap to per-shard; a dead node's shard is requeued with
-            bounded retries)
+            bounded retries.  --store makes the sweep incremental:
+            scenarios already in the persistent result store answer
+            from it, fresh ones are simulated and appended — report.csv
+            stays byte-identical to a cold run)
+  uds query OP [--store DIR | --remote HOST:PORT]
+            [--schedules S1;S2] [--workloads W1;W2] [--variability V1;V2]
+            [--n N1,N2] [--threads P1,P2] [--seeds S1,S2]
+            [--mean-ns X1,X2] [--h-ns H1,H2] [--limit K]
+            [--by scenario|workload]
+            OP: select | count | best-schedule | regret
+            (filters compose conjunctively; labels canonicalize through
+            the registries.  best-schedule pools seeds per scenario
+            class; regret compares each schedule to the per-scenario
+            oracle)
   uds perf-gate [--baseline FILE] [--current FILE] [--threshold-pct T]
             [--batch-min-speedup X] [--report FILE] [--update-baseline]
             [--self-test]
@@ -70,10 +98,11 @@ USAGE:
             current run's largest batch/k<K> entry must be at least X
             times the per-scenario throughput of batch/k1; 0 disables.
             Report-only while the baseline is provisional)
-  uds list-schedules
-  uds list-workloads
+  uds list-schedules [--json]
+  uds list-workloads [--json]
+  uds list-errors
   uds calibrate [--n N] [--threads P]
-  uds serve [--addr HOST:PORT]
+  uds serve [--addr HOST:PORT] [--store DIR]
 
 SCHEDULES (--schedule): static[,k] dynamic[,k] guided[,min] tss[,f,l]
   fsc[,h[,sigma]] fac[,mu,sigma] fac2 wf2 rand[,seed|,lo,hi[,seed]]
@@ -92,7 +121,7 @@ VARIABILITY (--variability): calm | hetero:s1,s2,... |
   (simulated runs only)";
 
 /// Flags that take no value.
-const BOOL_FLAGS: [&str; 3] = ["real", "self-test", "update-baseline"];
+const BOOL_FLAGS: [&str; 4] = ["real", "self-test", "update-baseline", "json"];
 
 /// Minimal flag parser: positional args + `--key value` pairs.
 struct Flags {
@@ -156,64 +185,25 @@ fn main() {
         "run" => cmd_run(&rest),
         "eval" => cmd_eval(&rest),
         "sweep" => cmd_sweep(&rest),
+        "query" => cmd_query(&rest),
         "perf-gate" => cmd_perf_gate(&rest),
         "list-schedules" => {
-            let entries = ScheduleRegistry::global().entries();
-            println!("schedule registry ({} entries):", entries.len());
-            for e in &entries {
-                let aliases = if e.aliases().is_empty() {
-                    String::new()
-                } else {
-                    format!("  [aliases: {}]", e.aliases().join(", "))
-                };
-                let kind = if e.is_builtin() { "builtin" } else { "user" };
-                println!(
-                    "  {:<28} {:<7} {}{}",
-                    e.signature(),
-                    kind,
-                    e.summary(),
-                    aliases
-                );
-            }
-            println!("eval roster:");
-            for spec in ScheduleSpec::roster() {
-                println!("  {}", spec.label());
-            }
-            Ok(())
+            let flags = Flags::parse(&rest).unwrap_or_else(die);
+            cmd_list_schedules(flags.has("json"))
         }
         "list-workloads" => {
-            let reg = WorkloadRegistry::global();
-            let entries = reg.entries();
-            println!("workload registry ({} entries):", entries.len());
-            for e in &entries {
-                let aliases = if e.aliases().is_empty() {
-                    String::new()
-                } else {
-                    format!("  [aliases: {}]", e.aliases().join(", "))
-                };
-                let kind = if e.is_composite() { "composite" } else { "simple" };
-                println!(
-                    "  {:<44} {:<9} {}{}",
-                    e.signature(),
-                    kind,
-                    e.summary(),
-                    aliases
-                );
-            }
-            println!("registered traces (replay as trace:<name>):");
-            for name in reg.trace_names() {
-                println!("  {name}");
-            }
-            println!(
-                "variability specs (--variability): calm | hetero:s1,s2,... | \
-noise:<prob>,<slow>,<seed>[,<window_ns>] | atoms joined with '+'"
-            );
+            let flags = Flags::parse(&rest).unwrap_or_else(die);
+            cmd_list_workloads(flags.has("json"))
+        }
+        "list-errors" => {
+            print!("{}", ErrorCode::markdown_table());
             Ok(())
         }
         "calibrate" => cmd_calibrate(&rest),
         "serve" => {
             let flags = Flags::parse(&rest).unwrap_or_else(die);
-            service::serve(&flags.get_str("addr", "127.0.0.1:7311"))
+            let store = flags.named.get("store").map(PathBuf::from);
+            service::serve(&flags.get_str("addr", "127.0.0.1:7311"), store.as_deref())
                 .map_err(|e| e.to_string())
         }
         other => Err(format!("unknown command '{other}'\n{USAGE}")),
@@ -227,6 +217,161 @@ noise:<prob>,<slow>,<seed>[,<window_ns>] | atoms joined with '+'"
 fn die<T>(e: String) -> T {
     eprintln!("error: {e}");
     std::process::exit(2);
+}
+
+/// Render a string slice as a JSON array of strings.
+fn json_str_array<S: AsRef<str>>(items: &[S]) -> String {
+    json_array(items.iter().map(|s| format!("\"{}\"", escape(s.as_ref()))))
+}
+
+fn cmd_list_schedules(json: bool) -> Result<(), String> {
+    let entries = ScheduleRegistry::global().entries();
+    if json {
+        // Typed descriptors: one object per registration, each
+        // parameter with its name/kind/required triple, plus the eval
+        // roster — the machine-readable twin of the text listing.
+        let items: Vec<String> = entries
+            .iter()
+            .map(|e| {
+                let params = json_array(e.params().iter().map(|p| {
+                    JsonObj::new()
+                        .str("name", p.name)
+                        .str(
+                            "kind",
+                            match p.kind {
+                                SchedParamKind::U64 => "u64",
+                                SchedParamKind::F64 => "f64",
+                            },
+                        )
+                        .bool("required", p.required)
+                        .finish()
+                }));
+                JsonObj::new()
+                    .str("name", e.name())
+                    .str("signature", &e.signature())
+                    .str("summary", e.summary())
+                    .bool("builtin", e.is_builtin())
+                    .raw("aliases", &json_str_array(e.aliases()))
+                    .raw("params", &params)
+                    .finish()
+            })
+            .collect();
+        let roster: Vec<String> =
+            ScheduleSpec::roster().iter().map(|s| s.label()).collect();
+        println!(
+            "{}",
+            JsonObj::new()
+                .raw("schedules", &json_array(items))
+                .raw("roster", &json_str_array(&roster))
+                .finish()
+        );
+        return Ok(());
+    }
+    println!("schedule registry ({} entries):", entries.len());
+    for e in &entries {
+        let aliases = if e.aliases().is_empty() {
+            String::new()
+        } else {
+            format!("  [aliases: {}]", e.aliases().join(", "))
+        };
+        let kind = if e.is_builtin() { "builtin" } else { "user" };
+        println!(
+            "  {:<28} {:<7} {}{}",
+            e.signature(),
+            kind,
+            e.summary(),
+            aliases
+        );
+    }
+    println!("eval roster:");
+    for spec in ScheduleSpec::roster() {
+        println!("  {}", spec.label());
+    }
+    Ok(())
+}
+
+fn cmd_list_workloads(json: bool) -> Result<(), String> {
+    let reg = WorkloadRegistry::global();
+    let entries = reg.entries();
+    if json {
+        let items: Vec<String> = entries
+            .iter()
+            .map(|e| {
+                let params = json_array(e.params().iter().map(|p| {
+                    JsonObj::new()
+                        .str("name", p.name)
+                        .str(
+                            "kind",
+                            match p.kind {
+                                WlParamKind::U64 => "u64",
+                                WlParamKind::F64 => "f64",
+                            },
+                        )
+                        .str("default", p.default)
+                        .finish()
+                }));
+                let subs = json_array(e.subs().iter().map(|s| {
+                    JsonObj::new()
+                        .str("name", s.name)
+                        .str(
+                            "kind",
+                            match s.kind {
+                                SubKind::Workload => "workload",
+                                SubKind::Token => "token",
+                            },
+                        )
+                        .finish()
+                }));
+                JsonObj::new()
+                    .str("name", e.name())
+                    .str("signature", &e.signature())
+                    .str("summary", e.summary())
+                    .bool("composite", e.is_composite())
+                    .raw("aliases", &json_str_array(e.aliases()))
+                    .raw("params", &params)
+                    .raw("subs", &subs)
+                    .finish()
+            })
+            .collect();
+        println!(
+            "{}",
+            JsonObj::new()
+                .raw("workloads", &json_array(items))
+                .raw("traces", &json_str_array(&reg.trace_names()))
+                .str(
+                    "variability",
+                    "calm | hetero:s1,s2,... | \
+noise:<prob>,<slow>,<seed>[,<window_ns>] | atoms joined with '+'"
+                )
+                .finish()
+        );
+        return Ok(());
+    }
+    println!("workload registry ({} entries):", entries.len());
+    for e in &entries {
+        let aliases = if e.aliases().is_empty() {
+            String::new()
+        } else {
+            format!("  [aliases: {}]", e.aliases().join(", "))
+        };
+        let kind = if e.is_composite() { "composite" } else { "simple" };
+        println!(
+            "  {:<44} {:<9} {}{}",
+            e.signature(),
+            kind,
+            e.summary(),
+            aliases
+        );
+    }
+    println!("registered traces (replay as trace:<name>):");
+    for name in reg.trace_names() {
+        println!("  {name}");
+    }
+    println!(
+        "variability specs (--variability): calm | hetero:s1,s2,... | \
+noise:<prob>,<slow>,<seed>[,<window_ns>] | atoms joined with '+'"
+    );
+    Ok(())
 }
 
 fn cmd_run(args: &[String]) -> Result<(), String> {
@@ -469,6 +614,14 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     if flags.has("remote") && flags.has("cluster") {
         return Err("--remote and --cluster are mutually exclusive".into());
     }
+    let store_dir = flags.named.get("store").map(PathBuf::from);
+    if store_dir.is_some() && flags.has("remote") {
+        return Err(
+            "--store is local: a remote service owns its own store \
+(start it with `uds serve --store DIR`)"
+                .into(),
+        );
+    }
     let report = if let Some(addr) = flags.named.get("remote") {
         // Remote grids are validated by the *server's* schedule
         // registry: user-defined schedules registered in the server
@@ -481,10 +634,13 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
             .join(" ");
         sweep_remote(&line, addr)?
     } else if let Some(nodes) = flags.named.get("cluster") {
-        sweep_cluster(&flags, pairs, nodes)?
+        sweep_cluster(&flags, pairs, nodes, store_dir.as_deref())?
     } else {
         let grid = SweepGrid::from_pairs(pairs).map_err(|e| e.to_string())?;
-        sweep_local(&grid)
+        match &store_dir {
+            Some(dir) => sweep_local_stored(&grid, dir)?,
+            None => sweep_local(&grid),
+        }
     };
     let (jpath, cpath) = report.save(&out).map_err(|e| e.to_string())?;
     let s = &report.summary;
@@ -492,6 +648,12 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
         "sweep: {} scenarios, {} distinct workloads, {} index builds, {} cache hits",
         s.scenarios, s.distinct_workloads, s.index_builds, s.cache_hits
     );
+    if let Some(ss) = &report.store {
+        println!(
+            "store: hits={} misses={} appended={}",
+            ss.hits, ss.misses, ss.appended
+        );
+    }
     if let Some(c) = &report.cluster {
         println!(
             "cluster: {} nodes, {} shards (size {}), {} retries, {} ms wall, \
@@ -520,13 +682,26 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// Grids at or under this size get the store-warm membership probe on
+/// the `--cluster --store` path (expanding the grid locally to check
+/// every key).  Larger grids always go to the fabric: the probe's
+/// expansion cost would rival the sweep's shard bookkeeping.
+const STORE_PARTITION_CAP: u64 = 1_000_000;
+
 /// Shard the grid across a comma-separated node list via the cluster
 /// fabric.  The grid is parsed *uncapped*: the coordinator re-applies
 /// the scenario cap per shard, which is how >100k-scenario grids run.
+///
+/// With `--store`, a fully-warm grid (every scenario already stored)
+/// is answered entirely from the store without contacting any node —
+/// report.csv stays byte-identical to a real cluster run.  A grid with
+/// any miss runs the full cluster sweep, whose results are then
+/// appended so the next run is warm.
 fn sweep_cluster(
     flags: &Flags,
     pairs: Vec<(&str, &str)>,
     nodes: &str,
+    store_dir: Option<&Path>,
 ) -> Result<Report, String> {
     let nodes: Vec<String> = nodes
         .split(',')
@@ -535,6 +710,28 @@ fn sweep_cluster(
         .map(str::to_string)
         .collect();
     let grid = SweepGrid::from_pairs_uncapped(pairs).map_err(|e| e.to_string())?;
+    let store = match store_dir {
+        Some(dir) => Some(ResultStore::open(dir).map_err(|e| e.to_string())?),
+        None => None,
+    };
+    if let (Some(store), Some(dir)) = (&store, store_dir) {
+        if grid.size() <= STORE_PARTITION_CAP && !store.is_empty() {
+            if let Some((results, summary, cluster)) = cluster_warm(&grid, store, &nodes)
+            {
+                let hits = results.len() as u64;
+                let mut meta = sweep_meta(&grid.to_batch_line(), "cluster", None);
+                meta.push(("nodes".to_string(), nodes.join(",")));
+                meta.push(("store".to_string(), dir.display().to_string()));
+                return Ok(Report {
+                    meta,
+                    summary,
+                    cluster: Some(cluster),
+                    store: Some(StoreSummary { hits, misses: 0, appended: 0 }),
+                    results,
+                });
+            }
+        }
+    }
     let opts = ClusterOptions {
         shard_size: flags.get("shard-size", 4096u64)?,
         max_retries: flags.get("shard-retries", 2u32)?,
@@ -543,14 +740,61 @@ fn sweep_cluster(
     };
     let outcome = cluster::run_cluster_sweep(&grid, &nodes, &opts)
         .map_err(|e| format!("cluster sweep: {e}"))?;
+    let store_summary = match &store {
+        Some(store) => {
+            let appended = store.append(&outcome.results).map_err(|e| e.to_string())?;
+            Some(StoreSummary {
+                hits: 0,
+                misses: outcome.results.len() as u64,
+                appended,
+            })
+        }
+        None => None,
+    };
     let mut meta = sweep_meta(&grid.to_batch_line(), "cluster", None);
     meta.push(("nodes".to_string(), nodes.join(",")));
+    if let Some(dir) = store_dir {
+        meta.push(("store".to_string(), dir.display().to_string()));
+    }
     Ok(Report {
         meta,
         summary: outcome.summary,
         cluster: Some(outcome.cluster),
+        store: store_summary,
         results: outcome.results,
     })
+}
+
+/// The all-hit cluster path: every scenario answered from the store, in
+/// grid order, with a synthetic (zero-shard) cluster section.  `None`
+/// as soon as any scenario is missing — the caller then runs the real
+/// sweep.
+fn cluster_warm(
+    grid: &SweepGrid,
+    store: &ResultStore,
+    nodes: &[String],
+) -> Option<(Vec<ScenarioResult>, SweepSummary, ClusterSummary)> {
+    let t0 = std::time::Instant::now();
+    let scenarios = grid.expand();
+    let mut results = Vec::with_capacity(scenarios.len());
+    for sc in &scenarios {
+        let row = store.get(&ScenarioKey::of_scenario(sc))?;
+        results.push(row.to_result(sc.id));
+    }
+    let summary = SweepSummary {
+        scenarios: results.len() as u64,
+        distinct_workloads: cluster::distinct_workload_count(grid),
+        index_builds: 0,
+        cache_hits: 0,
+    };
+    let cluster = ClusterSummary {
+        nodes: nodes.iter().map(|a| NodeStatus::new(a)).collect(),
+        shards: 0,
+        shard_size: 0,
+        retries: 0,
+        wall_ms: t0.elapsed().as_millis() as u64,
+    };
+    Some((results, summary, cluster))
 }
 
 fn sweep_meta(batch_line: &str, mode: &str, addr: Option<&str>) -> Vec<(String, String)> {
@@ -574,8 +818,31 @@ fn sweep_local(grid: &SweepGrid) -> Report {
         meta: sweep_meta(&grid.to_batch_line(), "local", None),
         summary,
         cluster: None,
+        store: None,
         results,
     }
+}
+
+/// Run the grid in-process against a persistent result store: stored
+/// scenarios answer from the store (no simulation), fresh ones are
+/// simulated and appended — the merged report is byte-identical to a
+/// cold run of the same grid.
+fn sweep_local_stored(grid: &SweepGrid, dir: &Path) -> Result<Report, String> {
+    let store = ResultStore::open(dir).map_err(|e| e.to_string())?;
+    let svc = service::Service::new();
+    let scenarios = grid.expand();
+    let (results, summary, store_summary) =
+        run_sweep_stored(&svc, &scenarios, grid.workers, &store)
+            .map_err(|e| e.to_string())?;
+    let mut meta = sweep_meta(&grid.to_batch_line(), "local", None);
+    meta.push(("store".to_string(), dir.display().to_string()));
+    Ok(Report {
+        meta,
+        summary,
+        cluster: None,
+        store: Some(store_summary),
+        results,
+    })
 }
 
 /// Send one `BATCH` line to a remote service and collect the streamed
@@ -617,8 +884,75 @@ fn sweep_remote(batch_line: &str, addr: &str) -> Result<Report, String> {
         meta: sweep_meta(batch_line, "remote", Some(addr)),
         summary,
         cluster: None,
+        store: None,
         results,
     })
+}
+
+fn cmd_query(args: &[String]) -> Result<(), String> {
+    let flags = Flags::parse(args)?;
+    let op = flags.positional.first().cloned().ok_or(
+        "query needs an operation: select | count | best-schedule | regret",
+    )?;
+    // CLI flags map 1:1 onto the QUERY wire grammar, so local and
+    // remote evaluation share one parser (and one error table).
+    let mut line = format!("QUERY {op}");
+    for (flag, key) in [
+        ("schedules", "schedules"),
+        ("workloads", "workloads"),
+        ("variability", "variability"),
+        ("n", "n"),
+        ("threads", "threads"),
+        ("seeds", "seeds"),
+        ("mean-ns", "mean_ns"),
+        ("h-ns", "h_ns"),
+        ("limit", "limit"),
+        ("by", "by"),
+    ] {
+        if let Some(v) = flags.named.get(flag) {
+            line.push_str(&format!(" {key}={v}"));
+        }
+    }
+    match (flags.named.get("store"), flags.named.get("remote")) {
+        (Some(_), Some(_)) => Err("--store and --remote are mutually exclusive".into()),
+        (Some(dir), None) => query_local(&line, Path::new(dir)),
+        (None, Some(addr)) => query_remote(&line, addr),
+        (None, None) => Err("query needs --store DIR or --remote HOST:PORT".into()),
+    }
+}
+
+/// Evaluate one query against a local store directory.
+fn query_local(line: &str, dir: &Path) -> Result<(), String> {
+    let store = ResultStore::open(dir).map_err(|e| e.to_string())?;
+    let q = Query::parse(line).map_err(|e| e.to_string())?;
+    let out = store.with_rows(|rows| q.run(rows));
+    for row in &out.rows {
+        println!("{row}");
+    }
+    println!("{}", out.summary_line());
+    Ok(())
+}
+
+/// Send one `QUERY` line to a remote service and relay its NDJSON
+/// stream verbatim; the server's store (and its error table) is
+/// authoritative.
+fn query_remote(line: &str, addr: &str) -> Result<(), String> {
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    writeln!(stream, "{line}").map_err(|e| e.to_string())?;
+    let reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+    for l in reader.lines() {
+        let l = l.map_err(|e| e.to_string())?;
+        if l.starts_with("ERR ") {
+            return Err(format!("service rejected the query: {l}"));
+        }
+        println!("{l}");
+        if l.contains("\"type\":\"query_summary\"") {
+            return Ok(());
+        }
+    }
+    Err("connection closed before the query_summary record".into())
 }
 
 fn cmd_perf_gate(args: &[String]) -> Result<(), String> {

@@ -38,11 +38,23 @@
 //! grid size, so sharded grids of any size are servable; malformed or
 //! out-of-range shards answer `ERR bad_shard`.
 //!
-//! Error codes are stable protocol surface (`bad_request`, `bad_field`,
-//! `bad_value`, `bad_schedule`, `bad_workload`, `bad_variability`,
-//! `bad_n`, `bad_threads`, `bad_mean`, `empty_grid`, `grid_too_large`,
-//! `bad_workers`, `bad_shard`); details are human-oriented and may
-//! change.  Duplicate keys in a request line answer `bad_request`.
+//! A `QUERY` line interrogates the service's attached
+//! [`crate::store::ResultStore`] (when started with one; see
+//! [`serve`]): filters and aggregations over every stored sweep this
+//! service has ever answered, streamed back as NDJSON rows and a
+//! terminal `query_summary` record.  Grammar and examples live in
+//! [`crate::store::query`] and EXPERIMENTS.md §Result store & queries;
+//! a store-less service answers `ERR no_store`.
+//!
+//! Error codes are stable protocol surface, enumerated (and documented
+//! one-per-line) by [`crate::util::ErrorCode`] — the request layer
+//! (`bad_request`, `bad_field`, `bad_value`, `bad_schedule`,
+//! `bad_workload`, `bad_variability`, `bad_n`, `bad_threads`,
+//! `bad_mean`), the grid layer (`empty_grid`, `grid_too_large`,
+//! `bad_workers`, `bad_shard`) and the store layer (`no_store`,
+//! `bad_query`, `store_io`, `store_corrupt`); details are
+//! human-oriented and may change.  Duplicate keys in a request line
+//! answer `bad_request`.
 //!
 //! Schedule labels — in `schedule=` and in a `BATCH` `schedules=` list —
 //! resolve through the open schedule registry
@@ -82,15 +94,18 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
 
 use crate::coordinator::{LoopRecord, LoopSpec, TeamSpec};
 use crate::schedules::ScheduleSpec;
 use crate::sim::{simulate_indexed, SimArena, SimConfig, VariabilitySpec};
+use crate::store::query::{Query, QueryOutput};
+use crate::store::ResultStore;
 use crate::sweep::grid::{MAX_N, MAX_THREADS};
 use crate::sweep::SweepGrid;
-use crate::util::CodedError;
+use crate::util::{CodedError, ErrorCode};
 use crate::workload::{CostIndex, WorkloadSpec};
 
 /// A parsed job request.
@@ -120,15 +135,15 @@ impl JobRequest {
             h_ns: 250,
             seed: 0,
         };
-        let bad = |k: &str, v: &str| CodedError::new("bad_value", format!("{k}: '{v}'"));
+        let bad = |k: &str, v: &str| CodedError::new(ErrorCode::BadValue, format!("{k}: '{v}'"));
         let mut seen = std::collections::HashSet::new();
         for tok in line.split_whitespace() {
             let (k, v) = tok.split_once('=').ok_or_else(|| {
-                CodedError::new("bad_request", format!("expected key=value, got '{tok}'"))
+                CodedError::new(ErrorCode::BadRequest, format!("expected key=value, got '{tok}'"))
             })?;
             if !seen.insert(k.to_string()) {
                 return Err(CodedError::new(
-                    "bad_request",
+                    ErrorCode::BadRequest,
                     format!("duplicate key '{k}'"),
                 ));
             }
@@ -142,19 +157,19 @@ impl JobRequest {
                 "h_ns" => req.h_ns = v.parse().map_err(|_| bad(k, v))?,
                 "seed" => req.seed = v.parse().map_err(|_| bad(k, v))?,
                 other => {
-                    return Err(CodedError::new("bad_field", format!("'{other}'")));
+                    return Err(CodedError::new(ErrorCode::BadField, format!("'{other}'")));
                 }
             }
         }
         if req.schedule.is_empty() {
-            return Err(CodedError::new("bad_request", "missing field 'schedule'"));
+            return Err(CodedError::new(ErrorCode::BadRequest, "missing field 'schedule'"));
         }
         if req.n == 0 {
-            return Err(CodedError::new("bad_n", "missing or zero field 'n'"));
+            return Err(CodedError::new(ErrorCode::BadN, "missing or zero field 'n'"));
         }
         if !req.mean_ns.is_finite() || req.mean_ns <= 0.0 {
             return Err(CodedError::new(
-                "bad_mean",
+                ErrorCode::BadMean,
                 format!("mean_ns must be finite and > 0, got {}", req.mean_ns),
             ));
         }
@@ -182,7 +197,9 @@ struct CacheEntry {
     index: Arc<CostIndex>,
 }
 
-/// Shared request-path state: the LRU workload cache plus counters.
+/// Shared request-path state: the LRU workload cache plus counters,
+/// and (optionally) an attached persistent [`ResultStore`] that turns
+/// `BATCH` sweeps incremental and answers `QUERY` lines.
 pub struct Service {
     cache: Mutex<HashMap<CacheKey, CacheEntry>>,
     tick: AtomicU64,
@@ -190,6 +207,7 @@ pub struct Service {
     hits: AtomicU64,
     max_entries: usize,
     max_bytes: usize,
+    store: Option<Arc<ResultStore>>,
 }
 
 impl Default for Service {
@@ -213,7 +231,21 @@ impl Service {
             hits: AtomicU64::new(0),
             max_entries: max_entries.max(1),
             max_bytes,
+            store: None,
         }
+    }
+
+    /// Attach a persistent [`ResultStore`]: `BATCH` sweeps become
+    /// incremental (stored scenarios answer from the store, fresh ones
+    /// are simulated and appended) and `QUERY` lines are served.
+    pub fn with_store(mut self, store: Arc<ResultStore>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// The attached store, if any.
+    pub fn store(&self) -> Option<&Arc<ResultStore>> {
+        self.store.as_ref()
     }
 
     /// `(index builds, cache hits)` since construction.  A repeated
@@ -346,20 +378,20 @@ impl Service {
         arena: &mut SimArena,
     ) -> Result<String, CodedError> {
         let spec = ScheduleSpec::parse(&req.schedule)
-            .map_err(|e| CodedError::new("bad_schedule", e))?;
+            .map_err(|e| CodedError::new(ErrorCode::BadSchedule, e))?;
         // Registry parse errors carry the detail (unknown head vs. bad
         // parameter vs. unknown trace), and both the single-job path
         // and the BATCH grid preserve it symmetrically.
         let workload = WorkloadSpec::parse(&req.workload)
-            .map_err(|e| CodedError::new("bad_workload", e))?;
+            .map_err(|e| CodedError::new(ErrorCode::BadWorkload, e))?;
         let variability = VariabilitySpec::parse(&req.variability)
-            .map_err(|e| CodedError::new("bad_variability", e))?;
+            .map_err(|e| CodedError::new(ErrorCode::BadVariability, e))?;
         if req.n > MAX_N {
-            return Err(CodedError::new("bad_n", format!("n must be 1..={MAX_N}")));
+            return Err(CodedError::new(ErrorCode::BadN, format!("n must be 1..={MAX_N}")));
         }
         if req.threads == 0 || req.threads as u64 > MAX_THREADS {
             return Err(CodedError::new(
-                "bad_threads",
+                ErrorCode::BadThreads,
                 format!("threads must be 1..={MAX_THREADS}"),
             ));
         }
@@ -409,15 +441,71 @@ imbalance_pct={:.4} efficiency={:.4}",
         // Returning `false` from the emit callback cancels the sweep:
         // once the client stops reading (write error / timeout) the
         // remaining scenarios are not worth simulating.
-        let summary =
+        let summary = if let Some(store) = &self.store {
+            // Store-backed incremental path: identical stream, but
+            // stored scenarios skip the simulator and fresh results
+            // are appended for the next sweep.  A store append failure
+            // is answered like any protocol error.
+            match crate::sweep::run_sweep_stored_with(
+                self,
+                &scenarios,
+                grid.workers,
+                store,
+                |r| {
+                    if writeln!(writer, "{}", r.json_line()).is_err() {
+                        broken = true;
+                    }
+                    !broken
+                },
+            ) {
+                Ok((summary, _)) => summary,
+                Err(e) => {
+                    if !broken {
+                        let _ = writeln!(writer, "{}", e.wire());
+                    }
+                    return;
+                }
+            }
+        } else {
             crate::sweep::run_sweep_with(self, &scenarios, grid.workers, |r| {
                 if writeln!(writer, "{}", r.json_line()).is_err() {
                     broken = true;
                 }
                 !broken
-            });
+            })
+        };
         if !broken {
             let _ = writeln!(writer, "{}", summary.json_line());
+        }
+    }
+
+    /// Run one `QUERY` line against the attached store.  Fails with
+    /// `no_store` when the service was started without one, or with the
+    /// query layer's own codes on a malformed line.
+    pub fn try_query(&self, line: &str) -> Result<QueryOutput, CodedError> {
+        let store = self.store.as_ref().ok_or_else(|| {
+            ErrorCode::NoStore.err("this service was started without --store")
+        })?;
+        let q = Query::parse(line)?;
+        Ok(store.with_rows(|rows| q.run(rows)))
+    }
+
+    /// Handle one `QUERY` line: stream NDJSON result rows and a
+    /// terminal `query_summary` record, or one `ERR <code> <detail>`
+    /// line.
+    pub fn handle_query<W: Write>(&self, line: &str, writer: &mut W) {
+        match self.try_query(line) {
+            Ok(out) => {
+                for row in &out.rows {
+                    if writeln!(writer, "{row}").is_err() {
+                        return;
+                    }
+                }
+                let _ = writeln!(writer, "{}", out.summary_line());
+            }
+            Err(e) => {
+                let _ = writeln!(writer, "{}", e.wire());
+            }
         }
     }
 }
@@ -457,6 +545,14 @@ fn client_loop(stream: TcpStream, svc: &Service, arena: &mut SimArena) {
             }
             continue;
         }
+        if line.starts_with("QUERY") {
+            let mut buffered = std::io::BufWriter::new(&mut writer);
+            svc.handle_query(line, &mut buffered);
+            if buffered.flush().is_err() {
+                break;
+            }
+            continue;
+        }
         let resp = match JobRequest::parse(line) {
             Ok(req) => svc.handle(&req, arena),
             Err(e) => e.wire(),
@@ -481,8 +577,14 @@ fn default_workers() -> usize {
 /// bounded pool of `workers` threads sharing one [`Service`].  A full
 /// queue blocks `accept` (backpressure) instead of spawning unboundedly.
 pub fn serve_on(listener: TcpListener, workers: usize) {
+    serve_on_with(listener, workers, Arc::new(Service::new()));
+}
+
+/// As [`serve_on`], over a caller-built [`Service`] — the hook for
+/// attaching a [`ResultStore`] (or a custom cache budget) to a served
+/// endpoint.
+pub fn serve_on_with(listener: TcpListener, workers: usize, svc: Arc<Service>) {
     let workers = workers.max(1);
-    let svc = Arc::new(Service::new());
     let (tx, rx) = mpsc::sync_channel::<TcpStream>(workers * 4);
     let rx = Arc::new(Mutex::new(rx));
     for wid in 0..workers {
@@ -524,12 +626,25 @@ pub fn serve_on(listener: TcpListener, workers: usize) {
 }
 
 /// Blocking entry point: run the service until killed, on a worker pool
-/// sized to the host's parallelism.
-pub fn serve(addr: &str) -> anyhow::Result<()> {
+/// sized to the host's parallelism.  With `store_dir`, the service
+/// opens (or creates) a persistent [`ResultStore`] there: `BATCH`
+/// sweeps become incremental and `QUERY` lines are answered.
+pub fn serve(addr: &str, store_dir: Option<&Path>) -> anyhow::Result<()> {
     let listener = TcpListener::bind(addr)?;
     let workers = default_workers();
+    let mut svc = Service::new();
+    if let Some(dir) = store_dir {
+        let store = ResultStore::open(dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "result store at {} ({} rows, {} segments)",
+            dir.display(),
+            store.len(),
+            store.segment_count()
+        );
+        svc = svc.with_store(Arc::new(store));
+    }
     println!("uds service listening on {addr} ({workers} workers)");
-    serve_on(listener, workers);
+    serve_on_with(listener, workers, Arc::new(svc));
     Ok(())
 }
 

@@ -1,0 +1,402 @@
+//! Persistent sweep-history store: the repo's results layer as a
+//! living, queryable dataset instead of write-once report files.
+//!
+//! [`ResultStore`] is an embedded, std-only, append-only columnar
+//! store.  Each append writes one immutable segment file
+//! ([`segment`]); an in-memory index keyed by [`ScenarioKey`] — the
+//! canonical schedule/workload/variability labels plus
+//! n/threads/mean/h/seed — maps every scenario ever simulated to its
+//! stored outcome.  The lossless labels of the schedule and workload
+//! registries are the primary key: two scenarios with equal keys are
+//! the *same deterministic simulation*, so a stored row can stand in
+//! for re-running it, bit for bit.
+//!
+//! On top of the store sit three views of one query surface
+//! ([`query`]): the `uds query` subcommand, the `QUERY` wire verb on
+//! the TCP service, and the library API itself.  The sweep engine's
+//! incremental path ([`crate::sweep::run_sweep_stored_with`]) uses the
+//! index to split a grid into store hits and simulation misses and
+//! merges both streams back in canonical order, keeping `report.csv`
+//! byte-identical to a cold run.
+//!
+//! Concurrency: segment files are written once and renamed into place;
+//! the index lives behind an `RwLock`, so a service can interleave
+//! `QUERY` reads with `BATCH`-driven appends.  Duplicate keys (two
+//! stores merged by hand, a crash between rename and reload) resolve
+//! first-wins — deterministic simulation guarantees the rows agree.
+
+pub mod query;
+mod segment;
+
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, HashSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::RwLock;
+
+use crate::eval::report::ScenarioResult;
+use crate::sweep::Scenario;
+use crate::util::json::JsonObj;
+use crate::util::{CodedError, ErrorCode};
+
+/// The identity of one scenario: everything that determines its
+/// simulated outcome, nothing that doesn't.  Grid-relative `id` is
+/// deliberately excluded — the same scenario keeps its stored result
+/// no matter where a future grid places it.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ScenarioKey {
+    pub schedule: String,
+    pub workload: String,
+    pub variability: String,
+    pub n: u64,
+    pub threads: u64,
+    /// `mean_ns` as IEEE-754 bits, so the key is hashable and exact.
+    pub mean_bits: u64,
+    pub h_ns: u64,
+    pub seed: u64,
+}
+
+impl ScenarioKey {
+    pub fn of_result(r: &ScenarioResult) -> Self {
+        Self {
+            schedule: r.schedule.clone(),
+            workload: r.workload.clone(),
+            variability: r.variability.clone(),
+            n: r.n,
+            threads: r.threads,
+            mean_bits: r.mean_ns.to_bits(),
+            h_ns: r.h_ns,
+            seed: r.seed,
+        }
+    }
+
+    pub fn of_scenario(sc: &Scenario) -> Self {
+        Self {
+            schedule: sc.schedule.label(),
+            workload: sc.workload.label().to_string(),
+            variability: sc.variability.label(),
+            n: sc.n,
+            threads: sc.threads as u64,
+            mean_bits: sc.mean_ns.to_bits(),
+            h_ns: sc.h_ns,
+            seed: sc.seed,
+        }
+    }
+}
+
+/// One stored scenario outcome: a [`ScenarioResult`] minus its
+/// grid-relative `id`.  Floats are preserved bitwise through the
+/// segment codec, so `to_result(..).json_line()` reproduces the
+/// original wire bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoredRow {
+    pub schedule: String,
+    pub workload: String,
+    pub variability: String,
+    pub n: u64,
+    pub threads: u64,
+    pub mean_ns: f64,
+    pub h_ns: u64,
+    pub seed: u64,
+    pub makespan_ns: u64,
+    pub chunks: u64,
+    pub dequeues: u64,
+    pub imbalance_pct: f64,
+    pub efficiency: f64,
+}
+
+impl StoredRow {
+    pub fn from_result(r: &ScenarioResult) -> Self {
+        Self {
+            schedule: r.schedule.clone(),
+            workload: r.workload.clone(),
+            variability: r.variability.clone(),
+            n: r.n,
+            threads: r.threads,
+            mean_ns: r.mean_ns,
+            h_ns: r.h_ns,
+            seed: r.seed,
+            makespan_ns: r.makespan_ns,
+            chunks: r.chunks,
+            dequeues: r.dequeues,
+            imbalance_pct: r.imbalance_pct,
+            efficiency: r.efficiency,
+        }
+    }
+
+    /// Rebuild the wire record; `id` is grid-relative, so the caller
+    /// supplies the position the current grid assigns.
+    pub fn to_result(&self, id: u64) -> ScenarioResult {
+        ScenarioResult {
+            id,
+            schedule: self.schedule.clone(),
+            workload: self.workload.clone(),
+            variability: self.variability.clone(),
+            n: self.n,
+            threads: self.threads,
+            mean_ns: self.mean_ns,
+            h_ns: self.h_ns,
+            seed: self.seed,
+            makespan_ns: self.makespan_ns,
+            chunks: self.chunks,
+            dequeues: self.dequeues,
+            imbalance_pct: self.imbalance_pct,
+            efficiency: self.efficiency,
+        }
+    }
+
+    pub fn key(&self) -> ScenarioKey {
+        ScenarioKey {
+            schedule: self.schedule.clone(),
+            workload: self.workload.clone(),
+            variability: self.variability.clone(),
+            n: self.n,
+            threads: self.threads,
+            mean_bits: self.mean_ns.to_bits(),
+            h_ns: self.h_ns,
+            seed: self.seed,
+        }
+    }
+}
+
+/// Hit/miss accounting for one store-backed sweep; lands in
+/// `report.json` under `"store"` and on stdout after `uds sweep
+/// --store`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreSummary {
+    /// Scenarios served from the store without simulating.
+    pub hits: u64,
+    /// Scenarios that had to be simulated.
+    pub misses: u64,
+    /// Fresh rows actually written (≤ misses: duplicates are dropped).
+    pub appended: u64,
+}
+
+impl StoreSummary {
+    pub fn json(&self) -> String {
+        JsonObj::new()
+            .u64("hits", self.hits)
+            .u64("misses", self.misses)
+            .u64("appended", self.appended)
+            .finish()
+    }
+}
+
+struct Inner {
+    rows: Vec<StoredRow>,
+    index: HashMap<ScenarioKey, usize>,
+    segments: u64,
+    next_seg: u64,
+}
+
+/// The embedded append-only result store.  See the module docs.
+pub struct ResultStore {
+    dir: PathBuf,
+    inner: RwLock<Inner>,
+}
+
+impl ResultStore {
+    /// Open (creating if absent) the store at `dir`: scan, validate and
+    /// index every segment file.  Any unreadable or corrupt segment
+    /// fails the open with a coded error — a store that opens is a
+    /// store that is fully intact.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self, CodedError> {
+        let dir = dir.as_ref().to_path_buf();
+        let io = |what: String| ErrorCode::StoreIo.err(what);
+        fs::create_dir_all(&dir).map_err(|e| io(format!("create {}: {e}", dir.display())))?;
+        let mut names: Vec<String> = Vec::new();
+        let entries =
+            fs::read_dir(&dir).map_err(|e| io(format!("read {}: {e}", dir.display())))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| io(format!("read {}: {e}", dir.display())))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.starts_with("seg-") && name.ends_with(".col") {
+                names.push(name);
+            }
+        }
+        names.sort();
+        let mut inner = Inner { rows: Vec::new(), index: HashMap::new(), segments: 0, next_seg: 0 };
+        for name in &names {
+            let path = dir.join(name);
+            let bytes = fs::read(&path).map_err(|e| io(format!("read {}: {e}", path.display())))?;
+            for row in segment::decode(name, &bytes)? {
+                let at = inner.rows.len();
+                if let Entry::Vacant(v) = inner.index.entry(row.key()) {
+                    v.insert(at);
+                    inner.rows.push(row);
+                }
+            }
+            inner.segments += 1;
+            let num = name
+                .strip_prefix("seg-")
+                .and_then(|s| s.strip_suffix(".col"))
+                .and_then(|s| s.parse::<u64>().ok());
+            if let Some(num) = num {
+                inner.next_seg = inner.next_seg.max(num + 1);
+            }
+        }
+        Ok(Self { dir, inner: RwLock::new(inner) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Distinct scenarios stored (across all segments, deduplicated).
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn segment_count(&self) -> u64 {
+        self.inner.read().unwrap().segments
+    }
+
+    pub fn contains(&self, key: &ScenarioKey) -> bool {
+        self.inner.read().unwrap().index.contains_key(key)
+    }
+
+    pub fn get(&self, key: &ScenarioKey) -> Option<StoredRow> {
+        let inner = self.inner.read().unwrap();
+        inner.index.get(key).map(|&i| inner.rows[i].clone())
+    }
+
+    /// Run `f` over every stored row under the read lock (the query
+    /// path; avoids cloning the dataset).
+    pub fn with_rows<R>(&self, f: impl FnOnce(&[StoredRow]) -> R) -> R {
+        let inner = self.inner.read().unwrap();
+        f(&inner.rows)
+    }
+
+    /// Append every result whose key is not already stored, as one new
+    /// immutable segment (written to a temp file, then renamed into
+    /// place).  Duplicates — against the store or within the batch —
+    /// are dropped; an all-duplicate batch writes no file.  Returns the
+    /// number of rows actually persisted.
+    pub fn append(&self, results: &[ScenarioResult]) -> Result<u64, CodedError> {
+        let io = |what: String| ErrorCode::StoreIo.err(what);
+        let mut inner = self.inner.write().unwrap();
+        let mut fresh: Vec<StoredRow> = Vec::new();
+        let mut batch_keys: HashSet<ScenarioKey> = HashSet::new();
+        for r in results {
+            let key = ScenarioKey::of_result(r);
+            if inner.index.contains_key(&key) || !batch_keys.insert(key) {
+                continue;
+            }
+            fresh.push(StoredRow::from_result(r));
+        }
+        if fresh.is_empty() {
+            return Ok(0);
+        }
+        let bytes = segment::encode(&fresh);
+        let name = format!("seg-{:06}.col", inner.next_seg);
+        let path = self.dir.join(&name);
+        let tmp = self.dir.join(format!("{name}.tmp"));
+        fs::write(&tmp, &bytes).map_err(|e| io(format!("write {}: {e}", tmp.display())))?;
+        fs::rename(&tmp, &path).map_err(|e| io(format!("rename {}: {e}", path.display())))?;
+        inner.next_seg += 1;
+        inner.segments += 1;
+        let count = fresh.len() as u64;
+        for row in fresh {
+            let at = inner.rows.len();
+            inner.index.insert(row.key(), at);
+            inner.rows.push(row);
+        }
+        Ok(count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("uds_store_unit_{}_{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn result(seed: u64) -> ScenarioResult {
+        ScenarioResult {
+            id: seed,
+            schedule: "fac2".into(),
+            workload: "lognormal".into(),
+            variability: "calm".into(),
+            n: 1000,
+            threads: 8,
+            mean_ns: 1000.0,
+            h_ns: 250,
+            seed,
+            makespan_ns: 5000 + seed,
+            chunks: 10,
+            dequeues: 12,
+            imbalance_pct: 0.5,
+            efficiency: 0.9,
+        }
+    }
+
+    #[test]
+    fn append_get_reopen() {
+        let dir = tmp_dir("append_get_reopen");
+        let store = ResultStore::open(&dir).unwrap();
+        assert!(store.is_empty());
+        let batch: Vec<ScenarioResult> = (0..5).map(result).collect();
+        assert_eq!(store.append(&batch).unwrap(), 5);
+        assert_eq!(store.len(), 5);
+        assert_eq!(store.segment_count(), 1);
+        let key = ScenarioKey::of_result(&batch[3]);
+        assert_eq!(store.get(&key).unwrap().to_result(3), batch[3]);
+
+        // Reopen from disk: same contents, same index.
+        let store2 = ResultStore::open(&dir).unwrap();
+        assert_eq!(store2.len(), 5);
+        assert_eq!(store2.get(&key).unwrap().to_result(3), batch[3]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duplicate_appends_write_nothing() {
+        let dir = tmp_dir("duplicate_appends");
+        let store = ResultStore::open(&dir).unwrap();
+        let batch: Vec<ScenarioResult> = (0..3).map(result).collect();
+        assert_eq!(store.append(&batch).unwrap(), 3);
+        // Same batch again: all duplicates, no new segment.
+        assert_eq!(store.append(&batch).unwrap(), 0);
+        assert_eq!(store.segment_count(), 1);
+        // Overlapping batch: only the new row lands.
+        let batch2: Vec<ScenarioResult> = (2..5).map(result).collect();
+        assert_eq!(store.append(&batch2).unwrap(), 2);
+        assert_eq!(store.len(), 5);
+        assert_eq!(store.segment_count(), 2);
+        // Within-batch duplicates collapse too.
+        let twice = vec![result(9), result(9)];
+        assert_eq!(store.append(&twice).unwrap(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_segment_fails_open_with_coded_error() {
+        let dir = tmp_dir("corrupt_segment");
+        {
+            let store = ResultStore::open(&dir).unwrap();
+            store.append(&[result(0)]).unwrap();
+        }
+        let seg = dir.join("seg-000000.col");
+        let mut bytes = fs::read(&seg).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        fs::write(&seg, &bytes).unwrap();
+        let e = ResultStore::open(&dir).unwrap_err();
+        assert_eq!(e.code, "store_corrupt");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_summary_json_shape() {
+        let s = StoreSummary { hits: 7, misses: 2, appended: 2 };
+        assert_eq!(s.json(), "{\"hits\":7,\"misses\":2,\"appended\":2}");
+    }
+}

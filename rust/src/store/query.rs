@@ -1,0 +1,585 @@
+//! Query layer over the result store — one grammar shared by the
+//! `uds query` subcommand, the `QUERY` wire verb on the TCP service,
+//! and library callers.
+//!
+//! ```text
+//! QUERY <op> [key=value ...]
+//!
+//! op       := select | count | best-schedule | regret
+//! filters  := schedules= workloads= variability=   (';'-separated labels)
+//!             n= threads= seeds= h_ns=             (','-separated u64)
+//!             mean_ns=                             (','-separated f64)
+//! options  := limit=K                              (cap emitted rows)
+//!             by=scenario|workload                 (best-schedule only)
+//! ```
+//!
+//! Filter labels are canonicalized through their registry parsers when
+//! they resolve (`dyn,16` matches rows stored as `dynamic,16`);
+//! unresolvable labels are kept verbatim and simply match nothing
+//! unless stored literally.  Results are flat NDJSON `{"type":"row"}`
+//! records plus a terminal `{"type":"query_summary"}` record; errors
+//! are the standard coded `ERR` grammar ([`crate::util::ErrorCode`]).
+//!
+//! Aggregations:
+//! * `best-schedule` — per scenario class (workload × variability × n ×
+//!   threads × mean × h, seeds pooled; or per workload with
+//!   `by=workload`), the schedule with the lowest mean makespan, plus
+//!   the runner-up and its margin.
+//! * `regret` — per schedule, mean/max regret in percent against the
+//!   per-scenario oracle (the best stored makespan for that exact
+//!   scenario across schedules), and how often the schedule *is* the
+//!   oracle (`wins`).
+
+use std::collections::{BTreeMap, BTreeSet, HashSet};
+
+use crate::schedules::ScheduleSpec;
+use crate::sim::VariabilitySpec;
+use crate::util::json::JsonObj;
+use crate::util::{CodedError, ErrorCode};
+use crate::workload::registry as workload_registry;
+use crate::workload::WorkloadSpec;
+
+use super::StoredRow;
+
+/// The four query operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryOp {
+    Select,
+    Count,
+    BestSchedule,
+    Regret,
+}
+
+impl QueryOp {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QueryOp::Select => "select",
+            QueryOp::Count => "count",
+            QueryOp::BestSchedule => "best-schedule",
+            QueryOp::Regret => "regret",
+        }
+    }
+}
+
+const OPS_HELP: &str = "select | count | best-schedule | regret";
+
+/// A parsed query: one op plus conjunctive per-axis filters (`None` =
+/// axis unconstrained; a list value matches any member).
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub op: QueryOp,
+    pub schedules: Option<Vec<String>>,
+    pub workloads: Option<Vec<String>>,
+    pub variability: Option<Vec<String>>,
+    pub n: Option<Vec<u64>>,
+    pub threads: Option<Vec<u64>>,
+    pub seeds: Option<Vec<u64>>,
+    pub mean_ns: Option<Vec<f64>>,
+    pub h_ns: Option<Vec<u64>>,
+    pub limit: Option<u64>,
+    pub by_workload: bool,
+}
+
+fn canon_schedule(s: &str) -> String {
+    ScheduleSpec::parse(s).map(|x| x.label()).unwrap_or_else(|_| s.to_string())
+}
+
+fn canon_workload(s: &str) -> String {
+    WorkloadSpec::parse(s).map(|x| x.label().to_string()).unwrap_or_else(|_| s.to_string())
+}
+
+fn canon_variability(s: &str) -> String {
+    VariabilitySpec::parse(s).map(|x| x.label()).unwrap_or_else(|_| s.to_string())
+}
+
+fn parse_u64_list(k: &str, v: &str) -> Result<Vec<u64>, CodedError> {
+    v.split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            s.trim()
+                .parse::<u64>()
+                .map_err(|_| ErrorCode::BadValue.err(format!("{k}: '{s}'")))
+        })
+        .collect()
+}
+
+fn parse_f64_list(k: &str, v: &str) -> Result<Vec<f64>, CodedError> {
+    v.split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| ErrorCode::BadValue.err(format!("{k}: '{s}'")))
+        })
+        .collect()
+}
+
+impl Query {
+    /// Parse one query line (with or without the leading `QUERY` verb).
+    pub fn parse(line: &str) -> Result<Self, CodedError> {
+        let body = line.trim();
+        let body = body.strip_prefix("QUERY").unwrap_or(body).trim();
+        let mut toks = body.split_whitespace();
+        let op = match toks.next() {
+            None => return Err(ErrorCode::BadQuery.err(format!("missing op: {OPS_HELP}"))),
+            Some("select") => QueryOp::Select,
+            Some("count") => QueryOp::Count,
+            Some("best-schedule") => QueryOp::BestSchedule,
+            Some("regret") => QueryOp::Regret,
+            Some(other) => {
+                return Err(ErrorCode::BadQuery.err(format!("unknown op '{other}' ({OPS_HELP})")))
+            }
+        };
+        let mut q = Query {
+            op,
+            schedules: None,
+            workloads: None,
+            variability: None,
+            n: None,
+            threads: None,
+            seeds: None,
+            mean_ns: None,
+            h_ns: None,
+            limit: None,
+            by_workload: false,
+        };
+        let mut seen: HashSet<String> = HashSet::new();
+        for tok in toks {
+            let (k, v) = tok.split_once('=').ok_or_else(|| {
+                ErrorCode::BadRequest.err(format!("expected key=value, got '{tok}'"))
+            })?;
+            if !seen.insert(k.to_string()) {
+                return Err(ErrorCode::BadRequest.err(format!("duplicate key '{k}'")));
+            }
+            match k {
+                "schedules" => {
+                    q.schedules = Some(
+                        v.split(';')
+                            .filter(|s| !s.trim().is_empty())
+                            .map(|s| canon_schedule(s.trim()))
+                            .collect(),
+                    );
+                }
+                "workloads" => {
+                    q.workloads = Some(
+                        workload_registry::split_list(v)
+                            .iter()
+                            .map(|s| canon_workload(s))
+                            .collect(),
+                    );
+                }
+                "variability" => {
+                    q.variability = Some(
+                        v.split(';')
+                            .filter(|s| !s.trim().is_empty())
+                            .map(|s| canon_variability(s.trim()))
+                            .collect(),
+                    );
+                }
+                "n" => q.n = Some(parse_u64_list(k, v)?),
+                "threads" => q.threads = Some(parse_u64_list(k, v)?),
+                "seeds" => q.seeds = Some(parse_u64_list(k, v)?),
+                "h_ns" => q.h_ns = Some(parse_u64_list(k, v)?),
+                "mean_ns" => q.mean_ns = Some(parse_f64_list(k, v)?),
+                "limit" => {
+                    q.limit = Some(v.parse::<u64>().map_err(|_| {
+                        ErrorCode::BadValue.err(format!("limit: '{v}'"))
+                    })?);
+                }
+                "by" => {
+                    if op != QueryOp::BestSchedule {
+                        return Err(
+                            ErrorCode::BadQuery.err("by= only applies to best-schedule")
+                        );
+                    }
+                    q.by_workload = match v {
+                        "workload" => true,
+                        "scenario" => false,
+                        other => {
+                            return Err(ErrorCode::BadValue
+                                .err(format!("by: '{other}' (scenario | workload)")))
+                        }
+                    };
+                }
+                other => return Err(ErrorCode::BadField.err(format!("'{other}'"))),
+            }
+        }
+        Ok(q)
+    }
+
+    fn matches(&self, r: &StoredRow) -> bool {
+        fn any_str(f: &Option<Vec<String>>, v: &str) -> bool {
+            f.as_ref().map_or(true, |xs| xs.iter().any(|x| x == v))
+        }
+        fn any_u64(f: &Option<Vec<u64>>, v: u64) -> bool {
+            f.as_ref().map_or(true, |xs| xs.contains(&v))
+        }
+        any_str(&self.schedules, &r.schedule)
+            && any_str(&self.workloads, &r.workload)
+            && any_str(&self.variability, &r.variability)
+            && any_u64(&self.n, r.n)
+            && any_u64(&self.threads, r.threads)
+            && any_u64(&self.seeds, r.seed)
+            && any_u64(&self.h_ns, r.h_ns)
+            && self
+                .mean_ns
+                .as_ref()
+                .map_or(true, |xs| xs.iter().any(|x| x.to_bits() == r.mean_ns.to_bits()))
+    }
+
+    /// Evaluate against a row slice (the store's `with_rows` view, or
+    /// any rows a test fabricates).  Pure: no locking, no I/O.
+    pub fn run(&self, rows: &[StoredRow]) -> QueryOutput {
+        let matched: Vec<&StoredRow> = rows.iter().filter(|r| self.matches(r)).collect();
+        let mut out = QueryOutput {
+            op: self.op,
+            rows: Vec::new(),
+            matched: matched.len() as u64,
+            store_rows: rows.len() as u64,
+        };
+        match self.op {
+            QueryOp::Select => {
+                for r in &matched {
+                    out.rows.push(row_line(r));
+                }
+            }
+            QueryOp::Count => out.rows.push(count_line(&matched)),
+            QueryOp::BestSchedule => self.best_schedule(&matched, &mut out),
+            QueryOp::Regret => regret(&matched, &mut out),
+        }
+        if let Some(limit) = self.limit {
+            out.rows.truncate(limit as usize);
+        }
+        out
+    }
+
+    fn best_schedule(&self, matched: &[&StoredRow], out: &mut QueryOutput) {
+        // Group key: the scenario class minus schedule and seed;
+        // `by=workload` collapses everything but the workload label.
+        type GroupKey = (String, String, u64, u64, u64, u64);
+        let key_of = |r: &StoredRow| -> GroupKey {
+            if self.by_workload {
+                (r.workload.clone(), String::new(), 0, 0, 0, 0)
+            } else {
+                (
+                    r.workload.clone(),
+                    r.variability.clone(),
+                    r.n,
+                    r.threads,
+                    r.mean_ns.to_bits(),
+                    r.h_ns,
+                )
+            }
+        };
+        // Per group, per schedule: (sum of makespans, sample count).
+        let mut groups: BTreeMap<GroupKey, BTreeMap<String, (u64, u64)>> = BTreeMap::new();
+        for r in matched {
+            let per = groups.entry(key_of(r)).or_default();
+            let e = per.entry(r.schedule.clone()).or_insert((0, 0));
+            e.0 += r.makespan_ns;
+            e.1 += 1;
+        }
+        for (key, per) in &groups {
+            // Lowest mean makespan wins; ties resolve to the
+            // lexicographically smallest label (BTreeMap order).
+            let mut best: Option<(&str, f64)> = None;
+            let mut runner: Option<(&str, f64)> = None;
+            let mut samples = 0u64;
+            for (sched, &(sum, cnt)) in per {
+                samples += cnt;
+                let mean = sum as f64 / cnt as f64;
+                match best {
+                    None => best = Some((sched, mean)),
+                    Some((_, bm)) if mean < bm => {
+                        runner = best;
+                        best = Some((sched, mean));
+                    }
+                    _ => match runner {
+                        None => runner = Some((sched, mean)),
+                        Some((_, rm)) if mean < rm => runner = Some((sched, mean)),
+                        _ => {}
+                    },
+                }
+            }
+            let (bs, bm) = best.expect("group is non-empty by construction");
+            let mut obj = JsonObj::new();
+            obj.str("type", "row").str("workload", &key.0);
+            if !self.by_workload {
+                obj.str("variability", &key.1)
+                    .u64("n", key.2)
+                    .u64("threads", key.3)
+                    .f64("mean_ns", f64::from_bits(key.4))
+                    .u64("h_ns", key.5);
+            }
+            obj.str("best_schedule", bs)
+                .f64("best_mean_makespan_ns", bm)
+                .u64("schedules_compared", per.len() as u64)
+                .u64("samples", samples);
+            if let Some((rs, rm)) = runner {
+                obj.str("runner_up", rs).f64("margin_pct", (rm - bm) / bm * 100.0);
+            }
+            out.rows.push(obj.finish());
+        }
+    }
+}
+
+fn row_line(r: &StoredRow) -> String {
+    JsonObj::new()
+        .str("type", "row")
+        .str("schedule", &r.schedule)
+        .str("workload", &r.workload)
+        .str("variability", &r.variability)
+        .u64("n", r.n)
+        .u64("threads", r.threads)
+        .f64("mean_ns", r.mean_ns)
+        .u64("h_ns", r.h_ns)
+        .u64("seed", r.seed)
+        .u64("makespan_ns", r.makespan_ns)
+        .u64("chunks", r.chunks)
+        .u64("dequeues", r.dequeues)
+        .f64("imbalance_pct", r.imbalance_pct)
+        .f64("efficiency", r.efficiency)
+        .finish()
+}
+
+fn count_line(matched: &[&StoredRow]) -> String {
+    let mut schedules: BTreeSet<&str> = BTreeSet::new();
+    let mut workloads: BTreeSet<&str> = BTreeSet::new();
+    let mut variability: BTreeSet<&str> = BTreeSet::new();
+    let mut ns: BTreeSet<u64> = BTreeSet::new();
+    let mut threads: BTreeSet<u64> = BTreeSet::new();
+    let mut seeds: BTreeSet<u64> = BTreeSet::new();
+    for r in matched {
+        schedules.insert(&r.schedule);
+        workloads.insert(&r.workload);
+        variability.insert(&r.variability);
+        ns.insert(r.n);
+        threads.insert(r.threads);
+        seeds.insert(r.seed);
+    }
+    JsonObj::new()
+        .str("type", "row")
+        .u64("rows", matched.len() as u64)
+        .u64("schedules", schedules.len() as u64)
+        .u64("workloads", workloads.len() as u64)
+        .u64("variability", variability.len() as u64)
+        .u64("n_values", ns.len() as u64)
+        .u64("thread_values", threads.len() as u64)
+        .u64("seed_values", seeds.len() as u64)
+        .finish()
+}
+
+fn regret(matched: &[&StoredRow], out: &mut QueryOutput) {
+    // Oracle groups: the full scenario identity minus schedule — every
+    // schedule's makespan on the *same* scenario, seed included.
+    type OracleKey = (String, String, u64, u64, u64, u64, u64);
+    let mut groups: BTreeMap<OracleKey, Vec<&StoredRow>> = BTreeMap::new();
+    for r in matched {
+        let key = (
+            r.workload.clone(),
+            r.variability.clone(),
+            r.n,
+            r.threads,
+            r.mean_ns.to_bits(),
+            r.h_ns,
+            r.seed,
+        );
+        groups.entry(key).or_default().push(r);
+    }
+    #[derive(Default)]
+    struct Acc {
+        sum_regret: f64,
+        max_regret: f64,
+        scenarios: u64,
+        wins: u64,
+    }
+    let mut per_schedule: BTreeMap<String, Acc> = BTreeMap::new();
+    for rows in groups.values() {
+        let oracle = rows.iter().map(|r| r.makespan_ns).min().expect("non-empty group");
+        for r in rows {
+            let regret_pct = (r.makespan_ns - oracle) as f64 / oracle as f64 * 100.0;
+            let acc = per_schedule.entry(r.schedule.clone()).or_default();
+            acc.sum_regret += regret_pct;
+            if regret_pct > acc.max_regret {
+                acc.max_regret = regret_pct;
+            }
+            acc.scenarios += 1;
+            if r.makespan_ns == oracle {
+                acc.wins += 1;
+            }
+        }
+    }
+    for (sched, acc) in &per_schedule {
+        out.rows.push(
+            JsonObj::new()
+                .str("type", "row")
+                .str("schedule", sched)
+                .u64("scenarios", acc.scenarios)
+                .f64("mean_regret_pct", acc.sum_regret / acc.scenarios as f64)
+                .f64("max_regret_pct", acc.max_regret)
+                .u64("wins", acc.wins)
+                .u64("oracle_groups", groups.len() as u64)
+                .finish(),
+        );
+    }
+}
+
+/// The result of one query: rendered NDJSON rows plus counters for the
+/// terminal summary record.
+#[derive(Clone, Debug)]
+pub struct QueryOutput {
+    pub op: QueryOp,
+    /// Flat `{"type":"row",...}` JSON lines, in deterministic order.
+    pub rows: Vec<String>,
+    /// Rows matching the filters (before `limit`).
+    pub matched: u64,
+    /// Total rows in the store at evaluation time.
+    pub store_rows: u64,
+}
+
+impl QueryOutput {
+    /// The terminal `{"type":"query_summary",...}` record.
+    pub fn summary_line(&self) -> String {
+        JsonObj::new()
+            .str("type", "query_summary")
+            .str("op", self.op.as_str())
+            .u64("rows", self.rows.len() as u64)
+            .u64("matched", self.matched)
+            .u64("store_rows", self.store_rows)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse_flat;
+
+    fn row(schedule: &str, workload: &str, seed: u64, makespan: u64) -> StoredRow {
+        StoredRow {
+            schedule: schedule.into(),
+            workload: workload.into(),
+            variability: "calm".into(),
+            n: 1000,
+            threads: 8,
+            mean_ns: 1000.0,
+            h_ns: 250,
+            seed,
+            makespan_ns: makespan,
+            chunks: 10,
+            dequeues: 12,
+            imbalance_pct: 0.5,
+            efficiency: 0.9,
+        }
+    }
+
+    #[test]
+    fn parse_rejects_each_error_class() {
+        assert_eq!(Query::parse("QUERY").unwrap_err().code, "bad_query");
+        assert_eq!(Query::parse("QUERY frobnicate").unwrap_err().code, "bad_query");
+        assert_eq!(Query::parse("QUERY select regret").unwrap_err().code, "bad_request");
+        assert_eq!(Query::parse("QUERY select n=1 n=2").unwrap_err().code, "bad_request");
+        assert_eq!(Query::parse("QUERY select color=red").unwrap_err().code, "bad_field");
+        assert_eq!(Query::parse("QUERY select n=abc").unwrap_err().code, "bad_value");
+        assert_eq!(Query::parse("QUERY select by=workload").unwrap_err().code, "bad_query");
+        assert_eq!(
+            Query::parse("QUERY best-schedule by=color").unwrap_err().code,
+            "bad_value"
+        );
+    }
+
+    #[test]
+    fn filters_canonicalize_labels() {
+        let q = Query::parse("QUERY select schedules=static;dynamic,16").unwrap();
+        // Registry canonicalization maps aliases/spellings to labels.
+        let scheds = q.schedules.unwrap();
+        assert_eq!(scheds.len(), 2);
+        assert!(scheds.iter().any(|s| s.contains("dynamic")), "{scheds:?}");
+    }
+
+    #[test]
+    fn select_and_count() {
+        let rows =
+            vec![row("fac2", "lognormal", 0, 100), row("gss", "lognormal", 0, 90), row("fac2", "uniform", 1, 80)];
+        let q = Query::parse("QUERY select schedules=fac2").unwrap();
+        let out = q.run(&rows);
+        assert_eq!(out.matched, 2);
+        assert_eq!(out.rows.len(), 2);
+        assert_eq!(out.store_rows, 3);
+        let first = parse_flat(&out.rows[0]).unwrap();
+        assert_eq!(first.get("schedule").unwrap(), "fac2");
+        assert!(out.summary_line().contains("\"type\":\"query_summary\""));
+
+        let q = Query::parse("QUERY count").unwrap();
+        let out = q.run(&rows);
+        let c = parse_flat(&out.rows[0]).unwrap();
+        assert_eq!(c.get("rows").unwrap(), "3");
+        assert_eq!(c.get("schedules").unwrap(), "2");
+        assert_eq!(c.get("workloads").unwrap(), "2");
+    }
+
+    #[test]
+    fn limit_truncates_rows_not_matched() {
+        let rows: Vec<StoredRow> =
+            (0..10).map(|s| row("fac2", "lognormal", s, 100 + s)).collect();
+        let out = Query::parse("QUERY select limit=3").unwrap().run(&rows);
+        assert_eq!(out.rows.len(), 3);
+        assert_eq!(out.matched, 10);
+    }
+
+    #[test]
+    fn best_schedule_pools_seeds_and_picks_min_mean() {
+        // fac2 mean = 100, gss mean = 90 → gss wins, fac2 runner-up.
+        let rows = vec![
+            row("fac2", "lognormal", 0, 110),
+            row("fac2", "lognormal", 1, 90),
+            row("gss", "lognormal", 0, 95),
+            row("gss", "lognormal", 1, 85),
+        ];
+        let out = Query::parse("QUERY best-schedule").unwrap().run(&rows);
+        assert_eq!(out.rows.len(), 1);
+        let r = parse_flat(&out.rows[0]).unwrap();
+        assert_eq!(r.get("best_schedule").unwrap(), "gss");
+        assert_eq!(r.get("best_mean_makespan_ns").unwrap(), "90");
+        assert_eq!(r.get("runner_up").unwrap(), "fac2");
+        assert_eq!(r.get("samples").unwrap(), "4");
+        // margin = (100-90)/90 ≈ 11.1%
+        let margin: f64 = r.get("margin_pct").unwrap().parse().unwrap();
+        assert!((margin - 100.0 / 9.0).abs() < 1e-9, "{margin}");
+
+        let out = Query::parse("QUERY best-schedule by=workload").unwrap().run(&rows);
+        let r = parse_flat(&out.rows[0]).unwrap();
+        assert_eq!(r.get("workload").unwrap(), "lognormal");
+        assert!(!r.contains_key("n"), "by=workload collapses scenario axes");
+    }
+
+    #[test]
+    fn regret_measures_against_per_scenario_oracle() {
+        // Seed 0: oracle 90 (gss). Seed 1: oracle 80 (fac2).
+        let rows = vec![
+            row("fac2", "lognormal", 0, 99),
+            row("gss", "lognormal", 0, 90),
+            row("fac2", "lognormal", 1, 80),
+            row("gss", "lognormal", 1, 100),
+        ];
+        let out = Query::parse("QUERY regret").unwrap().run(&rows);
+        assert_eq!(out.rows.len(), 2);
+        let by_sched: BTreeMap<String, BTreeMap<String, String>> = out
+            .rows
+            .iter()
+            .map(|l| {
+                let m = parse_flat(l).unwrap();
+                (m.get("schedule").unwrap().clone(), m)
+            })
+            .collect();
+        let fac2 = &by_sched["fac2"];
+        // fac2: 10% regret on seed 0, 0% (win) on seed 1.
+        assert_eq!(fac2.get("wins").unwrap(), "1");
+        assert_eq!(fac2.get("max_regret_pct").unwrap(), "10");
+        assert_eq!(fac2.get("mean_regret_pct").unwrap(), "5");
+        let gss = &by_sched["gss"];
+        assert_eq!(gss.get("wins").unwrap(), "1");
+        assert_eq!(gss.get("max_regret_pct").unwrap(), "25");
+        assert_eq!(by_sched["fac2"].get("oracle_groups").unwrap(), "2");
+    }
+}

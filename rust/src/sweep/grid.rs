@@ -38,7 +38,7 @@
 
 use crate::schedules::ScheduleSpec;
 use crate::sim::VariabilitySpec;
-use crate::util::CodedError;
+use crate::util::{CodedError, ErrorCode};
 use crate::workload::{registry as workload_registry, WorkloadClass, WorkloadSpec};
 
 /// Largest accepted iteration count per scenario (bounds one index build).
@@ -95,7 +95,7 @@ fn parse_list<T: std::str::FromStr>(k: &'static str, v: &str) -> Result<Vec<T>, 
         .map(|s| {
             s.trim()
                 .parse::<T>()
-                .map_err(|_| CodedError::new("bad_value", format!("{k}: '{s}'")))
+                .map_err(|_| CodedError::new(ErrorCode::BadValue, format!("{k}: '{s}'")))
         })
         .collect()
 }
@@ -141,7 +141,7 @@ impl SweepGrid {
         for (k, v) in pairs {
             if !seen.insert(k.to_string()) {
                 return Err(CodedError::new(
-                    "bad_request",
+                    ErrorCode::BadRequest,
                     format!("duplicate key '{k}'"),
                 ));
             }
@@ -151,7 +151,7 @@ impl SweepGrid {
                 "workloads" => {
                     for label in workload_registry::split_list(v) {
                         let spec = WorkloadSpec::parse(&label).map_err(|e| {
-                            CodedError::new("bad_workload", e)
+                            CodedError::new(ErrorCode::BadWorkload, e)
                         })?;
                         grid.workloads.push(spec);
                     }
@@ -160,7 +160,7 @@ impl SweepGrid {
                 "variability" => {
                     for tok in v.split(';').filter(|s| !s.trim().is_empty()) {
                         let spec = VariabilitySpec::parse(tok).map_err(|e| {
-                            CodedError::new("bad_variability", e)
+                            CodedError::new(ErrorCode::BadVariability, e)
                         })?;
                         grid.variability.push(spec);
                     }
@@ -173,7 +173,7 @@ impl SweepGrid {
                             continue;
                         }
                         grid.schedules.push(ScheduleSpec::parse(label.trim()).map_err(
-                            |e| CodedError::new("bad_schedule", e),
+                            |e| CodedError::new(ErrorCode::BadSchedule, e),
                         )?);
                     }
                 }
@@ -183,24 +183,24 @@ impl SweepGrid {
                 "mean_ns" => {
                     grid.mean_ns = v
                         .parse()
-                        .map_err(|_| CodedError::new("bad_value", format!("mean_ns: '{v}'")))?;
+                        .map_err(|_| CodedError::new(ErrorCode::BadValue, format!("mean_ns: '{v}'")))?;
                 }
                 "h_ns" => {
                     grid.h_ns = v
                         .parse()
-                        .map_err(|_| CodedError::new("bad_value", format!("h_ns: '{v}'")))?;
+                        .map_err(|_| CodedError::new(ErrorCode::BadValue, format!("h_ns: '{v}'")))?;
                 }
                 "workers" => {
                     grid.workers = v
                         .parse()
-                        .map_err(|_| CodedError::new("bad_value", format!("workers: '{v}'")))?;
+                        .map_err(|_| CodedError::new(ErrorCode::BadValue, format!("workers: '{v}'")))?;
                 }
                 // A contiguous scenario range `offset,len` of the fixed
                 // expansion order — the cluster fabric's wire unit.
                 "shard" => {
                     let bad = || {
                         CodedError::new(
-                            "bad_shard",
+                            ErrorCode::BadShard,
                             format!("shard must be 'offset,len', got '{v}'"),
                         )
                     };
@@ -210,7 +210,7 @@ impl SweepGrid {
                     grid.shard = Some((off, len));
                 }
                 other => {
-                    return Err(CodedError::new("bad_field", format!("'{other}'")));
+                    return Err(CodedError::new(ErrorCode::BadField, format!("'{other}'")));
                 }
             }
         }
@@ -224,7 +224,7 @@ impl SweepGrid {
         let mut pairs = Vec::new();
         for tok in body.split_whitespace() {
             let (k, v) = tok.split_once('=').ok_or_else(|| {
-                CodedError::new("bad_request", format!("expected key=value, got '{tok}'"))
+                CodedError::new(ErrorCode::BadRequest, format!("expected key=value, got '{tok}'"))
             })?;
             pairs.push((k, v));
         }
@@ -286,33 +286,33 @@ schedules={schedules} n={} threads={} seeds={} mean_ns={} h_ns={} workers={}{sha
             self.seeds.push(0);
         }
         if self.schedules.is_empty() {
-            return Err(CodedError::new("empty_grid", "missing field 'schedules'"));
+            return Err(CodedError::new(ErrorCode::EmptyGrid, "missing field 'schedules'"));
         }
         if self.ns.is_empty() {
-            return Err(CodedError::new("empty_grid", "missing field 'n'"));
+            return Err(CodedError::new(ErrorCode::EmptyGrid, "missing field 'n'"));
         }
         for &n in &self.ns {
             if n == 0 || n > MAX_N {
-                return Err(CodedError::new("bad_n", format!("n must be 1..={MAX_N}, got {n}")));
+                return Err(CodedError::new(ErrorCode::BadN, format!("n must be 1..={MAX_N}, got {n}")));
             }
         }
         for &t in &self.threads {
             if t == 0 || t > MAX_THREADS {
                 return Err(CodedError::new(
-                    "bad_threads",
+                    ErrorCode::BadThreads,
                     format!("threads must be 1..={MAX_THREADS}, got {t}"),
                 ));
             }
         }
         if !self.mean_ns.is_finite() || self.mean_ns <= 0.0 {
             return Err(CodedError::new(
-                "bad_mean",
+                ErrorCode::BadMean,
                 format!("mean_ns must be finite and > 0, got {}", self.mean_ns),
             ));
         }
         if self.workers > MAX_WORKERS {
             return Err(CodedError::new(
-                "bad_workers",
+                ErrorCode::BadWorkers,
                 format!("workers must be 0..={MAX_WORKERS}"),
             ));
         }
@@ -322,14 +322,14 @@ schedules={schedules} n={} threads={} seeds={} mean_ns={} h_ns={} workers={}{sha
             // grid — that is the fan-out contract of the cluster fabric.
             Some((offset, len)) => {
                 if len == 0 {
-                    return Err(CodedError::new("bad_shard", "shard len must be > 0"));
+                    return Err(CodedError::new(ErrorCode::BadShard, "shard len must be > 0"));
                 }
                 let end = offset.checked_add(len).ok_or_else(|| {
-                    CodedError::new("bad_shard", "shard offset+len overflows")
+                    CodedError::new(ErrorCode::BadShard, "shard offset+len overflows")
                 })?;
                 if end > self.size() {
                     return Err(CodedError::new(
-                        "bad_shard",
+                        ErrorCode::BadShard,
                         format!(
                             "shard [{offset}, {end}) exceeds the grid's {} scenarios",
                             self.size()
@@ -338,7 +338,7 @@ schedules={schedules} n={} threads={} seeds={} mean_ns={} h_ns={} workers={}{sha
                 }
                 if len > MAX_SCENARIOS {
                     return Err(CodedError::new(
-                        "grid_too_large",
+                        ErrorCode::GridTooLarge,
                         format!("shard of {len} scenarios > cap {MAX_SCENARIOS} per request"),
                     ));
                 }
@@ -350,7 +350,7 @@ schedules={schedules} n={} threads={} seeds={} mean_ns={} h_ns={} workers={}{sha
                 if let Some(cap) = cap {
                     if self.size() > cap {
                         return Err(CodedError::new(
-                            "grid_too_large",
+                            ErrorCode::GridTooLarge,
                             format!(
                                 "grid expands to {} scenarios > cap {cap} per request; \
 shard it (shard=OFFSET,LEN) or run a cluster sweep (uds sweep --cluster)",

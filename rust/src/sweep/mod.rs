@@ -39,6 +39,8 @@ use crate::sim::{
     simulate_batch, simulate_indexed, BatchArena, BatchLane, SimArena,
     SimConfig, Variability, MAX_BATCH_LANES,
 };
+use crate::store::{ResultStore, ScenarioKey, StoreSummary};
+use crate::util::CodedError;
 use crate::workload::WorkloadSpec;
 
 pub use grid::{Scenario, SweepGrid, MAX_SCENARIOS, MAX_WORKERS};
@@ -363,6 +365,120 @@ pub fn run_sweep(
         true
     });
     (out, summary)
+}
+
+/// Store-backed incremental sweep: partition `scenarios` into store
+/// hits and simulation misses, run [`run_sweep_with`] over the misses
+/// only, merge both streams back in slice order, and append the fresh
+/// results to the store as one new segment.
+///
+/// Because stored rows preserve every field bitwise (floats travel as
+/// IEEE-754 bits through the segment codec), the merged stream — and
+/// therefore `report.csv`/`report.json` results — is byte-identical to
+/// a cold sweep of the same grid, for any worker count and any
+/// hit/miss split.  A fully warm sweep performs zero simulations and
+/// zero index builds; the returned [`StoreSummary`] and the
+/// [`SweepSummary`] counters prove it.
+///
+/// Cancellation (emit returning `false`) behaves like
+/// [`run_sweep_with`]; results simulated before the cut are still
+/// appended, so a cancelled sweep warms the store for the next run.
+pub fn run_sweep_stored_with(
+    svc: &Service,
+    scenarios: &[Scenario],
+    workers: usize,
+    store: &ResultStore,
+    mut emit: impl FnMut(ScenarioResult) -> bool,
+) -> Result<(SweepSummary, StoreSummary), CodedError> {
+    let mut hits: Vec<(usize, ScenarioResult)> = Vec::new();
+    let mut misses: Vec<Scenario> = Vec::new();
+    let mut miss_pos: Vec<usize> = Vec::new();
+    for (pos, sc) in scenarios.iter().enumerate() {
+        match store.get(&ScenarioKey::of_scenario(sc)) {
+            Some(row) => hits.push((pos, row.to_result(sc.id))),
+            None => {
+                misses.push(sc.clone());
+                miss_pos.push(pos);
+            }
+        }
+    }
+    let store_hits = hits.len() as u64;
+    let store_misses = misses.len() as u64;
+    let full_distinct = distinct_workloads(scenarios).len() as u64;
+
+    if misses.is_empty() {
+        for (_, r) in hits {
+            if !emit(r) {
+                break;
+            }
+        }
+        let summary = SweepSummary {
+            scenarios: scenarios.len() as u64,
+            distinct_workloads: full_distinct,
+            index_builds: 0,
+            cache_hits: 0,
+        };
+        return Ok((summary, StoreSummary { hits: store_hits, misses: 0, appended: 0 }));
+    }
+
+    // Two-way merge: the engine emits misses in miss-slice order, which
+    // maps back to ascending positions of the caller's slice; `hits` is
+    // already position-sorted, so interleaving is a linear zipper.
+    let mut hit_iter = hits.into_iter().peekable();
+    let mut fresh: Vec<ScenarioResult> = Vec::with_capacity(misses.len());
+    let mut emitted_misses = 0usize;
+    let mut cancelled = false;
+    let miss_summary = run_sweep_with(svc, &misses, workers, |r| {
+        let pos = miss_pos[emitted_misses];
+        emitted_misses += 1;
+        while let Some(&(hit_pos, _)) = hit_iter.peek() {
+            if hit_pos > pos {
+                break;
+            }
+            let (_, hit) = hit_iter.next().expect("peeked");
+            if !emit(hit) {
+                cancelled = true;
+                return false;
+            }
+        }
+        fresh.push(r.clone());
+        if !emit(r) {
+            cancelled = true;
+            return false;
+        }
+        true
+    });
+    if !cancelled {
+        for (_, hit) in hit_iter {
+            if !emit(hit) {
+                break;
+            }
+        }
+    }
+    let appended = store.append(&fresh)?;
+    let summary = SweepSummary {
+        scenarios: scenarios.len() as u64,
+        distinct_workloads: full_distinct,
+        index_builds: miss_summary.index_builds,
+        cache_hits: miss_summary.cache_hits,
+    };
+    Ok((summary, StoreSummary { hits: store_hits, misses: store_misses, appended }))
+}
+
+/// Collecting wrapper over [`run_sweep_stored_with`].
+pub fn run_sweep_stored(
+    svc: &Service,
+    scenarios: &[Scenario],
+    workers: usize,
+    store: &ResultStore,
+) -> Result<(Vec<ScenarioResult>, SweepSummary, StoreSummary), CodedError> {
+    let mut out = Vec::with_capacity(scenarios.len());
+    let (summary, store_summary) =
+        run_sweep_stored_with(svc, scenarios, workers, store, |r| {
+            out.push(r);
+            true
+        })?;
+    Ok((out, summary, store_summary))
 }
 
 #[cfg(test)]

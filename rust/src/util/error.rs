@@ -1,0 +1,284 @@
+//! The one error-code table for every `uds` surface.
+//!
+//! Single jobs, `BATCH` sweeps, cluster shard dispatch and the `QUERY`
+//! verb all answer failures with one wire grammar — `ERR <code>
+//! <detail>` — and every code a client can observe is a variant of
+//! [`ErrorCode`].  The enum is the source of truth three ways:
+//!
+//! * construction: [`CodedError`](super::CodedError) carries an
+//!   `ErrorCode`, so an unknown code cannot be minted ad hoc;
+//! * documentation: EXPERIMENTS.md's code table is generated from
+//!   [`ErrorCode::markdown_table`] (`uds list-errors`) and a test pins
+//!   the committed bytes against the generator;
+//! * testing: `PartialEq<&str>` lets assertions compare a typed code
+//!   against its wire spelling directly.
+
+use std::fmt;
+
+use super::CodedError;
+
+/// Every stable error code the service, sweep grid parser, cluster
+/// fabric and result store can emit.  Codes are part of the wire
+/// protocol: renaming one is a breaking change.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ErrorCode {
+    /// Malformed request framing (non-`key=value` token, duplicate key).
+    BadRequest,
+    /// Unknown key in a request or query line.
+    BadField,
+    /// A field value failed to parse.
+    BadValue,
+    /// Schedule label not resolvable through the schedule registry.
+    BadSchedule,
+    /// Workload label not resolvable through the workload registry.
+    BadWorkload,
+    /// Malformed variability spec.
+    BadVariability,
+    /// `n` missing, zero, or above the cap.
+    BadN,
+    /// `threads` zero or above the cap.
+    BadThreads,
+    /// `mean_ns` not finite and positive.
+    BadMean,
+    /// A required grid axis is missing or empty.
+    EmptyGrid,
+    /// Grid expansion exceeds the per-request scenario cap.
+    GridTooLarge,
+    /// `workers` above the cap.
+    BadWorkers,
+    /// Malformed or out-of-range `shard=OFFSET,LEN` restriction.
+    BadShard,
+    /// A cluster shard exhausted its retry budget.
+    ShardFailed,
+    /// One node dispatch failed; the shard is requeued.
+    NodeError,
+    /// The cluster sweep failed terminally (nodes retired / merge short).
+    ClusterFailed,
+    /// `--cluster` was given an empty node list.
+    ClusterNoNodes,
+    /// A `QUERY` reached a service running without a store.
+    NoStore,
+    /// Malformed `QUERY` line (unknown op or misplaced option).
+    BadQuery,
+    /// The store directory could not be read or written.
+    StoreIo,
+    /// A store segment file failed validation.
+    StoreCorrupt,
+}
+
+impl ErrorCode {
+    /// Every code, in the order the documentation table lists them.
+    pub const ALL: [ErrorCode; 21] = [
+        ErrorCode::BadRequest,
+        ErrorCode::BadField,
+        ErrorCode::BadValue,
+        ErrorCode::BadSchedule,
+        ErrorCode::BadWorkload,
+        ErrorCode::BadVariability,
+        ErrorCode::BadN,
+        ErrorCode::BadThreads,
+        ErrorCode::BadMean,
+        ErrorCode::EmptyGrid,
+        ErrorCode::GridTooLarge,
+        ErrorCode::BadWorkers,
+        ErrorCode::BadShard,
+        ErrorCode::ShardFailed,
+        ErrorCode::NodeError,
+        ErrorCode::ClusterFailed,
+        ErrorCode::ClusterNoNodes,
+        ErrorCode::NoStore,
+        ErrorCode::BadQuery,
+        ErrorCode::StoreIo,
+        ErrorCode::StoreCorrupt,
+    ];
+
+    /// The wire spelling (`ERR <code> ...`).
+    pub const fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::BadField => "bad_field",
+            ErrorCode::BadValue => "bad_value",
+            ErrorCode::BadSchedule => "bad_schedule",
+            ErrorCode::BadWorkload => "bad_workload",
+            ErrorCode::BadVariability => "bad_variability",
+            ErrorCode::BadN => "bad_n",
+            ErrorCode::BadThreads => "bad_threads",
+            ErrorCode::BadMean => "bad_mean",
+            ErrorCode::EmptyGrid => "empty_grid",
+            ErrorCode::GridTooLarge => "grid_too_large",
+            ErrorCode::BadWorkers => "bad_workers",
+            ErrorCode::BadShard => "bad_shard",
+            ErrorCode::ShardFailed => "shard_failed",
+            ErrorCode::NodeError => "node_error",
+            ErrorCode::ClusterFailed => "cluster_failed",
+            ErrorCode::ClusterNoNodes => "cluster_no_nodes",
+            ErrorCode::NoStore => "no_store",
+            ErrorCode::BadQuery => "bad_query",
+            ErrorCode::StoreIo => "store_io",
+            ErrorCode::StoreCorrupt => "store_corrupt",
+        }
+    }
+
+    /// Which surface mints the code (documentation grouping only).
+    pub const fn layer(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest | ErrorCode::BadField | ErrorCode::BadValue => "request",
+            ErrorCode::BadSchedule
+            | ErrorCode::BadWorkload
+            | ErrorCode::BadVariability
+            | ErrorCode::BadN
+            | ErrorCode::BadThreads
+            | ErrorCode::BadMean
+            | ErrorCode::EmptyGrid
+            | ErrorCode::GridTooLarge
+            | ErrorCode::BadWorkers
+            | ErrorCode::BadShard => "grid",
+            ErrorCode::ShardFailed
+            | ErrorCode::NodeError
+            | ErrorCode::ClusterFailed
+            | ErrorCode::ClusterNoNodes => "cluster",
+            ErrorCode::NoStore
+            | ErrorCode::BadQuery
+            | ErrorCode::StoreIo
+            | ErrorCode::StoreCorrupt => "store",
+        }
+    }
+
+    /// One-line meaning, as rendered into the documentation table.
+    pub const fn describe(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => {
+                "Malformed request framing: a non-`key=value` token or a duplicate key."
+            }
+            ErrorCode::BadField => "Unknown key in a request or query line.",
+            ErrorCode::BadValue => "A field value failed to parse as its declared type.",
+            ErrorCode::BadSchedule => {
+                "Schedule label not resolvable through the schedule registry."
+            }
+            ErrorCode::BadWorkload => {
+                "Workload label not resolvable through the workload registry \
+                 (registry detail preserved)."
+            }
+            ErrorCode::BadVariability => "Malformed variability spec.",
+            ErrorCode::BadN => "`n` missing, zero, or above `MAX_N`.",
+            ErrorCode::BadThreads => "`threads` zero or above `MAX_THREADS`.",
+            ErrorCode::BadMean => "`mean_ns` not finite and positive.",
+            ErrorCode::EmptyGrid => "Required axis (`schedules` or `n`) missing or empty.",
+            ErrorCode::GridTooLarge => {
+                "Expansion exceeds the per-request scenario cap; shard it or run `--cluster`."
+            }
+            ErrorCode::BadWorkers => "`workers` above `MAX_WORKERS`.",
+            ErrorCode::BadShard => "Malformed or out-of-range `shard=OFFSET,LEN` restriction.",
+            ErrorCode::ShardFailed => {
+                "A shard exhausted its retry budget; the cluster sweep failed terminally."
+            }
+            ErrorCode::NodeError => {
+                "One node dispatch failed (connect/stream/protocol); the shard is requeued."
+            }
+            ErrorCode::ClusterFailed => {
+                "Every node retired with work left, or the merged stream came up short."
+            }
+            ErrorCode::ClusterNoNodes => "`--cluster` was given an empty node list.",
+            ErrorCode::NoStore => "A `QUERY` reached a service running without `--store`.",
+            ErrorCode::BadQuery => "Malformed `QUERY` line: unknown op or misplaced option.",
+            ErrorCode::StoreIo => "The store directory could not be read or written.",
+            ErrorCode::StoreCorrupt => {
+                "A segment file failed validation (magic/bounds/checksum); \
+                 the store refuses to open."
+            }
+        }
+    }
+
+    /// Resolve a wire spelling back to its code.
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.iter().copied().find(|c| c.as_str() == s)
+    }
+
+    /// Build a [`CodedError`] carrying this code.
+    pub fn err(self, detail: impl Into<String>) -> CodedError {
+        CodedError::new(self, detail)
+    }
+
+    /// The EXPERIMENTS.md error-code table, generated (also printed by
+    /// `uds list-errors`).  A test pins the committed documentation
+    /// bytes against this output.
+    pub fn markdown_table() -> String {
+        let mut out = String::from("| code | layer | meaning |\n|---|---|---|\n");
+        for code in ErrorCode::ALL {
+            out.push_str(&format!(
+                "| `{}` | {} | {} |\n",
+                code.as_str(),
+                code.layer(),
+                code.describe()
+            ));
+        }
+        out
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Codes compare against their wire spelling, so call sites (and the
+/// many existing tests) can write `err.code == "bad_value"`.
+impl PartialEq<&str> for ErrorCode {
+    fn eq(&self, other: &&str) -> bool {
+        self.as_str() == *other
+    }
+}
+
+impl PartialEq<ErrorCode> for &str {
+    fn eq(&self, other: &ErrorCode) -> bool {
+        *self == other.as_str()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_spellings_are_unique_and_roundtrip() {
+        let mut seen = std::collections::HashSet::new();
+        for code in ErrorCode::ALL {
+            assert!(seen.insert(code.as_str()), "duplicate: {code}");
+            assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("not_a_code"), None);
+    }
+
+    #[test]
+    fn codes_compare_against_wire_strings() {
+        assert_eq!(ErrorCode::BadValue, "bad_value");
+        assert_eq!("store_corrupt", ErrorCode::StoreCorrupt);
+        assert!(ErrorCode::NoStore != "bad_query");
+    }
+
+    #[test]
+    fn err_builds_coded_error() {
+        let e = ErrorCode::GridTooLarge.err("1000000 scenarios");
+        assert_eq!(e.code, ErrorCode::GridTooLarge);
+        assert_eq!(e.wire(), "ERR grid_too_large 1000000_scenarios");
+    }
+
+    /// The committed EXPERIMENTS.md table must be exactly what the
+    /// generator emits — the list is generated, not hand-maintained.
+    #[test]
+    fn experiments_md_table_is_generated() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../EXPERIMENTS.md");
+        let text = std::fs::read_to_string(path).expect("EXPERIMENTS.md readable");
+        let begin = "<!-- error-codes:begin -->";
+        let end = "<!-- error-codes:end -->";
+        let start = text.find(begin).expect("begin marker present") + begin.len();
+        let stop = text[start..].find(end).expect("end marker present") + start;
+        assert_eq!(
+            text[start..stop].trim(),
+            ErrorCode::markdown_table().trim(),
+            "EXPERIMENTS.md error-code table is stale; \
+             regenerate with `uds list-errors`"
+        );
+    }
+}

@@ -5,28 +5,33 @@
 //! * [`rng`]   — PCG PRNG + normal/exponential/lognormal (for `rand*`)
 //! * [`bench`] — micro-benchmark harness (for `criterion`)
 //! * [`kv`]    — `key=value` text format (for `serde`/`serde_json`)
+//! * [`json`]  — flat-JSON writer/reader (for `serde_json`)
+//! * [`error`] — the typed wire error-code table ([`ErrorCode`])
 
 pub mod bench;
+pub mod error;
+pub mod json;
 pub mod kv;
 pub mod rng;
 
 pub use bench::Bench;
+pub use error::ErrorCode;
 pub use kv::Kv;
 pub use rng::{splitmix64, Pcg};
 
 /// A machine-stable coded error: protocol layers render it as
 /// `ERR <code> <detail>`, so clients can switch on `code` without
 /// scraping free text.  `detail` is human-oriented and may change;
-/// `code` is part of the wire contract (see EXPERIMENTS.md §Batch
-/// sweeps).
+/// `code` is a typed [`ErrorCode`] — part of the wire contract, with
+/// the full table in EXPERIMENTS.md generated from the enum.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CodedError {
-    pub code: &'static str,
+    pub code: ErrorCode,
     pub detail: String,
 }
 
 impl CodedError {
-    pub fn new(code: &'static str, detail: impl Into<String>) -> Self {
+    pub fn new(code: ErrorCode, detail: impl Into<String>) -> Self {
         Self { code, detail: detail.into() }
     }
 
@@ -57,14 +62,14 @@ impl std::error::Error for CodedError {}
 
 #[cfg(test)]
 mod tests {
-    use super::CodedError;
+    use super::{CodedError, ErrorCode};
 
     #[test]
     fn wire_form_is_space_free_after_code() {
-        let e = CodedError::new("bad_value", "n: invalid digit found");
+        let e = CodedError::new(ErrorCode::BadValue, "n: invalid digit found");
         assert_eq!(e.wire(), "ERR bad_value n:_invalid_digit_found");
         assert_eq!(e.wire().split(' ').count(), 3);
-        let empty = CodedError::new("empty_grid", "");
+        let empty = CodedError::new(ErrorCode::EmptyGrid, "");
         assert_eq!(empty.wire(), "ERR empty_grid");
     }
 }

@@ -62,6 +62,7 @@ fn csv_of(results: Vec<ScenarioResult>) -> String {
         meta: Vec::new(),
         summary: SweepSummary::default(),
         cluster: None,
+        store: None,
         results,
     }
     .csv()
@@ -112,6 +113,7 @@ fn three_node_cluster_matches_local_byte_for_byte() {
         meta: vec![("mode".into(), "cluster".into())],
         summary: outcome.summary,
         cluster: Some(outcome.cluster),
+        store: None,
         results: Vec::new(),
     };
     let json = report.json();

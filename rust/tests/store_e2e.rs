@@ -1,0 +1,391 @@
+//! End-to-end tests for the persistent result store: cold→warm sweep
+//! byte-identity, append/reopen durability over registry labels, the
+//! `QUERY` wire verb (happy path and every store-layer error code),
+//! corrupt-segment handling, and the `uds sweep --store` / `uds query`
+//! CLI round trip.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use uds::eval::report::ScenarioResult;
+use uds::service::{serve_on_with, Service};
+use uds::store::{ResultStore, ScenarioKey, StoreSummary};
+use uds::sweep::{run_sweep, run_sweep_stored, SweepGrid};
+use uds::util::json::parse_flat;
+use uds::util::rng::Pcg;
+
+/// Unique scratch directory per call (pid + counter), pre-cleaned.
+fn tmp_dir(name: &str) -> PathBuf {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let k = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "uds_store_e2e_{}_{k}_{name}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+const GRID: &str = "BATCH schedules=fac2;gss;dynamic,16 n=400,900 \
+workloads=uniform;gaussian variability=calm;hetero:1,2 threads=4 seeds=1,2 \
+workers=3";
+
+/// The tentpole contract: a warm sweep answers entirely from the store
+/// — zero index builds, zero simulations — and its result stream is
+/// byte-identical to the cold run that populated it.
+#[test]
+fn warm_sweep_is_byte_identical_with_zero_simulations() {
+    let dir = tmp_dir("warm_identity");
+    let grid = SweepGrid::parse_batch_line(GRID).unwrap();
+    let scenarios = grid.expand();
+    let total = scenarios.len() as u64;
+    assert_eq!(total, 48, "grid arithmetic drifted");
+
+    let store = ResultStore::open(&dir).unwrap();
+    let svc = Service::new();
+    let (cold, cold_summary, cold_ss) =
+        run_sweep_stored(&svc, &scenarios, grid.workers, &store).unwrap();
+    assert_eq!(cold_ss, StoreSummary { hits: 0, misses: total, appended: total });
+    assert!(cold_summary.index_builds > 0, "cold run must simulate");
+    assert_eq!(store.len() as u64, total);
+
+    // Fresh service + store reopened from disk: nothing warm but the
+    // segment files.
+    let store2 = ResultStore::open(&dir).unwrap();
+    let svc2 = Service::new();
+    let (warm, warm_summary, warm_ss) =
+        run_sweep_stored(&svc2, &scenarios, grid.workers, &store2).unwrap();
+    assert_eq!(warm_ss, StoreSummary { hits: total, misses: 0, appended: 0 });
+    assert_eq!(warm_summary.index_builds, 0, "warm run must not build indexes");
+    assert_eq!(warm_summary.cache_hits, 0);
+    assert_eq!(warm_summary.scenarios, total);
+    assert_eq!(svc2.cache_stats(), (0, 0), "warm run must not touch the service");
+    assert_eq!(warm_summary.distinct_workloads, cold_summary.distinct_workloads);
+
+    assert_eq!(cold.len(), warm.len());
+    for (c, w) in cold.iter().zip(&warm) {
+        assert_eq!(c.json_line(), w.json_line());
+        assert_eq!(c.csv_row(), w.csv_row());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A partially-warm sweep (grid extended with a new seed) simulates
+/// only the misses, appends exactly them, and the merged stream is
+/// byte-identical to a cold sweep of the extended grid.
+#[test]
+fn partial_overlap_extends_store_and_merges_in_order() {
+    let dir = tmp_dir("partial_overlap");
+    let base = SweepGrid::parse_batch_line(GRID).unwrap();
+    let extended = SweepGrid::parse_batch_line(&GRID.replace("seeds=1,2", "seeds=1,2,3"))
+        .unwrap();
+    let store = ResultStore::open(&dir).unwrap();
+
+    let svc = Service::new();
+    let base_scenarios = base.expand();
+    run_sweep_stored(&svc, &base_scenarios, base.workers, &store).unwrap();
+
+    let scenarios = extended.expand();
+    let svc2 = Service::new();
+    let (merged, _, ss) =
+        run_sweep_stored(&svc2, &scenarios, extended.workers, &store).unwrap();
+    assert_eq!(ss, StoreSummary { hits: 48, misses: 24, appended: 24 });
+    assert_eq!(store.len(), 72);
+
+    // Reference: the same extended grid cold, no store anywhere.
+    let svc_ref = Service::new();
+    let (reference, _) = run_sweep(&svc_ref, &scenarios, extended.workers);
+    assert_eq!(merged.len(), reference.len());
+    for (m, r) in merged.iter().zip(&reference) {
+        assert_eq!(m.json_line(), r.json_line(), "merge order or content drifted");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Property: rows with labels drawn from the live registries (and
+/// adversarial float fields) survive append → reopen → get bitwise.
+#[test]
+fn prop_append_reopen_roundtrips_registry_labels() {
+    const BASE_SEED: u64 = 0xC0FFEE;
+    let schedules: Vec<String> = uds::schedules::ScheduleSpec::roster()
+        .iter()
+        .map(|s| s.label())
+        .collect();
+    let workloads = [
+        "uniform",
+        "gaussian,cv=0.3",
+        "lognormal",
+        "mix:gaussian:uniform,0.25",
+        "phased:increasing:uniform,0.5",
+    ];
+    let variability = ["calm", "hetero:1,1,2,4", "noise:0.1,2,7"];
+    let n_cases = std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(25);
+    for case in 0..n_cases {
+        let seed = BASE_SEED ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg::seed_from_u64(seed);
+        let dir = tmp_dir("prop_roundtrip");
+        let store = ResultStore::open(&dir).unwrap();
+        let rows = rng.range_u64(1, 8);
+        let batch: Vec<ScenarioResult> = (0..rows)
+            .map(|i| ScenarioResult {
+                id: i,
+                schedule: schedules
+                    [rng.range_u64(0, schedules.len() as u64 - 1) as usize]
+                    .clone(),
+                workload: workloads
+                    [rng.range_u64(0, workloads.len() as u64 - 1) as usize]
+                    .to_string(),
+                variability: variability
+                    [rng.range_u64(0, variability.len() as u64 - 1) as usize]
+                    .to_string(),
+                n: rng.range_u64(1, 1_000_000),
+                threads: rng.range_u64(1, 64),
+                mean_ns: rng.f64() * 1e9 + 0.125,
+                h_ns: rng.range_u64(0, 5_000),
+                // Distinct seeds keep keys unique within the batch.
+                seed: i,
+                makespan_ns: rng.range_u64(0, u64::MAX / 2),
+                chunks: rng.range_u64(0, 1 << 20),
+                dequeues: rng.range_u64(0, 1 << 20),
+                imbalance_pct: rng.f64() * 100.0,
+                efficiency: rng.f64(),
+            })
+            .collect();
+        assert_eq!(store.append(&batch).unwrap(), rows, "case {case} seed {seed:#x}");
+        let reopened = ResultStore::open(&dir).unwrap();
+        assert_eq!(reopened.len() as u64, rows);
+        for r in &batch {
+            let row = reopened
+                .get(&ScenarioKey::of_result(r))
+                .unwrap_or_else(|| panic!("case {case} seed {seed:#x}: row lost"));
+            assert_eq!(
+                row.to_result(r.id).json_line(),
+                r.json_line(),
+                "case {case} seed {seed:#x}: bytes drifted"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Seed a store-backed service with one small BATCH and return it.
+fn seeded_service(dir: &PathBuf) -> Service {
+    let store = Arc::new(ResultStore::open(dir).unwrap());
+    let svc = Service::new().with_store(store);
+    let mut out = Vec::new();
+    svc.handle_batch(
+        "BATCH schedules=fac2;gss n=300 workloads=uniform threads=2 seeds=1,2 \
+workers=2",
+        &mut out,
+    );
+    let text = String::from_utf8(out).unwrap();
+    assert!(text.lines().count() == 5, "4 results + summary: {text}");
+    svc
+}
+
+/// The QUERY verb end-to-end over `handle_query`: every op answers
+/// rows plus a terminal query_summary.
+#[test]
+fn query_verb_happy_path() {
+    let dir = tmp_dir("query_happy");
+    let svc = seeded_service(&dir);
+
+    let run = |line: &str| -> Vec<String> {
+        let mut out = Vec::new();
+        svc.handle_query(line, &mut out);
+        String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+    };
+
+    let lines = run("QUERY count");
+    assert_eq!(lines.len(), 2, "{lines:?}");
+    let count = parse_flat(&lines[0]).unwrap();
+    assert_eq!(count.get("rows").unwrap(), "4");
+    assert_eq!(count.get("schedules").unwrap(), "2");
+    let summary = parse_flat(&lines[1]).unwrap();
+    assert_eq!(summary.get("type").unwrap(), "query_summary");
+    assert_eq!(summary.get("store_rows").unwrap(), "4");
+
+    let lines = run("QUERY select schedules=fac2 limit=1");
+    assert_eq!(lines.len(), 2);
+    let row = parse_flat(&lines[0]).unwrap();
+    assert_eq!(row.get("schedule").unwrap(), "fac2");
+    let summary = parse_flat(&lines[1]).unwrap();
+    assert_eq!(summary.get("matched").unwrap(), "2", "limit must not hide matched");
+
+    let lines = run("QUERY best-schedule");
+    let row = parse_flat(&lines[0]).unwrap();
+    assert!(row.contains_key("best_schedule"), "{row:?}");
+    assert_eq!(row.get("schedules_compared").unwrap(), "2");
+    assert_eq!(row.get("samples").unwrap(), "4", "seeds pool per scenario class");
+
+    let lines = run("QUERY regret");
+    assert_eq!(lines.len(), 3, "one row per schedule + summary: {lines:?}");
+    for line in &lines[..2] {
+        let row = parse_flat(line).unwrap();
+        assert!(row.contains_key("mean_regret_pct"), "{row:?}");
+        assert_eq!(row.get("oracle_groups").unwrap(), "2");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Every store-layer error code answers as one stable `ERR` line.
+#[test]
+fn query_verb_error_codes() {
+    let dir = tmp_dir("query_errors");
+    let svc = seeded_service(&dir);
+    let one_err = |svc: &Service, line: &str, code: &str| {
+        let mut out = Vec::new();
+        svc.handle_query(line, &mut out);
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(text.lines().count(), 1, "{line}: {text}");
+        assert!(text.starts_with(&format!("ERR {code} ")), "{line}: {text}");
+    };
+    one_err(&svc, "QUERY frobnicate", "bad_query");
+    one_err(&svc, "QUERY", "bad_query");
+    one_err(&svc, "QUERY select by=workload", "bad_query");
+    one_err(&svc, "QUERY select color=red", "bad_field");
+    one_err(&svc, "QUERY select n=abc", "bad_value");
+    one_err(&svc, "QUERY select n=1 n=2", "bad_request");
+    // A service without a store answers no_store to any query.
+    let bare = Service::new();
+    one_err(&bare, "QUERY count", "no_store");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The full TCP path: BATCH populates the served store, QUERY reads it
+/// back on the same connection, and errors stay in-band.
+#[test]
+fn query_verb_over_tcp() {
+    let dir = tmp_dir("query_tcp");
+    let store = Arc::new(ResultStore::open(&dir).unwrap());
+    let svc = Arc::new(Service::new().with_store(store));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || serve_on_with(listener, 2, svc));
+
+    let mut c = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(c.try_clone().unwrap());
+    let mut line = String::new();
+
+    writeln!(c, "BATCH schedules=fac2;gss n=300 workloads=uniform threads=2 seeds=1")
+        .unwrap();
+    loop {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.starts_with("ERR"), "{line}");
+        if line.contains("\"type\":\"summary\"") {
+            break;
+        }
+    }
+
+    writeln!(c, "QUERY best-schedule").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let row = parse_flat(&line).unwrap();
+    assert!(row.contains_key("best_schedule"), "{line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"type\":\"query_summary\""), "{line}");
+
+    writeln!(c, "QUERY nonsense").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR bad_query "), "{line}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A truncated segment fails the open with the stable coded error —
+/// never a panic, never a silently shorter store.
+#[test]
+fn corrupt_segment_is_a_coded_open_error() {
+    let dir = tmp_dir("corrupt_open");
+    {
+        let store = ResultStore::open(&dir).unwrap();
+        let svc = Service::new().with_store(Arc::new(store));
+        let mut out = Vec::new();
+        svc.handle_batch("BATCH schedules=fac2 n=200 workloads=uniform seeds=1", &mut out);
+    }
+    let seg = dir.join("seg-000000.col");
+    let mut bytes = std::fs::read(&seg).unwrap();
+    let keep = bytes.len() - 5;
+    bytes.truncate(keep);
+    std::fs::write(&seg, &bytes).unwrap();
+    let e = ResultStore::open(&dir).unwrap_err();
+    assert_eq!(e.code, "store_corrupt");
+    assert!(e.detail.contains("seg-000000.col"), "{e}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CLI round trip: `uds sweep --store` twice (cold then all-hits) with
+/// byte-identical report.csv, then `uds query` over the same store.
+#[test]
+fn cli_sweep_store_twice_then_query() {
+    let exe = env!("CARGO_BIN_EXE_uds");
+    let store_dir = tmp_dir("cli_store");
+    let out1 = tmp_dir("cli_out1");
+    let out2 = tmp_dir("cli_out2");
+    let sweep = |out: &PathBuf| {
+        std::process::Command::new(exe)
+            .args([
+                "sweep",
+                "--schedules",
+                "fac2;gss",
+                "--n",
+                "300",
+                "--workloads",
+                "uniform",
+                "--threads",
+                "2",
+                "--seeds",
+                "1,2",
+                "--store",
+                store_dir.to_str().unwrap(),
+                "--out",
+                out.to_str().unwrap(),
+            ])
+            .output()
+            .expect("spawn uds sweep")
+    };
+    let cold = sweep(&out1);
+    let cold_stdout = String::from_utf8_lossy(&cold.stdout).into_owned();
+    assert!(cold.status.success(), "{cold_stdout}");
+    assert!(
+        cold_stdout.contains("store: hits=0 misses=4 appended=4"),
+        "{cold_stdout}"
+    );
+    let warm = sweep(&out2);
+    let warm_stdout = String::from_utf8_lossy(&warm.stdout).into_owned();
+    assert!(warm.status.success(), "{warm_stdout}");
+    assert!(
+        warm_stdout.contains("store: hits=4 misses=0 appended=0"),
+        "{warm_stdout}"
+    );
+    let csv1 = std::fs::read(out1.join("report.csv")).unwrap();
+    let csv2 = std::fs::read(out2.join("report.csv")).unwrap();
+    assert_eq!(csv1, csv2, "warm report.csv must be byte-identical");
+
+    let query = std::process::Command::new(exe)
+        .args([
+            "query",
+            "best-schedule",
+            "--store",
+            store_dir.to_str().unwrap(),
+            "--workloads",
+            "uniform",
+        ])
+        .output()
+        .expect("spawn uds query");
+    let q_stdout = String::from_utf8_lossy(&query.stdout).into_owned();
+    assert!(query.status.success(), "{q_stdout}");
+    assert!(q_stdout.contains("\"best_schedule\""), "{q_stdout}");
+    assert!(q_stdout.contains("\"type\":\"query_summary\""), "{q_stdout}");
+    for dir in [&store_dir, &out1, &out2] {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
