@@ -1,0 +1,208 @@
+//! Deliberately non-conforming schedules — the analyzer's negative
+//! controls.
+//!
+//! Each fixture violates exactly one clause of the conformance contract
+//! (plus `fixture_stall`, which demonstrates the empty-chunk/no-progress
+//! pair), so CI can prove the failure path end to end: `uds verify
+//! --fixture fixture_gap` must fail with `coverage_gap`, and a
+//! `publish`/`register` of a broken schedule must be refused with the
+//! same stable code a wire client would see.
+//!
+//! Fixtures are registered through the *raw*
+//! [`ScheduleRegistry::register_factory`] — bypassing the verified
+//! path is the point: they exist to be caught downstream.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::{FnFactory, ScheduleFactory, Scheduler};
+use crate::schedules::registry::ScheduleRegistry;
+
+/// Every fixture name, in registration order.
+pub const FIXTURE_NAMES: [&str; 5] = [
+    "fixture_gap",
+    "fixture_overlap",
+    "fixture_stall",
+    "fixture_leak",
+    "fixture_panic",
+];
+
+/// Register all fixtures into `reg` (idempotent: re-registration of a
+/// taken name is ignored, so repeated calls in one process are safe).
+/// Returns the fixture names.
+pub fn register_fixtures(reg: &ScheduleRegistry) -> Vec<&'static str> {
+    let factories: [(&str, Arc<dyn ScheduleFactory>); 5] = [
+        ("fixture_gap", gap_factory()),
+        ("fixture_overlap", overlap_factory()),
+        ("fixture_stall", stall_factory()),
+        ("fixture_leak", leak_factory()),
+        ("fixture_panic", panic_factory()),
+    ];
+    for (name, factory) in factories {
+        let _ = reg.register_factory(
+            name,
+            factory,
+            "deliberately non-conforming fixture (analyzer negative control)",
+        );
+    }
+    FIXTURE_NAMES.to_vec()
+}
+
+/// Serial chunk-1 dispatcher over `0..limit(n)` — the shared skeleton
+/// under the gap and overlap fixtures.
+struct SerialCursor {
+    n: u64,
+    cur: AtomicU64,
+    /// Iterations actually dispatched: `n - 1` for the gap fixture.
+    drop_last: bool,
+    /// Re-issue iteration 0 once after the space is exhausted.
+    dup_zero: bool,
+}
+
+impl Scheduler for SerialCursor {
+    fn name(&self) -> String {
+        "fixture_serial".into()
+    }
+
+    fn start(&mut self, l: &LoopSpec, _t: &TeamSpec, _r: &mut LoopRecord) {
+        self.n = l.iter_count();
+        self.cur = AtomicU64::new(0);
+    }
+
+    fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+        let limit = if self.drop_last { self.n.saturating_sub(1) } else { self.n };
+        let i = self.cur.fetch_add(1, Ordering::Relaxed);
+        if i < limit {
+            return Some(Chunk::new(i, 1));
+        }
+        if self.dup_zero && i == self.n && self.n > 0 {
+            return Some(Chunk::new(0, 1));
+        }
+        None
+    }
+
+    fn finish(&mut self, _t: &TeamSpec, _r: &mut LoopRecord) {}
+}
+
+/// Never dispatches the last iteration — `coverage_gap`.
+pub fn gap_factory() -> Arc<dyn ScheduleFactory> {
+    Arc::new(FnFactory::new("fixture_gap", || {
+        Box::new(SerialCursor {
+            n: 0,
+            cur: AtomicU64::new(0),
+            drop_last: true,
+            dup_zero: false,
+        }) as Box<dyn Scheduler>
+    }))
+}
+
+/// Dispatches iteration 0 a second time — `coverage_overlap`.
+pub fn overlap_factory() -> Arc<dyn ScheduleFactory> {
+    Arc::new(FnFactory::new("fixture_overlap", || {
+        Box::new(SerialCursor {
+            n: 0,
+            cur: AtomicU64::new(0),
+            drop_last: false,
+            dup_zero: true,
+        }) as Box<dyn Scheduler>
+    }))
+}
+
+/// Hands out empty chunks forever — `nonpositive_chunk`, and because it
+/// never drains the space, `no_progress` once the budget runs out.
+pub fn stall_factory() -> Arc<dyn ScheduleFactory> {
+    struct Stall;
+    impl Scheduler for Stall {
+        fn name(&self) -> String {
+            "fixture_stall".into()
+        }
+        fn start(&mut self, _l: &LoopSpec, _t: &TeamSpec, _r: &mut LoopRecord) {}
+        fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+            Some(Chunk::new(0, 0))
+        }
+        fn finish(&mut self, _t: &TeamSpec, _r: &mut LoopRecord) {}
+    }
+    Arc::new(FnFactory::new("fixture_stall", || Box::new(Stall) as Box<dyn Scheduler>))
+}
+
+/// Shares one dispatch cursor across every instance the factory builds.
+/// Solo runs look perfect (`start` resets the cursor), but two
+/// concurrently live instances steal each other's iterations —
+/// `state_leak`, the defect that would silently corrupt sharded sweeps.
+pub fn leak_factory() -> Arc<dyn ScheduleFactory> {
+    struct Leaky {
+        n: u64,
+        shared: Arc<AtomicU64>,
+    }
+    impl Scheduler for Leaky {
+        fn name(&self) -> String {
+            "fixture_leak".into()
+        }
+        fn start(&mut self, l: &LoopSpec, _t: &TeamSpec, _r: &mut LoopRecord) {
+            self.n = l.iter_count();
+            self.shared.store(0, Ordering::Relaxed);
+        }
+        fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+            let i = self.shared.fetch_add(1, Ordering::Relaxed);
+            (i < self.n).then(|| Chunk::new(i, 1))
+        }
+        fn finish(&mut self, _t: &TeamSpec, _r: &mut LoopRecord) {}
+    }
+    let shared = Arc::new(AtomicU64::new(0));
+    Arc::new(FnFactory::new("fixture_leak", move || {
+        Box::new(Leaky { n: 0, shared: shared.clone() }) as Box<dyn Scheduler>
+    }))
+}
+
+/// Panics in `build()` — `schedule_panic`.
+pub fn panic_factory() -> Arc<dyn ScheduleFactory> {
+    Arc::new(FnFactory::new("fixture_panic", || {
+        panic!("fixture_panic always panics in build()")
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{verify_label, VerifyConfig};
+    use crate::util::ErrorCode;
+
+    #[test]
+    fn fixtures_register_and_fail_verification_by_name() {
+        let reg = ScheduleRegistry::with_builtins();
+        let names = register_fixtures(&reg);
+        assert_eq!(names.len(), FIXTURE_NAMES.len());
+        // Idempotent re-registration.
+        register_fixtures(&reg);
+        let cfg = VerifyConfig::quick();
+        let expect = [
+            ("fixture_gap", ErrorCode::CoverageGap),
+            ("fixture_overlap", ErrorCode::CoverageOverlap),
+            ("fixture_stall", ErrorCode::NonpositiveChunk),
+            ("fixture_leak", ErrorCode::StateLeak),
+            ("fixture_panic", ErrorCode::SchedulePanic),
+        ];
+        for (name, code) in expect {
+            let report = verify_label(&reg, name, &cfg).expect(name);
+            assert!(!report.conforms(), "{name} must fail");
+            assert!(
+                report.diagnostics.iter().any(|d| d.code == code),
+                "{name}: expected {code}, got {:?}",
+                report.diagnostics
+            );
+        }
+    }
+
+    #[test]
+    fn fixtures_appear_in_verify_targets_once_registered() {
+        let reg = ScheduleRegistry::with_builtins();
+        register_fixtures(&reg);
+        let targets = crate::analysis::verify_targets(&reg);
+        for name in FIXTURE_NAMES {
+            assert!(targets.iter().any(|t| t == name), "{name} missing from {targets:?}");
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Pass 1 — parameter domains and interval abstraction over chunk
+//! sequences.
+//!
+//! Two static facts are provable without running a schedule:
+//!
+//! 1. **Parameter-domain validity.**  Builtin labels parse permissively
+//!    (`dynamic,0` is syntactically a label) but the constructors
+//!    assert their documented preconditions — a value the constructor
+//!    would reject is the `param_domain` diagnostic, caught *before*
+//!    anything tries to build.
+//! 2. **Chunk positivity ⇒ termination.**  For the closed-form
+//!    strategies the chunk-size recurrences (arXiv 1809.03188's
+//!    decrement laws) admit exact `[lo, hi]` interval bounds; for
+//!    adaptive strategies a sound-but-loose `[1, hi]` follows from
+//!    their clamp-to-remaining structure.  `lo >= 1` everywhere means
+//!    every dequeue strictly decreases remaining work — a well-founded
+//!    measure, so the loop terminates in at most `n` dequeues.
+
+use crate::schedules::common::ceil_div;
+use crate::schedules::{Fac2, Fsc, Gss, ScheduleSpec, Tss};
+use crate::util::ErrorCode;
+
+use super::{Diagnostic, Pass, VerifyConfig, VerifyReport};
+
+/// Inclusive chunk-size bounds `[lo, hi]` derived (or observed) for a
+/// schedule at one `(n, p)` scenario.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Interval {
+    /// The join (union hull) of two intervals.
+    pub fn join(self, other: Interval) -> Interval {
+        Interval { lo: self.lo.min(other.lo), hi: self.hi.max(other.hi) }
+    }
+
+    fn from_sequence(sizes: &[u64]) -> Option<Interval> {
+        let lo = *sizes.iter().min()?;
+        let hi = *sizes.iter().max()?;
+        Some(Interval { lo, hi })
+    }
+}
+
+/// Check every typed parameter against its constructor's domain.
+/// Returns one diagnostic per violated precondition.
+pub fn param_diagnostics(spec: &ScheduleSpec) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut bad = |detail: String| {
+        out.push(Diagnostic { code: ErrorCode::ParamDomain, pass: Pass::Static, detail });
+    };
+    match spec {
+        ScheduleSpec::Static { chunk: Some(0) } => {
+            bad("static chunk must be >= 1".into());
+        }
+        ScheduleSpec::Dynamic { chunk: 0 } => {
+            bad("dynamic chunk must be >= 1".into());
+        }
+        ScheduleSpec::Guided { min_chunk: 0 } => {
+            bad("guided min_chunk must be >= 1".into());
+        }
+        ScheduleSpec::Tss { params: Some((f, l)) } if *l == 0 || f < l => {
+            bad(format!("tss requires first >= last >= 1, got first={f} last={l}"));
+        }
+        ScheduleSpec::Rand { bounds: Some((lo, hi)), .. } if *lo == 0 || hi < lo => {
+            bad(format!("rand requires 1 <= lo <= hi, got lo={lo} hi={hi}"));
+        }
+        ScheduleSpec::StaticSteal { own_chunk: 0 } => {
+            bad("static_steal own_chunk must be >= 1".into());
+        }
+        ScheduleSpec::Hybrid { f_static, dyn_chunk } => {
+            if !(0.0..=1.0).contains(f_static) {
+                bad(format!("hybrid f_static must be in [0,1], got {f_static}"));
+            }
+            if *dyn_chunk == 0 {
+                bad("hybrid dyn_chunk must be >= 1".into());
+            }
+        }
+        ScheduleSpec::Tuned { k0: 0 } => {
+            bad("tuned k0 must be >= 1".into());
+        }
+        ScheduleSpec::Af { min_chunk: 0 } => {
+            // Af silently clamps min_chunk to 1; a zero is still a
+            // domain error at the interface (the clamp is an
+            // implementation detail, not a contract).
+            bad("af min_chunk must be >= 1".into());
+        }
+        _ => {}
+    }
+    out
+}
+
+/// Chunk-size bounds at `(n, p)`, from the closed-form recurrence when
+/// one exists and from a sound clamp-to-remaining argument otherwise.
+/// `None` for registry-resolved (`Registered`) schedules — those have
+/// no algebra to abstract, so pass 2 observes their bounds instead.
+pub fn static_bounds(spec: &ScheduleSpec, n: u64, p: usize) -> Option<Interval> {
+    if n == 0 {
+        return Some(Interval { lo: 0, hi: 0 });
+    }
+    let p64 = p.max(1) as u64;
+    match spec {
+        ScheduleSpec::Static { chunk } => {
+            Some(fixed(n, chunk.unwrap_or_else(|| ceil_div(n, p64))))
+        }
+        ScheduleSpec::Dynamic { chunk } => Some(fixed(n, *chunk)),
+        ScheduleSpec::Guided { min_chunk } => {
+            Interval::from_sequence(&Gss::sequence(n, p64, *min_chunk))
+        }
+        ScheduleSpec::Tss { params } => {
+            Interval::from_sequence(&Tss::sequence(n, p64, *params))
+        }
+        ScheduleSpec::Fsc { overhead_ns, sigma_ns: Some(s) } => {
+            Some(fixed(n, Fsc::k_opt(n, p64, *overhead_ns, s.max(0.0))))
+        }
+        ScheduleSpec::Fac2 => Interval::from_sequence(&Fac2::sequence(n, p64)),
+        // Adaptive strategies clamp every dequeue to the remaining
+        // work, so [1, n] is sound; tighter bounds would need their
+        // runtime feedback, which is pass 2's job.
+        ScheduleSpec::Fsc { .. }
+        | ScheduleSpec::Fac { .. }
+        | ScheduleSpec::Wf2
+        | ScheduleSpec::Rand { .. }
+        | ScheduleSpec::Awf { .. }
+        | ScheduleSpec::Af { .. }
+        | ScheduleSpec::Auto
+        | ScheduleSpec::Tuned { .. } => Some(Interval { lo: 1, hi: n }),
+        // Blocks are at most ceil(n/p); steals split a victim's block.
+        ScheduleSpec::StaticSteal { .. } => {
+            Some(Interval { lo: 1, hi: ceil_div(n, p64).max(1) })
+        }
+        // Static phase chunks are at most ceil(n/p); the dynamic tail
+        // dequeues dyn_chunk-sized pieces clamped to the remainder.
+        ScheduleSpec::Hybrid { dyn_chunk, .. } => {
+            Some(Interval { lo: 1, hi: ceil_div(n, p64).max(*dyn_chunk).min(n).max(1) })
+        }
+        ScheduleSpec::Registered { .. } => None,
+    }
+}
+
+/// Bounds for a fixed chunk size `k` over `n` iterations: every chunk
+/// is `k` except a possibly-smaller tail.
+fn fixed(n: u64, k: u64) -> Interval {
+    let k = k.min(n).max(1);
+    let tail = n % k;
+    Interval { lo: if tail == 0 { k } else { tail }, hi: k }
+}
+
+/// The static pass: parameter domains first (a domain violation stops
+/// the analysis — the constructor would panic), then interval bounds
+/// over a probe family of scenarios proving positivity and progress.
+pub fn pass1(spec: &ScheduleSpec, cfg: &VerifyConfig, report: &mut VerifyReport) {
+    let domain = param_diagnostics(spec);
+    if !domain.is_empty() {
+        report.diagnostics.extend(domain);
+        return;
+    }
+    let mut probes = vec![(1u64, 1usize), (7, 2), (64, 4), (1000, 8)];
+    probes.push(cfg.reference);
+    for (n, p) in probes {
+        if let Some(iv) = static_bounds(spec, n, p) {
+            if iv.lo < 1 {
+                report.diagnostics.push(Diagnostic {
+                    code: ErrorCode::NonpositiveChunk,
+                    pass: Pass::Static,
+                    detail: format!(
+                        "derived chunk-size lower bound {} at n={n} p={p}",
+                        iv.lo
+                    ),
+                });
+            }
+            if iv.hi > n {
+                report.diagnostics.push(Diagnostic {
+                    code: ErrorCode::ChunkOutOfRange,
+                    pass: Pass::Static,
+                    detail: format!(
+                        "derived chunk-size upper bound {} exceeds n={n} at p={p}",
+                        iv.hi
+                    ),
+                });
+            }
+        }
+    }
+    let (rn, rp) = cfg.reference;
+    if let Some(iv) = static_bounds(spec, rn, rp) {
+        report.chunk_bounds = Some(iv);
+        report.bounds_derived = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bounds(label: &str, n: u64, p: usize) -> Interval {
+        let spec = crate::schedules::registry::ScheduleRegistry::with_builtins()
+            .parse(label)
+            .unwrap();
+        static_bounds(&spec, n, p).unwrap()
+    }
+
+    #[test]
+    fn fixed_chunk_bounds_are_exact() {
+        assert_eq!(bounds("dynamic,16", 100, 4), Interval { lo: 4, hi: 16 });
+        assert_eq!(bounds("dynamic,16", 96, 4), Interval { lo: 16, hi: 16 });
+        assert_eq!(bounds("static,1", 7, 3), Interval { lo: 1, hi: 1 });
+        // static (blocked): k = ceil(100/4) = 25 exactly divides.
+        assert_eq!(bounds("static", 100, 4), Interval { lo: 25, hi: 25 });
+    }
+
+    #[test]
+    fn recurrence_bounds_match_the_sequences() {
+        let iv = bounds("guided", 1000, 4);
+        let seq = Gss::sequence(1000, 4, 1);
+        assert_eq!(iv.lo, *seq.iter().min().unwrap());
+        assert_eq!(iv.hi, *seq.iter().max().unwrap());
+        let iv = bounds("tss", 1000, 4);
+        assert_eq!(iv.hi, Tss::sequence(1000, 4, None)[0]);
+        assert!(iv.lo >= 1);
+    }
+
+    #[test]
+    fn every_builtin_bound_proves_positivity() {
+        for spec in crate::schedules::registry::ScheduleRegistry::with_builtins().roster() {
+            for (n, p) in [(1u64, 1usize), (7, 2), (100, 8), (1000, 4)] {
+                let iv = static_bounds(&spec, n, p).expect("builtin bounds");
+                assert!(iv.lo >= 1, "{}: {iv:?} at n={n} p={p}", spec.label());
+                assert!(iv.hi <= n, "{}: {iv:?} at n={n} p={p}", spec.label());
+            }
+        }
+    }
+
+    #[test]
+    fn param_domain_catches_constructor_preconditions() {
+        let reg = crate::schedules::registry::ScheduleRegistry::with_builtins();
+        for (label, frag) in [
+            ("dynamic,0", "dynamic"),
+            ("static,0", "static"),
+            ("guided,0", "guided"),
+            ("tss,2,9", "tss"),
+            ("static_steal,0", "static_steal"),
+            ("hybrid,1.5,8", "f_static"),
+            ("hybrid,0.5,0", "dyn_chunk"),
+            ("tuned,0", "tuned"),
+        ] {
+            let spec = reg.parse(label).expect(label);
+            let diags = param_diagnostics(&spec);
+            assert!(!diags.is_empty(), "{label} should violate its domain");
+            assert!(diags.iter().all(|d| d.code == ErrorCode::ParamDomain));
+            assert!(
+                diags.iter().any(|d| d.detail.contains(frag)),
+                "{label}: {diags:?}"
+            );
+        }
+        // Conforming labels produce no domain diagnostics.
+        for label in ["dynamic,16", "guided,4", "tss,100,4", "hybrid,0.5,8"] {
+            assert!(param_diagnostics(&reg.parse(label).unwrap()).is_empty(), "{label}");
+        }
+    }
+
+    #[test]
+    fn registered_specs_have_no_static_bounds() {
+        let spec = ScheduleSpec::Registered { label: "whatever".into() };
+        assert_eq!(static_bounds(&spec, 100, 4), None);
+    }
+}

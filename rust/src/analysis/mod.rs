@@ -1,0 +1,308 @@
+//! Schedule conformance analysis — the `uds verify` engine.
+//!
+//! The paper's interface lets users name *any* scheduling strategy, which
+//! raises the question it leaves to implementations: what makes a named
+//! schedule a **valid** schedule?  This module answers with a checkable
+//! contract (EXPERIMENTS.md §Schedule verification) enforced by two
+//! cooperating passes:
+//!
+//! * **Pass 1 — static / abstract** ([`interval`]): parameter domains are
+//!   checked against the constructors' documented preconditions, and an
+//!   interval-domain abstract interpretation over the closed-form chunk
+//!   recurrences (the GSS/TSS/FAC decrement laws) derives `[lo, hi]`
+//!   chunk-size bounds.  `lo >= 1` proves chunk positivity, and
+//!   positivity makes remaining work a strictly decreasing well-founded
+//!   measure — termination.
+//! * **Pass 2 — exhaustive small-model** ([`model`]): for a grid of
+//!   small `(n, p)` scenarios the full dispatch trace is enumerated and
+//!   checked against the contract — exact-once coverage, in-range
+//!   chunks, bounded progress, determinism (two identical runs produce
+//!   identical traces), and cross-instance state isolation (two
+//!   concurrently live instances from one factory behave like solo
+//!   runs).
+//!
+//! Violations are minted as stable [`ErrorCode`] diagnostics (layer
+//! `verify`) — the same codes on every surface: `uds verify`, the
+//! `VERIFY` wire verb, and the publish-time hooks in
+//! [`crate::coordinator::declare`] / [`crate::coordinator::lambda`].
+//! [`fixture`] holds deliberately broken schedules that keep each
+//! failure path demonstrably detectable.
+
+pub mod fixture;
+pub mod interval;
+pub mod model;
+
+use crate::coordinator::scheduler::{ScheduleFactory, Scheduler};
+use crate::schedules::registry::ScheduleRegistry;
+use crate::util::json::JsonObj;
+use crate::util::ErrorCode;
+use crate::workload::CostModel;
+
+pub use interval::Interval;
+
+/// Which pass produced a diagnostic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pass {
+    /// Pass 1: parameter domains + interval abstraction.
+    Static,
+    /// Pass 2: exhaustive small-model trace checking.
+    Model,
+}
+
+impl Pass {
+    pub const fn as_str(self) -> &'static str {
+        match self {
+            Pass::Static => "static",
+            Pass::Model => "model",
+        }
+    }
+}
+
+/// One conformance violation: a stable code plus human-readable context
+/// (which scenario, which iteration).  The code is the contract; the
+/// detail is for humans.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub code: ErrorCode,
+    pub pass: Pass,
+    pub detail: String,
+}
+
+/// The analyzer's verdict for one schedule label.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    /// Canonical label (or registry name, for bare factories).
+    pub label: String,
+    /// Violations, in discovery order; empty means the schedule conforms.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Chunk-size bounds at the reference scenario: derived by the
+    /// pass-1 interval abstraction when a closed form exists, otherwise
+    /// observed from the pass-2 traces.
+    pub chunk_bounds: Option<Interval>,
+    /// `true` when `chunk_bounds` came from the pass-1 abstraction.
+    pub bounds_derived: bool,
+    /// Number of `(n, p)` scenarios pass 2 enumerated.
+    pub scenarios: usize,
+}
+
+impl VerifyReport {
+    fn new(label: impl Into<String>) -> Self {
+        Self {
+            label: label.into(),
+            diagnostics: Vec::new(),
+            chunk_bounds: None,
+            bounds_derived: false,
+            scenarios: 0,
+        }
+    }
+
+    /// Whether the schedule satisfies the full conformance contract.
+    pub fn conforms(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// The first (most load-bearing) violation code, if any.
+    pub fn first_code(&self) -> Option<ErrorCode> {
+        self.diagnostics.first().map(|d| d.code)
+    }
+}
+
+/// Analyzer configuration: the pass-2 scenario grid and dequeue budget.
+#[derive(Clone, Debug)]
+pub struct VerifyConfig {
+    /// `(n, p)` scenarios pass 2 enumerates exhaustively.  Small by
+    /// design: coverage bugs are boundary bugs, and every grid point
+    /// costs four full trace enumerations (determinism + isolation).
+    pub grid: Vec<(u64, usize)>,
+    /// Slack added to the `2n + 8p` dequeue budget per run; exhausting
+    /// the budget mints `no_progress`.
+    pub budget_slack: u64,
+    /// `(n, p)` used for the reported chunk bounds.
+    pub reference: (u64, usize),
+}
+
+impl Default for VerifyConfig {
+    fn default() -> Self {
+        VerifyConfig::quick()
+    }
+}
+
+impl VerifyConfig {
+    /// The standard grid: boundary scenarios (`n=1`, `n < p`, `n = p*k`
+    /// exact fits, off-by-one sizes) plus two mid-size points.
+    pub fn quick() -> Self {
+        VerifyConfig {
+            grid: vec![(1, 1), (1, 3), (5, 2), (16, 2), (17, 4), (33, 3), (64, 5), (100, 8)],
+            budget_slack: 64,
+            reference: (1000, 4),
+        }
+    }
+
+    /// Dequeue budget for one `(n, p)` run.  A conforming schedule
+    /// issues at most `n` chunks plus `p` terminal `None`s; twice that
+    /// plus slack leaves room for odd-but-legal interleavings.
+    pub fn budget(&self, n: u64, p: usize) -> u64 {
+        2 * n + 8 * (p as u64) + self.budget_slack
+    }
+}
+
+/// Verify one label against `reg`.  `Err` means the label does not
+/// resolve at all (callers surface it as `bad_schedule`); `Ok` carries
+/// the conformance verdict.
+pub fn verify_label(
+    reg: &ScheduleRegistry,
+    label: &str,
+    cfg: &VerifyConfig,
+) -> Result<VerifyReport, String> {
+    verify_label_costed(reg, label, cfg, None)
+}
+
+/// [`verify_label`] with a per-`n` cost model driving pass-2 feedback —
+/// adaptive schedules then see realistic (workload-shaped) chunk
+/// timings instead of unit costs.
+pub fn verify_label_costed(
+    reg: &ScheduleRegistry,
+    label: &str,
+    cfg: &VerifyConfig,
+    cost: Option<&dyn Fn(u64) -> Box<dyn CostModel>>,
+) -> Result<VerifyReport, String> {
+    let spec = reg.parse(label)?;
+    let canonical = spec.label();
+    let mut report = VerifyReport::new(&canonical);
+    interval::pass1(&spec, cfg, &mut report);
+    if report.diagnostics.iter().any(|d| d.code == ErrorCode::ParamDomain) {
+        // The constructor would reject (panic on) these parameters;
+        // model-checking a build that cannot succeed proves nothing.
+        return Ok(report);
+    }
+    let build = || reg.build(&canonical);
+    model::pass2(&build, cfg, cost, &mut report);
+    Ok(report)
+}
+
+/// Verify a bare factory (no spec, no label grammar) — the hook behind
+/// [`crate::schedules::registry::ScheduleRegistry::register_factory_verified`]
+/// and the declare/lambda publish paths.  Pass 1 has no parameters to
+/// check here; the full pass-2 contract still applies and chunk bounds
+/// are observed from the traces.
+pub fn verify_factory(
+    name: &str,
+    factory: &dyn ScheduleFactory,
+    cfg: &VerifyConfig,
+) -> VerifyReport {
+    let mut report = VerifyReport::new(name);
+    let build = || -> Result<Box<dyn Scheduler>, String> { Ok(factory.build()) };
+    model::pass2(&build, cfg, None, &mut report);
+    report
+}
+
+/// Every label `uds verify --all` runs: each entry's roster labels, or
+/// its bare name when it contributes none but parses alone (e.g. the
+/// off-roster `awf-d`/`awf-e` variants and registered user schedules).
+pub fn verify_targets(reg: &ScheduleRegistry) -> Vec<String> {
+    let mut out = Vec::new();
+    for e in reg.entries() {
+        let labels = e.roster_labels();
+        if labels.is_empty() {
+            if reg.parse(e.name()).is_ok() {
+                out.push(e.name().to_string());
+            }
+        } else {
+            out.extend(labels.iter().cloned());
+        }
+    }
+    out
+}
+
+/// Run the analyzer over every target in `reg`, in roster order.
+pub fn verify_all(reg: &ScheduleRegistry, cfg: &VerifyConfig) -> Vec<VerifyReport> {
+    verify_targets(reg)
+        .iter()
+        .filter_map(|label| verify_label(reg, label, cfg).ok())
+        .collect()
+}
+
+/// NDJSON row for one diagnostic — the row shape shared by
+/// `uds verify --json` and the `VERIFY` wire verb.
+pub fn diag_json(label: &str, d: &Diagnostic) -> String {
+    JsonObj::new()
+        .str("type", "diag")
+        .str("label", label)
+        .str("code", d.code.as_str())
+        .str("pass", d.pass.as_str())
+        .str("detail", &d.detail)
+        .finish()
+}
+
+/// NDJSON row for one per-label verdict.
+pub fn report_json(r: &VerifyReport) -> String {
+    let mut o = JsonObj::new();
+    o.str("type", "verify")
+        .str("label", &r.label)
+        .bool("conforms", r.conforms())
+        .u64("diagnostics", r.diagnostics.len() as u64)
+        .u64("scenarios", r.scenarios as u64);
+    if let Some(b) = r.chunk_bounds {
+        o.u64("chunk_lo", b.lo)
+            .u64("chunk_hi", b.hi)
+            .str("bounds", if r.bounds_derived { "derived" } else { "observed" });
+    }
+    o.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_roster_label_conforms() {
+        let reg = ScheduleRegistry::with_builtins();
+        let cfg = VerifyConfig::quick();
+        for report in verify_all(&reg, &cfg) {
+            assert!(
+                report.conforms(),
+                "{}: {:?}",
+                report.label,
+                report.diagnostics
+            );
+            assert!(report.scenarios == cfg.grid.len(), "{}", report.label);
+        }
+    }
+
+    #[test]
+    fn targets_cover_roster_and_off_roster_heads() {
+        let reg = ScheduleRegistry::with_builtins();
+        let targets = verify_targets(&reg);
+        assert!(targets.len() >= 15, "{targets:?}");
+        assert!(targets.iter().any(|t| t == "awf-d"), "{targets:?}");
+        assert!(targets.iter().any(|t| t == "dynamic,16"), "{targets:?}");
+    }
+
+    #[test]
+    fn param_domain_skips_the_model_pass() {
+        let reg = ScheduleRegistry::with_builtins();
+        let cfg = VerifyConfig::quick();
+        for label in ["dynamic,0", "static,0", "guided,0", "static_steal,0",
+                      "tuned,0", "tss,2,9", "hybrid,1.5,8", "hybrid,0.5,0"] {
+            let report = verify_label(&reg, label, &cfg).expect("parses");
+            assert_eq!(report.first_code(), Some(ErrorCode::ParamDomain), "{label}");
+            assert_eq!(report.scenarios, 0, "{label}: model pass must not run");
+        }
+    }
+
+    #[test]
+    fn unresolvable_labels_err() {
+        let reg = ScheduleRegistry::with_builtins();
+        assert!(verify_label(&reg, "no_such_schedule", &VerifyConfig::quick()).is_err());
+    }
+
+    #[test]
+    fn report_carries_bounds_for_closed_forms() {
+        let reg = ScheduleRegistry::with_builtins();
+        let report = verify_label(&reg, "dynamic,16", &VerifyConfig::quick()).unwrap();
+        let b = report.chunk_bounds.expect("bounds");
+        assert!(report.bounds_derived);
+        assert_eq!(b.hi, 16);
+        assert!(b.lo >= 1);
+    }
+}

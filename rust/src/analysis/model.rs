@@ -1,0 +1,449 @@
+//! Pass 2 — exhaustive small-model checking of dispatch traces.
+//!
+//! For each `(n, p)` in the configured grid the checker enumerates the
+//! full dispatch trace under the reference round-robin dequeue
+//! interleaving (the same one `drain_chunks` and the E1 experiment use)
+//! and checks the conformance contract:
+//!
+//! * every chunk is non-empty and inside `0..n` (`nonpositive_chunk`,
+//!   `chunk_out_of_range`);
+//! * every iteration is dispatched exactly once (`coverage_gap`,
+//!   `coverage_overlap`);
+//! * the loop drains within a `2n + 8p + slack` dequeue budget
+//!   (`no_progress`);
+//! * two identical fresh runs produce identical traces
+//!   (`nondeterministic`);
+//! * two *concurrently live* instances from one factory each behave
+//!   exactly like a solo run (`state_leak`) — the property that keeps
+//!   sharded sweeps and the result store byte-identical;
+//! * no panic escapes the schedule while doing any of the above
+//!   (`schedule_panic`).
+//!
+//! An empty chunk is recorded but the run continues — a schedule that
+//! *only* stalls then also exhausts its budget, separating the "emits
+//! empty chunks" defect from the "never terminates" defect.  Coverage
+//! corruption (overlap, out-of-range) aborts the run: the trace is
+//! meaningless past that point.  Each code is minted at most once per
+//! label, tagged with the first scenario that exposed it.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::coordinator::feedback::ChunkFeedback;
+use crate::coordinator::history::LoopRecord;
+use crate::coordinator::loop_spec::{Chunk, LoopSpec, TeamSpec};
+use crate::coordinator::scheduler::Scheduler;
+use crate::util::ErrorCode;
+use crate::workload::CostModel;
+
+use super::{Diagnostic, Interval, Pass, VerifyConfig, VerifyReport};
+
+/// Builds one fresh scheduler instance per call; `Err` is a build-time
+/// rejection (surfaced as `param_domain`).
+type BuildFn<'a> = dyn Fn() -> Result<Box<dyn Scheduler>, String> + 'a;
+
+/// Per-`n` cost model for feedback timings; `None` means unit cost.
+type CostFn<'a> = dyn Fn(u64) -> Box<dyn CostModel> + 'a;
+
+/// One enumerated run: the dispatch trace plus any contract violations
+/// it exposed (violation order is discovery order).
+struct RunOutcome {
+    trace: Vec<(usize, Chunk)>,
+    violations: Vec<(ErrorCode, String)>,
+}
+
+/// The model-checking pass.  Appends diagnostics to `report` and, when
+/// pass 1 left no derived bounds, records bounds observed from the
+/// traces at the reference scenario (or the largest grid point run).
+pub fn pass2(
+    build: &BuildFn,
+    cfg: &VerifyConfig,
+    cost: Option<&CostFn>,
+    report: &mut VerifyReport,
+) {
+    let mut observed: Option<Interval> = None;
+    for &(n, p) in &cfg.grid {
+        report.scenarios += 1;
+        let budget = cfg.budget(n, p);
+        let first = match run(build, n, p, budget, cost) {
+            Err(v) => {
+                mint(report, v);
+                continue;
+            }
+            Ok(outcome) => {
+                for v in &outcome.violations {
+                    mint(report, v.clone());
+                }
+                outcome
+            }
+        };
+        for (_, c) in &first.trace {
+            let iv = Interval { lo: c.len, hi: c.len };
+            observed = Some(observed.map_or(iv, |o| o.join(iv)));
+        }
+        // Determinism: a second fresh instance must replay the trace.
+        match run(build, n, p, budget, cost) {
+            Ok(second) if second.trace == first.trace => {}
+            Ok(_) => mint(
+                report,
+                (
+                    ErrorCode::Nondeterministic,
+                    format!("two identical runs produced different traces at n={n} p={p}"),
+                ),
+            ),
+            Err((_, detail)) => mint(
+                report,
+                (
+                    ErrorCode::Nondeterministic,
+                    format!("second identical run failed at n={n} p={p}: {detail}"),
+                ),
+            ),
+        }
+        // State isolation: only meaningful against a clean solo trace.
+        if first.violations.is_empty() {
+            if let Some(v) = isolation(build, n, p, budget, cost, &first.trace) {
+                mint(report, v);
+            }
+        }
+    }
+    if report.chunk_bounds.is_none() {
+        report.chunk_bounds = observed;
+        report.bounds_derived = false;
+    }
+}
+
+/// Record a violation unless this code was already minted for the label.
+fn mint(report: &mut VerifyReport, (code, detail): (ErrorCode, String)) {
+    if report.diagnostics.iter().any(|d| d.code == code) {
+        return;
+    }
+    report.diagnostics.push(Diagnostic { code, pass: Pass::Model, detail });
+}
+
+/// One fresh build + start + budgeted drain + finish, with panics
+/// contained.  `Err` is a run-aborting failure (panic or build
+/// rejection); contract violations that leave the trace meaningful ride
+/// inside the `Ok`.
+fn run(
+    build: &BuildFn,
+    n: u64,
+    p: usize,
+    budget: u64,
+    cost: Option<&CostFn>,
+) -> Result<RunOutcome, (ErrorCode, String)> {
+    let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<RunOutcome, (ErrorCode, String)> {
+        let mut sched = build().map_err(|e| (ErrorCode::ParamDomain, e))?;
+        let spec = LoopSpec::upto(n);
+        let team = TeamSpec::uniform(p);
+        let mut record = LoopRecord::default();
+        sched.start(&spec, &team, &mut record);
+        let model = cost.map(|f| f(n));
+        let out = drain_started(sched.as_ref(), n, p, budget, model.as_deref(), true);
+        sched.finish(&team, &mut record);
+        Ok(out)
+    }));
+    match outcome {
+        Ok(r) => r,
+        Err(payload) => Err((
+            ErrorCode::SchedulePanic,
+            format!("panicked at n={n} p={p}: {}", panic_text(payload.as_ref())),
+        )),
+    }
+}
+
+/// Budgeted reference drain of an already-started scheduler.  Mirrors
+/// `drain_chunks`' round-robin interleaving, but tracks coverage as it
+/// goes and charges every dequeue against the budget.
+fn drain_started(
+    sched: &dyn Scheduler,
+    n: u64,
+    p: usize,
+    budget: u64,
+    model: Option<&dyn CostModel>,
+    check_gap: bool,
+) -> RunOutcome {
+    let mut out = RunOutcome { trace: Vec::new(), violations: Vec::new() };
+    let mut live = vec![true; p];
+    let mut fb: Vec<Option<ChunkFeedback>> = vec![None; p];
+    let mut seen = vec![false; n as usize];
+    let mut empty_reported = false;
+    let mut calls = 0u64;
+    'drain: while live.iter().any(|&l| l) {
+        for tid in 0..p {
+            if !live[tid] {
+                continue;
+            }
+            calls += 1;
+            if calls > budget {
+                let done = seen.iter().filter(|&&s| s).count();
+                out.violations.push((
+                    ErrorCode::NoProgress,
+                    format!(
+                        "dequeue budget {budget} exhausted with {done}/{n} iterations \
+                         dispatched at n={n} p={p}"
+                    ),
+                ));
+                return out;
+            }
+            let Some(c) = sched.next(tid, fb[tid].as_ref()) else {
+                live[tid] = false;
+                continue;
+            };
+            if c.len == 0 {
+                if !empty_reported {
+                    empty_reported = true;
+                    out.violations.push((
+                        ErrorCode::NonpositiveChunk,
+                        format!(
+                            "thread {tid} dequeued an empty chunk at index {} \
+                             (n={n} p={p})",
+                            c.first
+                        ),
+                    ));
+                }
+                // Keep draining: a stall-only schedule must also be
+                // shown to miss the progress bound.
+                continue;
+            }
+            if c.end() > n {
+                out.violations.push((
+                    ErrorCode::ChunkOutOfRange,
+                    format!(
+                        "chunk [{}, {}) exceeds the iteration space at n={n} p={p}",
+                        c.first,
+                        c.end()
+                    ),
+                ));
+                break 'drain;
+            }
+            for i in c.indices() {
+                if seen[i as usize] {
+                    out.violations.push((
+                        ErrorCode::CoverageOverlap,
+                        format!("iteration {i} dispatched twice at n={n} p={p}"),
+                    ));
+                    break 'drain;
+                }
+                seen[i as usize] = true;
+            }
+            let elapsed = match model {
+                Some(m) => c.indices().map(|i| m.cost_ns(i)).sum::<u64>().max(1),
+                None => c.len.max(1),
+            };
+            fb[tid] = Some(ChunkFeedback { chunk: c, tid, elapsed_ns: elapsed });
+            out.trace.push((tid, c));
+        }
+    }
+    if check_gap && out.violations.is_empty() {
+        if let Some(miss) = seen.iter().position(|&s| !s) {
+            out.violations.push((
+                ErrorCode::CoverageGap,
+                format!("iteration {miss} never dispatched at n={n} p={p}"),
+            ));
+        }
+    }
+    out
+}
+
+/// The state-isolation check: build two instances, start *both*, then
+/// drain each while the other is live.  A conforming factory stamps out
+/// independent instances, so both traces must equal the solo trace.
+fn isolation(
+    build: &BuildFn,
+    n: u64,
+    p: usize,
+    budget: u64,
+    cost: Option<&CostFn>,
+    solo: &[(usize, Chunk)],
+) -> Option<(ErrorCode, String)> {
+    let outcome = catch_unwind(AssertUnwindSafe(
+        || -> Result<(RunOutcome, RunOutcome), String> {
+            let mut a = build().map_err(|e| format!("build rejected: {e}"))?;
+            let mut b = build().map_err(|e| format!("build rejected: {e}"))?;
+            let spec = LoopSpec::upto(n);
+            let team = TeamSpec::uniform(p);
+            let mut ra = LoopRecord::default();
+            let mut rb = LoopRecord::default();
+            a.start(&spec, &team, &mut ra);
+            b.start(&spec, &team, &mut rb);
+            let model = cost.map(|f| f(n));
+            let ta = drain_started(a.as_ref(), n, p, budget, model.as_deref(), false);
+            let tb = drain_started(b.as_ref(), n, p, budget, model.as_deref(), false);
+            a.finish(&team, &mut ra);
+            b.finish(&team, &mut rb);
+            Ok((ta, tb))
+        },
+    ));
+    let leak = |why: String| {
+        Some((
+            ErrorCode::StateLeak,
+            format!("concurrent instances from one factory interfere at n={n} p={p}: {why}"),
+        ))
+    };
+    match outcome {
+        Ok(Ok((ta, tb))) => {
+            if ta.trace != solo || !ta.violations.is_empty() {
+                leak("the first interleaved instance diverged from its solo trace".into())
+            } else if tb.trace != solo || !tb.violations.is_empty() {
+                leak("the second interleaved instance diverged from its solo trace".into())
+            } else {
+                None
+            }
+        }
+        Ok(Err(detail)) => leak(detail),
+        Err(payload) => leak(format!("panicked: {}", panic_text(payload.as_ref()))),
+    }
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).into()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{fixture, VerifyConfig};
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    fn check(factory: &dyn crate::coordinator::scheduler::ScheduleFactory) -> VerifyReport {
+        super::super::verify_factory("under_test", factory, &VerifyConfig::quick())
+    }
+
+    fn codes(report: &VerifyReport) -> Vec<ErrorCode> {
+        report.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn gap_fixture_is_caught() {
+        let r = check(fixture::gap_factory().as_ref());
+        assert!(codes(&r).contains(&ErrorCode::CoverageGap), "{:?}", r.diagnostics);
+    }
+
+    #[test]
+    fn overlap_fixture_is_caught() {
+        let r = check(fixture::overlap_factory().as_ref());
+        assert!(codes(&r).contains(&ErrorCode::CoverageOverlap), "{:?}", r.diagnostics);
+    }
+
+    #[test]
+    fn stall_fixture_mints_both_stall_codes() {
+        let r = check(fixture::stall_factory().as_ref());
+        let c = codes(&r);
+        assert!(c.contains(&ErrorCode::NonpositiveChunk), "{:?}", r.diagnostics);
+        assert!(c.contains(&ErrorCode::NoProgress), "{:?}", r.diagnostics);
+    }
+
+    #[test]
+    fn leak_fixture_is_caught_and_is_not_nondeterminism() {
+        let r = check(fixture::leak_factory().as_ref());
+        let c = codes(&r);
+        assert!(c.contains(&ErrorCode::StateLeak), "{:?}", r.diagnostics);
+        assert!(
+            !c.contains(&ErrorCode::Nondeterministic),
+            "sequential runs of the leak fixture are deterministic: {:?}",
+            r.diagnostics
+        );
+    }
+
+    #[test]
+    fn panic_fixture_is_caught() {
+        let r = check(fixture::panic_factory().as_ref());
+        assert_eq!(r.first_code(), Some(ErrorCode::SchedulePanic), "{:?}", r.diagnostics);
+    }
+
+    /// A factory whose built instances pick their chunk size from a
+    /// build counter that is never reset: consecutive builds get
+    /// different sizes (the counter cycles 1,2,3), so two "identical"
+    /// runs partition the space differently at any n >= 2.
+    #[test]
+    fn nondeterminism_is_caught() {
+        struct DriftFactory {
+            builds: Arc<AtomicU64>,
+        }
+        struct Drift {
+            k: u64,
+            n: u64,
+            cur: AtomicU64,
+        }
+        impl Scheduler for Drift {
+            fn name(&self) -> String {
+                "drift".into()
+            }
+            fn start(&mut self, l: &LoopSpec, _t: &TeamSpec, _r: &mut LoopRecord) {
+                self.n = l.iter_count();
+                self.cur = AtomicU64::new(0);
+            }
+            fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+                let i = self.cur.fetch_add(self.k, Ordering::Relaxed);
+                if i >= self.n {
+                    return None;
+                }
+                Some(Chunk::new(i, self.k.min(self.n - i)))
+            }
+            fn finish(&mut self, _t: &TeamSpec, _r: &mut LoopRecord) {}
+        }
+        impl crate::coordinator::scheduler::ScheduleFactory for DriftFactory {
+            fn name(&self) -> String {
+                "drift".into()
+            }
+            fn build(&self) -> Box<dyn Scheduler> {
+                let k = 1 + self.builds.fetch_add(1, Ordering::Relaxed) % 3;
+                Box::new(Drift { k, n: 0, cur: AtomicU64::new(0) })
+            }
+        }
+        let f = DriftFactory { builds: Arc::new(AtomicU64::new(0)) };
+        let r = check(&f);
+        assert!(
+            codes(&r).contains(&ErrorCode::Nondeterministic),
+            "{:?}",
+            r.diagnostics
+        );
+    }
+
+    /// An out-of-range chunk aborts the run with the right code.
+    #[test]
+    fn out_of_range_chunk_is_caught() {
+        struct Oor {
+            n: u64,
+            cur: AtomicU64,
+        }
+        impl Scheduler for Oor {
+            fn name(&self) -> String {
+                "oor".into()
+            }
+            fn start(&mut self, l: &LoopSpec, _t: &TeamSpec, _r: &mut LoopRecord) {
+                self.n = l.iter_count();
+                self.cur = AtomicU64::new(0);
+            }
+            fn next(&self, _tid: usize, _fb: Option<&ChunkFeedback>) -> Option<Chunk> {
+                let i = self.cur.fetch_add(1, Ordering::Relaxed);
+                // One chunk covering 0..n+1 — one iteration too many.
+                (i == 0).then(|| Chunk::new(0, self.n + 1))
+            }
+            fn finish(&mut self, _t: &TeamSpec, _r: &mut LoopRecord) {}
+        }
+        let f = crate::coordinator::scheduler::FnFactory::new("oor", || {
+            Box::new(Oor { n: 0, cur: AtomicU64::new(0) }) as Box<dyn Scheduler>
+        });
+        let r = check(&f);
+        assert_eq!(r.first_code(), Some(ErrorCode::ChunkOutOfRange), "{:?}", r.diagnostics);
+    }
+
+    /// The observed bounds land in the report when pass 1 derived none.
+    #[test]
+    fn observed_bounds_are_recorded_for_factories() {
+        let reg = crate::schedules::registry::ScheduleRegistry::with_builtins();
+        let f = reg.parse("dynamic,4").unwrap().factory();
+        let r = super::super::verify_factory("dyn4", f.as_ref(), &VerifyConfig::quick());
+        assert!(r.conforms(), "{:?}", r.diagnostics);
+        let b = r.chunk_bounds.expect("observed bounds");
+        assert!(!r.bounds_derived);
+        assert!(b.lo >= 1 && b.hi <= 4, "{b:?}");
+    }
+}

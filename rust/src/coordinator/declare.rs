@@ -30,6 +30,11 @@
 //! result, after which the declared schedule is resolvable by label
 //! everywhere a builtin is.
 
+// Policy exception to the crate-level unwrap/expect warns: lock
+// poisoning is fatal by design here, and the surviving expects assert
+// crate-internal invariants (see lib.rs).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::any::Any;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -253,7 +258,32 @@ impl Registry {
     /// sweep grids, the service's single-job line and the `BATCH` wire
     /// protocol — then resolves the name like a builtin, building each
     /// loop's scheduler from a fresh `make_args` pack.
+    ///
+    /// The schedule is conformance-verified first
+    /// ([`crate::analysis::verify_factory`]): a schedule that skips
+    /// iterations, double-dispatches, stalls, or leaks state between
+    /// instances is refused with the first stable diagnostic code in
+    /// the error.  Use [`Registry::publish_unchecked`] for exploratory
+    /// schedules that intentionally bend the contract.
     pub fn publish<F>(
+        &self,
+        schedules: &ScheduleRegistry,
+        name: &str,
+        summary: &str,
+        make_args: F,
+    ) -> Result<(), String>
+    where
+        F: Fn() -> Args + Send + Sync + 'static,
+    {
+        let factory = Arc::new(self.template(name, make_args)?);
+        schedules.register_factory_verified(name, factory, summary)
+    }
+
+    /// [`Registry::publish`] without the conformance gate — the opt-out
+    /// for schedules under development.  The name still resolves
+    /// everywhere; `uds verify <name>` reports what the gate would have
+    /// said.
+    pub fn publish_unchecked<F>(
         &self,
         schedules: &ScheduleRegistry,
         name: &str,

@@ -11,6 +11,11 @@
 //! `finish` operations.  Adaptive strategies (AWF, AF, auto-selection,
 //! chunk tuning) read and update it; non-adaptive strategies ignore it.
 
+// Policy exception to the crate-level unwrap/expect warns: lock
+// poisoning is fatal by design here, and the surviving expects assert
+// crate-internal invariants (see lib.rs).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::any::Any;
 use std::collections::HashMap;
 use std::sync::Arc;

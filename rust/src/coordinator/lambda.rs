@@ -24,6 +24,11 @@
 //! which the name resolves everywhere a builtin label does — the CLI,
 //! sweep grids, and the `BATCH` wire protocol.
 
+// Policy exception to the crate-level unwrap/expect warns: lock
+// poisoning is fatal by design here, and the surviving expects assert
+// crate-internal invariants (see lib.rs).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::any::Any;
 use std::sync::Arc;
 
@@ -222,7 +227,30 @@ impl UdsBuilder {
     /// under the template's name — the paper's `declare
     /// schedule_template` registration step.  Afterwards the name is
     /// resolvable from every label surface (CLI, sweep grids, `BATCH`).
+    ///
+    /// The template is conformance-verified first
+    /// ([`crate::analysis::verify_factory`]); a non-conforming dequeue
+    /// (gaps, overlaps, empty chunks, leaked state) is refused with the
+    /// first stable diagnostic code in the error.  Use
+    /// [`UdsBuilder::register_unchecked`] to skip the gate for
+    /// exploratory templates.
     pub fn register(
+        self,
+        schedules: &ScheduleRegistry,
+    ) -> Result<Arc<LambdaFactory>, String> {
+        let factory = self.build();
+        schedules.register_factory_verified(
+            &factory.name,
+            factory.clone(),
+            "lambda-style user-defined schedule (§4.1)",
+        )?;
+        Ok(factory)
+    }
+
+    /// [`UdsBuilder::register`] without the conformance gate — the
+    /// opt-out for templates under development.  `uds verify <name>`
+    /// reports what the gate would have said.
+    pub fn register_unchecked(
         self,
         schedules: &ScheduleRegistry,
     ) -> Result<Arc<LambdaFactory>, String> {

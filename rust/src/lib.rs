@@ -7,6 +7,10 @@
 //! The crate is an OpenMP-like worksharing runtime whose scheduling layer
 //! is fully user-definable through the paper's proposed interface:
 //!
+//! * [`analysis`] — the schedule conformance analyzer behind
+//!   `uds verify` and the `VERIFY` wire verb: interval-domain bounds
+//!   and parameter domains (pass 1) plus exhaustive small-model trace
+//!   checking (pass 2), gating what the open registry will accept.
 //! * [`coordinator`] — the UDS `start`/`next`/`finish` operations, the
 //!   worksharing executor, both proposed surface syntaxes (§4.1 lambda
 //!   style, §4.2 declare style) and cross-invocation history.
@@ -60,6 +64,15 @@
 //! assert_eq!(stats.iterations, 1_000);
 //! ```
 
+// The whole crate is safe Rust; keep it that way.
+#![forbid(unsafe_code)]
+// Library code must not unwrap/expect casually.  Surviving sites carry
+// a module-level allow with the policy (lock poisoning is fatal by
+// design; invariant expects); tests and benches are exempt.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+#![cfg_attr(test, allow(clippy::unwrap_used, clippy::expect_used))]
+
+pub mod analysis;
 pub mod cluster;
 pub mod coordinator;
 pub mod eval;
@@ -73,6 +86,7 @@ pub mod sweep;
 pub mod util;
 pub mod workload;
 
+pub use analysis::{VerifyConfig, VerifyReport};
 pub use coordinator::{
     parallel_for, Chunk, ChunkFeedback, ExecOptions, HistoryArena, LoopRecord,
     LoopSpec, ScheduleFactory, Scheduler, TeamSpec,

@@ -19,6 +19,11 @@
 //!                      classes, composite heads, user-registered heads)
 //!                      plus the registered traces and the variability
 //!                      grammar; `--json` emits typed descriptors
+//! * `verify`         — run the schedule conformance analyzer over
+//!                      named labels (or `--all` registered targets):
+//!                      pass-1 interval/parameter checks plus pass-2
+//!                      exhaustive small-model trace checking, with
+//!                      stable `verify`-layer diagnostic codes
 //! * `list-errors`    — the stable wire error-code table (generated
 //!                      from [`uds::util::ErrorCode`])
 //! * `calibrate`      — measure this host's dequeue overhead `h`
@@ -32,6 +37,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+use uds::analysis::{self, VerifyConfig};
 use uds::cluster::{self, ClusterOptions, ClusterSummary, NodeStatus};
 use uds::coordinator::{
     parallel_for, ExecOptions, HistoryArena, LoopRecord, LoopSpec, TeamSpec,
@@ -98,6 +104,14 @@ USAGE:
             current run's largest batch/k<K> entry must be at least X
             times the per-scenario throughput of batch/k1; 0 disables.
             Report-only while the baseline is provisional)
+  uds verify LABEL [LABEL...] | --all  [--fixture] [--json]
+            (statically + exhaustively verify that each named schedule
+            satisfies the conformance contract — exact-once coverage,
+            chunk positivity, bounded progress, determinism, state
+            isolation; --all runs every registered target, --fixture
+            also registers the deliberately broken negative-control
+            fixtures, --json streams NDJSON diag/verify rows.  Exits
+            nonzero when any label fails)
   uds list-schedules [--json]
   uds list-workloads [--json]
   uds list-errors
@@ -121,7 +135,8 @@ VARIABILITY (--variability): calm | hetero:s1,s2,... |
   (simulated runs only)";
 
 /// Flags that take no value.
-const BOOL_FLAGS: [&str; 4] = ["real", "self-test", "update-baseline", "json"];
+const BOOL_FLAGS: [&str; 6] =
+    ["real", "self-test", "update-baseline", "json", "all", "fixture"];
 
 /// Minimal flag parser: positional args + `--key value` pairs.
 struct Flags {
@@ -195,6 +210,7 @@ fn main() {
             let flags = Flags::parse(&rest).unwrap_or_else(die);
             cmd_list_workloads(flags.has("json"))
         }
+        "verify" => cmd_verify(&rest),
         "list-errors" => {
             print!("{}", ErrorCode::markdown_table());
             Ok(())
@@ -372,6 +388,91 @@ noise:<prob>,<slow>,<seed>[,<window_ns>] | atoms joined with '+'"
 noise:<prob>,<slow>,<seed>[,<window_ns>] | atoms joined with '+'"
     );
     Ok(())
+}
+
+/// `uds verify` — run the schedule conformance analyzer over the named
+/// labels (or every registered target with `--all`) and exit nonzero if
+/// any fails.  `--fixture` first registers the deliberately broken
+/// negative-control schedules so their rejection is demonstrable from
+/// the CLI; `--json` streams the same NDJSON rows as the `VERIFY` wire
+/// verb.
+fn cmd_verify(args: &[String]) -> Result<(), String> {
+    let flags = Flags::parse(args)?;
+    let reg = ScheduleRegistry::global();
+    if flags.has("fixture") {
+        analysis::fixture::register_fixtures(reg);
+    }
+    let cfg = VerifyConfig::quick();
+    let labels: Vec<String> = if flags.has("all") {
+        analysis::verify_targets(reg)
+    } else if flags.positional.is_empty() {
+        return Err(format!("verify needs schedule labels or --all\n{USAGE}"));
+    } else {
+        flags.positional.clone()
+    };
+    let json = flags.has("json");
+    let mut failed: Vec<String> = Vec::new();
+    let mut diagnostics = 0usize;
+    for label in &labels {
+        let report = analysis::verify_label(reg, label, &cfg)
+            .map_err(|e| format!("verify {label}: {e}"))?;
+        if json {
+            for d in &report.diagnostics {
+                println!("{}", analysis::diag_json(&report.label, d));
+            }
+            println!("{}", analysis::report_json(&report));
+        } else if report.conforms() {
+            let bounds = match report.chunk_bounds {
+                Some(b) => format!(
+                    "  chunks [{}, {}] ({})",
+                    b.lo,
+                    b.hi,
+                    if report.bounds_derived { "derived" } else { "observed" }
+                ),
+                None => String::new(),
+            };
+            println!(
+                "ok   {:<24} {} scenarios{}",
+                report.label, report.scenarios, bounds
+            );
+        } else {
+            println!(
+                "FAIL {:<24} {} diagnostic(s)",
+                report.label,
+                report.diagnostics.len()
+            );
+            for d in &report.diagnostics {
+                println!("     [{}] {}: {}", d.pass.as_str(), d.code.as_str(), d.detail);
+            }
+        }
+        diagnostics += report.diagnostics.len();
+        if !report.conforms() {
+            failed.push(report.label.clone());
+        }
+    }
+    if json {
+        println!(
+            "{}",
+            JsonObj::new()
+                .str("type", "verify_summary")
+                .u64("labels", labels.len() as u64)
+                .u64("conforming", (labels.len() - failed.len()) as u64)
+                .u64("diagnostics", diagnostics as u64)
+                .finish()
+        );
+    } else {
+        println!(
+            "verify: {} of {} schedules conform ({} diagnostics)",
+            labels.len() - failed.len(),
+            labels.len(),
+            diagnostics
+        );
+    }
+    if failed.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("non-conforming schedules: {}", failed.join(", ")))
+    }
 }
 
 fn cmd_run(args: &[String]) -> Result<(), String> {

@@ -19,6 +19,11 @@
 //! point that parses back to an equal spec — which is what lets sweep
 //! reports and roster tables identify scenarios unambiguously.
 
+// Policy exception to the crate-level unwrap/expect warns: lock
+// poisoning is fatal by design here, and the surviving expects assert
+// crate-internal invariants (see lib.rs).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock, RwLock};
 
@@ -122,6 +127,12 @@ impl Registration {
 
     pub fn summary(&self) -> &str {
         &self.summary
+    }
+
+    /// Roster labels this entry contributes to the E2/E3 sweep set
+    /// (empty for entries kept off the roster, e.g. `awf-d`).
+    pub fn roster_labels(&self) -> &[String] {
+        &self.roster_labels
     }
 
     /// Whether this entry is one of the crate's builtin strategies (as
@@ -339,6 +350,39 @@ impl ScheduleRegistry {
         self.register(
             registration(name).summary(summary).open(move |_| Ok(factory.clone())),
         )
+    }
+
+    /// [`ScheduleRegistry::register_factory`] with the conformance
+    /// analyzer in front: the factory is model-checked
+    /// ([`crate::analysis::verify_factory`]) and refused — with the
+    /// first stable diagnostic code in the error — if it violates the
+    /// schedule contract.  Entries are never removed, so the check runs
+    /// *before* the name is taken; a refused name stays available.
+    ///
+    /// This is the hook behind the verified-by-default publish paths
+    /// ([`crate::coordinator::declare::Registry::publish`],
+    /// [`crate::coordinator::lambda::UdsBuilder::register`]); call the
+    /// raw [`ScheduleRegistry::register_factory`] to opt out for
+    /// exploratory schedules.
+    pub fn register_factory_verified(
+        &self,
+        name: &str,
+        factory: Arc<dyn ScheduleFactory>,
+        summary: &str,
+    ) -> Result<(), String> {
+        let cfg = crate::analysis::VerifyConfig::quick();
+        let report = crate::analysis::verify_factory(name, factory.as_ref(), &cfg);
+        if let Some(d) = report.diagnostics.first() {
+            return Err(format!(
+                "schedule '{name}' failed conformance verification \
+                 ({} of {} checks): {} — {}",
+                report.diagnostics.len(),
+                report.scenarios,
+                d.code,
+                d.detail
+            ));
+        }
+        self.register_factory(name, factory, summary)
     }
 
     /// Whether `head` (a canonical name or alias, case-insensitive)
@@ -784,6 +828,24 @@ mod tests {
 
     fn factory_for(name: &str) -> Arc<dyn ScheduleFactory> {
         Arc::new(FnFactory::new(name.to_string(), || schedules::fac2()))
+    }
+
+    #[test]
+    fn register_factory_verified_refuses_broken_and_keeps_the_name_free() {
+        let reg = ScheduleRegistry::with_builtins();
+        let err = reg
+            .register_factory_verified(
+                "contested",
+                crate::analysis::fixture::gap_factory(),
+                "broken",
+            )
+            .unwrap_err();
+        assert!(err.contains("coverage_gap"), "{err}");
+        assert!(!reg.contains("contested"), "refused names stay available");
+        // A conforming factory then claims the same name.
+        reg.register_factory_verified("contested", factory_for("contested"), "ok")
+            .unwrap();
+        assert!(reg.contains("contested"));
     }
 
     #[test]

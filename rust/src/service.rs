@@ -46,6 +46,12 @@
 //! [`crate::store::query`] and EXPERIMENTS.md §Result store & queries;
 //! a store-less service answers `ERR no_store`.
 //!
+//! A `VERIFY` line — `VERIFY <label> [<label>...]` or `VERIFY --all` —
+//! runs the schedule conformance analyzer ([`crate::analysis`]) over
+//! the named labels (or every registered target) and streams NDJSON
+//! `diag`/`verify` rows plus a terminal `verify_summary` record; see
+//! EXPERIMENTS.md §Schedule verification.
+//!
 //! Error codes are stable protocol surface, enumerated (and documented
 //! one-per-line) by [`crate::util::ErrorCode`] — the request layer
 //! (`bad_request`, `bad_field`, `bad_value`, `bad_schedule`,
@@ -90,6 +96,11 @@
 //!   bounded scoped-worker pool in [`crate::sweep`], prefetching each
 //!   distinct workload into the shared cache exactly once; results are
 //!   bit-identical for any worker count.
+
+// Policy exception to the crate-level unwrap/expect warns: lock
+// poisoning is fatal by design here, and the surviving expects assert
+// crate-internal invariants (see lib.rs).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -508,6 +519,62 @@ imbalance_pct={:.4} efficiency={:.4}",
             }
         }
     }
+
+    /// Handle one `VERIFY` line — `VERIFY <label> [<label>...]` or
+    /// `VERIFY --all` — running the schedule conformance analyzer
+    /// ([`crate::analysis`]) against the global registry and streaming
+    /// one NDJSON `diag` row per violation, one `verify` row per label,
+    /// and a terminal `verify_summary` record.  A label that does not
+    /// resolve answers `ERR bad_schedule`; an argument-less line
+    /// answers `ERR bad_request`.
+    pub fn handle_verify<W: Write>(&self, line: &str, writer: &mut W) {
+        let args: Vec<&str> = line.split_whitespace().skip(1).collect();
+        let reg = crate::schedules::registry::ScheduleRegistry::global();
+        let cfg = crate::analysis::VerifyConfig::quick();
+        let labels: Vec<String> = if args.iter().any(|a| *a == "--all") {
+            crate::analysis::verify_targets(reg)
+        } else if args.is_empty() {
+            let e = ErrorCode::BadRequest.err("VERIFY needs schedule labels or --all");
+            let _ = writeln!(writer, "{}", e.wire());
+            return;
+        } else {
+            args.iter().map(|s| (*s).to_string()).collect()
+        };
+        let mut conforming = 0usize;
+        let mut diagnostics = 0usize;
+        for label in &labels {
+            let report = match crate::analysis::verify_label(reg, label, &cfg) {
+                Ok(r) => r,
+                Err(e) => {
+                    let _ = writeln!(writer, "{}", ErrorCode::BadSchedule.err(e).wire());
+                    return;
+                }
+            };
+            for d in &report.diagnostics {
+                diagnostics += 1;
+                let row = crate::analysis::diag_json(&report.label, d);
+                if writeln!(writer, "{row}").is_err() {
+                    return;
+                }
+            }
+            if report.conforms() {
+                conforming += 1;
+            }
+            if writeln!(writer, "{}", crate::analysis::report_json(&report)).is_err() {
+                return;
+            }
+        }
+        let _ = writeln!(
+            writer,
+            "{}",
+            crate::util::json::JsonObj::new()
+                .str("type", "verify_summary")
+                .u64("labels", labels.len() as u64)
+                .u64("conforming", conforming as u64)
+                .u64("diagnostics", diagnostics as u64)
+                .finish()
+        );
+    }
 }
 
 /// Handle one request against a process-wide [`Service`] with a
@@ -548,6 +615,14 @@ fn client_loop(stream: TcpStream, svc: &Service, arena: &mut SimArena) {
         if line.starts_with("QUERY") {
             let mut buffered = std::io::BufWriter::new(&mut writer);
             svc.handle_query(line, &mut buffered);
+            if buffered.flush().is_err() {
+                break;
+            }
+            continue;
+        }
+        if line.starts_with("VERIFY") {
+            let mut buffered = std::io::BufWriter::new(&mut writer);
+            svc.handle_verify(line, &mut buffered);
             if buffered.flush().is_err() {
                 break;
             }
@@ -721,6 +796,53 @@ mod tests {
         let mut req = JobRequest::parse("schedule=fac2 n=10").unwrap();
         req.threads = 0;
         assert!(handle(&req).starts_with("ERR bad_threads"));
+    }
+
+    #[test]
+    fn verify_verb_streams_rows_and_summary() {
+        let svc = Service::new();
+        let mut out = Vec::new();
+        svc.handle_verify("VERIFY guided", &mut out);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // guided conforms: one verify row plus the terminal summary.
+        assert_eq!(lines.len(), 2, "{text}");
+        assert!(lines[0].contains("\"type\":\"verify\""), "{text}");
+        assert!(lines[0].contains("\"label\":\"guided"), "{text}");
+        assert!(lines[0].contains("\"conforms\":true"), "{text}");
+        assert!(lines[1].contains("\"type\":\"verify_summary\""), "{text}");
+        assert!(lines[1].contains("\"conforming\":1"), "{text}");
+    }
+
+    #[test]
+    fn verify_verb_rejects_unknown_labels_and_empty_lines() {
+        let svc = Service::new();
+        let mut out = Vec::new();
+        svc.handle_verify("VERIFY no_such_schedule", &mut out);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("ERR bad_schedule"), "{text}");
+
+        let mut out = Vec::new();
+        svc.handle_verify("VERIFY", &mut out);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("ERR bad_request"), "{text}");
+    }
+
+    #[test]
+    fn verify_all_covers_the_registered_targets() {
+        let svc = Service::new();
+        let mut out = Vec::new();
+        svc.handle_verify("VERIFY --all", &mut out);
+        let text = String::from_utf8(out).unwrap();
+        let summary = text.lines().last().unwrap();
+        assert!(summary.contains("\"type\":\"verify_summary\""), "{text}");
+        let map = parse_flat(summary).unwrap();
+        let labels: u64 = map["labels"].parse().unwrap();
+        assert!(labels >= 20, "{summary}");
+        // Global-wide conformity is deliberately NOT asserted here:
+        // other tests may register broken fixtures into the global
+        // registry.  verify_e2e proves roster conformity over a
+        // private registry.
     }
 
     /// The satellite error-path table: malformed workload/variability

@@ -4,6 +4,11 @@
 //! reports min/median/mean per iteration.  Used by the `cargo bench`
 //! targets (which are `harness = false` plain binaries).
 
+// Policy exception to the crate-level unwrap/expect warns: lock
+// poisoning is fatal by design here, and the surviving expects assert
+// crate-internal invariants (see lib.rs).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement.

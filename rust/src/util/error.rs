@@ -64,11 +64,29 @@ pub enum ErrorCode {
     StoreIo,
     /// A store segment file failed validation.
     StoreCorrupt,
+    /// A schedule parameter is outside its valid domain.
+    ParamDomain,
+    /// A schedule can emit an empty (zero-length) chunk.
+    NonpositiveChunk,
+    /// The dequeue budget was exhausted before the loop drained.
+    NoProgress,
+    /// An iteration was never dispatched.
+    CoverageGap,
+    /// An iteration was dispatched more than once.
+    CoverageOverlap,
+    /// A dispatched chunk extends past the iteration space.
+    ChunkOutOfRange,
+    /// Two identical runs produced different dispatch traces.
+    Nondeterministic,
+    /// Concurrent instances from one factory share mutable state.
+    StateLeak,
+    /// The schedule panicked while being model-checked.
+    SchedulePanic,
 }
 
 impl ErrorCode {
     /// Every code, in the order the documentation table lists them.
-    pub const ALL: [ErrorCode; 21] = [
+    pub const ALL: [ErrorCode; 30] = [
         ErrorCode::BadRequest,
         ErrorCode::BadField,
         ErrorCode::BadValue,
@@ -90,6 +108,15 @@ impl ErrorCode {
         ErrorCode::BadQuery,
         ErrorCode::StoreIo,
         ErrorCode::StoreCorrupt,
+        ErrorCode::ParamDomain,
+        ErrorCode::NonpositiveChunk,
+        ErrorCode::NoProgress,
+        ErrorCode::CoverageGap,
+        ErrorCode::CoverageOverlap,
+        ErrorCode::ChunkOutOfRange,
+        ErrorCode::Nondeterministic,
+        ErrorCode::StateLeak,
+        ErrorCode::SchedulePanic,
     ];
 
     /// The wire spelling (`ERR <code> ...`).
@@ -116,6 +143,15 @@ impl ErrorCode {
             ErrorCode::BadQuery => "bad_query",
             ErrorCode::StoreIo => "store_io",
             ErrorCode::StoreCorrupt => "store_corrupt",
+            ErrorCode::ParamDomain => "param_domain",
+            ErrorCode::NonpositiveChunk => "nonpositive_chunk",
+            ErrorCode::NoProgress => "no_progress",
+            ErrorCode::CoverageGap => "coverage_gap",
+            ErrorCode::CoverageOverlap => "coverage_overlap",
+            ErrorCode::ChunkOutOfRange => "chunk_out_of_range",
+            ErrorCode::Nondeterministic => "nondeterministic",
+            ErrorCode::StateLeak => "state_leak",
+            ErrorCode::SchedulePanic => "schedule_panic",
         }
     }
 
@@ -141,6 +177,15 @@ impl ErrorCode {
             | ErrorCode::BadQuery
             | ErrorCode::StoreIo
             | ErrorCode::StoreCorrupt => "store",
+            ErrorCode::ParamDomain
+            | ErrorCode::NonpositiveChunk
+            | ErrorCode::NoProgress
+            | ErrorCode::CoverageGap
+            | ErrorCode::CoverageOverlap
+            | ErrorCode::ChunkOutOfRange
+            | ErrorCode::Nondeterministic
+            | ErrorCode::StateLeak
+            | ErrorCode::SchedulePanic => "verify",
         }
     }
 
@@ -186,6 +231,25 @@ impl ErrorCode {
                 "A segment file failed validation (magic/bounds/checksum); \
                  the store refuses to open."
             }
+            ErrorCode::ParamDomain => {
+                "A schedule parameter is outside its valid domain; the constructor would reject it."
+            }
+            ErrorCode::NonpositiveChunk => {
+                "The schedule can emit an empty (zero-length) chunk, violating chunk positivity."
+            }
+            ErrorCode::NoProgress => {
+                "The dequeue budget was exhausted before the loop drained; termination unproven."
+            }
+            ErrorCode::CoverageGap => "An iteration was never dispatched by the trace.",
+            ErrorCode::CoverageOverlap => "An iteration was dispatched more than once.",
+            ErrorCode::ChunkOutOfRange => "A dispatched chunk extends past the iteration space.",
+            ErrorCode::Nondeterministic => {
+                "Two identical runs produced different dispatch traces."
+            }
+            ErrorCode::StateLeak => {
+                "Concurrent instances built by one factory share mutable state."
+            }
+            ErrorCode::SchedulePanic => "The schedule panicked while being model-checked.",
         }
     }
 

@@ -16,6 +16,11 @@
 //! index is immutable after construction and `Sync`, so one instance is
 //! safely shared across sweep threads and cached service requests.
 
+// Policy exception to the crate-level unwrap/expect warns: lock
+// poisoning is fatal by design here, and the surviving expects assert
+// crate-internal invariants (see lib.rs).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::workload::cost_model::CostModel;
 
 /// Immutable cumulative-cost table over an iteration space `0..n`.

@@ -787,3 +787,39 @@ fn prop_adaptives_cover_across_invocations() {
         }
     });
 }
+
+/// The conformance analyzer's verdict is workload-independent: every
+/// registered builtin target still passes the full pass-2 model check
+/// when the feedback timings come from a randomly chosen workload head
+/// instead of unit costs (adaptive schedules see realistic chunk
+/// timings and must stay violation-free).
+#[test]
+fn prop_roster_conforms() {
+    use uds::analysis::{verify_label_costed, verify_targets, VerifyConfig};
+    use uds::schedules::registry::ScheduleRegistry;
+    let reg = ScheduleRegistry::with_builtins();
+    let targets = verify_targets(&reg);
+    assert!(targets.len() >= 15, "{targets:?}");
+    let heads = [
+        "uniform", "increasing", "decreasing", "gaussian", "exponential",
+        "lognormal", "bimodal", "sawtooth", "mix:uniform:lognormal",
+        "phased:uniform:exponential", "burst:uniform", "trace:stairs",
+    ];
+    let cfg = VerifyConfig::quick();
+    cases("roster_conforms", 40, |rng| {
+        let label = &targets[rng.range_u64(0, targets.len() as u64 - 1) as usize];
+        let head = heads[rng.range_u64(0, heads.len() as u64 - 1) as usize];
+        let seed = rng.range_u64(0, 1_000_000);
+        let wspec = WorkloadRegistry::global()
+            .parse(head)
+            .unwrap_or_else(|e| panic!("{head}: {e}"));
+        let cost = move |n: u64| wspec.model(n, 1000.0, seed);
+        let report = verify_label_costed(&reg, label, &cfg, Some(&cost))
+            .unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert!(
+            report.conforms(),
+            "{label} x {head} seed={seed}: {:?}",
+            report.diagnostics
+        );
+    });
+}

@@ -1,0 +1,194 @@
+//! End-to-end tests for the schedule conformance analyzer: the full
+//! builtin roster conforms, non-conforming schedules are refused at
+//! both publish surfaces (§4.2 declare, §4.1 lambda) with stable
+//! diagnostic codes, the unchecked opt-outs still register, and the
+//! `VERIFY` wire verb streams the same verdicts over TCP.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicI64, Ordering};
+
+use uds::analysis::{verify_all, verify_label, verify_targets, VerifyConfig};
+use uds::coordinator::declare::{Args, DeclarationBuilder, Registry};
+use uds::coordinator::lambda::UdsBuilder;
+use uds::schedules::registry::ScheduleRegistry;
+use uds::service::serve_on;
+use uds::util::ErrorCode;
+
+/// The acceptance bar: every registered builtin target passes the full
+/// two-pass conformance check.
+#[test]
+fn every_builtin_target_conforms() {
+    let reg = ScheduleRegistry::with_builtins();
+    let cfg = VerifyConfig::quick();
+    let targets = verify_targets(&reg);
+    assert!(targets.len() >= 15, "{targets:?}");
+    let reports = verify_all(&reg, &cfg);
+    assert_eq!(reports.len(), targets.len());
+    for r in &reports {
+        assert!(r.conforms(), "{}: {:?}", r.label, r.diagnostics);
+    }
+}
+
+/// A declare-style schedule that silently drops the last iteration:
+/// `publish` must refuse it with `coverage_gap`, leave the name free,
+/// and `publish_unchecked` must still register it — after which the
+/// analyzer reports the same verdict by label.
+#[test]
+fn declare_publish_refuses_broken_schedule() {
+    let decl = Registry::new();
+    decl.declare(
+        DeclarationBuilder::schedule("drop_last")
+            .arguments(2) // omp_arg0 = cursor, omp_arg1 = (deliberately off) limit
+            .init(|lb, ub, _incr, _chunk, _nthreads, args| {
+                args.arg::<AtomicI64>(0).store(lb, Ordering::Relaxed);
+                // The bug under test: stops one iteration short.
+                args.arg::<AtomicI64>(1).store(ub - 1, Ordering::Relaxed);
+            })
+            .next(|lower, upper, incr, _tid, _fb, args| {
+                let i = args.arg::<AtomicI64>(0).fetch_add(1, Ordering::Relaxed);
+                if i >= args.arg::<AtomicI64>(1).load(Ordering::Relaxed) {
+                    return false;
+                }
+                *lower = i;
+                *upper = i + 1;
+                *incr = 1;
+                true
+            })
+            .build(),
+    )
+    .unwrap();
+    let make_args = || Args::new().with(AtomicI64::new(0)).with(AtomicI64::new(0));
+
+    let schedules = ScheduleRegistry::new();
+    let err = decl
+        .publish(&schedules, "drop_last", "drops the last iteration", make_args)
+        .unwrap_err();
+    assert!(err.contains("coverage_gap"), "{err}");
+    assert!(err.contains("drop_last"), "{err}");
+    // The refused name stays free for a fixed implementation.
+    assert!(!schedules.contains("drop_last"));
+
+    // The opt-out registers it anyway ...
+    decl.publish_unchecked(&schedules, "drop_last", "drops the last iteration", make_args)
+        .unwrap();
+    assert!(schedules.contains("drop_last"));
+    // ... and `uds verify` then reports exactly what the gate saw.
+    let report = verify_label(&schedules, "drop_last", &VerifyConfig::quick()).unwrap();
+    assert!(!report.conforms());
+    assert_eq!(report.first_code(), Some(ErrorCode::CoverageGap));
+}
+
+/// A lambda-style template that dispatches iteration 0 twice:
+/// `register` must refuse it with `coverage_overlap`; the unchecked
+/// path still registers, and the analyzer agrees by label.
+#[test]
+fn lambda_register_refuses_broken_template() {
+    let broken = || {
+        UdsBuilder::named("bad_overlap")
+            .init(|_| Box::new(AtomicI64::new(0)))
+            .dequeue(|_ctx, state, _tid, _fb, sink| {
+                let cur = state.downcast_ref::<AtomicI64>().unwrap();
+                if cur.fetch_add(1, Ordering::Relaxed) < 2 {
+                    // The bug under test: the same iteration, twice.
+                    sink.chunk_start(0);
+                    sink.chunk_end(1);
+                } else {
+                    sink.dequeue_done();
+                }
+            })
+    };
+    let schedules = ScheduleRegistry::new();
+    let err = broken().register(&schedules).unwrap_err();
+    assert!(err.contains("coverage_overlap"), "{err}");
+    assert!(!schedules.contains("bad_overlap"));
+
+    broken().register_unchecked(&schedules).unwrap();
+    let report = verify_label(&schedules, "bad_overlap", &VerifyConfig::quick()).unwrap();
+    assert_eq!(report.first_code(), Some(ErrorCode::CoverageOverlap));
+}
+
+/// The positive publish path: a conforming serial template passes the
+/// gate and the by-label analyzer alike.
+#[test]
+fn lambda_register_accepts_conforming_template() {
+    let schedules = ScheduleRegistry::new();
+    UdsBuilder::named("ok_serial")
+        .init(|_| Box::new(AtomicI64::new(0)))
+        .dequeue(|ctx, state, _tid, _fb, sink| {
+            let cur = state.downcast_ref::<AtomicI64>().unwrap();
+            let k = cur.fetch_add(1, Ordering::Relaxed);
+            let lb = ctx.loop_start() + k * ctx.loop_step();
+            if lb >= ctx.loop_end() {
+                sink.dequeue_done();
+                return;
+            }
+            sink.chunk_start(lb);
+            sink.chunk_end(lb + ctx.loop_step());
+        })
+        .register(&schedules)
+        .unwrap();
+    assert!(schedules.contains("ok_serial"));
+    let report = verify_label(&schedules, "ok_serial", &VerifyConfig::quick()).unwrap();
+    assert!(report.conforms(), "{:?}", report.diagnostics);
+}
+
+/// The `VERIFY` wire verb over a real TCP round-trip: per-label rows,
+/// the terminal summary, stable `ERR` lines for unknown labels, and a
+/// full `--all` sweep of the (builtin) global registry.
+#[test]
+fn verify_wire_verb_end_to_end() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || serve_on(listener, 2));
+
+    let mut c = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(c.try_clone().unwrap());
+
+    // One conforming label: a verify row, then the summary.
+    writeln!(c, "VERIFY guided").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"type\":\"verify\""), "{line}");
+    assert!(line.contains("\"conforms\":true"), "{line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"type\":\"verify_summary\""), "{line}");
+    assert!(line.contains("\"conforming\":1"), "{line}");
+
+    // Unknown labels answer the stable code; the connection survives.
+    line.clear();
+    writeln!(c, "VERIFY no_such_schedule_xyz").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR bad_schedule"), "{line}");
+
+    // --all sweeps every registered target of the server's registry.
+    writeln!(c, "VERIFY --all").unwrap();
+    let mut rows = 0usize;
+    loop {
+        let mut l = String::new();
+        reader.read_line(&mut l).unwrap();
+        if l.contains("\"type\":\"verify_summary\"") {
+            // This test binary never registers broken schedules into
+            // the global registry, so the sweep is all-conforming.
+            let labels = flat_u64(&l, "labels");
+            assert!(labels >= 20, "{l}");
+            assert_eq!(flat_u64(&l, "conforming"), labels, "{l}");
+            break;
+        }
+        assert!(l.contains("\"type\":\"verify\""), "{l}");
+        rows += 1;
+    }
+    assert!(rows >= 20, "{rows}");
+}
+
+/// Pull one numeric field out of a flat NDJSON row.
+fn flat_u64(line: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let rest = &line[line.find(&pat).unwrap() + pat.len()..];
+    rest.chars()
+        .take_while(char::is_ascii_digit)
+        .collect::<String>()
+        .parse()
+        .unwrap()
+}
