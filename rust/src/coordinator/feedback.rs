@@ -64,6 +64,27 @@ impl Welford {
         }
     }
 
+    /// Fold another accumulator into this one (Chan et al.'s pairwise
+    /// merge).  The result is exactly the accumulator of the union of
+    /// both sample streams — mean, variance *and* `n` — without
+    /// synthesizing per-sample pushes, so downstream consumers of `n`
+    /// (e.g. the auto-selector's explore gate) see the true count.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        self.mean += delta * other.n as f64 / n as f64;
+        self.m2 +=
+            other.m2 + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+    }
+
     /// Sample variance; 0 until two samples exist.
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
@@ -109,6 +130,35 @@ mod tests {
         assert!((w.mean - 5.0).abs() < 1e-12);
         // Sample variance of that set is 32/7.
         assert!((w.variance() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_matches_single_stream() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        for split in 0..=xs.len() {
+            let (lo, hi) = xs.split_at(split);
+            let mut a = Welford::default();
+            let mut b = Welford::default();
+            lo.iter().for_each(|&x| a.push(x));
+            hi.iter().for_each(|&x| b.push(x));
+            a.merge(&b);
+            assert_eq!(a.n, xs.len() as u64, "split {split}");
+            assert!((a.mean - 5.0).abs() < 1e-12, "split {split}");
+            assert!((a.variance() - 32.0 / 7.0).abs() < 1e-12, "split {split}");
+        }
+    }
+
+    #[test]
+    fn welford_merge_with_empty_is_identity() {
+        let mut a = Welford::default();
+        a.push(1.0);
+        a.push(3.0);
+        let before = (a.n, a.mean, a.variance());
+        a.merge(&Welford::default());
+        assert_eq!((a.n, a.mean, a.variance()), before);
+        let mut empty = Welford::default();
+        empty.merge(&a);
+        assert_eq!((empty.n, empty.mean, empty.variance()), before);
     }
 
     #[test]

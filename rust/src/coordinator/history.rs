@@ -86,6 +86,17 @@ impl LoopRecord {
         self.invocations += 1;
     }
 
+    /// Fold one invocation's whole-loop iteration-time accumulator into
+    /// the persistent [`LoopRecord::loop_stats`] via an exact Welford
+    /// merge.  This replaces the old synthetic-sample hack (pushing
+    /// `mean` and `mean ± stddev` as three fake observations), which
+    /// inflated `loop_stats.n` and biased the cov the auto-selector
+    /// reads: after the merge, `loop_stats` is bit-for-bit the
+    /// accumulator of the concatenated per-invocation sample streams.
+    pub fn fold_loop_stats(&mut self, observed: &Welford) {
+        self.loop_stats.merge(observed);
+    }
+
     /// Measured per-thread execution *rate* (ns per iteration); `None` for
     /// threads that have not executed anything yet.
     pub fn thread_rate_ns(&self, tid: usize) -> Option<f64> {
@@ -315,6 +326,24 @@ mod tests {
         assert!(arena.load(&path).is_err());
         std::fs::write(&path, "[a]\nnot_a_kv_line\n").unwrap();
         assert!(arena.load(&path).is_err());
+    }
+
+    #[test]
+    fn fold_loop_stats_is_an_exact_merge() {
+        let mut r = LoopRecord::default();
+        let mut direct = Welford::default();
+        for inv in 0..3u64 {
+            let mut obs = Welford::default();
+            for k in 0..4u64 {
+                let x = (inv * 10 + k) as f64;
+                obs.push(x);
+                direct.push(x);
+            }
+            r.fold_loop_stats(&obs);
+        }
+        assert_eq!(r.loop_stats.n, direct.n, "no synthetic samples");
+        assert!((r.loop_stats.mean - direct.mean).abs() < 1e-12);
+        assert!((r.loop_stats.variance() - direct.variance()).abs() < 1e-9);
     }
 
     #[test]

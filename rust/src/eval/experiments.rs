@@ -1,4 +1,4 @@
-//! The E1–E8 experiments (see EXPERIMENTS.md).
+//! The E1–E9 experiments (see EXPERIMENTS.md).
 //!
 //! All experiments except E8 run on the deterministic virtual-time
 //! simulator so results are exactly reproducible; E8 exercises the
@@ -759,6 +759,240 @@ pub fn e8(cfg: &EvalConfig, artifacts: &Path) -> Vec<Table> {
     vec![t]
 }
 
+// -----------------------------------------------------------------------
+// E9 — selection-strategy regret vs the exhaustive per-scenario oracle
+// -----------------------------------------------------------------------
+
+/// The E9 selector roster: expert rules and both bandit policies, every
+/// head resolvable through the schedule registry.
+pub fn e9_selectors() -> Vec<ScheduleSpec> {
+    ["auto", "bandit:ucb", "bandit:eps"]
+        .iter()
+        .map(|l| ScheduleSpec::parse(l).expect("builtin selector"))
+        .collect()
+}
+
+/// The E9 scenario grid: stationary baselines plus the composite
+/// nonstationary axes (`phased:`, `burst:`) crossed with machine models
+/// (`calm`, `hetero:`, `noise:`), two seeds each.
+fn e9_scenarios(cfg: &EvalConfig) -> Vec<crate::sweep::select::SelectorScenario> {
+    use crate::sweep::select::SelectorScenario;
+    let n = cfg.n.min(4_000);
+    let workloads = [
+        // Stationary: shape constant across the iteration space.
+        "gaussian",
+        "exponential",
+        // Nonstationary: mid-loop regime change / periodic spikes.
+        "phased:uniform:gaussian",
+        "phased:increasing:uniform",
+        "burst:uniform",
+        "burst:lognormal",
+    ];
+    let noise = format!(
+        "noise:0.2,0.25,{},{}",
+        cfg.seed ^ 0xA5,
+        (cfg.mean_ns as u64 * 200).max(1)
+    );
+    let variabilities = ["calm".to_string(), "hetero:1,1,2,4".to_string(), noise];
+    let mut out = Vec::new();
+    for w in &workloads {
+        for v in &variabilities {
+            for s in 0..2u64 {
+                out.push(SelectorScenario {
+                    workload: crate::workload::WorkloadSpec::parse(w)
+                        .expect("builtin workload"),
+                    variability: VariabilitySpec::parse(v).expect("builtin variability"),
+                    n,
+                    threads: cfg.p,
+                    mean_ns: cfg.mean_ns,
+                    h_ns: cfg.h_ns,
+                    seed: cfg.seed.wrapping_add(s.wrapping_mul(0x9E37)),
+                    invocations: 10,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// E9: selection strategies (expert rules vs online bandits) measured
+/// against the exhaustive per-scenario oracle — every candidate arm run
+/// as a fixed schedule over the same invocation sequence, best total
+/// kept (see EXPERIMENTS.md §E9).
+///
+/// With `store`, the full comparison set (candidate arms *and*
+/// selectors, keyed by total makespan over the invocation sequence) is
+/// persisted, so `uds query "QUERY regret" --store DIR` reproduces the
+/// regret table from the store alone.
+pub fn e9(cfg: &EvalConfig, store: Option<&Path>) -> Vec<Table> {
+    use crate::service::Service;
+    use crate::sweep::select::run_selector_grid_full;
+
+    let svc = Service::new();
+    let scenarios = e9_scenarios(cfg);
+    let selectors = e9_selectors();
+    let picked = run_selector_grid_full(&svc, &scenarios, &selectors, &[], 0);
+
+    // ---- Detail table: one row per scenario ----
+    let mut headers: Vec<String> = vec![
+        "workload".into(),
+        "variability".into(),
+        "seed".into(),
+        "oracle arm".into(),
+        "oracle total".into(),
+    ];
+    headers.extend(selectors.iter().map(|s| format!("{} regret%", s.label())));
+    let mut detail = Table::new(
+        "e9_regret_scenarios",
+        format!(
+            "per-scenario selector regret vs exhaustive oracle, \
+             {} invocations each",
+            scenarios.first().map_or(0, |s| s.invocations)
+        ),
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    for sel in &picked {
+        let Some(first) = sel.rows.first() else { continue };
+        let mut cells = vec![
+            first.workload.clone(),
+            first.variability.clone(),
+            first.seed.to_string(),
+            first.oracle_arm.clone(),
+            fmt_ns(first.oracle_ns),
+        ];
+        cells.extend(sel.rows.iter().map(|r| format!("{:.2}", r.regret_pct)));
+        detail.row(cells);
+    }
+
+    // ---- Summary table: per-selector mean/max regret, split by
+    // stationarity (the paper's comparison axis) ----
+    #[derive(Default)]
+    struct Acc {
+        sum: f64,
+        max: f64,
+        nonstat_sum: f64,
+        nonstat_n: u64,
+        stat_sum: f64,
+        stat_n: u64,
+        wins: u64,
+        n: u64,
+    }
+    let mut accs: Vec<(String, Acc)> = selectors
+        .iter()
+        .map(|s| (s.label(), Acc::default()))
+        .collect();
+    for sel in &picked {
+        for r in &sel.rows {
+            let acc = &mut accs
+                .iter_mut()
+                .find(|(l, _)| *l == r.selector)
+                .expect("selector row matches roster")
+                .1;
+            acc.sum += r.regret_pct;
+            acc.n += 1;
+            if r.regret_pct > acc.max {
+                acc.max = r.regret_pct;
+            }
+            if r.nonstationary {
+                acc.nonstat_sum += r.regret_pct;
+                acc.nonstat_n += 1;
+            } else {
+                acc.stat_sum += r.regret_pct;
+                acc.stat_n += 1;
+            }
+            if r.total_makespan_ns <= r.oracle_ns {
+                acc.wins += 1;
+            }
+        }
+    }
+    let mut summary = Table::new(
+        "e9_regret",
+        format!(
+            "selector regret vs per-scenario oracle over {} scenarios \
+             (arms: {})",
+            scenarios.len(),
+            crate::schedules::select::DEFAULT_ARMS.join("/")
+        ),
+        &[
+            "selector",
+            "scenarios",
+            "mean regret%",
+            "nonstat mean%",
+            "stat mean%",
+            "max regret%",
+            "oracle wins",
+        ],
+    );
+    for (label, acc) in &accs {
+        summary.row(vec![
+            label.clone(),
+            acc.n.to_string(),
+            format!("{:.2}", acc.sum / acc.n.max(1) as f64),
+            format!("{:.2}", acc.nonstat_sum / acc.nonstat_n.max(1) as f64),
+            format!("{:.2}", acc.stat_sum / acc.stat_n.max(1) as f64),
+            format!("{:.2}", acc.max),
+            acc.wins.to_string(),
+        ]);
+    }
+
+    // ---- Optional persistence: arms + selectors, totals as makespan.
+    // Every row of a scenario shares the scenario identity (workload /
+    // variability / n / threads / mean_ns / h_ns / seed), so the store's
+    // `regret` op groups them together and its per-group min *is* the
+    // arm oracle — `uds query "QUERY regret" --store DIR` reproduces
+    // this table.
+    if let Some(dir) = store {
+        match crate::store::ResultStore::open(dir) {
+            Ok(rs) => {
+                let mut results = Vec::new();
+                for sel in &picked {
+                    let sc = &scenarios[sel.scenario_idx];
+                    for o in sel.arms.iter().chain(sel.selectors.iter()) {
+                        results.push(selector_result(results.len() as u64, sc, o));
+                    }
+                }
+                match rs.append(&results) {
+                    Ok(added) => eprintln!(
+                        "e9: persisted {added} new rows to {}",
+                        dir.display()
+                    ),
+                    Err(e) => eprintln!("e9: store append failed: {e}"),
+                }
+            }
+            Err(e) => eprintln!("e9: cannot open store {}: {e}", dir.display()),
+        }
+    }
+
+    vec![summary, detail]
+}
+
+/// One E9 outcome (candidate arm or selector head) as a wire/store row:
+/// `makespan_ns` carries the *total* over the scenario's invocation
+/// sequence, so the store's `regret` op (min per scenario group)
+/// recovers the oracle.
+fn selector_result(
+    id: u64,
+    sc: &crate::sweep::select::SelectorScenario,
+    o: &crate::sweep::select::SelectorOutcome,
+) -> crate::eval::report::ScenarioResult {
+    crate::eval::report::ScenarioResult {
+        id,
+        schedule: o.schedule.clone(),
+        workload: sc.workload.label().to_string(),
+        variability: sc.variability.label(),
+        n: sc.n,
+        threads: sc.threads as u64,
+        mean_ns: sc.mean_ns,
+        h_ns: sc.h_ns,
+        seed: sc.seed,
+        makespan_ns: o.total_makespan_ns,
+        chunks: o.chunks,
+        dequeues: o.dequeues,
+        imbalance_pct: o.imbalance_pct,
+        efficiency: o.efficiency,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -877,5 +1111,50 @@ mod tests {
         assert_eq!(tables[0].rows.len(), 7);
         let md = tables[0].markdown();
         assert!(md.contains("awf-b"));
+    }
+
+    #[test]
+    fn e9_regret_table_shape() {
+        let cfg = EvalConfig { n: 800, ..tiny() };
+        let tables = e9(&cfg, None);
+        assert_eq!(tables.len(), 2);
+        let summary = &tables[0];
+        assert_eq!(summary.rows.len(), e9_selectors().len());
+        // Bandits select among exactly the oracle arms, so their mean
+        // regret can never be negative.
+        for row in &summary.rows {
+            if row[0].starts_with("bandit:") {
+                let mean: f64 = row[2].parse().unwrap();
+                assert!(mean >= -1e-9, "{}: {mean}", row[0]);
+            }
+        }
+        // One detail row per scenario, one regret column per selector.
+        let detail = &tables[1];
+        assert_eq!(detail.rows.len(), e9_scenarios(&cfg).len());
+        assert_eq!(detail.headers.len(), 5 + e9_selectors().len());
+    }
+
+    #[test]
+    fn e9_store_rows_reproduce_the_regret_table() {
+        let cfg = EvalConfig { n: 600, p: 4, mean_ns: 100.0, h_ns: 20, seed: 9 };
+        let dir = std::env::temp_dir()
+            .join(format!("uds_e9_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _tables = e9(&cfg, Some(&dir));
+        let rs = crate::store::ResultStore::open(&dir).unwrap();
+        let arms = crate::schedules::select::DEFAULT_ARMS.len();
+        let expected = e9_scenarios(&cfg).len() * (arms + e9_selectors().len());
+        assert_eq!(rs.len(), expected);
+        // The persisted comparison set answers the regret query: every
+        // oracle group must contain all arms + all selectors, and the
+        // per-selector aggregates exist.
+        let out = rs.with_rows(|rows| {
+            crate::store::query::Query::parse("QUERY regret").unwrap().run(rows)
+        });
+        let rendered = out.rows.join("\n");
+        assert!(rendered.contains("\"schedule\":\"bandit:ucb\""), "{rendered}");
+        assert!(rendered.contains("\"schedule\":\"auto\""), "{rendered}");
+        assert!(rendered.contains("mean_regret_pct"), "{rendered}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -10,6 +10,6 @@ pub mod perf_gate;
 pub mod report;
 pub mod table;
 
-pub use experiments::{e1, e2, e3, e4, e5, e6, e7, e8, EvalConfig};
+pub use experiments::{e1, e2, e3, e4, e5, e6, e7, e8, e9, EvalConfig};
 pub use report::{Report, ScenarioResult, SweepSummary};
 pub use table::{fmt_ns, Table};

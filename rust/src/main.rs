@@ -70,8 +70,11 @@ USAGE:
             (--seeds K simulates seeds S..S+K of the scenario in one
             lockstep SoA batch per invocation; simulated runs only)
   uds eval  [EXP] [--n N] [--threads P] [--mean-ns X] [--h-ns H]
-            [--seed S] [--out DIR] [--artifacts DIR]
-            EXP: e1..e8 | all (default all)
+            [--seed S] [--out DIR] [--artifacts DIR] [--store DIR]
+            EXP: e1..e9 | all (default all)
+            (--store persists E9's full oracle/selector comparison set
+            to the result store, so `uds query regret --store DIR`
+            reproduces the E9 regret table offline)
   uds sweep --schedules S1;S2 --n N1,N2 [--workloads W1;W2]
             [--variability V1;V2] [--threads P1,P2] [--seeds K1,K2]
             [--mean-ns X] [--h-ns H] [--workers W]
@@ -116,13 +119,24 @@ USAGE:
   uds list-workloads [--json]
   uds list-errors
   uds calibrate [--n N] [--threads P]
-  uds serve [--addr HOST:PORT] [--store DIR]
+  uds serve [--addr HOST:PORT] [--store DIR] [--workers W]
+            (W=0, the default, resolves through the shared worker
+            policy: UDS_WORKERS env override, else host parallelism)
 
 SCHEDULES (--schedule): static[,k] dynamic[,k] guided[,min] tss[,f,l]
   fsc[,h[,sigma]] fac[,mu,sigma] fac2 wf2 rand[,seed|,lo,hi[,seed]]
   static_steal[,k] awf-b|c|d|e af[,min] hybrid[,f[,k]] auto tuned[,k0]
   — plus any user-defined schedule registered in the schedule registry
   (run `uds list-schedules` for the live namespace)
+SELECTORS: schedule heads that pick among candidate schedules per
+  invocation — auto (alias auto:expert): fixed expert rule, commits by
+  the measured cov band after a short profiling phase;
+  bandit:ucb[,c]: UCB bandit over the arm roster (static/gss/fac2/tss),
+  c >= 0 weights the exploration bonus (default 1);
+  bandit:eps[,eps]: epsilon-greedy bandit, eps in [0,1] is the
+  exploration probability (default 0.1).  Bandit state lives in the
+  per-call-site loop record, so sweeps stay bit-identical across
+  worker counts and --cluster sharding (see `uds eval e9`)
 WORKLOADS (--workload): the open workload registry — builtin classes
   (uniform increasing decreasing gaussian exponential lognormal bimodal
   sawtooth, each with optional key=value params, e.g.
@@ -219,8 +233,13 @@ fn main() {
         "serve" => {
             let flags = Flags::parse(&rest).unwrap_or_else(die);
             let store = flags.named.get("store").map(PathBuf::from);
-            service::serve(&flags.get_str("addr", "127.0.0.1:7311"), store.as_deref())
-                .map_err(|e| e.to_string())
+            let workers: usize = flags.get("workers", 0).unwrap_or_else(die);
+            service::serve(
+                &flags.get_str("addr", "127.0.0.1:7311"),
+                store.as_deref(),
+                workers,
+            )
+            .map_err(|e| e.to_string())
         }
         other => Err(format!("unknown command '{other}'\n{USAGE}")),
     };
@@ -651,6 +670,7 @@ fn cmd_eval(args: &[String]) -> Result<(), String> {
     };
     let out = PathBuf::from(flags.get_str("out", "results"));
     let artifacts = PathBuf::from(flags.get_str("artifacts", "artifacts"));
+    let store = flags.named.get("store").map(PathBuf::from);
 
     let run = |name: &str| -> Vec<eval::Table> {
         match name {
@@ -662,6 +682,7 @@ fn cmd_eval(args: &[String]) -> Result<(), String> {
             "e6" => eval::e6(&cfg),
             "e7" => eval::e7(&cfg),
             "e8" => eval::e8(&cfg, &artifacts),
+            "e9" => eval::e9(&cfg, store.as_deref()),
             other => {
                 eprintln!("unknown experiment '{other}'");
                 Vec::new()
@@ -669,7 +690,7 @@ fn cmd_eval(args: &[String]) -> Result<(), String> {
         }
     };
     let exps: Vec<&str> = if exp == "all" {
-        vec!["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8"]
+        vec!["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9"]
     } else {
         vec![exp.as_str()]
     };

@@ -99,14 +99,12 @@ impl Scheduler for AutoSelect {
 
     fn finish(&mut self, team: &TeamSpec, record: &mut LoopRecord) {
         self.inner.finish(team, record);
-        // Fold this invocation's observations into persistent stats.
+        // Fold this invocation's observations into persistent stats via
+        // an exact Welford merge — no synthetic mean±stddev samples
+        // inflating `loop_stats.n` (and biasing the cov read at the
+        // next `start`).
         let obs = self.observed.lock().unwrap();
-        if obs.n > 0 {
-            record.loop_stats.push(obs.mean);
-            // Preserve dispersion information: push mean +- stddev samples.
-            record.loop_stats.push(obs.mean + obs.stddev());
-            record.loop_stats.push((obs.mean - obs.stddev()).max(0.0));
-        }
+        record.fold_loop_stats(&obs);
     }
 
     fn is_adaptive(&self) -> bool {
@@ -173,15 +171,41 @@ mod tests {
 
     #[test]
     fn observations_accumulate_across_invocations() {
+        // The explore gate reads `loop_stats.n`, which after the
+        // synthetic-sample fix counts *actual* observations (capped
+        // chunk weights), not 3 fabricated samples per invocation.
         let mut rec = LoopRecord::default();
         let team = TeamSpec::uniform(2);
+        let mut expect_n = 0u64;
         for _ in 0..2 {
             let mut s = AutoSelect::new();
             let chunks =
                 drain_chunks(&mut s, &LoopSpec::upto(500), &team, &mut rec);
             verify_cover(&chunks, 500).unwrap();
+            expect_n += chunks.iter().map(|(_, c)| c.len.min(64)).sum::<u64>();
             rec.invocations += 1;
         }
         assert!(rec.loop_stats.n > 0);
+        assert_eq!(rec.loop_stats.n, expect_n, "merge must not inflate n");
+    }
+
+    #[test]
+    fn finish_folds_exact_statistics() {
+        // One drained invocation: loop_stats must be exactly the Welford
+        // of the synthetic per-chunk feedback, not mean ± stddev samples.
+        let mut s = AutoSelect::new();
+        let mut rec = LoopRecord::default();
+        let chunks = drain_chunks(
+            &mut s,
+            &LoopSpec::upto(500),
+            &TeamSpec::uniform(2),
+            &mut rec,
+        );
+        let mut direct = Welford::default();
+        for (_, c) in &chunks {
+            direct.push_chunk(c.len.max(1) as f64, c.len);
+        }
+        assert_eq!(rec.loop_stats.n, direct.n);
+        assert!((rec.loop_stats.mean - direct.mean).abs() < 1e-9);
     }
 }

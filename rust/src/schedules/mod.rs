@@ -27,6 +27,7 @@ pub mod gss;
 pub mod hybrid;
 pub mod rand_sched;
 pub mod registry;
+pub mod select;
 pub mod static_block;
 pub mod static_steal;
 pub mod tss;
@@ -49,6 +50,7 @@ pub use rand_sched::RandSched;
 pub use registry::{
     registration, ParamKind, ParamSpec, ParamValue, Registration, ScheduleRegistry,
 };
+pub use select::{BanditPolicy, BanditSelect};
 pub use static_block::StaticBlock;
 pub use static_steal::StaticSteal;
 pub use tss::Tss;
@@ -121,6 +123,12 @@ pub fn hybrid(f_static: f64, dyn_chunk: u64) -> Box<dyn Scheduler> {
 
 pub fn auto_select() -> Box<dyn Scheduler> {
     Box::new(AutoSelect::new())
+}
+
+/// `bandit:ucb[,c]` / `bandit:eps[,eps]` — online bandit selection over
+/// the default candidate arm roster ([`select::DEFAULT_ARMS`]).
+pub fn bandit_select(policy: BanditPolicy) -> Box<dyn Scheduler> {
+    Box::new(BanditSelect::new(policy))
 }
 
 pub fn tuned_dynamic(k0: u64) -> Box<dyn Scheduler> {
@@ -288,6 +296,8 @@ mod tests {
             "fac2", "wf2", "af", "af,4", "auto", "hybrid,0.5,8", "awf-c",
             "static_steal,2", "rand", "rand,7", "rand,2,9", "rand,2,9,7",
             "fsc,1000", "fsc,1000,50", "fac", "fac,800,200", "tuned,8",
+            "auto:expert", "bandit:ucb", "bandit:ucb,0.5", "bandit:eps",
+            "bandit:eps,0.25",
         ] {
             let spec = ScheduleSpec::parse(s).unwrap();
             let _ = spec.build();

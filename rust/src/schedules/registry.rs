@@ -694,7 +694,11 @@ impl ScheduleRegistry {
             }));
 
         reg(registration("auto")
-            .summary("runtime-selected: profile first invocations, then commit")
+            .alias("auto:expert")
+            .summary(
+                "expert-rules selection: profile first invocations, then \
+                 commit by the measured cov band",
+            )
             .roster("auto")
             .builtin(|orig, _head, rest| {
                 at_most(orig, rest, 0)?;
@@ -712,6 +716,50 @@ impl ScheduleRegistry {
                     k0: if rest.is_empty() { 8 } else { num(orig, rest, 0)? },
                 })
             }));
+
+        // Online bandit selectors (see `schedules::select`): open
+        // entries, so labels canonicalize through the typed parameter
+        // machinery and the heads stay registry-extensible.
+        use crate::coordinator::scheduler::FnFactory;
+        use crate::schedules::select::{BanditPolicy, BanditSelect};
+
+        reg(registration("bandit:ucb")
+            .optional("c", ParamKind::F64)
+            .summary(
+                "online UCB bandit over the candidate arm roster; c \
+                 weights the exploration bonus (default 1)",
+            )
+            .roster("bandit:ucb")
+            .open(|values| {
+                let c = values.first().and_then(ParamValue::as_f64).unwrap_or(1.0);
+                if c < 0.0 {
+                    return Err("exploration weight c must be >= 0".into());
+                }
+                let name = open_label("bandit:ucb", values);
+                Ok(Arc::new(FnFactory::new(name, move || {
+                    Box::new(BanditSelect::new(BanditPolicy::Ucb { c }))
+                        as Box<dyn Scheduler>
+                })) as Arc<dyn ScheduleFactory>)
+            }));
+
+        reg(registration("bandit:eps")
+            .optional("eps", ParamKind::F64)
+            .summary(
+                "online epsilon-greedy bandit over the candidate arm \
+                 roster; eps is the exploration probability (default 0.1)",
+            )
+            .roster("bandit:eps")
+            .open(|values| {
+                let eps = values.first().and_then(ParamValue::as_f64).unwrap_or(0.1);
+                if !(0.0..=1.0).contains(&eps) {
+                    return Err("exploration probability eps must be in [0,1]".into());
+                }
+                let name = open_label("bandit:eps", values);
+                Ok(Arc::new(FnFactory::new(name, move || {
+                    Box::new(BanditSelect::new(BanditPolicy::EpsGreedy { eps }))
+                        as Box<dyn Scheduler>
+                })) as Arc<dyn ScheduleFactory>)
+            }));
     }
 }
 
@@ -721,13 +769,13 @@ fn validate_name(name: &str) -> Result<(), String> {
     if name.is_empty() {
         return Err("schedule names must be non-empty".into());
     }
-    let ok = name
-        .chars()
-        .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || matches!(c, '_' | '-' | '.'));
+    let ok = name.chars().all(|c| {
+        c.is_ascii_lowercase() || c.is_ascii_digit() || matches!(c, '_' | '-' | '.' | ':')
+    });
     if !ok {
         return Err(format!(
             "invalid schedule name '{name}': use lowercase ASCII letters, digits, \
-'_', '-' or '.'"
+'_', '-', '.' or ':'"
         ));
     }
     Ok(())
@@ -869,18 +917,47 @@ mod tests {
     fn roster_matches_legacy_shape() {
         let reg = ScheduleRegistry::with_builtins();
         let roster = reg.roster();
-        assert_eq!(roster.len(), 18);
+        assert_eq!(roster.len(), 20);
         assert_eq!(roster[0], ScheduleSpec::Static { chunk: None });
         assert_eq!(
             roster[10],
             ScheduleSpec::Rand { bounds: None, seed: DEFAULT_RAND_SEED }
         );
         assert_eq!(roster[17], ScheduleSpec::Tuned { k0: 8 });
+        // The bandit selector heads extend the legacy tail.
+        assert_eq!(
+            roster[18],
+            ScheduleSpec::Registered { label: "bandit:ucb".into() }
+        );
+        assert_eq!(
+            roster[19],
+            ScheduleSpec::Registered { label: "bandit:eps".into() }
+        );
         // Labels identify roster entries unambiguously.
         let mut labels: Vec<String> = roster.iter().map(|s| s.label()).collect();
         labels.sort();
         labels.dedup();
-        assert_eq!(labels.len(), 18, "duplicate roster labels");
+        assert_eq!(labels.len(), 20, "duplicate roster labels");
+    }
+
+    #[test]
+    fn selector_heads_resolve_and_validate() {
+        let reg = ScheduleRegistry::with_builtins();
+        // Bare heads and parameterized labels are lossless.
+        assert_eq!(
+            reg.parse("bandit:ucb").unwrap(),
+            ScheduleSpec::Registered { label: "bandit:ucb".into() }
+        );
+        assert_eq!(reg.parse("bandit:ucb,0.5").unwrap().label(), "bandit:ucb,0.5");
+        assert_eq!(reg.parse("bandit:eps,0.25").unwrap().label(), "bandit:eps,0.25");
+        assert!(reg.build("bandit:ucb").is_ok());
+        assert!(reg.build("bandit:eps,0.2").is_ok());
+        // Value-level rejections surface at parse time.
+        assert!(reg.parse("bandit:ucb,-1").unwrap_err().contains("c must be >= 0"));
+        assert!(reg.parse("bandit:eps,1.5").unwrap_err().contains("in [0,1]"));
+        assert!(reg.parse("bandit:ucb,1,2").is_err(), "one parameter at most");
+        // The expert-rules selector is reachable under its taxonomy name.
+        assert_eq!(reg.parse("auto:expert").unwrap(), ScheduleSpec::Auto);
     }
 
     #[test]

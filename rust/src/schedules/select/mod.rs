@@ -1,0 +1,47 @@
+//! Schedule *selection* strategies — the §4.3 argument made runnable.
+//!
+//! The paper argues `schedule(auto)`-style selection is insufficient
+//! because it admits no domain knowledge.  This module turns that claim
+//! into measurable strategies, following the taxonomy of "A Comparative
+//! Study of OpenMP Scheduling Algorithm Selection Strategies":
+//!
+//! * **expert rules** — the fixed cov-band rule of
+//!   [`crate::schedules::AutoSelect`] (label `auto`, alias
+//!   `auto:expert`): commit to static/GSS/FAC2 from measured
+//!   variability;
+//! * **online bandits** — [`BanditSelect`] (labels `bandit:ucb[,c]` and
+//!   `bandit:eps[,eps]`): treat candidate schedules as arms, credit
+//!   each arm with the makespan of the invocation it scheduled, and
+//!   balance exploration/exploitation per call site;
+//! * **exhaustive oracle** — not a schedule head: the sweep engine
+//!   ([`crate::sweep::select`]) runs every candidate arm per scenario
+//!   and reports the best, the baseline the E9 regret table divides by.
+//!
+//! All bandit state lives in the per-call-site [`LoopRecord::user`]
+//! (crate::coordinator::history::LoopRecord::user) payload — never in
+//! the scheduler value or any global — so selection is strictly
+//! per-scenario: sharded sweeps stay bit-identical no matter which
+//! worker (or which `--cluster` node) runs a scenario.
+
+pub mod bandit;
+
+pub use bandit::{BanditPolicy, BanditSelect};
+
+use crate::schedules::ScheduleSpec;
+
+/// The default candidate arm roster: the expert rule's whole codomain
+/// (static / GSS / FAC2) plus TSS, so the bandit can always reach the
+/// expert's asymptotic choice and the oracle bounds both selectors.
+pub const DEFAULT_ARMS: [&str; 4] = ["static", "gss", "fac2", "tss"];
+
+/// Parse the default arm labels into specs (infallible for builtins).
+pub fn default_arm_specs() -> Vec<(String, ScheduleSpec)> {
+    DEFAULT_ARMS
+        .iter()
+        .map(|l| {
+            let spec = ScheduleSpec::parse(l)
+                .unwrap_or_else(|e| panic!("builtin arm '{l}': {e}"));
+            ((*l).to_string(), spec)
+        })
+        .collect()
+}

@@ -641,13 +641,6 @@ fn client_loop(stream: TcpStream, svc: &Service, arena: &mut SimArena) {
     }
 }
 
-fn default_workers() -> usize {
-    std::thread::available_parallelism()
-        .map(|c| c.get())
-        .unwrap_or(4)
-        .clamp(2, 32)
-}
-
 /// Accept loop over an already-bound listener: feed connections to a
 /// bounded pool of `workers` threads sharing one [`Service`].  A full
 /// queue blocks `accept` (backpressure) instead of spawning unboundedly.
@@ -700,13 +693,20 @@ pub fn serve_on_with(listener: TcpListener, workers: usize, svc: Arc<Service>) {
     }
 }
 
-/// Blocking entry point: run the service until killed, on a worker pool
-/// sized to the host's parallelism.  With `store_dir`, the service
-/// opens (or creates) a persistent [`ResultStore`] there: `BATCH`
-/// sweeps become incremental and `QUERY` lines are answered.
-pub fn serve(addr: &str, store_dir: Option<&Path>) -> anyhow::Result<()> {
+/// Blocking entry point: run the service until killed.  `workers=0`
+/// sizes the pool by the crate-wide policy in [`crate::util::workers`]
+/// (`UDS_WORKERS` override, else host parallelism, capped at
+/// [`crate::sweep::MAX_WORKERS`]); a positive value is used as given.
+/// With `store_dir`, the service opens (or creates) a persistent
+/// [`ResultStore`] there: `BATCH` sweeps become incremental and
+/// `QUERY` lines are answered.
+pub fn serve(addr: &str, store_dir: Option<&Path>, workers: usize) -> anyhow::Result<()> {
     let listener = TcpListener::bind(addr)?;
-    let workers = default_workers();
+    let workers = if workers == 0 {
+        crate::util::workers::default_workers(crate::sweep::MAX_WORKERS)
+    } else {
+        workers.min(crate::sweep::MAX_WORKERS)
+    };
     let mut svc = Service::new();
     if let Some(dir) = store_dir {
         let store = ResultStore::open(dir).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -839,6 +839,9 @@ mod tests {
         let map = parse_flat(summary).unwrap();
         let labels: u64 = map["labels"].parse().unwrap();
         assert!(labels >= 20, "{summary}");
+        // The bandit heads must be in the verified set by name.
+        assert!(text.contains("bandit:ucb"), "{text}");
+        assert!(text.contains("bandit:eps"), "{text}");
         // Global-wide conformity is deliberately NOT asserted here:
         // other tests may register broken fixtures into the global
         // registry.  verify_e2e proves roster conformity over a

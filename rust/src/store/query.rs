@@ -27,8 +27,14 @@
 //!   the runner-up and its margin.
 //! * `regret` — per schedule, mean/max regret in percent against the
 //!   per-scenario oracle (the best stored makespan for that exact
-//!   scenario across schedules), and how often the schedule *is* the
-//!   oracle (`wins`).
+//!   scenario across schedules), how often the schedule *is* the
+//!   oracle (`wins`), and the mean split by workload stationarity
+//!   (`nonstat_mean_regret_pct` over `phased:`/`burst:` composites,
+//!   `stat_mean_regret_pct` over the rest).  E9 persists its full
+//!   oracle/selector comparison set (`uds eval e9 --store DIR`, each
+//!   row's `makespan_ns` carrying the total over the scenario's
+//!   invocation sequence), so this op reproduces the E9 regret table
+//!   from the store alone.
 
 // Policy exception to the crate-level unwrap/expect warns: lock
 // poisoning is fatal by design here, and the surviving expects assert
@@ -397,7 +403,15 @@ fn regret(matched: &[&StoredRow], out: &mut QueryOutput) {
         max_regret: f64,
         scenarios: u64,
         wins: u64,
+        nonstat_sum: f64,
+        nonstat_n: u64,
+        stat_sum: f64,
+        stat_n: u64,
     }
+    // The E9 stationarity axis: `phased:`/`burst:` composites change
+    // shape mid-loop, the regime where selection strategies diverge.
+    let nonstationary =
+        |workload: &str| workload.starts_with("phased:") || workload.starts_with("burst:");
     let mut per_schedule: BTreeMap<String, Acc> = BTreeMap::new();
     for rows in groups.values() {
         let oracle = rows.iter().map(|r| r.makespan_ns).min().expect("non-empty group");
@@ -412,6 +426,13 @@ fn regret(matched: &[&StoredRow], out: &mut QueryOutput) {
             if r.makespan_ns == oracle {
                 acc.wins += 1;
             }
+            if nonstationary(&r.workload) {
+                acc.nonstat_sum += regret_pct;
+                acc.nonstat_n += 1;
+            } else {
+                acc.stat_sum += regret_pct;
+                acc.stat_n += 1;
+            }
         }
     }
     for (sched, acc) in &per_schedule {
@@ -423,6 +444,13 @@ fn regret(matched: &[&StoredRow], out: &mut QueryOutput) {
                 .f64("mean_regret_pct", acc.sum_regret / acc.scenarios as f64)
                 .f64("max_regret_pct", acc.max_regret)
                 .u64("wins", acc.wins)
+                .u64("nonstat_scenarios", acc.nonstat_n)
+                .f64(
+                    "nonstat_mean_regret_pct",
+                    acc.nonstat_sum / acc.nonstat_n.max(1) as f64,
+                )
+                .u64("stat_scenarios", acc.stat_n)
+                .f64("stat_mean_regret_pct", acc.stat_sum / acc.stat_n.max(1) as f64)
                 .u64("oracle_groups", groups.len() as u64)
                 .finish(),
         );
@@ -586,5 +614,32 @@ mod tests {
         assert_eq!(gss.get("wins").unwrap(), "1");
         assert_eq!(gss.get("max_regret_pct").unwrap(), "25");
         assert_eq!(by_sched["fac2"].get("oracle_groups").unwrap(), "2");
+        // Lognormal is stationary: the split puts everything there.
+        assert_eq!(fac2.get("nonstat_scenarios").unwrap(), "0");
+        assert_eq!(fac2.get("stat_scenarios").unwrap(), "2");
+        assert_eq!(fac2.get("stat_mean_regret_pct").unwrap(), "5");
+    }
+
+    #[test]
+    fn regret_splits_by_workload_stationarity() {
+        // One stationary and one nonstationary scenario (same seed):
+        // bandit pays 25% regret only on the nonstationary one.
+        let rows = vec![
+            row("bandit:ucb", "lognormal", 0, 90),
+            row("gss", "lognormal", 0, 90),
+            row("bandit:ucb", "burst:uniform", 0, 100),
+            row("gss", "burst:uniform", 0, 80),
+        ];
+        let out = Query::parse("QUERY regret").unwrap().run(&rows);
+        let bandit = out
+            .rows
+            .iter()
+            .map(|l| parse_flat(l).unwrap())
+            .find(|m| m.get("schedule").map(String::as_str) == Some("bandit:ucb"))
+            .unwrap();
+        assert_eq!(bandit.get("nonstat_scenarios").unwrap(), "1");
+        assert_eq!(bandit.get("nonstat_mean_regret_pct").unwrap(), "25");
+        assert_eq!(bandit.get("stat_scenarios").unwrap(), "1");
+        assert_eq!(bandit.get("stat_mean_regret_pct").unwrap(), "0");
     }
 }

@@ -30,6 +30,7 @@
 #![allow(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod grid;
+pub mod select;
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -50,12 +51,11 @@ use crate::workload::WorkloadSpec;
 
 pub use grid::{Scenario, SweepGrid, MAX_SCENARIOS, MAX_WORKERS};
 
-/// Default sweep parallelism when the grid requests `workers=0`.
+/// Default sweep parallelism when the grid requests `workers=0`:
+/// the crate-wide policy from [`crate::util::workers`] (`UDS_WORKERS`
+/// override, else host parallelism), capped at [`MAX_WORKERS`].
 pub fn default_workers() -> usize {
-    std::thread::available_parallelism()
-        .map(|c| c.get())
-        .unwrap_or(4)
-        .clamp(1, 8)
+    crate::util::workers::default_workers(MAX_WORKERS)
 }
 
 /// Per-sweep cache accounting.  Deltas of the service-global counters

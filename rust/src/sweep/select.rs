@@ -1,0 +1,349 @@
+//! Selector scenarios and the exhaustive per-scenario oracle.
+//!
+//! A *selector scenario* is a multi-invocation run: one persistent
+//! [`LoopRecord`] carried across `invocations` sequential simulations
+//! of the same loop, which is the regime where selection strategies
+//! (expert rules, bandits) differ from fixed schedules.  The *oracle*
+//! for a scenario is the exhaustive baseline the paper's §4.3 argument
+//! needs: run every candidate arm as a fixed schedule over the same
+//! invocation sequence and keep the best total makespan.  Regret of a
+//! selector is then `(total − oracle_total) / oracle_total`.
+//!
+//! Everything here is deterministic per scenario — the runner threads
+//! only decide *who* computes a cell, never *what* it computes — so the
+//! emitted rows are bit-identical for any worker count, exactly like
+//! the single-invocation sweep engine.
+
+// Policy exception to the crate-level unwrap/expect warns: lock
+// poisoning is fatal by design here, and the surviving expects assert
+// crate-internal invariants (see lib.rs).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::coordinator::{LoopRecord, LoopSpec, TeamSpec};
+use crate::schedules::select::default_arm_specs;
+use crate::schedules::ScheduleSpec;
+use crate::service::Service;
+use crate::sim::{simulate_indexed, SimArena, SimConfig, VariabilitySpec};
+use crate::workload::WorkloadSpec;
+
+/// One multi-invocation selection scenario.
+#[derive(Clone, Debug)]
+pub struct SelectorScenario {
+    pub workload: WorkloadSpec,
+    pub variability: VariabilitySpec,
+    pub n: u64,
+    pub threads: usize,
+    pub mean_ns: f64,
+    pub h_ns: u64,
+    pub seed: u64,
+    /// Sequential invocations sharing one [`LoopRecord`].
+    pub invocations: u64,
+}
+
+impl SelectorScenario {
+    /// Whether the scenario's workload is nonstationary (`phased:` /
+    /// `burst:` composites change shape across the iteration space, the
+    /// regime where a committed expert choice goes stale).
+    pub fn nonstationary(&self) -> bool {
+        let l = self.workload.label();
+        l.starts_with("phased:") || l.starts_with("burst:")
+    }
+}
+
+/// Totals of one (schedule × scenario) cell.
+#[derive(Clone, Debug)]
+pub struct SelectorOutcome {
+    pub schedule: String,
+    /// Sum of per-invocation makespans (the quantity regret compares).
+    pub total_makespan_ns: u64,
+    pub per_invocation_ns: Vec<u64>,
+    pub chunks: u64,
+    pub dequeues: u64,
+    /// Imbalance / efficiency of the final invocation (the settled
+    /// state a persisted row should describe).
+    pub imbalance_pct: f64,
+    pub efficiency: f64,
+    /// What the head reported selecting on the final invocation
+    /// (`None` for fixed schedules).
+    pub final_selected: Option<String>,
+}
+
+/// Run one schedule (fixed arm or selector head) through a scenario's
+/// whole invocation sequence with a persistent record.
+pub fn run_selector_scenario(
+    svc: &Service,
+    spec: &ScheduleSpec,
+    sc: &SelectorScenario,
+) -> SelectorOutcome {
+    let (index, _) = svc.index_for_counted(&sc.workload, sc.n, sc.mean_ns, sc.seed);
+    let var = sc.variability.build(sc.threads);
+    let factory = spec.factory();
+    let cfg = SimConfig { dequeue_overhead_ns: sc.h_ns, trace: false };
+    let mut rec = LoopRecord::default();
+    let mut arena = SimArena::new();
+    let mut per = Vec::with_capacity(sc.invocations as usize);
+    let mut chunks = 0u64;
+    let mut dequeues = 0u64;
+    let mut imbalance_pct = 0.0;
+    let mut efficiency = 0.0;
+    for _ in 0..sc.invocations.max(1) {
+        let stats = simulate_indexed(
+            &LoopSpec::upto(sc.n),
+            &TeamSpec::uniform(sc.threads),
+            &*factory,
+            &index,
+            &*var,
+            &mut rec,
+            &cfg,
+            &mut arena,
+        );
+        per.push(stats.makespan_ns);
+        chunks += stats.chunks;
+        dequeues += stats.total_dequeues();
+        imbalance_pct = stats.percent_imbalance();
+        efficiency = stats.efficiency();
+    }
+    SelectorOutcome {
+        schedule: spec.label(),
+        total_makespan_ns: per.iter().sum(),
+        per_invocation_ns: per,
+        chunks,
+        dequeues,
+        imbalance_pct,
+        efficiency,
+        final_selected: rec.selected.clone(),
+    }
+}
+
+/// The exhaustive oracle for one scenario: every candidate arm run as a
+/// fixed schedule, best total first.  Returns `(best, all_outcomes)`;
+/// `all_outcomes` keeps candidate order for reporting.
+pub fn oracle_for_scenario(
+    svc: &Service,
+    sc: &SelectorScenario,
+    candidates: &[(String, ScheduleSpec)],
+) -> (SelectorOutcome, Vec<SelectorOutcome>) {
+    assert!(!candidates.is_empty(), "oracle needs candidates");
+    let outcomes: Vec<SelectorOutcome> = candidates
+        .iter()
+        .map(|(_, spec)| run_selector_scenario(svc, spec, sc))
+        .collect();
+    let best = outcomes
+        .iter()
+        .min_by_key(|o| o.total_makespan_ns)
+        .expect("nonempty")
+        .clone();
+    (best, outcomes)
+}
+
+/// One row of the E9 regret table: a selector measured against the
+/// per-scenario oracle.
+#[derive(Clone, Debug)]
+pub struct RegretRow {
+    pub scenario_idx: usize,
+    pub workload: String,
+    pub variability: String,
+    pub n: u64,
+    pub threads: usize,
+    pub seed: u64,
+    pub nonstationary: bool,
+    pub selector: String,
+    pub total_makespan_ns: u64,
+    pub oracle_ns: u64,
+    pub oracle_arm: String,
+    pub regret_pct: f64,
+    pub final_selected: Option<String>,
+}
+
+/// Everything one scenario produced: the candidate-arm oracle pass
+/// (`arms`, in candidate order), the raw per-selector outcomes
+/// (`selectors`, in selector order), and one [`RegretRow`] per selector.
+#[derive(Clone, Debug)]
+pub struct ScenarioSelection {
+    pub scenario_idx: usize,
+    pub arms: Vec<SelectorOutcome>,
+    pub selectors: Vec<SelectorOutcome>,
+    pub rows: Vec<RegretRow>,
+}
+
+/// Run `selectors` and the candidate-arm oracle over every scenario,
+/// fanning cells across `workers` threads.  Rows come back ordered by
+/// `(scenario, selector)` and are bit-identical for any worker count:
+/// each cell is an independent deterministic simulation.
+///
+/// `candidates` defaults to the bandit arm roster
+/// ([`crate::schedules::select::DEFAULT_ARMS`]) when empty — keeping
+/// the oracle and the bandits on the same comparison set, so regret is
+/// nonnegative by construction for the bandit heads.
+pub fn run_selector_grid(
+    svc: &Service,
+    scenarios: &[SelectorScenario],
+    selectors: &[ScheduleSpec],
+    candidates: &[(String, ScheduleSpec)],
+    workers: usize,
+) -> Vec<RegretRow> {
+    run_selector_grid_full(svc, scenarios, selectors, candidates, workers)
+        .into_iter()
+        .flat_map(|s| s.rows)
+        .collect()
+}
+
+/// As [`run_selector_grid`], keeping the per-arm oracle outcomes so
+/// callers (E9's `--store` persistence) can record the full comparison
+/// set, not just the winners.
+pub fn run_selector_grid_full(
+    svc: &Service,
+    scenarios: &[SelectorScenario],
+    selectors: &[ScheduleSpec],
+    candidates: &[(String, ScheduleSpec)],
+    workers: usize,
+) -> Vec<ScenarioSelection> {
+    let candidates = if candidates.is_empty() {
+        default_arm_specs()
+    } else {
+        candidates.to_vec()
+    };
+    let workers = if workers == 0 {
+        crate::sweep::default_workers()
+    } else {
+        workers.min(crate::sweep::MAX_WORKERS)
+    };
+
+    // One task per scenario: the oracle pass shares candidate outcomes
+    // across every selector row of that scenario, so splitting finer
+    // would recompute arms.
+    let cursor = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<ScenarioSelection>();
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(scenarios.len().max(1)) {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let candidates = &candidates;
+            s.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                let Some(sc) = scenarios.get(i) else { break };
+                let (best, arms) = oracle_for_scenario(svc, sc, candidates);
+                let outs: Vec<SelectorOutcome> = selectors
+                    .iter()
+                    .map(|sel| run_selector_scenario(svc, sel, sc))
+                    .collect();
+                let rows: Vec<RegretRow> = outs
+                    .iter()
+                    .map(|out| {
+                        let oracle = best.total_makespan_ns.max(1);
+                        RegretRow {
+                            scenario_idx: i,
+                            workload: sc.workload.label().to_string(),
+                            variability: sc.variability.label(),
+                            n: sc.n,
+                            threads: sc.threads,
+                            seed: sc.seed,
+                            nonstationary: sc.nonstationary(),
+                            selector: out.schedule.clone(),
+                            total_makespan_ns: out.total_makespan_ns,
+                            oracle_ns: best.total_makespan_ns,
+                            oracle_arm: best.schedule.clone(),
+                            regret_pct: (out.total_makespan_ns as f64
+                                - oracle as f64)
+                                / oracle as f64
+                                * 100.0,
+                            final_selected: out.final_selected.clone(),
+                        }
+                    })
+                    .collect();
+                let sel = ScenarioSelection {
+                    scenario_idx: i,
+                    arms,
+                    selectors: outs,
+                    rows,
+                };
+                if tx.send(sel).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+    });
+    let mut by_scenario: Vec<ScenarioSelection> = rx.into_iter().collect();
+    by_scenario.sort_by_key(|s| s.scenario_idx);
+    by_scenario
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scenario(workload: &str, variability: &str, seed: u64) -> SelectorScenario {
+        SelectorScenario {
+            workload: WorkloadSpec::parse(workload).unwrap(),
+            variability: VariabilitySpec::parse(variability).unwrap(),
+            n: 400,
+            threads: 4,
+            mean_ns: 100.0,
+            h_ns: 10,
+            seed,
+            invocations: 6,
+        }
+    }
+
+    fn selectors() -> Vec<ScheduleSpec> {
+        ["auto", "bandit:ucb", "bandit:eps"]
+            .iter()
+            .map(|l| ScheduleSpec::parse(l).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn oracle_bounds_every_candidate() {
+        let svc = Service::new();
+        let sc = scenario("gaussian", "calm", 1);
+        let (best, all) = oracle_for_scenario(&svc, &sc, &default_arm_specs());
+        assert_eq!(all.len(), crate::schedules::select::DEFAULT_ARMS.len());
+        for o in &all {
+            assert!(best.total_makespan_ns <= o.total_makespan_ns, "{}", o.schedule);
+        }
+    }
+
+    #[test]
+    fn selector_grid_rows_are_worker_invariant() {
+        let svc = Service::new();
+        let scenarios = vec![
+            scenario("gaussian", "calm", 1),
+            scenario("phased:uniform:gaussian", "hetero:1,1,2,4", 2),
+            scenario("burst:uniform", "calm", 3),
+        ];
+        let sels = selectors();
+        let one = run_selector_grid(&svc, &scenarios, &sels, &[], 1);
+        let eight = run_selector_grid(&svc, &scenarios, &sels, &[], 8);
+        assert_eq!(one.len(), scenarios.len() * sels.len());
+        for (a, b) in one.iter().zip(&eight) {
+            assert_eq!(a.selector, b.selector);
+            assert_eq!(a.total_makespan_ns, b.total_makespan_ns);
+            assert_eq!(a.oracle_ns, b.oracle_ns);
+            assert_eq!(a.regret_pct.to_bits(), b.regret_pct.to_bits());
+        }
+    }
+
+    #[test]
+    fn bandit_regret_is_nonnegative_against_its_own_arms() {
+        // The bandit selects among exactly the oracle's candidate set,
+        // so its total can never beat the best fixed arm.
+        let svc = Service::new();
+        let scenarios =
+            vec![scenario("phased:uniform:gaussian", "calm", 5)];
+        let rows = run_selector_grid(&svc, &scenarios, &selectors(), &[], 2);
+        for r in rows.iter().filter(|r| r.selector.starts_with("bandit:")) {
+            assert!(r.regret_pct >= -1e-9, "{}: {}", r.selector, r.regret_pct);
+        }
+    }
+
+    #[test]
+    fn nonstationary_classification() {
+        assert!(scenario("phased:uniform:gaussian", "calm", 1).nonstationary());
+        assert!(scenario("burst:uniform", "calm", 1).nonstationary());
+        assert!(!scenario("gaussian", "calm", 1).nonstationary());
+    }
+}

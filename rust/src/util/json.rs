@@ -165,10 +165,37 @@ pub fn parse_flat(line: &str) -> Result<BTreeMap<String, String>, String> {
                                 bytes.get(*i + 1..*i + 5).unwrap_or(&[]).iter().collect();
                             let code = u32::from_str_radix(&hex, 16)
                                 .map_err(|_| err("bad \\u escape", *i))?;
-                            out.push(
-                                char::from_u32(code).ok_or_else(|| err("bad codepoint", *i))?,
-                            );
-                            *i += 4;
+                            if (0xD800..=0xDBFF).contains(&code) {
+                                // JSON encodes supplementary-plane chars as a
+                                // UTF-16 surrogate pair: `\uD83D\uDE00` is one
+                                // `😀`.  A high surrogate is only valid when a
+                                // low surrogate escape follows immediately.
+                                let lo_hex: String = bytes
+                                    .get(*i + 7..*i + 11)
+                                    .unwrap_or(&[])
+                                    .iter()
+                                    .collect();
+                                let lo = match (bytes.get(*i + 5), bytes.get(*i + 6)) {
+                                    (Some(&'\\'), Some(&'u')) => {
+                                        u32::from_str_radix(&lo_hex, 16).ok()
+                                    }
+                                    _ => None,
+                                }
+                                .filter(|lo| (0xDC00..=0xDFFF).contains(lo))
+                                .ok_or_else(|| err("lone surrogate", *i))?;
+                                let combined =
+                                    0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00);
+                                out.push(
+                                    char::from_u32(combined)
+                                        .ok_or_else(|| err("bad codepoint", *i))?,
+                                );
+                                *i += 10;
+                            } else {
+                                out.push(
+                                    char::from_u32(code).ok_or_else(|| err("bad codepoint", *i))?,
+                                );
+                                *i += 4;
+                            }
                         }
                         _ => return Err(err("bad escape", *i)),
                     }
@@ -274,6 +301,56 @@ mod tests {
         assert!(parse_flat("{\"a\":{\"nested\":1}}").is_err());
         assert!(parse_flat("{\"a\":1} trailing").is_err());
         assert!(parse_flat("{}").unwrap().is_empty());
+    }
+
+    #[test]
+    fn unicode_escape_paths() {
+        // Table-driven: every `\u` escape path the grammar admits.
+        // `None` means the input must be rejected.
+        let cases: &[(&str, Option<&str>)] = &[
+            // BMP escapes decode directly.
+            ("\\u0041", Some("A")),
+            ("\\u00e9", Some("\u{e9}")),
+            ("\\u2603", Some("\u{2603}")),
+            // Surrogate pairs combine into one supplementary-plane char.
+            ("\\ud83d\\ude00", Some("\u{1F600}")),
+            ("\\uD83D\\uDE00", Some("\u{1F600}")),
+            ("\\ud800\\udc00", Some("\u{10000}")),
+            ("\\udbff\\udfff", Some("\u{10FFFF}")),
+            // Lone high surrogate: nothing, junk, or a BMP escape after it.
+            ("\\ud83d", None),
+            ("\\ud83dxx", None),
+            ("\\ud83d\\n", None),
+            ("\\ud83d\\u0041", None),
+            // Lone low surrogate.
+            ("\\ude00", None),
+            // Truncated or non-hex digits.
+            ("\\u12", None),
+            ("\\uzzzz", None),
+            ("\\ud83d\\ude", None),
+        ];
+        for (esc, want) in cases {
+            let line = format!("{{\"k\":\"{esc}\"}}");
+            match want {
+                Some(s) => {
+                    let map = parse_flat(&line).unwrap_or_else(|e| panic!("{esc}: {e}"));
+                    assert_eq!(map.get("k").map(String::as_str), Some(*s), "{esc}");
+                }
+                None => assert!(parse_flat(&line).is_err(), "{esc} should be rejected"),
+            }
+        }
+    }
+
+    #[test]
+    fn non_bmp_text_roundtrips() {
+        // The writer emits astral chars raw; the reader must accept both
+        // the raw form and the escaped form other emitters produce.
+        let line = JsonObj::new().str("k", "ok \u{1F600}").finish();
+        let map = parse_flat(&line).unwrap();
+        assert_eq!(map.get("k").unwrap(), "ok \u{1F600}");
+        let escaped = "{\"k\":\"ok \\uD83D\\uDE00\"}";
+        let map = parse_flat(escaped).unwrap();
+        assert_eq!(map.get("k").unwrap(), "ok \u{1F600}");
     }
 
     #[test]

@@ -7,12 +7,14 @@
 //! * [`kv`]    — `key=value` text format (for `serde`/`serde_json`)
 //! * [`json`]  — flat-JSON writer/reader (for `serde_json`)
 //! * [`error`] — the typed wire error-code table ([`ErrorCode`])
+//! * [`workers`] — the shared worker-count policy for thread pools
 
 pub mod bench;
 pub mod error;
 pub mod json;
 pub mod kv;
 pub mod rng;
+pub mod workers;
 
 pub use bench::Bench;
 pub use error::ErrorCode;

@@ -1,0 +1,73 @@
+//! The one worker-count policy for every thread pool in the crate.
+//!
+//! The sweep engine (`workers=0` on a `BATCH` line) and the served
+//! connection pool each used to keep a private copy of this logic with
+//! divergent clamps (`1..=8` vs `2..=32`), so a 64-core machine
+//! silently ran local sweeps on 8 workers while the service next door
+//! used 32.  One policy now serves both:
+//!
+//! 1. an explicit request wins — the `workers=` grid field, the
+//!    `--workers` flag, or the `UDS_WORKERS` environment variable
+//!    (checked in that order by the call sites);
+//! 2. otherwise the host's `available_parallelism()` (fallback 4 when
+//!    the host cannot report one);
+//! 3. either source is clamped to `1..=max`, where `max` is the
+//!    caller's pool cap (the sweep engine and service both pass
+//!    [`crate::sweep::MAX_WORKERS`]).
+
+/// Environment override consulted by [`default_workers`].
+pub const ENV_WORKERS: &str = "UDS_WORKERS";
+
+/// Pure resolution core, split out so the policy is testable without
+/// mutating process-global environment state.
+fn resolve(env: Option<&str>, host: usize, max: usize) -> usize {
+    let max = max.max(1);
+    env.and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| host.max(1))
+        .clamp(1, max)
+}
+
+/// Resolve the default worker count for a pool capped at `max`:
+/// `UDS_WORKERS` when set to a positive integer, else the host's
+/// available parallelism, clamped to `1..=max`.
+pub fn default_workers(max: usize) -> usize {
+    let host = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(4);
+    resolve(std::env::var(ENV_WORKERS).ok().as_deref(), host, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::resolve;
+
+    #[test]
+    fn host_parallelism_is_used_up_to_the_cap() {
+        assert_eq!(resolve(None, 2, 64), 2);
+        assert_eq!(resolve(None, 64, 64), 64);
+        assert_eq!(resolve(None, 128, 64), 64);
+        assert_eq!(resolve(None, 0, 64), 1);
+    }
+
+    #[test]
+    fn env_override_wins_and_is_clamped() {
+        assert_eq!(resolve(Some("6"), 64, 64), 6);
+        assert_eq!(resolve(Some(" 6 "), 64, 64), 6);
+        assert_eq!(resolve(Some("100"), 4, 64), 64);
+    }
+
+    #[test]
+    fn bad_env_values_fall_back_to_host() {
+        assert_eq!(resolve(Some("0"), 4, 64), 4);
+        assert_eq!(resolve(Some("-2"), 4, 64), 4);
+        assert_eq!(resolve(Some("many"), 4, 64), 4);
+        assert_eq!(resolve(Some(""), 4, 64), 4);
+    }
+
+    #[test]
+    fn degenerate_cap_still_yields_a_worker() {
+        assert_eq!(resolve(None, 8, 0), 1);
+        assert_eq!(resolve(Some("9"), 8, 0), 1);
+    }
+}

@@ -121,6 +121,32 @@ fn three_node_cluster_matches_local_byte_for_byte() {
     assert!(json.contains("\"nodes_total\":3"), "{json}");
 }
 
+/// Selector heads (expert rules + bandits) keep all their state in the
+/// per-scenario `LoopRecord`, so sharding a selector grid across the
+/// cluster cannot perturb any row: the merged report.csv must stay
+/// byte-identical to a local sweep — the ISSUE 10 acceptance criterion.
+#[test]
+fn bandit_selector_grid_is_cluster_invariant() {
+    let grid = SweepGrid::parse_batch_line(
+        "BATCH workloads=phased:uniform:gaussian;burst:uniform \
+         schedules=bandit:ucb;bandit:eps,0.2;auto n=400,800 threads=2,4 \
+         seeds=3,4 workers=2",
+    )
+    .unwrap();
+    assert_eq!(grid.size(), 48);
+    let nodes = vec![spawn_service(2), spawn_service(2)];
+    let opts = ClusterOptions { shard_size: 5, ..ClusterOptions::default() };
+    let outcome = run_cluster_sweep(&grid, &nodes, &opts).unwrap();
+
+    let (local, _) = local_results(&grid);
+    assert_eq!(
+        csv_of(outcome.results),
+        csv_of(local),
+        "selector grid report.csv must be byte-identical under --cluster"
+    );
+    assert_eq!(outcome.summary.scenarios, 48);
+}
+
 #[test]
 fn node_killed_mid_sweep_requeues_and_stays_byte_identical() {
     let grid = SweepGrid::parse_batch_line(GRID).unwrap();

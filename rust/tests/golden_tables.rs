@@ -119,6 +119,79 @@ with UPDATE_GOLDENS=1 and commit the diff",
     );
 }
 
+/// The pinned E9 golden config: a smaller loop than E2/E3 because every
+/// scenario is 10 invocations × (arms + selectors) simulations.
+const GOLDEN_E9: EvalConfig =
+    EvalConfig { n: 2_000, p: 4, mean_ns: 1_000.0, h_ns: 250, seed: 42 };
+
+fn e9_golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens/e9_regret.csv")
+}
+
+fn render_e9() -> String {
+    let mut doc = String::new();
+    let _ = writeln!(
+        doc,
+        "# golden E9 regret tables — regenerate with \
+`UPDATE_GOLDENS=1 cargo test --test golden_tables`"
+    );
+    let _ = writeln!(
+        doc,
+        "# config: n={} threads={} mean_ns={} h_ns={} seed={}",
+        GOLDEN_E9.n, GOLDEN_E9.p, GOLDEN_E9.mean_ns, GOLDEN_E9.h_ns, GOLDEN_E9.seed
+    );
+    for table in eval::e9(&GOLDEN_E9, None) {
+        let _ = writeln!(doc, "# table: {}", table.id);
+        doc.push_str(&table.csv());
+    }
+    doc
+}
+
+/// Same lifecycle as the E2/E3 golden: determinism is always enforced;
+/// byte identity arms once a non-`# PROVISIONAL` snapshot is committed.
+#[test]
+fn e9_regret_matches_committed_goldens() {
+    let doc = render_e9();
+
+    for id in ["e9_regret", "e9_regret_scenarios"] {
+        assert!(doc.contains(&format!("# table: {id}")), "missing table {id}");
+    }
+    for selector in ["auto", "bandit:ucb", "bandit:eps"] {
+        assert!(doc.contains(selector), "selector {selector} missing:\n{doc}");
+    }
+    assert_eq!(doc, render_e9(), "E9 regeneration is not deterministic");
+
+    let path = e9_golden_path();
+    if std::env::var_os("UPDATE_GOLDENS").is_some() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &doc).unwrap();
+        eprintln!("goldens refreshed: {}", path.display());
+        return;
+    }
+    let committed = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{} missing ({e}); commit a snapshot", path.display()));
+    if committed.starts_with("# PROVISIONAL") {
+        assert!(
+            std::env::var_os("GOLDEN_STRICT").is_none(),
+            "E9 goldens are still the PROVISIONAL placeholder — freeze real \
+bytes with `UPDATE_GOLDENS=1 cargo test --test golden_tables` and commit {}",
+            path.display()
+        );
+        eprintln!(
+            "E9 goldens are a PROVISIONAL placeholder — freeze real bytes with \
+`UPDATE_GOLDENS=1 cargo test --test golden_tables` and commit {}",
+            path.display()
+        );
+        return;
+    }
+    assert_eq!(
+        doc, committed,
+        "E9 diverged from {}; if the change is intentional, regenerate \
+with UPDATE_GOLDENS=1 and commit the diff",
+        path.display()
+    );
+}
+
 /// The golden document embeds its own config header, so a snapshot can
 /// never silently be compared against tables from a different config.
 #[test]

@@ -470,6 +470,57 @@ fn prop_sweep_worker_count_invariant() {
     });
 }
 
+/// Selector heads keep the sweep engine's bit-identity guarantee: all
+/// bandit/expert state lives in the per-scenario `LoopRecord`, never in
+/// the factory or any global, so a grid of selector scenarios produces
+/// the same wire rows no matter how many workers race over it.
+#[test]
+fn prop_bandit_sweep_worker_invariance() {
+    use uds::eval::report::ScenarioResult;
+    use uds::service::Service;
+    use uds::sweep::{run_sweep, SweepGrid};
+    cases("bandit_sweep_worker_invariance", 6, |rng| {
+        let workloads = [
+            "phased:uniform:gaussian",
+            "phased:increasing:uniform",
+            "burst:uniform",
+            "burst:lognormal",
+            "gaussian",
+        ];
+        let scheds = [
+            "bandit:ucb",
+            "bandit:ucb,2.5",
+            "bandit:eps",
+            "bandit:eps,0.3",
+            "auto",
+        ];
+        let pick = |rng: &mut Pcg, pool: &[&str]| {
+            pool[rng.range_u64(0, pool.len() as u64 - 1) as usize].to_string()
+        };
+        let line = format!(
+            "BATCH workloads={};{} schedules={};{} n={},{} threads={},{} seeds={}",
+            pick(rng, &workloads),
+            pick(rng, &workloads),
+            pick(rng, &scheds),
+            pick(rng, &scheds),
+            rng.range_u64(50, 1_200),
+            rng.range_u64(50, 1_200),
+            rng.range_u64(1, 6),
+            rng.range_u64(1, 6),
+            rng.range_u64(0, 999),
+        );
+        let grid = SweepGrid::parse_batch_line(&line).unwrap();
+        let scenarios = grid.expand();
+        let workers = rng.range_u64(2, 8) as usize;
+        let (a, _) = run_sweep(&Service::new(), &scenarios, 1);
+        let (b, _) = run_sweep(&Service::new(), &scenarios, workers);
+        let wire = |rs: &[ScenarioResult]| {
+            rs.iter().map(|r| r.json_line()).collect::<Vec<_>>()
+        };
+        assert_eq!(wire(&a), wire(&b), "workers={workers} grid={line}");
+    });
+}
+
 /// Registry labels roundtrip: for every registered head — builtin
 /// canonical names, their aliases, and freshly registered user-defined
 /// names — the bare head and randomly parameterized labels all parse to
